@@ -1,0 +1,93 @@
+//! Quickstart: the Hive hash table public API in two minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers: building a table, the four operations (§III-D), concurrent use
+//! from many threads, load-aware resizing, and the operation statistics
+//! behind the paper's Fig. 9 / lock-rate claims.
+
+use hivehash::native::resize::ResizeEvent;
+use hivehash::{HiveConfig, HiveTable};
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- 1. Build a table -------------------------------------------------
+    // 256 buckets × 32 slots = 8192 slot capacity, the paper's default
+    // BitHash1 & BitHash2 two-choice family, eviction bound 16.
+    let cfg = HiveConfig::default().with_buckets(256);
+    let table = Arc::new(HiveTable::new(cfg)?);
+
+    // --- 2. The four operations (§III-D) ----------------------------------
+    table.insert(42, 4200)?; // Insert⟨k,v⟩
+    table.insert(42, 4300)?; // Replace⟨k,v⟩ — same key, new value
+    assert_eq!(table.lookup(42), Some(4300)); // Search(k)
+    assert!(table.delete(42)); // Delete(k)
+    assert_eq!(table.lookup(42), None);
+    println!("single-key ops OK");
+
+    // --- 3. Concurrent use -------------------------------------------------
+    // OS threads play the paper's warps: all fast paths are lock-free.
+    let threads: Vec<_> = (0..8u32)
+        .map(|tid| {
+            let t = Arc::clone(&table);
+            std::thread::spawn(move || {
+                for i in 0..1000 {
+                    let k = tid * 10_000 + i + 1;
+                    t.insert(k, k * 2).unwrap();
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    println!(
+        "8 threads inserted {} keys, load factor {:.2}",
+        table.len(),
+        table.load_factor()
+    );
+
+    // --- 4. Load-aware resizing (§IV-C) ------------------------------------
+    // The table grows in K-bucket batches via linear hashing — no global
+    // rehash. maybe_resize() is what the coordinator calls between batches.
+    while let Some(ev) = table.maybe_resize() {
+        match ev {
+            ResizeEvent::Grew { buckets_split } => {
+                println!(
+                    "grew: split {buckets_split} buckets -> {} logical",
+                    table.logical_buckets()
+                );
+            }
+            ResizeEvent::Shrank { buckets_merged } => {
+                println!("shrank: merged {buckets_merged} buckets");
+            }
+        }
+    }
+
+    // every key survives resizing
+    for tid in 0..8u32 {
+        for i in (0..1000).step_by(111) {
+            let k = tid * 10_000 + i + 1;
+            assert_eq!(table.lookup(k), Some(k * 2));
+        }
+    }
+    println!("all keys intact after resize, load factor {:.2}", table.load_factor());
+
+    // --- 5. Operation statistics -------------------------------------------
+    let s = table.stats();
+    let (s1, s2, s3, s4) = s.step_fractions();
+    println!(
+        "insert steps: replace {:.1}% | claim {:.1}% | evict {:.1}% | stash {:.1}%",
+        s1 * 100.0,
+        s2 * 100.0,
+        s3 * 100.0,
+        s4 * 100.0
+    );
+    println!(
+        "eviction-lock rate: {:.4}% of ops (paper bound: <0.85%)",
+        s.lock_rate() * 100.0
+    );
+    Ok(())
+}

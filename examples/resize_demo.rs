@@ -1,0 +1,105 @@
+//! Dynamic-resizing walkthrough (paper §IV-C).
+//!
+//! ```bash
+//! cargo run --release --example resize_demo
+//! ```
+//!
+//! Drives the table through a full grow/shrink lifecycle and prints the
+//! linear-hashing round state (`index_mask`, `split_ptr`, logical buckets)
+//! after every K-bucket batch — the incremental behaviour that replaces
+//! global rehashing. Ends with the §V-A-style resize throughput numbers.
+
+use hivehash::{HiveConfig, HiveTable};
+use std::time::Instant;
+
+fn state_line(t: &HiveTable, label: &str) {
+    println!(
+        "{label:<26} buckets={:<6} entries={:<7} lf={:.3}",
+        t.logical_buckets(),
+        t.len(),
+        t.load_factor()
+    );
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let table = HiveTable::new(
+        HiveConfig::default().with_buckets(64).with_thresholds(0.9, 0.25),
+    )?;
+    state_line(&table, "fresh");
+
+    // Phase 1: fill toward the grow threshold
+    let mut next_key = 1u32;
+    for _ in 0..(64 * 32) * 88 / 100 {
+        table.insert(next_key, next_key)?;
+        next_key += 1;
+    }
+    state_line(&table, "filled to ~0.88");
+
+    // Phase 2: keep inserting; the controller splits K-bucket batches
+    println!("\n-- expansion (split phase) --");
+    for burst in 0..6 {
+        for _ in 0..800 {
+            table.insert(next_key, next_key)?;
+            next_key += 1;
+        }
+        while let Some(ev) = table.maybe_resize() {
+            let _ = ev;
+        }
+        state_line(&table, &format!("after burst {burst}"));
+    }
+
+    // every key still reachable
+    for k in (1..next_key).step_by(509) {
+        assert_eq!(table.lookup(k), Some(k), "key {k} lost during growth");
+    }
+    println!("spot-check OK: keys reachable across {} splits", table.logical_buckets() - 64);
+
+    // Phase 3: delete most entries; the controller merges back
+    println!("\n-- contraction (merge phase) --");
+    for k in 1..next_key {
+        if k % 8 != 0 {
+            table.delete(k);
+        }
+    }
+    state_line(&table, "after deletes");
+    let mut rounds = 0;
+    while let Some(_ev) = table.maybe_resize() {
+        rounds += 1;
+        if rounds % 4 == 0 {
+            state_line(&table, &format!("merge round {rounds}"));
+        }
+        if rounds > 200 {
+            break;
+        }
+    }
+    state_line(&table, "contracted");
+    for k in (8..next_key).step_by(8 * 127) {
+        assert_eq!(table.lookup(k), Some(k), "key {k} lost during contraction");
+    }
+    println!("spot-check OK after contraction");
+
+    // Phase 4: §V-A-style resize throughput measurement
+    println!("\n-- resize throughput (paper §V-A: 16.8/23.7 GOPS on 4090) --");
+    let big = HiveTable::new(HiveConfig::default().with_buckets(1 << 15))?;
+    let n = (1 << 15) * 32 / 2;
+    for k in 1..=n as u32 {
+        big.insert(k, k)?;
+    }
+    let t0 = Instant::now();
+    let split = big.grow_buckets(1 << 15);
+    let grow_dt = t0.elapsed();
+    let t1 = Instant::now();
+    let merged = big.shrink_buckets(1 << 15);
+    let shrink_dt = t1.elapsed();
+    println!(
+        "split {split} buckets in {:.1} ms  ({:.2} Mbuckets/s)",
+        grow_dt.as_secs_f64() * 1e3,
+        split as f64 / grow_dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "merged {merged} buckets in {:.1} ms ({:.2} Mbuckets/s)",
+        shrink_dt.as_secs_f64() * 1e3,
+        merged as f64 / shrink_dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX programs → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the runtime's XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (op, capacity class); `manifest.txt` (simple key=value
+lines, one artifact per line) tells the Rust runtime what exists. Run:
+
+    python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import common as C  # noqa: E402
+
+DEFAULT_CLASSES = (1024, 4096, 16384, 65536)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_ops(n_buckets: int, batch: int, k_batch: int, max_ev: int):
+    """Lower the five programs for one capacity class. Returns
+    {op_name: hlo_text}."""
+    b_spec = spec((n_buckets, C.SLOTS), jnp.uint64)
+    m_spec = spec((4,), jnp.uint32)
+    k_spec = spec((batch,), jnp.uint32)
+    v_spec = spec((batch,), jnp.uint32)
+
+    out = {}
+    out["lookup"] = to_hlo_text(
+        jax.jit(model.lookup_fn(n_buckets, batch)).lower(b_spec, m_spec, k_spec)
+    )
+    out["insert"] = to_hlo_text(
+        jax.jit(model.insert_fn(n_buckets, batch, max_ev), donate_argnums=(0,)).lower(
+            b_spec, m_spec, k_spec, v_spec
+        )
+    )
+    out["delete"] = to_hlo_text(
+        jax.jit(model.delete_fn(n_buckets, batch), donate_argnums=(0,)).lower(
+            b_spec, m_spec, k_spec
+        )
+    )
+    out["split"] = to_hlo_text(
+        jax.jit(model.split_fn(n_buckets, k_batch), donate_argnums=(0,)).lower(b_spec, m_spec)
+    )
+    out["merge"] = to_hlo_text(
+        jax.jit(model.merge_fn(n_buckets, k_batch), donate_argnums=(0,)).lower(b_spec, m_spec)
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--classes", default=",".join(str(c) for c in DEFAULT_CLASSES),
+                    help="comma-separated physical bucket counts")
+    ap.add_argument("--batch", type=int, default=model.DEFAULT_BATCH)
+    ap.add_argument("--resize-k", type=int, default=model.DEFAULT_RESIZE_K)
+    ap.add_argument("--max-evictions", type=int, default=model.DEFAULT_MAX_EVICTIONS)
+    args = ap.parse_args()
+
+    classes = [int(c) for c in args.classes.split(",")]
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for n in classes:
+        assert n & (n - 1) == 0, f"capacity class {n} must be a power of two"
+        k_batch = min(args.resize_k, n // 4)
+        print(f"[aot] lowering capacity class {n} (batch={args.batch}, k={k_batch}) ...")
+        ops = lower_ops(n, args.batch, k_batch, args.max_evictions)
+        for op, text in ops.items():
+            fname = f"{op}_{n}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest.append(
+                f"op={op} n_buckets={n} batch={args.batch} k_batch={k_batch} "
+                f"max_evictions={args.max_evictions} slots={C.SLOTS} file={fname}"
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest with {len(manifest)} artifacts -> {args.out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Shared constants and helpers for the Hive Pallas kernels.
+
+Mirrors `rust/src/core/packed.rs` and `rust/src/hash/bithash.rs` bit for
+bit: the packed 64-bit KV word (key low, value high), the EMPTY sentinels,
+the BitHash1/BitHash2 mixers (the paper's default d=2 family, Listing 1)
+and the linear-hashing address reduction (§IV-C).
+
+Everything here is traced into the kernels and into the L2 model, so the
+Rust runtime, the native table and the XLA artifacts all agree on layout.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# Paper constants (§III-A / §III-B). Plain ints so kernels don't close
+# over module-level arrays (pallas rejects captured constants).
+SLOTS = 32
+EMPTY_KEY = 0xFFFFFFFF
+EMPTY_WORD = 0xFFFFFFFFFFFFFFFF
+
+# Insert status codes returned by the insert kernel (paper's four steps).
+ST_REPLACED = 0
+ST_CLAIMED = 1
+ST_EVICTED = 2
+ST_OVERFLOW = 3
+ST_SKIPPED = 4  # padded slot in a short batch
+
+
+def pack(key, value):
+    """pair = (value << 32) | key (paper §III-A)."""
+    return (value.astype(jnp.uint64) << 32) | key.astype(jnp.uint64)
+
+
+def unpack_key(word):
+    """key = pair & 0xFFFFFFFF."""
+    return (word & 0xFFFFFFFF).astype(jnp.uint32)
+
+
+def unpack_value(word):
+    """value = pair >> 32."""
+    return (word >> 32).astype(jnp.uint32)
+
+
+def bithash1(key):
+    """Thomas-Wang mixer — BitHash1 (Listing 1). uint32 in/out."""
+    key = key.astype(jnp.uint32)
+    key = (~key) + (key << 15)
+    key = key ^ (key >> 12)
+    key = key + (key << 2)
+    key = key ^ (key >> 4)
+    key = key * jnp.uint32(2057)
+    key = key ^ (key >> 16)
+    return key
+
+
+def bithash2(key):
+    """Bob-Jenkins 6-shift mixer — BitHash2 (Listing 1). uint32 in/out."""
+    key = key.astype(jnp.uint32)
+    key = (key + jnp.uint32(0x7ED55D16)) + (key << 12)
+    key = (key ^ jnp.uint32(0xC761C23C)) ^ (key >> 19)
+    key = (key + jnp.uint32(0x165667B1)) + (key << 5)
+    key = (key + jnp.uint32(0xD3A2646C)) ^ (key << 9)
+    key = (key + jnp.uint32(0xFD7046C5)) + (key << 3)
+    key = (key ^ jnp.uint32(0xB55A4F09)) ^ (key >> 16)
+    return key
+
+
+def lh_address(h, index_mask, split_ptr):
+    """Linear-hashing bucket address (§IV-C).
+
+    b = h & index_mask; buckets below split_ptr (already split this round)
+    re-reduce with the next round's mask.
+    """
+    b = h & index_mask
+    next_mask = (index_mask << 1) | jnp.uint32(1)
+    return jnp.where(b < split_ptr, h & next_mask, b)
+
+
+def candidate_buckets(key, index_mask, split_ptr):
+    """The two candidate buckets of `key` under the default family."""
+    b1 = lh_address(bithash1(key), index_mask, split_ptr)
+    b2 = lh_address(bithash2(key), index_mask, split_ptr)
+    return b1, b2
+
+
+def alt_bucket(key, current_b, index_mask, split_ptr):
+    """Algorithm 3's AltBucket: the candidate != current_b (or b1)."""
+    b1, b2 = candidate_buckets(key, index_mask, split_ptr)
+    return jnp.where(b1 != current_b, b1, b2)

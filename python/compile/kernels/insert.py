@@ -1,0 +1,164 @@
+"""The four-step insert kernel (paper §IV-A, Algorithms 1–3).
+
+Per key: (1) replace-if-present via WCME, (2) claim-then-commit into the
+emptier candidate (bucketed two-choice + WABC), (3) bounded cuckoo
+eviction, (4) overflow hand-off. The GPU's warp-level concurrency becomes
+grid-sequential batch order (DESIGN.md §3): each key's four steps run to
+completion before the next key — the same linearization the GPU reaches
+through its atomics, without needing CAS.
+
+Step 4 differs from CUDA by necessity: the overflow stash lives on the
+*coordinator* (Rust) side, so the kernel returns each homeless packed word
+in ``overflow[i]`` and the L3 stash absorbs it (and re-injects after the
+next resize epoch, as in §IV-A).
+
+WABC adaptation note: the free mask exists on the GPU to avoid reading 32
+slots; on a vector core the row load is one VMEM vector, so freeness is
+derived from the EMPTY key directly and the "claim" is the elected first
+free lane of the row (metadata-free WABC — DESIGN.md §3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as C
+
+
+def _free_lanes(row):
+    """Per-lane freeness (bit i of the conceptual freeMask) + count."""
+    free = C.unpack_key(row[0]) == C.EMPTY_KEY
+    return free, free.sum()
+
+
+def make_insert_kernel(max_evictions: int):
+    """Kernel factory: `max_evictions` is baked statically (a config
+    constant in the paper's global metadata)."""
+
+    def insert_kernel(meta_ref, keys_ref, vals_ref, buckets_in_ref,
+                      buckets_ref, status_ref, overflow_ref):
+        index_mask = meta_ref[0]
+        split_ptr = meta_ref[1]
+        buckets_ref[...] = buckets_in_ref[...]
+
+        def store_word(b, lane, word):
+            buckets_ref[pl.ds(b.astype(jnp.int32), 1), pl.ds(lane, 1)] = (
+                word[None, None]
+            )
+
+        def body(i, _):
+            k = keys_ref[i]
+            v = vals_ref[i]
+            word = C.pack(k, v)
+            valid = k != C.EMPTY_KEY
+            b1, b2 = C.candidate_buckets(k, index_mask, split_ptr)
+
+            # ---- Step 1: Replace (Algorithm 1) ----
+            row1 = buckets_ref[pl.ds(b1.astype(jnp.int32), 1), :]
+            m1 = C.unpack_key(row1[0]) == k
+            row2 = buckets_ref[pl.ds(b2.astype(jnp.int32), 1), :]
+            m2 = C.unpack_key(row2[0]) == k
+            hit1 = m1.any()
+            hit2 = m2.any()
+            rep_b = jnp.where(hit1, b1, b2)
+            rep_l = jnp.where(hit1, jnp.argmax(m1), jnp.argmax(m2)).astype(jnp.int32)
+            replaced = valid & (hit1 | hit2)
+            old = buckets_ref[pl.ds(rep_b.astype(jnp.int32), 1), pl.ds(rep_l, 1)]
+            store_word(rep_b, rep_l, jnp.where(replaced, word, old[0, 0]))
+
+            # ---- Step 2: Claim-then-commit (WABC, Algorithm 2) ----
+            free1, n1 = _free_lanes(row1)
+            free2, n2 = _free_lanes(row2)
+            # bucketed two-choice: prefer the emptier candidate (§V)
+            pick1 = n1 >= n2
+            cl_b = jnp.where(pick1, b1, b2)
+            cl_free = jnp.where(pick1, free1, free2)
+            cl_other_b = jnp.where(pick1, b2, b1)
+            cl_other_free = jnp.where(pick1, free2, free1)
+            have1 = cl_free.any()
+            have2 = cl_other_free.any()
+            cl_tb = jnp.where(have1, cl_b, cl_other_b)
+            cl_tfree = jnp.where(have1, cl_free, cl_other_free)
+            claim_lane = jnp.argmax(cl_tfree).astype(jnp.int32)  # elect first free
+            can_claim = valid & (~replaced) & (have1 | have2)
+            oldc = buckets_ref[pl.ds(cl_tb.astype(jnp.int32), 1), pl.ds(claim_lane, 1)]
+            store_word(cl_tb, claim_lane, jnp.where(can_claim, word, oldc[0, 0]))
+
+            # ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
+            need_evict = valid & (~replaced) & (~can_claim)
+
+            def evict_round(_, carry):
+                cur_word, cur_b, done = carry
+                row = buckets_ref[pl.ds(cur_b.astype(jnp.int32), 1), :]
+                free, nf = _free_lanes(row)
+                has_free = free.any()
+                lane = jnp.where(has_free, jnp.argmax(free), 0).astype(jnp.int32)
+                # (i) free slot appeared: place without evicting
+                # (ii) else displace the first occupied slot (lane 0)
+                victim = row[0, lane]
+                place = (~done)
+                neww = jnp.where(place, cur_word, victim)
+                store_word(cur_b, lane, neww)
+                placed_no_evict = place & has_free
+                evicted = place & (~has_free)
+                vkey = C.unpack_key(victim)
+                next_b = C.alt_bucket(vkey, cur_b, index_mask, split_ptr)
+                new_word = jnp.where(evicted, victim, cur_word)
+                new_b = jnp.where(evicted, next_b, cur_b)
+                new_done = done | placed_no_evict
+                return new_word, new_b, new_done
+
+            ev_word0 = jnp.where(need_evict, word, jnp.uint64(C.EMPTY_WORD))
+            # evictions start at the first candidate bucket
+            ev_word, ev_b, ev_done = jax.lax.fori_loop(
+                0, max_evictions, evict_round,
+                (ev_word0, b1, ~need_evict),
+            )
+            evict_ok = need_evict & ev_done
+
+            # ---- Step 4: overflow hand-off ----
+            overflow = need_evict & (~ev_done)
+            overflow_ref[pl.ds(i, 1)] = jnp.where(
+                overflow, ev_word, jnp.uint64(C.EMPTY_WORD)
+            )[None]
+
+            status = jnp.where(
+                ~valid,
+                jnp.uint32(C.ST_SKIPPED),
+                jnp.where(
+                    replaced,
+                    jnp.uint32(C.ST_REPLACED),
+                    jnp.where(
+                        can_claim,
+                        jnp.uint32(C.ST_CLAIMED),
+                        jnp.where(
+                            evict_ok,
+                            jnp.uint32(C.ST_EVICTED),
+                            jnp.uint32(C.ST_OVERFLOW),
+                        ),
+                    ),
+                ),
+            )
+            status_ref[pl.ds(i, 1)] = status[None]
+            return 0
+
+        jax.lax.fori_loop(0, keys_ref.shape[0], body, 0)
+
+    return insert_kernel
+
+
+def make_insert(n_buckets: int, batch: int, max_evictions: int = 16):
+    """Build the jittable batched-insert callable (buckets donated).
+
+    Returns ``(buckets', status[B], overflow_words[B])``.
+    """
+    return pl.pallas_call(
+        make_insert_kernel(max_evictions),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_buckets, C.SLOTS), jnp.uint64),
+            jax.ShapeDtypeStruct((batch,), jnp.uint32),
+            jax.ShapeDtypeStruct((batch,), jnp.uint64),
+        ),
+        input_output_aliases={3: 0},
+        interpret=True,
+    )

@@ -1,0 +1,159 @@
+"""Linear-hashing split / merge migration kernels (paper §IV-C).
+
+Split (§IV-C1): bucket ``b_src = split_ptr + g`` pairs with
+``b_dst = b_src + 2^m``. Each lane decides stay-vs-move from the next
+round's hash bit; movers are compacted into the partner with the
+ballot + prefix-rank (``__popc(move_mask & ((1<<lane)-1))``) pattern —
+here an exclusive cumulative sum over the lane axis, the vector-ISA
+equivalent.
+
+Merge (§IV-C2): the inverse; each mover takes the r-th free slot of the
+destination (``select_nth_one`` prefix-rank mapping). A merge aborts if
+the destination lacks room; because ``split_ptr`` must stay contiguous,
+an abort also cancels all later merges in the batch (carried flag).
+
+Both kernels donate the bucket array and run one pair per loop step —
+the warp-parallel K-bucket batch of the paper with the batch serialized
+on one core (multi-core sharding happens at the coordinator level).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as C
+
+
+def _which_hash_home(keys, b_src, index_mask):
+    """For each lane's key, the raw hash that addressed it to b_src.
+
+    The placement invariant guarantees h1 or h2 maps each live entry to
+    its bucket under the current mask; empty lanes return 0.
+    """
+    h1 = C.bithash1(keys)
+    h2 = C.bithash2(keys)
+    use1 = (h1 & index_mask) == b_src
+    return jnp.where(use1, h1, h2)
+
+
+def make_split_kernel(k_batch: int):
+    """Split `k_batch` buckets starting at split_ptr (statically bounded)."""
+
+    def split_kernel(meta_ref, buckets_in_ref, buckets_ref, moved_ref):
+        index_mask = meta_ref[0]
+        split_ptr = meta_ref[1]
+        m_base = index_mask + jnp.uint32(1)  # 2^m
+        next_mask = (index_mask << 1) | jnp.uint32(1)
+        buckets_ref[...] = buckets_in_ref[...]
+
+        def split_one(g, total_moved):
+            b_src = split_ptr + jnp.uint32(g)
+            b_dst = b_src + m_base
+            row = buckets_ref[pl.ds(b_src.astype(jnp.int32), 1), :]
+            keys = C.unpack_key(row[0])
+            live = keys != C.EMPTY_KEY
+            h = _which_hash_home(keys, b_src, index_mask)
+            should_move = live & ((h & next_mask) == b_dst)
+            # ballot + prefix rank -> compacted placement. Formulated as a
+            # gather (collision-free on a vector ISA): dst lane r takes the
+            # source lane whose exclusive rank equals r.
+            my_rank = jnp.cumsum(should_move.astype(jnp.int32)) - should_move.astype(jnp.int32)
+            n_movers = should_move.sum().astype(jnp.int32)
+            lane_idx = jnp.arange(C.SLOTS, dtype=jnp.int32)
+            is_rank = (my_rank[None, :] == lane_idx[:, None]) & should_move[None, :]
+            has = is_rank.any(axis=1)
+            src_lane = jnp.argmax(is_rank, axis=1)
+            dst_row = jnp.where(has, row[0][src_lane], jnp.uint64(C.EMPTY_WORD))
+            new_src = jnp.where(should_move, jnp.uint64(C.EMPTY_WORD), row[0])
+            buckets_ref[pl.ds(b_src.astype(jnp.int32), 1), :] = new_src[None, :]
+            buckets_ref[pl.ds(b_dst.astype(jnp.int32), 1), :] = dst_row[None, :]
+            return total_moved + n_movers
+
+        moved = jax.lax.fori_loop(0, k_batch, split_one, jnp.int32(0))
+        moved_ref[0] = moved.astype(jnp.uint32)
+
+    return split_kernel
+
+
+def make_merge_kernel(k_batch: int):
+    """Merge up to `k_batch` pairs, last-split-first; aborts stay contiguous."""
+
+    def merge_kernel(meta_ref, buckets_in_ref, buckets_ref, merged_ref):
+        index_mask = meta_ref[0]
+        split_ptr = meta_ref[1]  # > 0: mid-round state expected by caller
+        m_base = index_mask + jnp.uint32(1)
+        buckets_ref[...] = buckets_in_ref[...]
+
+        def merge_one(g, carry):
+            merged, alive = carry
+            # merge pair g: dst = split_ptr - 1 - g, src = dst + 2^m
+            b_dst = split_ptr - jnp.uint32(1) - jnp.uint32(g)
+            b_src = b_dst + m_base
+            in_range = split_ptr > jnp.uint32(g)
+            ok = alive & in_range
+            srow = buckets_ref[pl.ds(b_src.astype(jnp.int32), 1), :]
+            drow = buckets_ref[pl.ds(b_dst.astype(jnp.int32), 1), :]
+            skeys = C.unpack_key(srow[0])
+            movers = skeys != C.EMPTY_KEY
+            dfree = C.unpack_key(drow[0]) == C.EMPTY_KEY
+            n_move = movers.sum()
+            n_free = dfree.sum()
+            fits = n_move <= n_free
+            do = ok & fits
+            # mover r takes the r-th free slot of dst (select_nth_one)
+            mrank = jnp.cumsum(movers.astype(jnp.int32)) - movers.astype(jnp.int32)
+            frank = jnp.cumsum(dfree.astype(jnp.int32)) - dfree.astype(jnp.int32)
+            lane_idx = jnp.arange(C.SLOTS, dtype=jnp.int32)
+            # for each dst lane: if free with rank r and r < n_move, take
+            # the source lane whose mover-rank == r
+            take = dfree & (frank < n_move)
+            src_sel = (mrank[None, :] == frank[:, None]) & movers[None, :]
+            src_lane = jnp.argmax(src_sel, axis=1)
+            new_dst = jnp.where(do & take, srow[0][src_lane], drow[0])
+            new_src = jnp.where(do, jnp.full((C.SLOTS,), C.EMPTY_WORD, jnp.uint64), srow[0])
+            buckets_ref[pl.ds(b_dst.astype(jnp.int32), 1), :] = new_dst[None, :]
+            buckets_ref[pl.ds(b_src.astype(jnp.int32), 1), :] = new_src[None, :]
+            return (merged + do.astype(jnp.uint32), alive & fits & in_range)
+
+        merged, _ = jax.lax.fori_loop(
+            0, k_batch, merge_one, (jnp.uint32(0), jnp.bool_(True))
+        )
+        merged_ref[0] = merged
+
+    return merge_kernel
+
+
+def make_split(n_buckets: int, k_batch: int):
+    """Jittable split of `k_batch` buckets (buckets donated).
+
+    Caller must guarantee `split_ptr + k_batch <= 2^m` (no round crossing
+    inside one artifact call — the coordinator chunks batches at round
+    boundaries) and `2^m + split_ptr + k_batch <= n_buckets` physical room.
+    Returns `(buckets', moved[1])`.
+    """
+    return pl.pallas_call(
+        make_split_kernel(k_batch),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_buckets, C.SLOTS), jnp.uint64),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+        ),
+        input_output_aliases={1: 0},
+        interpret=True,
+    )
+
+
+def make_merge(n_buckets: int, k_batch: int):
+    """Jittable merge of up to `k_batch` pairs (buckets donated).
+
+    Returns `(buckets', merged[1])`; the caller regresses split_ptr by
+    `merged` (and handles round regression before calling).
+    """
+    return pl.pallas_call(
+        make_merge_kernel(k_batch),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_buckets, C.SLOTS), jnp.uint64),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+        ),
+        input_output_aliases={1: 0},
+        interpret=True,
+    )

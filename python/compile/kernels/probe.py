@@ -1,0 +1,123 @@
+"""WCME probe kernels: lookup and delete (paper §III-F, Algorithm 4).
+
+The CUDA formulation: 32 lanes coalesced-load one packed KV each,
+ballot on key match, ``__ffs`` elects the winner lane.
+
+TPU adaptation (DESIGN.md §3): the 32-slot bucket row *is* the trailing
+vector dimension; ballot+ffs become a lane-mask ``argmax``; the
+data-dependent bucket gather a GPU warp issues directly becomes a dynamic
+row slice of the bucket ref. The grid walks the key batch; grid steps are
+sequential on a TPU core, which also gives delete its linearization order.
+
+Kernels run ``interpret=True`` — CPU PJRT cannot execute Mosaic
+custom-calls; on a real TPU the same kernel lowers via Mosaic with a
+``(1, 32)`` row resident in VMEM per step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as C
+
+
+def _wcme_match(row, key):
+    """Match-and-elect on one (1, 32) bucket row.
+
+    Returns (found, lane): ballot = per-lane key equality; the elected
+    winner is the first set lane (ffs == argmax over the bool mask).
+    """
+    match = C.unpack_key(row[0]) == key
+    found = match.any()
+    lane = jnp.argmax(match).astype(jnp.int32)
+    return found, lane
+
+
+def lookup_kernel(meta_ref, keys_ref, buckets_ref, values_ref, found_ref):
+    """Batched Search(k) (§III-D): WCME over both candidate buckets."""
+    index_mask = meta_ref[0]
+    split_ptr = meta_ref[1]
+
+    def body(i, _):
+        k = keys_ref[i]
+        valid = k != C.EMPTY_KEY  # sentinel queries match empty slots
+        b1, b2 = C.candidate_buckets(k, index_mask, split_ptr)
+        row1 = buckets_ref[pl.ds(b1.astype(jnp.int32), 1), :]
+        f1, l1 = _wcme_match(row1, k)
+        row2 = buckets_ref[pl.ds(b2.astype(jnp.int32), 1), :]
+        f2, l2 = _wcme_match(row2, k)
+        v1 = C.unpack_value(row1[0, l1])
+        v2 = C.unpack_value(row2[0, l2])
+        value = jnp.where(f1, v1, jnp.where(f2, v2, jnp.uint32(0)))
+        found = valid & (f1 | f2)
+        values_ref[pl.ds(i, 1)] = jnp.where(found, value, jnp.uint32(0))[None]
+        found_ref[pl.ds(i, 1)] = found[None].astype(jnp.uint32)
+        return 0
+
+    jax.lax.fori_loop(0, keys_ref.shape[0], body, 0)
+
+
+def delete_kernel(meta_ref, keys_ref, buckets_in_ref, buckets_ref, deleted_ref):
+    """Batched Delete(k) (Algorithm 4).
+
+    ``buckets_in_ref`` is aliased to ``buckets_ref`` (donated); the winner
+    lane's slot is cleared to EMPTY. The free-mask publication step of the
+    paper is implicit here: slot freeness is derived from the EMPTY word
+    (DESIGN.md §3 — metadata-free adaptation).
+    """
+    index_mask = meta_ref[0]
+    split_ptr = meta_ref[1]
+    buckets_ref[...] = buckets_in_ref[...]
+
+    def clear(b, lane):
+        bi = b.astype(jnp.int32)
+        buckets_ref[pl.ds(bi, 1), pl.ds(lane, 1)] = jnp.uint64(C.EMPTY_WORD)[None, None]
+
+    def body(i, _):
+        k = keys_ref[i]
+        valid = k != C.EMPTY_KEY
+        b1, b2 = C.candidate_buckets(k, index_mask, split_ptr)
+        row1 = buckets_ref[pl.ds(b1.astype(jnp.int32), 1), :]
+        f1, l1 = _wcme_match(row1, k)
+        row2 = buckets_ref[pl.ds(b2.astype(jnp.int32), 1), :]
+        f2, l2 = _wcme_match(row2, k)
+        # winner clears the slot with a single store (the CAS's exclusive
+        # analogue under grid-sequential semantics)
+        target_b = jnp.where(f1, b1, b2)
+        target_l = jnp.where(f1, l1, l2)
+        hit = valid & (f1 | f2)
+        # always store: on miss, rewrite the (unchanged) probed word
+        bi = target_b.astype(jnp.int32)
+        old = buckets_ref[pl.ds(bi, 1), pl.ds(target_l, 1)]
+        neww = jnp.where(hit, jnp.uint64(C.EMPTY_WORD), old[0, 0])
+        buckets_ref[pl.ds(bi, 1), pl.ds(target_l, 1)] = neww[None, None]
+        deleted_ref[pl.ds(i, 1)] = hit[None].astype(jnp.uint32)
+        return 0
+
+    _ = clear
+    jax.lax.fori_loop(0, keys_ref.shape[0], body, 0)
+
+
+def make_lookup(n_buckets: int, batch: int):
+    """Build the jittable batched-lookup callable for one capacity class."""
+    return pl.pallas_call(
+        lookup_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch,), jnp.uint32),  # values
+            jax.ShapeDtypeStruct((batch,), jnp.uint32),  # found
+        ),
+        interpret=True,
+    )
+
+
+def make_delete(n_buckets: int, batch: int):
+    """Build the jittable batched-delete callable (buckets donated)."""
+    return pl.pallas_call(
+        delete_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_buckets, C.SLOTS), jnp.uint64),  # buckets'
+            jax.ShapeDtypeStruct((batch,), jnp.uint32),  # deleted
+        ),
+        input_output_aliases={2: 0},
+        interpret=True,
+    )

@@ -1,0 +1,229 @@
+"""Pure-Python/numpy oracle for the Pallas kernels.
+
+Implements the *identical* deterministic semantics — same candidate order,
+same two-choice rule, same first-free-lane election, same lane-0 victim,
+same alt-bucket rule — so pytest can assert exact equality between a
+kernel run and the oracle on arbitrary inputs (hypothesis sweeps).
+"""
+
+import numpy as np
+
+SLOTS = 32
+EMPTY_KEY = np.uint32(0xFFFFFFFF)
+EMPTY_WORD = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+ST_REPLACED, ST_CLAIMED, ST_EVICTED, ST_OVERFLOW, ST_SKIPPED = 0, 1, 2, 3, 4
+
+_U32 = np.uint32
+_MASK32 = np.uint64(0xFFFFFFFF)
+
+
+def pack(key, value):
+    """pair = (value << 32) | key."""
+    return (np.uint64(value) << np.uint64(32)) | np.uint64(key)
+
+
+def unpack_key(word):
+    """key = pair & 0xFFFFFFFF."""
+    return _U32(np.uint64(word) & _MASK32)
+
+
+def unpack_value(word):
+    """value = pair >> 32."""
+    return _U32(np.uint64(word) >> np.uint64(32))
+
+
+def bithash1(key):
+    """BitHash1 (Thomas Wang), numpy uint32 wrapping arithmetic."""
+    with np.errstate(over="ignore"):
+        key = _U32(key)
+        key = _U32(~key + (key << _U32(15)))
+        key = _U32(key ^ (key >> _U32(12)))
+        key = _U32(key + (key << _U32(2)))
+        key = _U32(key ^ (key >> _U32(4)))
+        key = _U32(key * _U32(2057))
+        key = _U32(key ^ (key >> _U32(16)))
+    return key
+
+
+def bithash2(key):
+    """BitHash2 (Bob Jenkins 6-shift)."""
+    with np.errstate(over="ignore"):
+        key = _U32(key)
+        key = _U32((key + _U32(0x7ED55D16)) + (key << _U32(12)))
+        key = _U32((key ^ _U32(0xC761C23C)) ^ (key >> _U32(19)))
+        key = _U32((key + _U32(0x165667B1)) + (key << _U32(5)))
+        key = _U32((key + _U32(0xD3A2646C)) ^ (key << _U32(9)))
+        key = _U32((key + _U32(0xFD7046C5)) + (key << _U32(3)))
+        key = _U32((key ^ _U32(0xB55A4F09)) ^ (key >> _U32(16)))
+    return key
+
+
+def lh_address(h, index_mask, split_ptr):
+    """Linear-hashing address reduction."""
+    b = _U32(h) & _U32(index_mask)
+    if b < _U32(split_ptr):
+        return _U32(h) & _U32((int(index_mask) << 1) | 1)
+    return b
+
+
+def candidates(key, index_mask, split_ptr):
+    """Candidate buckets (b1, b2)."""
+    return (
+        int(lh_address(bithash1(key), index_mask, split_ptr)),
+        int(lh_address(bithash2(key), index_mask, split_ptr)),
+    )
+
+
+def alt_bucket(key, current_b, index_mask, split_ptr):
+    """AltBucket: the candidate != current_b, else b1."""
+    b1, b2 = candidates(key, index_mask, split_ptr)
+    return b1 if b1 != current_b else b2
+
+
+def new_table(n_buckets):
+    """An empty bucket array."""
+    return np.full((n_buckets, SLOTS), EMPTY_WORD, dtype=np.uint64)
+
+
+def lookup_batch(buckets, meta, keys):
+    """Oracle for probe.lookup_kernel."""
+    index_mask, split_ptr = int(meta[0]), int(meta[1])
+    values = np.zeros(len(keys), dtype=np.uint32)
+    found = np.zeros(len(keys), dtype=np.uint32)
+    for i, k in enumerate(keys):
+        if _U32(k) == EMPTY_KEY:
+            continue
+        for b in candidates(k, index_mask, split_ptr):
+            row = buckets[b]
+            match = unpack_key(row) == _U32(k)
+            if match.any():
+                lane = int(np.argmax(match))
+                values[i] = unpack_value(row[lane])
+                found[i] = 1
+                break
+    return values, found
+
+
+def delete_batch(buckets, meta, keys):
+    """Oracle for probe.delete_kernel (mutates a copy)."""
+    buckets = buckets.copy()
+    index_mask, split_ptr = int(meta[0]), int(meta[1])
+    deleted = np.zeros(len(keys), dtype=np.uint32)
+    for i, k in enumerate(keys):
+        if _U32(k) == EMPTY_KEY:
+            continue
+        for b in candidates(k, index_mask, split_ptr):
+            row = buckets[b]
+            match = unpack_key(row) == _U32(k)
+            if match.any():
+                lane = int(np.argmax(match))
+                buckets[b, lane] = EMPTY_WORD
+                deleted[i] = 1
+                break
+    return buckets, deleted
+
+
+def insert_batch(buckets, meta, keys, vals, max_evictions=16):
+    """Oracle for insert.make_insert_kernel — identical decision rules."""
+    buckets = buckets.copy()
+    index_mask, split_ptr = int(meta[0]), int(meta[1])
+    status = np.zeros(len(keys), dtype=np.uint32)
+    overflow = np.full(len(keys), EMPTY_WORD, dtype=np.uint64)
+    for i, (k, v) in enumerate(zip(keys, vals)):
+        if _U32(k) == EMPTY_KEY:
+            status[i] = ST_SKIPPED
+            continue
+        word = pack(k, v)
+        b1, b2 = candidates(k, index_mask, split_ptr)
+        # step 1: replace — b1 priority
+        done = False
+        for b in (b1, b2):
+            match = unpack_key(buckets[b]) == _U32(k)
+            if match.any():
+                buckets[b, int(np.argmax(match))] = word
+                status[i] = ST_REPLACED
+                done = True
+                break
+        if done:
+            continue
+        # step 2: claim — two-choice (emptier first, ties -> b1), then other
+        free1 = unpack_key(buckets[b1]) == EMPTY_KEY
+        free2 = unpack_key(buckets[b2]) == EMPTY_KEY
+        order = (b1, b2) if free1.sum() >= free2.sum() else (b2, b1)
+        claimed = False
+        for b in order:
+            free = unpack_key(buckets[b]) == EMPTY_KEY
+            if free.any():
+                buckets[b, int(np.argmax(free))] = word
+                status[i] = ST_CLAIMED
+                claimed = True
+                break
+        if claimed:
+            continue
+        # step 3: bounded eviction starting at b1, lane-0 victim
+        cur_word, cur_b = word, b1
+        placed = False
+        for _ in range(max_evictions):
+            free = unpack_key(buckets[cur_b]) == EMPTY_KEY
+            if free.any():
+                buckets[cur_b, int(np.argmax(free))] = cur_word
+                placed = True
+                break
+            victim = buckets[cur_b, 0]
+            buckets[cur_b, 0] = cur_word
+            cur_word = victim
+            cur_b = alt_bucket(unpack_key(victim), cur_b, index_mask, split_ptr)
+        if placed:
+            status[i] = ST_EVICTED
+        else:
+            status[i] = ST_OVERFLOW
+            overflow[i] = cur_word
+    return buckets, status, overflow
+
+
+def split_batch(buckets, meta, k_batch):
+    """Oracle for migrate.make_split_kernel (no meta update)."""
+    buckets = buckets.copy()
+    index_mask, split_ptr = int(meta[0]), int(meta[1])
+    m_base = index_mask + 1
+    next_mask = (index_mask << 1) | 1
+    moved = 0
+    for g in range(k_batch):
+        b_src = split_ptr + g
+        b_dst = b_src + m_base
+        dst_rank = 0
+        for lane in range(SLOTS):
+            w = buckets[b_src, lane]
+            k = unpack_key(w)
+            if k == EMPTY_KEY:
+                continue
+            h = bithash1(k) if (int(bithash1(k)) & index_mask) == b_src else bithash2(k)
+            if (int(h) & next_mask) == b_dst:
+                buckets[b_dst, dst_rank] = w
+                buckets[b_src, lane] = EMPTY_WORD
+                dst_rank += 1
+                moved += 1
+    return buckets, moved
+
+
+def merge_batch(buckets, meta, k_batch):
+    """Oracle for migrate.make_merge_kernel."""
+    buckets = buckets.copy()
+    index_mask, split_ptr = int(meta[0]), int(meta[1])
+    m_base = index_mask + 1
+    merged = 0
+    for g in range(k_batch):
+        if split_ptr - g <= 0:
+            break
+        b_dst = split_ptr - 1 - g
+        b_src = b_dst + m_base
+        movers = [lane for lane in range(SLOTS) if unpack_key(buckets[b_src, lane]) != EMPTY_KEY]
+        frees = [lane for lane in range(SLOTS) if unpack_key(buckets[b_dst, lane]) == EMPTY_KEY]
+        if len(movers) > len(frees):
+            break  # abort: stays contiguous
+        for r, src_lane in enumerate(movers):
+            buckets[b_dst, frees[r]] = buckets[b_src, src_lane]
+            buckets[b_src, src_lane] = EMPTY_WORD
+        merged += 1
+    return buckets, merged

@@ -1,0 +1,163 @@
+"""Layer 2 — the bulk table-operation programs.
+
+Composes the L1 Pallas kernels into the five jittable programs the Rust
+runtime loads per capacity class (DESIGN.md §7):
+
+* ``lookup``  (buckets, meta, keys)          -> (values, found)
+* ``insert``  (buckets, meta, keys, vals)    -> (buckets', status, overflow)
+* ``delete``  (buckets, meta, keys)          -> (buckets', deleted)
+* ``split``   (buckets, meta)                -> (buckets', meta', moved)
+* ``merge``   (buckets, meta)                -> (buckets', meta', merged)
+
+Table state = ``buckets u64[N,32]`` + ``meta u32[4]`` =
+``[index_mask, split_ptr, 0, 0]``. All shapes are static per artifact;
+short batches are padded with the EMPTY key (kernels skip them).
+
+Python never runs at serving time: ``aot.py`` lowers each program to HLO
+text once, and the Rust coordinator executes the artifacts via PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import common as C
+from .kernels import insert as insert_k
+from .kernels import migrate, probe
+
+jax.config.update("jax_enable_x64", True)
+
+DEFAULT_BATCH = 4096
+DEFAULT_RESIZE_K = 256
+DEFAULT_MAX_EVICTIONS = 16
+
+
+def new_table(n_buckets: int):
+    """Fresh (buckets, meta) for a capacity class of `n_buckets` physical
+    buckets, starting with the full class addressable (mask = N-1)."""
+    buckets = jnp.full((n_buckets, C.SLOTS), C.EMPTY_WORD, dtype=jnp.uint64)
+    meta = jnp.array([n_buckets - 1, 0, 0, 0], dtype=jnp.uint32)
+    return buckets, meta
+
+
+def new_table_at_round(n_buckets: int, index_mask: int, split_ptr: int = 0):
+    """Fresh table addressed at a smaller round (room to split upward)."""
+    assert index_mask < n_buckets
+    buckets = jnp.full((n_buckets, C.SLOTS), C.EMPTY_WORD, dtype=jnp.uint64)
+    meta = jnp.array([index_mask, split_ptr, 0, 0], dtype=jnp.uint32)
+    return buckets, meta
+
+
+# ---------------------------------------------------------------------------
+# The five programs. Each is a plain jax function of concrete arrays with
+# static (n_buckets, batch, ...) baked in via the factory functions below.
+# ---------------------------------------------------------------------------
+
+
+def lookup_fn(n_buckets: int, batch: int):
+    """Bulk Search program."""
+    kernel = probe.make_lookup(n_buckets, batch)
+
+    def f(buckets, meta, keys):
+        values, found = kernel(meta, keys, buckets)
+        return values, found
+
+    return f
+
+
+def insert_fn(n_buckets: int, batch: int, max_evictions: int = DEFAULT_MAX_EVICTIONS):
+    """Bulk four-step Insert program (buckets donated)."""
+    kernel = insert_k.make_insert(n_buckets, batch, max_evictions)
+
+    def f(buckets, meta, keys, vals):
+        buckets, status, overflow = kernel(meta, keys, vals, buckets)
+        return buckets, status, overflow
+
+    return f
+
+
+def delete_fn(n_buckets: int, batch: int):
+    """Bulk Delete program (buckets donated)."""
+    kernel = probe.make_delete(n_buckets, batch)
+
+    def f(buckets, meta, keys):
+        buckets, deleted = kernel(meta, keys, buckets)
+        return buckets, deleted
+
+    return f
+
+
+def split_fn(n_buckets: int, k_batch: int):
+    """Expansion program: split `k_batch` buckets and advance the round
+    state (meta update is pure jnp around the migration kernel).
+
+    The caller guarantees `split_ptr + k_batch <= 2^m` and physical room;
+    the coordinator chunks requests at round boundaries (DESIGN.md §7).
+    """
+    kernel = migrate.make_split(n_buckets, k_batch)
+
+    def f(buckets, meta):
+        buckets, moved = kernel(meta, buckets)
+        index_mask = meta[0]
+        split_ptr = meta[1] + jnp.uint32(k_batch)
+        m_base = index_mask + jnp.uint32(1)
+        wrap = split_ptr == m_base
+        new_mask = jnp.where(wrap, (index_mask << 1) | jnp.uint32(1), index_mask)
+        new_sp = jnp.where(wrap, jnp.uint32(0), split_ptr)
+        new_meta = jnp.stack([new_mask, new_sp, meta[2], meta[3]])
+        return buckets, new_meta, moved
+
+    return f
+
+
+def merge_fn(n_buckets: int, k_batch: int):
+    """Contraction program: merge up to `k_batch` pairs (last-split-first)
+    and regress split_ptr by the number actually merged.
+
+    The caller must present a mid-round state (split_ptr >= 1); round
+    regression across `split_ptr == 0` is the coordinator's chunking job.
+    """
+    kernel = migrate.make_merge(n_buckets, k_batch)
+
+    def f(buckets, meta):
+        buckets, merged = kernel(meta, buckets)
+        new_sp = meta[1] - merged[0]
+        new_meta = jnp.stack([meta[0], new_sp, meta[2], meta[3]])
+        return buckets, new_meta, merged
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Convenience jitted bundle (used by python tests and notebooks; the Rust
+# runtime uses the AOT artifacts instead).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def ops_bundle(n_buckets: int, batch: int, k_batch: int = DEFAULT_RESIZE_K,
+               max_evictions: int = DEFAULT_MAX_EVICTIONS):
+    """All five programs, jitted, for one capacity class."""
+    return {
+        "lookup": jax.jit(lookup_fn(n_buckets, batch)),
+        "insert": jax.jit(insert_fn(n_buckets, batch, max_evictions), donate_argnums=(0,)),
+        "delete": jax.jit(delete_fn(n_buckets, batch), donate_argnums=(0,)),
+        "split": jax.jit(split_fn(n_buckets, k_batch), donate_argnums=(0,)),
+        "merge": jax.jit(merge_fn(n_buckets, k_batch), donate_argnums=(0,)),
+    }
+
+
+def pad_keys(keys, batch: int):
+    """Pad a short key array to `batch` with the EMPTY sentinel."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    assert keys.shape[0] <= batch, "batch overflow"
+    pad = batch - keys.shape[0]
+    return jnp.pad(keys, (0, pad), constant_values=int(C.EMPTY_KEY))
+
+
+def pad_vals(vals, batch: int):
+    """Pad a short value array to `batch` with zeros."""
+    vals = jnp.asarray(vals, dtype=jnp.uint32)
+    pad = batch - vals.shape[0]
+    return jnp.pad(vals, (0, pad), constant_values=0)

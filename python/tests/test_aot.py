@@ -1,0 +1,42 @@
+"""AOT lowering smoke tests: every op lowers to parseable HLO text with
+the expected parameter shapes (the contract the Rust runtime relies on)."""
+
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import common as C
+
+
+def test_lower_ops_produces_all_five_programs():
+    ops = aot.lower_ops(n_buckets=64, batch=32, k_batch=8, max_ev=4)
+    assert set(ops) == {"lookup", "insert", "delete", "split", "merge"}
+    for name, text in ops.items():
+        assert text.startswith("HloModule"), f"{name} not HLO text"
+        assert "u64[64,32]" in text, f"{name} missing bucket param"
+        assert "u32[4]" in text, f"{name} missing meta param"
+
+
+def test_insert_hlo_mentions_batch_shape():
+    ops = aot.lower_ops(n_buckets=16, batch=48, k_batch=4, max_ev=2)
+    assert "u32[48]" in ops["insert"]
+    assert "u32[48]" in ops["lookup"]
+
+
+def test_manifest_line_format_roundtrip():
+    # mirror of the Rust ArtifactSpec::parse contract
+    line = (
+        "op=insert n_buckets=1024 batch=4096 k_batch=256 "
+        "max_evictions=16 slots=32 file=insert_1024.hlo.txt"
+    )
+    kv = dict(tok.split("=") for tok in line.split())
+    assert kv["op"] == "insert"
+    assert int(kv["n_buckets"]) == 1024
+    assert kv["file"].endswith(".hlo.txt")
+
+
+def test_pad_helpers():
+    keys = model.pad_keys(jnp.array([1, 2], dtype=jnp.uint32), 8)
+    assert keys.shape == (8,)
+    assert int(keys[0]) == 1 and int(keys[-1]) == C.EMPTY_KEY
+    vals = model.pad_vals(jnp.array([9], dtype=jnp.uint32), 4)
+    assert vals.shape == (4,) and int(vals[1]) == 0

@@ -1,0 +1,303 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel is asserted *bit-exact* against the pure numpy oracle
+in `compile.kernels.ref` across randomized shapes, occupancies and round
+states (the hypothesis-style sweep is seeded-random driven to keep the
+dependency footprint at zero).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import common as C
+from compile.kernels import ref
+
+EMPTY_KEY = 0xFFFFFFFF
+
+
+def rand_keys(rng, n, hi=2**31):
+    return rng.choice(hi, size=n, replace=False).astype(np.uint32)
+
+
+def make_filled(n_buckets, n_keys, seed, index_mask=None, split_ptr=0, batch=None):
+    """A table pre-filled via the *oracle* (so kernels are tested against
+    independent state), plus the keys/vals used."""
+    rng = np.random.default_rng(seed)
+    keys = rand_keys(rng, n_keys)
+    vals = (keys ^ 0xABCD).astype(np.uint32)
+    index_mask = n_buckets - 1 if index_mask is None else index_mask
+    meta = np.array([index_mask, split_ptr, 0, 0], dtype=np.uint32)
+    buckets, status, _ = ref.insert_batch(ref.new_table(n_buckets), meta, keys, vals)
+    return buckets, meta, keys, vals, status
+
+
+# ---------------------------------------------------------------------------
+# bithash / addressing agreement (kernel helpers vs oracle)
+# ---------------------------------------------------------------------------
+
+
+def test_bithash_matches_ref():
+    ks = np.arange(0, 200_000, 37, dtype=np.uint32)
+    j1 = np.array(C.bithash1(jnp.asarray(ks)))
+    j2 = np.array(C.bithash2(jnp.asarray(ks)))
+    r1 = np.array([ref.bithash1(k) for k in ks], dtype=np.uint32)
+    r2 = np.array([ref.bithash2(k) for k in ks], dtype=np.uint32)
+    np.testing.assert_array_equal(j1, r1)
+    np.testing.assert_array_equal(j2, r2)
+
+
+def test_lh_address_matches_ref():
+    rng = np.random.default_rng(0)
+    hs = rng.integers(0, 2**32, size=2000, dtype=np.uint64).astype(np.uint32)
+    for mask, sp in [(7, 0), (7, 3), (63, 17), (1023, 1023)]:
+        j = np.array(
+            C.lh_address(jnp.asarray(hs), jnp.uint32(mask), jnp.uint32(sp))
+        )
+        r = np.array([ref.lh_address(h, mask, sp) for h in hs], dtype=np.uint32)
+        np.testing.assert_array_equal(j, r, err_msg=f"mask={mask} sp={sp}")
+
+
+# ---------------------------------------------------------------------------
+# lookup kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_buckets,n_keys,seed", [
+    (16, 100, 0), (64, 1500, 1), (32, 900, 2), (128, 200, 3),
+])
+def test_lookup_matches_ref(n_buckets, n_keys, seed):
+    buckets, meta, keys, vals, _ = make_filled(n_buckets, n_keys, seed)
+    B = len(keys) + 32  # include misses
+    rng = np.random.default_rng(seed + 99)
+    miss = rand_keys(rng, 32, hi=2**31) | 0x8000_0000  # disjoint range
+    queries = np.concatenate([keys, miss.astype(np.uint32)])
+    ops = model.ops_bundle(n_buckets, B)
+    v, f = ops["lookup"](jnp.asarray(buckets), jnp.asarray(meta), jnp.asarray(queries))
+    rv, rf = ref.lookup_batch(buckets, meta, queries)
+    np.testing.assert_array_equal(np.array(v), rv)
+    np.testing.assert_array_equal(np.array(f), rf)
+    assert rf[: len(keys)].all(), "all inserted keys must be found"
+
+
+def test_lookup_mid_round_state():
+    # partial linear-hashing round: mask=15, split_ptr=5 (21 logical)
+    buckets, meta, keys, vals, _ = make_filled(
+        64, 400, 7, index_mask=15, split_ptr=5
+    )
+    ops = model.ops_bundle(64, len(keys))
+    v, f = ops["lookup"](jnp.asarray(buckets), jnp.asarray(meta), jnp.asarray(keys))
+    rv, rf = ref.lookup_batch(buckets, meta, keys)
+    np.testing.assert_array_equal(np.array(v), rv)
+    np.testing.assert_array_equal(np.array(f), rf)
+
+
+# ---------------------------------------------------------------------------
+# insert kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_buckets,n_keys,seed,max_ev", [
+    (16, 128, 10, 8),
+    (16, 480, 11, 8),    # ~94% load factor: eviction + overflow exercised
+    (64, 1800, 12, 16),
+    (8, 250, 13, 4),     # tiny table, deep contention
+])
+def test_insert_matches_ref(n_buckets, n_keys, seed, max_ev):
+    rng = np.random.default_rng(seed)
+    keys = rand_keys(rng, n_keys)
+    vals = (keys * 3).astype(np.uint32)
+    meta = np.array([n_buckets - 1, 0, 0, 0], dtype=np.uint32)
+    ops = model.ops_bundle(n_buckets, n_keys, max_evictions=max_ev)
+    empty, _ = model.new_table(n_buckets)
+    nb, st, ov = ops["insert"](
+        empty, jnp.asarray(meta), jnp.asarray(keys), jnp.asarray(vals)
+    )
+    rb, rst, rov = ref.insert_batch(
+        ref.new_table(n_buckets), meta, keys, vals, max_evictions=max_ev
+    )
+    np.testing.assert_array_equal(np.array(st), rst)
+    np.testing.assert_array_equal(np.array(nb), rb)
+    np.testing.assert_array_equal(np.array(ov), rov)
+
+
+def test_insert_replace_semantics():
+    n, B = 16, 64
+    rng = np.random.default_rng(20)
+    keys = rand_keys(rng, B)
+    meta = np.array([n - 1, 0, 0, 0], dtype=np.uint32)
+    ops = model.ops_bundle(n, B)
+    empty, _ = model.new_table(n)
+    nb, st, _ = ops["insert"](empty, jnp.asarray(meta), jnp.asarray(keys),
+                              jnp.asarray(keys))
+    # re-insert the same keys with new values: all must report REPLACED
+    nb2, st2, _ = ops["insert"](nb, jnp.asarray(meta), jnp.asarray(keys),
+                                jnp.asarray((keys + 1).astype(np.uint32)))
+    assert (np.array(st2) == ref.ST_REPLACED).all()
+    v, f = ops["lookup"](nb2, jnp.asarray(meta), jnp.asarray(keys))
+    np.testing.assert_array_equal(np.array(v), (keys + 1).astype(np.uint32))
+    assert np.array(f).all()
+
+
+def test_insert_padded_batch_skips():
+    n, B = 16, 32
+    meta = np.array([n - 1, 0, 0, 0], dtype=np.uint32)
+    ops = model.ops_bundle(n, B)
+    empty, _ = model.new_table(n)
+    keys = model.pad_keys(np.array([1, 2, 3], np.uint32), B)
+    vals = model.pad_vals(np.array([10, 20, 30], np.uint32), B)
+    nb, st, _ = ops["insert"](empty, jnp.asarray(meta), keys, vals)
+    st = np.array(st)
+    assert (st[:3] == ref.ST_CLAIMED).all()
+    assert (st[3:] == ref.ST_SKIPPED).all()
+    v, f = ops["lookup"](nb, jnp.asarray(meta), keys)
+    assert np.array(f)[:3].all() and not np.array(f)[3:].any()
+
+
+def test_insert_duplicate_keys_within_batch():
+    # the second occurrence must replace the first (grid-sequential order)
+    n, B = 16, 8
+    meta = np.array([n - 1, 0, 0, 0], dtype=np.uint32)
+    ops = model.ops_bundle(n, B)
+    empty, _ = model.new_table(n)
+    keys = np.array([5, 6, 5, 7, 5, 8, 9, 10], np.uint32)
+    vals = np.array([1, 2, 3, 4, 5, 6, 7, 8], np.uint32)
+    nb, st, _ = ops["insert"](empty, jnp.asarray(meta), jnp.asarray(keys), jnp.asarray(vals))
+    st = np.array(st)
+    assert st[0] == ref.ST_CLAIMED and st[2] == ref.ST_REPLACED and st[4] == ref.ST_REPLACED
+    v, f = ops["lookup"](nb, jnp.asarray(meta), jnp.asarray(keys))
+    assert np.array(v)[0] == 5  # last write wins
+
+
+# ---------------------------------------------------------------------------
+# delete kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_buckets,n_keys,seed", [(16, 300, 30), (64, 1500, 31)])
+def test_delete_matches_ref(n_buckets, n_keys, seed):
+    buckets, meta, keys, vals, _ = make_filled(n_buckets, n_keys, seed)
+    rng = np.random.default_rng(seed)
+    # delete half the keys + some misses, with duplicates
+    half = rng.choice(keys, size=n_keys // 2, replace=False)
+    miss = (rand_keys(rng, 16) | 0x8000_0000).astype(np.uint32)
+    dup = half[:8]
+    targets = np.concatenate([half, miss, dup])
+    ops = model.ops_bundle(n_buckets, len(targets))
+    nb, dl = ops["delete"](jnp.asarray(buckets), jnp.asarray(meta), jnp.asarray(targets))
+    rb, rdl = ref.delete_batch(buckets, meta, targets)
+    np.testing.assert_array_equal(np.array(dl), rdl)
+    np.testing.assert_array_equal(np.array(nb), rb)
+    # deleted keys are gone, kept keys remain
+    kept = np.setdiff1d(keys, half)
+    ops2 = model.ops_bundle(n_buckets, len(kept))
+    _, f = ops2["lookup"](nb, jnp.asarray(meta), jnp.asarray(kept))
+    assert np.array(f).all()
+
+
+# ---------------------------------------------------------------------------
+# split / merge kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,occupancy", [(40, 0.4), (41, 0.85)])
+def test_split_full_round_matches_ref(seed, occupancy):
+    n_phys, mask = 32, 7  # 8 logical buckets, room to double
+    n_keys = int(8 * 32 * occupancy)
+    buckets, meta, keys, vals, _ = make_filled(n_phys, n_keys, seed, index_mask=mask)
+    k_batch = 8
+    ops = model.ops_bundle(n_phys, n_keys, k_batch=k_batch)
+    sb, smeta, moved = ops["split"](jnp.asarray(buckets), jnp.asarray(meta))
+    rb, rmoved = ref.split_batch(buckets, meta, k_batch)
+    np.testing.assert_array_equal(np.array(sb), rb)
+    assert int(moved[0]) == rmoved
+    assert list(np.array(smeta)[:2]) == [15, 0]  # round advanced
+    # every key still findable under the new round state
+    v, f = ops["lookup"](sb, smeta, jnp.asarray(keys))
+    assert np.array(f).all()
+    np.testing.assert_array_equal(np.array(v), vals)
+
+
+def test_split_partial_round():
+    n_phys, mask = 32, 7
+    buckets, meta, keys, vals, _ = make_filled(n_phys, 120, 42, index_mask=mask)
+    ops = model.ops_bundle(n_phys, 120, k_batch=3)
+    sb, smeta, _ = ops["split"](jnp.asarray(buckets), jnp.asarray(meta))
+    assert list(np.array(smeta)[:2]) == [7, 3]  # mid-round
+    v, f = ops["lookup"](sb, smeta, jnp.asarray(keys))
+    assert np.array(f).all()
+    np.testing.assert_array_equal(np.array(v), vals)
+
+
+def test_merge_roundtrip_preserves_entries():
+    n_phys, mask = 32, 7
+    buckets, meta, keys, vals, _ = make_filled(n_phys, 100, 43, index_mask=mask)
+    ops = model.ops_bundle(n_phys, 100, k_batch=8)
+    sb, smeta, _ = ops["split"](jnp.asarray(buckets), jnp.asarray(meta))
+    sb_np = np.array(sb)
+    # coordinator-style regress: (15,0) -> (7,8), then merge 8
+    meta_mr = np.array([7, 8, 0, 0], np.uint32)
+    mb, mmeta, merged = ops["merge"](sb, jnp.asarray(meta_mr))
+    rb, rmerged = ref.merge_batch(sb_np, meta_mr, 8)
+    np.testing.assert_array_equal(np.array(mb), rb)
+    assert int(merged[0]) == rmerged == 8
+    assert list(np.array(mmeta)[:2]) == [7, 0]
+    v, f = ops["lookup"](mb, jnp.asarray(mmeta), jnp.asarray(keys))
+    assert np.array(f).all()
+    np.testing.assert_array_equal(np.array(v), vals)
+
+
+def test_merge_aborts_when_pair_too_full():
+    # fill bucket pair (0, 8) beyond 32 combined live entries via dense fill
+    n_phys, mask = 32, 15  # 16 logical
+    buckets, meta, keys, vals, _ = make_filled(n_phys, 15 * 32, 44, index_mask=mask)
+    # regress to (7, 8): pairs (7,15), (6,14), ... all nearly full
+    meta_mr = np.array([7, 8, 0, 0], np.uint32)
+    ops = model.ops_bundle(n_phys, 15 * 32, k_batch=8)
+    mb, mmeta, merged = ops["merge"](jnp.asarray(buckets), jnp.asarray(meta_mr))
+    rb, rmerged = ref.merge_batch(buckets, meta_mr, 8)
+    assert int(merged[0]) == rmerged
+    assert rmerged < 8, "dense pairs must abort merging"
+    np.testing.assert_array_equal(np.array(mb), rb)
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep (hypothesis-style, seeded)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_randomized_mixed_sequences(trial):
+    rng = np.random.default_rng(1000 + trial)
+    n_buckets = int(rng.choice([8, 16, 32]))
+    if rng.random() < 0.5:
+        # mid-round state: logical range [2^m, 2^(m+1)) must fit physically
+        mask = n_buckets // 2 - 1
+        sp = int(rng.integers(0, mask + 2))
+    else:
+        mask = n_buckets - 1
+        sp = 0
+    meta = np.array([mask, sp, 0, 0], np.uint32)
+    B = int(rng.choice([32, 64, 128]))
+    ops = model.ops_bundle(n_buckets, B, max_evictions=8)
+
+    buckets_j, _ = model.new_table(n_buckets)
+    buckets_r = ref.new_table(n_buckets)
+    for _round in range(3):
+        keys = rand_keys(rng, B)
+        vals = rng.integers(0, 2**32, size=B, dtype=np.uint64).astype(np.uint32)
+        bj, sj, oj = ops["insert"](buckets_j, jnp.asarray(meta), jnp.asarray(keys), jnp.asarray(vals))
+        buckets_r, sr, orr = ref.insert_batch(buckets_r, meta, keys, vals, max_evictions=8)
+        np.testing.assert_array_equal(np.array(sj), sr, err_msg=f"trial {trial}")
+        np.testing.assert_array_equal(np.array(bj), buckets_r)
+        np.testing.assert_array_equal(np.array(oj), orr)
+        buckets_j = bj
+        # delete a random subset
+        dels = rng.choice(keys, size=B // 3, replace=False)
+        dels = np.pad(dels, (0, B - len(dels)), constant_values=EMPTY_KEY)
+        bj, dj = ops["delete"](buckets_j, jnp.asarray(meta), jnp.asarray(dels))
+        buckets_r, dr = ref.delete_batch(buckets_r, meta, dels)
+        np.testing.assert_array_equal(np.array(dj), dr)
+        np.testing.assert_array_equal(np.array(bj), buckets_r)
+        buckets_j = bj

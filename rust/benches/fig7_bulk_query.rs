@@ -1,0 +1,55 @@
+//! Figure 7 — concurrent bulk query throughput.
+//!
+//! Paper: Hive sustains up to 3853 MOPS (highest); DyCuckoo is
+//! competitive at 2^20 but declines sharply at scale (must probe all d
+//! subtables); WarpCore and SlabHash stable but lower.
+//!
+//! Run: `cargo bench --bench fig7_bulk_query`
+
+use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike, WarpCoreLike};
+use hivehash::report::{bench_max_pow, bench_threads, drive_parallel, mops, Table};
+use hivehash::workload::{bulk_insert, bulk_lookup};
+use hivehash::{HiveConfig, HiveTable};
+use std::sync::Arc;
+
+fn main() {
+    let threads = bench_threads();
+    let max_pow = bench_max_pow(20, 25);
+    let mut table = Table::new(
+        &format!("Fig. 7 — bulk query MOPS ({threads} threads, pre-filled tables)"),
+        &["keys", "HiveHash", "WarpCore", "DyCuckoo", "SlabHash", "hive/dycuckoo"],
+    );
+
+    for pow in 17..=max_pow {
+        let n = 1usize << pow;
+        let fill = bulk_insert(n, 0x7007 + pow as u64);
+        let keys: Vec<u32> = fill.iter().map(|o| o.key()).collect();
+        let queries = bulk_lookup(&keys);
+
+        let builders: Vec<Arc<dyn ConcurrentMap>> = vec![
+            Arc::new(HiveTable::new(HiveConfig::for_capacity(n, 0.95)).unwrap()),
+            Arc::new(WarpCoreLike::for_capacity(n)),
+            Arc::new(DyCuckooLike::for_capacity(n)),
+            Arc::new(SlabHashLike::for_capacity(n)),
+        ];
+        let mut results = Vec::new();
+        for map in builders {
+            // pre-fill single-threaded (not timed)
+            for op in &fill {
+                if let hivehash::workload::Op::Insert { key, value } = *op {
+                    map.insert(key, value).unwrap();
+                }
+            }
+            let dur = drive_parallel(Arc::clone(&map), &queries, threads);
+            results.push(mops(n, dur));
+        }
+        let mut row = vec![format!("2^{pow}")];
+        for r in &results {
+            row.push(format!("{r:.1}"));
+        }
+        row.push(format!("{:.2}x", results[0] / results[2]));
+        table.row(row);
+    }
+    table.emit(Some("bench_out/fig7_bulk_query.csv"));
+    println!("paper shape: Hive highest and stable; DyCuckoo declines with scale (d-subtable probing)");
+}

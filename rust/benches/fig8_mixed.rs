@@ -1,0 +1,77 @@
+//! Figure 8 — imbalanced workload (insert : lookup : delete = 0.5:0.3:0.2).
+//!
+//! Paper: Hive stable 2611→1796 MOPS as ops scale; SlabHash collapses
+//! beyond ~2^23 (allocator contention + tombstone bloat); DyCuckoo peaks
+//! near 2^21 then declines (eviction cascades); WarpCore excluded — its
+//! per-thread atomic model has no safe concurrent delete.
+//!
+//! Run: `cargo bench --bench fig8_mixed`
+
+use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike};
+use hivehash::report::{bench_max_pow, bench_threads, drive_parallel, mops, Table};
+use hivehash::workload::{mixed, Mix};
+use hivehash::{HiveConfig, HiveTable};
+use std::sync::Arc;
+
+fn main() {
+    let threads = bench_threads();
+    let max_pow = bench_max_pow(20, 25);
+    let mut table = Table::new(
+        &format!("Fig. 8 — mixed 0.5:0.3:0.2 MOPS ({threads} threads); WarpCore excluded (unsafe concurrent delete)"),
+        &["ops", "HiveHash", "DyCuckoo", "SlabHash", "hive/slab"],
+    );
+
+    for pow in 17..=max_pow {
+        let n = 1usize << pow;
+        let ops = mixed(n, Mix::PAPER_IMBALANCED, 0x8008 + pow as u64);
+        // live set peaks around n/2; capacity planned for that
+        let cap = n * 6 / 10;
+        let builders: Vec<Arc<dyn ConcurrentMap>> = vec![
+            Arc::new(HiveTable::new(HiveConfig::for_capacity(cap, 0.9)).unwrap()),
+            Arc::new(DyCuckooLike::for_capacity(cap)),
+            Arc::new(SlabHashLike::for_capacity(cap)),
+        ];
+        let mut results = Vec::new();
+        for map in builders {
+            let dur = drive_parallel(Arc::clone(&map), &ops, threads);
+            results.push(mops(n, dur));
+        }
+        let mut row = vec![format!("2^{pow}")];
+        for r in &results {
+            row.push(format!("{r:.1}"));
+        }
+        row.push(format!("{:.2}x", results[0] / results[2]));
+        table.row(row);
+    }
+    table.emit(Some("bench_out/fig8_mixed.csv"));
+    println!("paper shape: Hive stable; SlabHash collapses at scale; DyCuckoo peaks early then declines");
+
+    // --- GPU cost-model churn comparison (the Fig. 8 collapse) ---
+    use hivehash::simgpu::{SimHive, SimHiveConfig, SimSlab};
+    let n = 8192usize;
+    let mut hive = SimHive::new(SimHiveConfig { n_buckets: (n / 32) * 2, ..Default::default() });
+    let mut slab = SimSlab::new((n / 30).next_power_of_two() / 2, n * 2);
+    let mut model = Table::new(
+        "Fig. 8 companion — cycles/op under insert+delete churn rounds (tombstone bloat)",
+        &["round", "Hive cycles/op", "SlabHash cycles/op"],
+    );
+    for round in 0..10u32 {
+        hive.reset_breakdown();
+        let s0 = slab.metrics();
+        for i in 0..n as u32 {
+            let k = round * 1_000_000 + i + 1;
+            hive.insert(k, k);
+            slab.insert(k, k);
+        }
+        for i in 0..n as u32 {
+            let k = round * 1_000_000 + i + 1;
+            hive.delete(k);
+            slab.delete(k);
+        }
+        let hive_cpo = hive.breakdown().cycles.iter().sum::<u64>() as f64 / n as f64;
+        let s1 = slab.metrics();
+        let slab_cpo = (s1.cycles - s0.cycles) as f64 / (s1.ops - s0.ops) as f64;
+        model.row(vec![round.to_string(), format!("{hive_cpo:.0}"), format!("{slab_cpo:.0}")]);
+    }
+    model.emit(Some("bench_out/fig8_cost_model.csv"));
+}

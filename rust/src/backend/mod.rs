@@ -1,0 +1,101 @@
+//! Execution backends: one table interface, three substrates.
+//!
+//! The coordinator's workers drive a [`Backend`]; which substrate executes
+//! the operations is a config choice:
+//!
+//! * [`NativeBackend`] — the lock-free CPU table (`native::HiveTable`),
+//!   the throughput substrate;
+//! * [`XlaBackend`] — bulk AOT-compiled XLA programs via PJRT
+//!   (`runtime::XlaTable`), the L1/L2 paper path;
+//! * [`SimtBackend`] — the warp simulator (`simgpu::SimHive`), the
+//!   microarchitectural-metrics substrate.
+//!
+//! Within one dispatch window the batcher groups operations by type
+//! (insert → delete → lookup). Requests in one window are concurrent —
+//! they carry no cross-ordering guarantee — so the grouped execution is a
+//! legal linearization (standard batched-serving semantics; see
+//! `coordinator::batcher`).
+
+use crate::core::error::Result;
+use crate::native::resize::ResizeEvent;
+use crate::workload::Op;
+
+/// Result of one executed batch.
+#[derive(Debug, Default, Clone)]
+pub struct BatchResult {
+    /// One entry per lookup op, in submission order.
+    pub lookups: Vec<Option<u32>>,
+    /// One entry per delete op: did it remove a key?
+    pub deletes: Vec<bool>,
+    /// Inserted (new) key count.
+    pub inserted: usize,
+    /// Replaced key count.
+    pub replaced: usize,
+    /// Overflowed-to-stash count.
+    pub stashed: usize,
+}
+
+/// A pluggable table substrate driven by the coordinator.
+///
+/// Deliberately NOT `Send`: the PJRT client behind [`XlaBackend`] is
+/// single-threaded (`Rc` internals), so each coordinator worker
+/// *constructs* its backend inside its own thread (see
+/// `coordinator::service::Coordinator::start`).
+pub trait Backend {
+    /// Execute one batch of operations (grouped-by-type semantics).
+    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult>;
+    /// Live entries.
+    fn len(&self) -> usize;
+    /// Current load factor.
+    fn load_factor(&self) -> f64;
+    /// Run the load-aware resize policy once (between batches).
+    fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>>;
+    /// Substrate name for logs/stats.
+    fn name(&self) -> &'static str;
+}
+
+pub mod native;
+pub mod xla;
+pub mod simt;
+
+pub use native::NativeBackend;
+pub use simt::SimtBackend;
+pub use xla::XlaBackend;
+
+/// Split a window of ops into (inserts, deletes, lookups) preserving
+/// intra-class order; returns the ops plus their original indices.
+pub(crate) fn group_ops(
+    ops: &[Op],
+) -> (Vec<(usize, u32, u32)>, Vec<(usize, u32)>, Vec<(usize, u32)>) {
+    let mut ins = Vec::new();
+    let mut del = Vec::new();
+    let mut luk = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Insert { key, value } => ins.push((i, key, value)),
+            Op::Delete { key } => del.push((i, key)),
+            Op::Lookup { key } => luk.push((i, key)),
+        }
+    }
+    (ins, del, luk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping_preserves_order_and_indices() {
+        let ops = vec![
+            Op::Lookup { key: 1 },
+            Op::Insert { key: 2, value: 20 },
+            Op::Delete { key: 3 },
+            Op::Insert { key: 4, value: 40 },
+            Op::Lookup { key: 5 },
+        ];
+        let (ins, del, luk) = group_ops(&ops);
+        assert_eq!(ins, vec![(1, 2, 20), (3, 4, 40)]);
+        assert_eq!(del, vec![(2, 3)]);
+        assert_eq!(luk, vec![(0, 1), (4, 5)]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Native backend — the lock-free `HiveTable` behind the `Backend` trait.
+
+use crate::backend::{group_ops, Backend, BatchResult};
+use crate::core::config::HiveConfig;
+use crate::core::error::Result;
+use crate::native::resize::ResizeEvent;
+use crate::native::table::HiveTable;
+use crate::workload::Op;
+use std::sync::Arc;
+
+/// Backend over the native concurrent table. Holding an `Arc` lets other
+/// threads (and direct users) share the same table.
+pub struct NativeBackend {
+    table: Arc<HiveTable>,
+}
+
+impl NativeBackend {
+    /// Backend with a fresh table from `cfg`.
+    pub fn new(cfg: HiveConfig) -> Result<Self> {
+        Ok(NativeBackend { table: Arc::new(HiveTable::new(cfg)?) })
+    }
+
+    /// Backend over an existing shared table.
+    pub fn shared(table: Arc<HiveTable>) -> Self {
+        NativeBackend { table }
+    }
+
+    /// The underlying table.
+    pub fn table(&self) -> &Arc<HiveTable> {
+        &self.table
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
+        use crate::core::error::HiveError;
+        use crate::native::table::InsertOutcome;
+        let (ins, del, luk) = group_ops(ops);
+        let mut res = BatchResult::default();
+        for (_, key, value) in ins {
+            let outcome = match self.table.insert(key, value) {
+                Ok(o) => o,
+                Err(HiveError::TableFull) => {
+                    // a window can outgrow capacity before the between-batch
+                    // resize check fires: grow one K-batch and retry once
+                    self.table.grow_buckets(self.table.config().resize_batch);
+                    self.table.insert(key, value)?
+                }
+                Err(e) => return Err(e),
+            };
+            match outcome {
+                InsertOutcome::Replaced => res.replaced += 1,
+                InsertOutcome::Stashed => res.stashed += 1,
+                _ => res.inserted += 1,
+            }
+        }
+        for (_, key) in del {
+            res.deletes.push(self.table.delete(key));
+        }
+        for (_, key) in luk {
+            res.lookups.push(self.table.lookup(key));
+        }
+        Ok(res)
+    }
+
+    fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    fn load_factor(&self) -> f64 {
+        self.table.load_factor()
+    }
+
+    fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>> {
+        Ok(self.table.maybe_resize())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{bulk_insert, bulk_lookup, Op};
+
+    #[test]
+    fn executes_mixed_batches() {
+        let mut b = NativeBackend::new(HiveConfig::default().with_buckets(64)).unwrap();
+        let inserts = bulk_insert(1000, 1);
+        b.execute(&inserts).unwrap();
+        assert_eq!(b.len(), 1000);
+        let keys: Vec<u32> = inserts.iter().map(|o| o.key()).collect();
+        let res = b.execute(&bulk_lookup(&keys)).unwrap();
+        assert_eq!(res.lookups.len(), 1000);
+        assert!(res.lookups.iter().all(Option::is_some));
+        // delete half
+        let dels: Vec<Op> = keys[..500].iter().map(|&key| Op::Delete { key }).collect();
+        let res = b.execute(&dels).unwrap();
+        assert!(res.deletes.iter().all(|&d| d));
+        assert_eq!(b.len(), 500);
+    }
+
+    #[test]
+    fn resize_triggers_through_backend() {
+        let cfg = HiveConfig::default().with_buckets(4);
+        let mut b = NativeBackend::new(cfg).unwrap();
+        let n = (4 * 32) as f64 * 0.92;
+        let ops = bulk_insert(n as usize, 2);
+        b.execute(&ops).unwrap();
+        assert!(b.load_factor() > 0.9);
+        let ev = b.maybe_resize().unwrap();
+        assert!(matches!(ev, Some(ResizeEvent::Grew { .. })));
+    }
+}

@@ -1,0 +1,90 @@
+//! XLA backend — bulk operations through the AOT artifacts (the paper's
+//! L1/L2 path, PJRT-executed, Python-free).
+
+use crate::backend::{group_ops, Backend, BatchResult};
+use crate::core::error::Result;
+use crate::native::resize::ResizeEvent;
+use crate::runtime::{Runtime, XlaTable};
+use crate::workload::Op;
+use std::sync::Arc;
+
+/// Backend over an [`XlaTable`].
+pub struct XlaBackend {
+    table: XlaTable,
+}
+
+impl XlaBackend {
+    /// Backend at the given capacity class.
+    pub fn new(rt: Arc<Runtime>, class: usize) -> Result<Self> {
+        Ok(XlaBackend { table: XlaTable::new(rt, class)? })
+    }
+
+    /// Backend starting at `logical` addressable buckets within `class`.
+    pub fn with_initial_buckets(rt: Arc<Runtime>, class: usize, logical: usize) -> Result<Self> {
+        Ok(XlaBackend { table: XlaTable::with_initial_buckets(rt, class, logical)? })
+    }
+
+    /// The underlying table.
+    pub fn table(&self) -> &XlaTable {
+        &self.table
+    }
+
+    /// Mutable access (bulk drivers use the table directly).
+    pub fn table_mut(&mut self) -> &mut XlaTable {
+        &mut self.table
+    }
+}
+
+impl Backend for XlaBackend {
+    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
+        let (ins, del, luk) = group_ops(ops);
+        let mut res = BatchResult::default();
+        if !ins.is_empty() {
+            let keys: Vec<u32> = ins.iter().map(|&(_, k, _)| k).collect();
+            let vals: Vec<u32> = ins.iter().map(|&(_, _, v)| v).collect();
+            // A window can outgrow capacity + stash between resize checks:
+            // grow a full round and retry (re-running a partially applied
+            // chunk is safe — replays become replaces).
+            let report = loop {
+                match self.table.insert_batch(&keys, &vals) {
+                    Ok(r) => break r,
+                    Err(crate::core::error::HiveError::TableFull) => {
+                        let logical = self.table.logical_buckets();
+                        if self.table.grow_buckets(logical)? == 0 {
+                            return Err(crate::core::error::HiveError::TableFull);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            res.inserted = report.inserted;
+            res.replaced = report.replaced;
+            res.stashed = report.stashed;
+        }
+        if !del.is_empty() {
+            let keys: Vec<u32> = del.iter().map(|&(_, k)| k).collect();
+            res.deletes = self.table.delete_batch(&keys)?;
+        }
+        if !luk.is_empty() {
+            let keys: Vec<u32> = luk.iter().map(|&(_, k)| k).collect();
+            res.lookups = self.table.lookup_batch(&keys)?;
+        }
+        Ok(res)
+    }
+
+    fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    fn load_factor(&self) -> f64 {
+        self.table.load_factor()
+    }
+
+    fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>> {
+        self.table.maybe_resize()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

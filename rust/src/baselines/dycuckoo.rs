@@ -1,0 +1,375 @@
+//! DyCuckoo-like baseline [17].
+//!
+//! DyCuckoo maintains `d` *independent subtables*, each a bucketed cuckoo
+//! table, and resizes by doubling/halving one subtable at a time. The
+//! structural behaviours the paper highlights — reproduced here — are:
+//!
+//! * **multi-subtable probing**: every lookup/delete must probe all `d`
+//!   subtables (d separate bucket loads, the Fig. 7 large-table decline);
+//! * **uncoordinated eviction**: insertion kicks entries between subtables
+//!   without a global bound coordinator, causing eviction cascades at high
+//!   load (Fig. 8 decline);
+//! * **per-subtable resize**: growing rehashes one whole subtable
+//!   (cheaper than global rehash, dearer than Hive's K-bucket batches).
+
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::{pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
+use crate::hash::HashKind;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// Slots per bucket in each subtable (DyCuckoo uses small buckets).
+const BUCKET_SLOTS: usize = 8;
+/// Eviction bound before triggering a subtable resize.
+const MAX_KICKS: usize = 64;
+
+struct SubTable {
+    words: Box<[AtomicU64]>,
+    n_buckets: usize,
+}
+
+impl SubTable {
+    fn new(n_buckets: usize) -> Self {
+        let n_buckets = n_buckets.next_power_of_two().max(2);
+        SubTable {
+            words: (0..n_buckets * BUCKET_SLOTS).map(|_| AtomicU64::new(EMPTY_WORD)).collect(),
+            n_buckets,
+        }
+    }
+
+    fn bucket_base(&self, hash: u32) -> usize {
+        ((hash as usize) & (self.n_buckets - 1)) * BUCKET_SLOTS
+    }
+}
+
+/// DyCuckoo-like multi-subtable cuckoo hash table.
+pub struct DyCuckooLike {
+    subtables: RwLock<Vec<SubTable>>,
+    hashes: Vec<HashKind>,
+    count: AtomicUsize,
+}
+
+impl DyCuckooLike {
+    /// `d`-subtable cuckoo table with `n_buckets` buckets per subtable.
+    pub fn new(d: usize, n_buckets: usize) -> Self {
+        assert!((2..=4).contains(&d));
+        let kinds =
+            [HashKind::BitHash1, HashKind::BitHash2, HashKind::Murmur3, HashKind::City32];
+        DyCuckooLike {
+            subtables: RwLock::new((0..d).map(|_| SubTable::new(n_buckets)).collect()),
+            hashes: kinds[..d].to_vec(),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Sized-for-`n`-keys constructor (paper: DyCuckoo max LF 0.9, d=2).
+    pub fn for_capacity(n: usize) -> Self {
+        let slots = (n as f64 / 0.9).ceil() as usize;
+        let per_table = slots / 2;
+        DyCuckooLike::new(2, per_table / BUCKET_SLOTS)
+    }
+
+    /// Number of subtables `d`.
+    pub fn d(&self) -> usize {
+        self.hashes.len()
+    }
+
+    /// Total slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.subtables.read().unwrap().iter().map(|s| s.words.len()).sum()
+    }
+
+    /// Double the smallest subtable, rehashing all its entries (the
+    /// DyCuckoo incremental-resize unit). Exclusive.
+    pub fn grow_one_subtable(&self) -> usize {
+        let mut tables = self.subtables.write().unwrap();
+        self.grow_locked(&mut tables)
+    }
+
+    fn grow_locked(&self, tables: &mut Vec<SubTable>) -> usize {
+        let (idx, _) = tables
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, t)| t.n_buckets)
+            .expect("at least one subtable");
+        let old = std::mem::replace(&mut tables[idx], SubTable::new(0));
+        let bigger = SubTable::new(old.n_buckets * 2);
+        let hash = self.hashes[idx];
+        let mut moved = 0;
+        let mut pending: Vec<u64> = Vec::new();
+        for w in old.words.iter() {
+            let word = w.load(Ordering::Relaxed);
+            if word != EMPTY_WORD {
+                let base = bigger.bucket_base(hash.hash(unpack_key(word)));
+                let mut placed = false;
+                for s in 0..BUCKET_SLOTS {
+                    if bigger.words[base + s].load(Ordering::Relaxed) == EMPTY_WORD {
+                        bigger.words[base + s].store(word, Ordering::Relaxed);
+                        placed = true;
+                        break;
+                    }
+                }
+                if placed {
+                    moved += 1;
+                } else {
+                    pending.push(word);
+                }
+            }
+        }
+        tables[idx] = bigger;
+        // Entries whose new bucket overflowed: exclusive cuckoo placement
+        // across all subtables; escalate with another grow if required.
+        for word in pending {
+            let mut cur = word;
+            loop {
+                match Self::exclusive_place(&self.hashes, tables, cur) {
+                    Ok(()) => {
+                        moved += 1;
+                        break;
+                    }
+                    Err(still) => {
+                        cur = still;
+                        self.grow_locked(tables);
+                    }
+                }
+            }
+        }
+        moved
+    }
+
+    /// Place `word` with bounded cuckoo kicks; exclusive access assumed.
+    /// Returns the still-homeless word on failure.
+    fn exclusive_place(
+        hashes: &[HashKind],
+        tables: &[SubTable],
+        word: u64,
+    ) -> std::result::Result<(), u64> {
+        let mut cur = word;
+        for kick in 0..(MAX_KICKS * 2) {
+            let k = unpack_key(cur);
+            for (i, t) in tables.iter().enumerate() {
+                let base = t.bucket_base(hashes[i].hash(k));
+                for s in 0..BUCKET_SLOTS {
+                    if t.words[base + s].load(Ordering::Relaxed) == EMPTY_WORD {
+                        t.words[base + s].store(cur, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                }
+            }
+            let i = kick % tables.len();
+            let t = &tables[i];
+            let base = t.bucket_base(hashes[i].hash(k));
+            let slot = base + (kick / tables.len()) % BUCKET_SLOTS;
+            let victim = t.words[slot].swap(cur, Ordering::Relaxed);
+            if victim == EMPTY_WORD {
+                return Ok(());
+            }
+            cur = victim;
+        }
+        Err(cur)
+    }
+}
+
+impl super::ConcurrentMap for DyCuckooLike {
+    fn insert(&self, key: u32, value: u32) -> Result<()> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let word = pack(key, value);
+        {
+            // replace pass across all subtables
+            let tables = self.subtables.read().unwrap();
+            for (i, t) in tables.iter().enumerate() {
+                let base = t.bucket_base(self.hashes[i].hash(key));
+                for s in 0..BUCKET_SLOTS {
+                    let w = t.words[base + s].load(Ordering::Acquire);
+                    if unpack_key(w) == key
+                        && t.words[base + s]
+                            .compare_exchange(w, word, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                    {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        // insert with uncoordinated cross-subtable eviction; `cur` is the
+        // currently homeless word and must survive resize escalations.
+        let mut cur = word;
+        for _resize_round in 0..6 {
+            {
+                let tables = self.subtables.read().unwrap();
+                let mut sub = 0usize;
+                let mut kicks = 0;
+                loop {
+                    let k = unpack_key(cur);
+                    // try an empty slot in any subtable
+                    let mut placed = false;
+                    for off in 0..tables.len() {
+                        let i = (sub + off) % tables.len();
+                        let t = &tables[i];
+                        let base = t.bucket_base(self.hashes[i].hash(k));
+                        for s in 0..BUCKET_SLOTS {
+                            if t.words[base + s]
+                                .compare_exchange(
+                                    EMPTY_WORD,
+                                    cur,
+                                    Ordering::AcqRel,
+                                    Ordering::Relaxed,
+                                )
+                                .is_ok()
+                            {
+                                placed = true;
+                                break;
+                            }
+                        }
+                        if placed {
+                            break;
+                        }
+                    }
+                    if placed {
+                        self.count.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    kicks += 1;
+                    if kicks > MAX_KICKS {
+                        break; // escalate to subtable resize, keeping `cur`
+                    }
+                    // kick a pseudo-random victim from subtable `sub`
+                    let t = &tables[sub];
+                    let base = t.bucket_base(self.hashes[sub].hash(k));
+                    let slot = base + (kicks % BUCKET_SLOTS);
+                    let victim = t.words[slot].swap(cur, Ordering::AcqRel);
+                    if victim == EMPTY_WORD {
+                        self.count.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    cur = victim;
+                    sub = (sub + 1) % tables.len();
+                }
+            }
+            // eviction cascade failed: resize (the DyCuckoo escalation)
+            self.grow_one_subtable();
+        }
+        // Final fallback: place the carried word exclusively.
+        {
+            let tables = self.subtables.write().unwrap();
+            if Self::exclusive_place(&self.hashes, &tables, cur).is_ok() {
+                self.count.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+        }
+        Err(HiveError::TableFull)
+    }
+
+    fn lookup(&self, key: u32) -> Option<u32> {
+        let tables = self.subtables.read().unwrap();
+        // must probe every subtable — the paper's Fig. 7 critique
+        for (i, t) in tables.iter().enumerate() {
+            let base = t.bucket_base(self.hashes[i].hash(key));
+            for s in 0..BUCKET_SLOTS {
+                let w = t.words[base + s].load(Ordering::Acquire);
+                if unpack_key(w) == key {
+                    return Some(unpack_value(w));
+                }
+            }
+        }
+        None
+    }
+
+    fn delete(&self, key: u32) -> bool {
+        let tables = self.subtables.read().unwrap();
+        for (i, t) in tables.iter().enumerate() {
+            let base = t.bucket_base(self.hashes[i].hash(key));
+            for s in 0..BUCKET_SLOTS {
+                let w = t.words[base + s].load(Ordering::Acquire);
+                if unpack_key(w) == key
+                    && t.words[base + s]
+                        .compare_exchange(w, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok()
+                {
+                    self.count.fetch_sub(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "DyCuckoo"
+    }
+
+    fn max_load_factor(&self) -> f64 {
+        0.90
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::suite::common_suite;
+    use crate::baselines::ConcurrentMap;
+
+    #[test]
+    fn satisfies_common_suite() {
+        let t = DyCuckooLike::for_capacity(4000);
+        common_suite(&t, 2000);
+    }
+
+    #[test]
+    fn grows_subtables_under_pressure() {
+        let t = DyCuckooLike::new(2, 4); // tiny: 2 subtables * 4 buckets * 8
+        let cap0 = t.capacity();
+        for k in 1..=500u32 {
+            t.insert(k, k).unwrap();
+        }
+        assert!(t.capacity() > cap0, "expected subtable growth");
+        for k in 1..=500u32 {
+            assert_eq!(t.lookup(k), Some(k), "key {k} lost across subtable resize");
+        }
+    }
+
+    #[test]
+    fn lookup_probes_all_subtables() {
+        // structural check: d() independent probes are required
+        let t = DyCuckooLike::new(3, 64);
+        assert_eq!(t.d(), 3);
+        for k in 1..=1000u32 {
+            t.insert(k, k).unwrap();
+        }
+        for k in 1..=1000u32 {
+            assert_eq!(t.lookup(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_ops() {
+        use std::sync::Arc;
+        let t = Arc::new(DyCuckooLike::for_capacity(20_000));
+        let hs: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    let base = tid * 100_000 + 1;
+                    for i in 0..1000 {
+                        let k = base + i;
+                        t.insert(k, k).unwrap();
+                        assert_eq!(t.lookup(k), Some(k));
+                        if i % 2 == 0 {
+                            assert!(t.delete(k));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 8 * 500);
+    }
+}

@@ -1,0 +1,113 @@
+//! Re-implementations of the GPU hash tables the paper benchmarks against
+//! (§V-C): SlabHash [16], DyCuckoo [17], and WarpCore [26], plus a sharded
+//! `std::collections::HashMap` sanity baseline.
+//!
+//! The paper's comparisons are *structural* — SlabHash loses to pointer
+//! chasing and allocator contention, DyCuckoo to multi-subtable probing,
+//! WarpCore to per-thread atomics and unsafe deletion — so each baseline
+//! reproduces precisely the structure the paper credits/blames, on the
+//! same `ConcurrentMap` trait the benchmarks drive.
+
+pub mod slab;
+pub mod dycuckoo;
+pub mod warpcore;
+pub mod stdshard;
+
+use crate::core::error::Result;
+use crate::native::table::HiveTable;
+
+pub use dycuckoo::DyCuckooLike;
+pub use slab::SlabHashLike;
+pub use stdshard::ShardedStd;
+pub use warpcore::WarpCoreLike;
+
+/// The operation interface every evaluated table implements. All methods
+/// take `&self` and must be safe under concurrent calls from many threads
+/// (the benchmark's "warps").
+pub trait ConcurrentMap: Send + Sync {
+    /// Insert or replace `key → value`.
+    fn insert(&self, key: u32, value: u32) -> Result<()>;
+    /// Value of `key`, if present.
+    fn lookup(&self, key: u32) -> Option<u32>;
+    /// Remove `key`; `true` if it was present. Tables without safe
+    /// concurrent deletion (WarpCore — see §V-C2) return `false` and are
+    /// excluded from mixed-workload benches.
+    fn delete(&self, key: u32) -> bool;
+    /// Approximate live-entry count.
+    fn len(&self) -> usize;
+    /// `true` if no entries.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Display name for benchmark tables.
+    fn name(&self) -> &'static str;
+    /// Maximum load factor the design sustains (paper §V-C: SlabHash 0.92,
+    /// WarpCore 0.95, DyCuckoo 0.9, Hive 0.95).
+    fn max_load_factor(&self) -> f64;
+    /// `true` if concurrent deletes are safe (WarpCore: false).
+    fn supports_concurrent_delete(&self) -> bool {
+        true
+    }
+}
+
+impl ConcurrentMap for HiveTable {
+    fn insert(&self, key: u32, value: u32) -> Result<()> {
+        HiveTable::insert(self, key, value).map(|_| ())
+    }
+    fn lookup(&self, key: u32) -> Option<u32> {
+        HiveTable::lookup(self, key)
+    }
+    fn delete(&self, key: u32) -> bool {
+        HiveTable::delete(self, key)
+    }
+    fn len(&self) -> usize {
+        HiveTable::len(self)
+    }
+    fn name(&self) -> &'static str {
+        "HiveHash"
+    }
+    fn max_load_factor(&self) -> f64 {
+        0.95
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod suite {
+    use super::*;
+
+    /// Exercise any ConcurrentMap through a common correctness suite.
+    pub(crate) fn common_suite(map: &dyn ConcurrentMap, n: u32) {
+        for k in 1..=n {
+            map.insert(k, k.wrapping_mul(7)).unwrap();
+        }
+        assert_eq!(map.len(), n as usize);
+        for k in 1..=n {
+            assert_eq!(map.lookup(k), Some(k.wrapping_mul(7)), "{} key {k}", map.name());
+        }
+        assert_eq!(map.lookup(n + 1000), None);
+        // replace must not duplicate
+        for k in 1..=n / 2 {
+            map.insert(k, 0xFEED).unwrap();
+        }
+        assert_eq!(map.len(), n as usize);
+        for k in 1..=n / 2 {
+            assert_eq!(map.lookup(k), Some(0xFEED));
+        }
+        if map.supports_concurrent_delete() {
+            for k in 1..=n / 2 {
+                assert!(map.delete(k), "{} delete {k}", map.name());
+            }
+            assert_eq!(map.len(), (n - n / 2) as usize);
+            for k in 1..=n / 2 {
+                assert_eq!(map.lookup(k), None);
+            }
+        }
+    }
+
+    #[test]
+    fn hive_satisfies_common_suite() {
+        use crate::core::config::HiveConfig;
+        let t = HiveTable::new(HiveConfig::default().with_buckets(64)).unwrap();
+        common_suite(&t, 1000);
+    }
+}

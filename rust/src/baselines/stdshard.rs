@@ -1,0 +1,112 @@
+//! Sharded `std::collections::HashMap` — the CPU-idiomatic sanity
+//! baseline. Not in the paper; included so benchmark numbers have a
+//! familiar reference point on this substrate.
+
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::EMPTY_KEY;
+use crate::hash::HashKind;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// `SHARDS`-way sharded mutex-protected hash map.
+pub struct ShardedStd {
+    shards: Vec<Mutex<HashMap<u32, u32>>>,
+    count: AtomicUsize,
+}
+
+impl ShardedStd {
+    /// Map with `shards` shards (rounded to a power of two).
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.next_power_of_two().max(1);
+        ShardedStd {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Default 64-shard instance.
+    pub fn for_capacity(n: usize) -> Self {
+        let s = Self::new(64);
+        for shard in &s.shards {
+            shard.lock().unwrap().reserve(n / 64 + 1);
+        }
+        s
+    }
+
+    #[inline]
+    fn shard(&self, key: u32) -> &Mutex<HashMap<u32, u32>> {
+        &self.shards[(HashKind::Murmur3.hash(key) as usize) & (self.shards.len() - 1)]
+    }
+}
+
+impl super::ConcurrentMap for ShardedStd {
+    fn insert(&self, key: u32, value: u32) -> Result<()> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        if self.shard(key).lock().unwrap().insert(key, value).is_none() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn lookup(&self, key: u32) -> Option<u32> {
+        self.shard(key).lock().unwrap().get(&key).copied()
+    }
+
+    fn delete(&self, key: u32) -> bool {
+        let removed = self.shard(key).lock().unwrap().remove(&key).is_some();
+        if removed {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "ShardedStd"
+    }
+
+    fn max_load_factor(&self) -> f64 {
+        1.0 // HashMap manages its own load factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::suite::common_suite;
+    use crate::baselines::ConcurrentMap;
+
+    #[test]
+    fn satisfies_common_suite() {
+        let t = ShardedStd::for_capacity(4000);
+        common_suite(&t, 2000);
+    }
+
+    #[test]
+    fn concurrent_disjoint_ranges() {
+        use std::sync::Arc;
+        let t = Arc::new(ShardedStd::new(16));
+        let hs: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        let k = tid * 10_000 + i + 1;
+                        t.insert(k, k).unwrap();
+                        assert_eq!(t.lookup(k), Some(k));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 8000);
+    }
+}

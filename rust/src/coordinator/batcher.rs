@@ -1,0 +1,114 @@
+//! Dynamic batcher: size + deadline dispatch windows.
+//!
+//! Single-op requests accumulate until either `max_batch` ops are pending
+//! or `deadline` has elapsed since the first op of the window — the
+//! classic dynamic-batching policy of GPU serving systems (the analogue of
+//! the paper's "batch of concurrent operations" kernel launches).
+
+use crate::workload::Op;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Dispatch when this many ops are pending.
+    pub max_batch: usize,
+    /// ... or when the oldest pending op is this old.
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4096, deadline: Duration::from_micros(200) }
+    }
+}
+
+/// Accumulates ops into dispatch windows.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<Op>,
+    window_open: Option<Instant>,
+}
+
+impl Batcher {
+    /// Empty batcher with `policy`.
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::with_capacity(policy.max_batch), window_open: None }
+    }
+
+    /// Add one op. Returns `true` if the window is now full (dispatch!).
+    pub fn push(&mut self, op: Op) -> bool {
+        if self.pending.is_empty() {
+            self.window_open = Some(Instant::now());
+        }
+        self.pending.push(op);
+        self.pending.len() >= self.policy.max_batch
+    }
+
+    /// Number of pending ops.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// `true` if no ops are pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// `true` if the deadline expired for a non-empty window.
+    pub fn deadline_expired(&self) -> bool {
+        match self.window_open {
+            Some(t) => !self.pending.is_empty() && t.elapsed() >= self.policy.deadline,
+            None => false,
+        }
+    }
+
+    /// Time left until the current window's deadline (for recv timeouts).
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.window_open.map(|t| self.policy.deadline.saturating_sub(t.elapsed()))
+    }
+
+    /// Take the current window, resetting the batcher.
+    pub fn take(&mut self) -> Vec<Op> {
+        self.window_open = None;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatches_on_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, deadline: Duration::from_secs(10) });
+        assert!(!b.push(Op::Lookup { key: 1 }));
+        assert!(!b.push(Op::Lookup { key: 2 }));
+        assert!(b.push(Op::Lookup { key: 3 }), "third op fills the window");
+        assert_eq!(b.take().len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1000,
+            deadline: Duration::from_millis(5),
+        });
+        b.push(Op::Lookup { key: 1 });
+        assert!(!b.deadline_expired());
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.deadline_expired());
+        assert_eq!(b.take().len(), 1);
+        assert!(!b.deadline_expired(), "empty batcher has no deadline");
+    }
+
+    #[test]
+    fn window_opens_on_first_op() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.time_to_deadline().is_none());
+        b.push(Op::Insert { key: 1, value: 1 });
+        assert!(b.time_to_deadline().is_some());
+    }
+}

@@ -1,0 +1,36 @@
+//! The L3 coordinator: a batching key-value service over pluggable
+//! backends — the serving-layer packaging of the Hive table.
+//!
+//! Architecture (vLLM-router-style, thread-based):
+//!
+//! ```text
+//!             Handle (clone-able, thread-safe)
+//!                │  route(key) = murmur(key) % workers
+//!     ┌──────────┼──────────────┐
+//!     ▼          ▼              ▼
+//!  worker 0   worker 1  ...  worker W-1       (std::thread + mpsc)
+//!  [batcher]  [batcher]      [batcher]        size+deadline windows
+//!     │          │              │
+//!  Backend    Backend        Backend          native | xla | simt
+//!     │          │              │
+//!  resize-ctl per worker (load-factor watcher between batches)
+//! ```
+//!
+//! Each worker owns one table shard; requests are routed by key hash, so
+//! shards are disjoint and workers never contend. Within a dispatch
+//! window the batcher groups by op type (legal for concurrent requests —
+//! see `backend`). The resize controller runs the §IV-C policy between
+//! batches, amortized across the service's lifetime — no global pauses.
+
+pub mod batcher;
+pub mod service;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use service::{Coordinator, CoordinatorConfig, Handle};
+pub use stats::ServiceStats;
+
+/// Alias re-exported for the resize controller's event type.
+pub mod resize_ctl {
+    pub use crate::native::resize::ResizeEvent;
+}

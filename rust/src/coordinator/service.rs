@@ -1,0 +1,483 @@
+//! The coordinator service: worker pool, request router, and the
+//! per-worker dispatch loop (batcher + backend + resize controller).
+
+use crate::backend::{Backend, BatchResult};
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::stats::ServiceStats;
+use crate::core::error::{HiveError, Result};
+use crate::hash::HashKind;
+use crate::native::resize::ResizeEvent;
+use crate::workload::Op;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker (shard) count.
+    pub workers: usize,
+    /// Dynamic batching policy per worker.
+    pub batch: BatchPolicy,
+    /// Run the resize controller every N dispatch windows.
+    pub resize_check_every: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            batch: BatchPolicy::default(),
+            resize_check_every: 8,
+        }
+    }
+}
+
+/// A reply to one single-key operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SingleReply {
+    /// Insert outcome: true ⇒ newly inserted, false ⇒ replaced.
+    Inserted(bool),
+    /// Lookup result.
+    Value(Option<u32>),
+    /// Delete hit flag.
+    Deleted(bool),
+    /// Operation failed (e.g. table + stash full).
+    Failed(String),
+}
+
+enum Request {
+    Single { op: Op, enqueued: Instant, reply: SyncSender<SingleReply> },
+    Bulk { ops: Vec<Op>, reply: SyncSender<Result<BatchResult>> },
+    Stats { reply: SyncSender<ServiceStats> },
+    Flush { reply: SyncSender<()> },
+    Shutdown,
+}
+
+/// The running service. Dropping it (or calling [`Coordinator::shutdown`])
+/// joins all workers.
+pub struct Coordinator {
+    senders: Vec<Sender<Request>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Clone-able client handle.
+#[derive(Clone)]
+pub struct Handle {
+    senders: Arc<Vec<Sender<Request>>>,
+}
+
+impl Coordinator {
+    /// Start the service: `factory(worker_index)` builds each worker's
+    /// backend (one table shard per worker). The factory runs *inside*
+    /// each worker thread — required because the XLA backend's PJRT
+    /// client is not `Send`.
+    pub fn start<F>(cfg: CoordinatorConfig, factory: F) -> Result<(Coordinator, Handle)>
+    where
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        assert!(cfg.workers >= 1);
+        let factory = Arc::new(factory);
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+            let cfg_w = cfg.clone();
+            let factory = Arc::clone(&factory);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("hive-worker-{w}"))
+                    .spawn(move || match factory(w) {
+                        Ok(backend) => {
+                            let _ = ready_tx.send(Ok(()));
+                            worker_loop(rx, backend, cfg_w);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+            ready_rx.recv().map_err(|_| HiveError::Shutdown)??;
+            senders.push(tx);
+        }
+        let handle = Handle { senders: Arc::new(senders.clone()) };
+        Ok((Coordinator { senders, handles }, handle))
+    }
+
+    /// Stop all workers and join them.
+    pub fn shutdown(mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.senders.clear();
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Handle {
+    /// Worker shard for `key` (murmur routing — independent of the
+    /// table's own bucket hashes so shards stay balanced).
+    #[inline]
+    fn route(&self, key: u32) -> usize {
+        (HashKind::Murmur3.hash(key ^ 0x9E3779B9) as usize) % self.senders.len()
+    }
+
+    fn single(&self, worker: usize, op: Op) -> Result<SingleReply> {
+        let (tx, rx) = sync_channel(1);
+        self.senders[worker]
+            .send(Request::Single { op, enqueued: Instant::now(), reply: tx })
+            .map_err(|_| HiveError::Shutdown)?;
+        rx.recv().map_err(|_| HiveError::Shutdown)
+    }
+
+    /// Insert or replace `key → value`.
+    pub fn insert(&self, key: u32, value: u32) -> Result<bool> {
+        match self.single(self.route(key), Op::Insert { key, value })? {
+            SingleReply::Inserted(new) => Ok(new),
+            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
+            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Point lookup.
+    pub fn lookup(&self, key: u32) -> Result<Option<u32>> {
+        match self.single(self.route(key), Op::Lookup { key })? {
+            SingleReply::Value(v) => Ok(v),
+            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
+            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Delete `key`.
+    pub fn delete(&self, key: u32) -> Result<bool> {
+        match self.single(self.route(key), Op::Delete { key })? {
+            SingleReply::Deleted(hit) => Ok(hit),
+            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
+            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Submit a pre-batched workload: ops are sharded by key, executed on
+    /// all workers, and the per-class results are reassembled in
+    /// submission order.
+    pub fn submit(&self, ops: &[Op]) -> Result<BatchResult> {
+        let w = self.senders.len();
+        let mut shards: Vec<Vec<Op>> = vec![Vec::new(); w];
+        let mut route_of: Vec<usize> = Vec::with_capacity(ops.len());
+        for op in ops {
+            let r = self.route(op.key());
+            shards[r].push(*op);
+            route_of.push(r);
+        }
+        let mut rxs = Vec::with_capacity(w);
+        for (i, shard) in shards.into_iter().enumerate() {
+            if shard.is_empty() {
+                rxs.push(None);
+                continue;
+            }
+            let (tx, rx) = sync_channel(1);
+            self.senders[i]
+                .send(Request::Bulk { ops: shard, reply: tx })
+                .map_err(|_| HiveError::Shutdown)?;
+            rxs.push(Some(rx));
+        }
+        let mut partials: Vec<Option<BatchResult>> = Vec::with_capacity(w);
+        for rx in rxs {
+            match rx {
+                None => partials.push(None),
+                Some(rx) => partials.push(Some(rx.recv().map_err(|_| HiveError::Shutdown)??)),
+            }
+        }
+        // Reassemble lookups/deletes in original submission order.
+        let mut luk_cursor = vec![0usize; w];
+        let mut del_cursor = vec![0usize; w];
+        let mut merged = BatchResult::default();
+        for p in partials.iter().flatten() {
+            merged.inserted += p.inserted;
+            merged.replaced += p.replaced;
+            merged.stashed += p.stashed;
+        }
+        for (op, &r) in ops.iter().zip(&route_of) {
+            match op {
+                Op::Lookup { .. } => {
+                    let p = partials[r].as_ref().expect("shard result");
+                    merged.lookups.push(p.lookups[luk_cursor[r]]);
+                    luk_cursor[r] += 1;
+                }
+                Op::Delete { .. } => {
+                    let p = partials[r].as_ref().expect("shard result");
+                    merged.deletes.push(p.deletes[del_cursor[r]]);
+                    del_cursor[r] += 1;
+                }
+                Op::Insert { .. } => {}
+            }
+        }
+        Ok(merged)
+    }
+
+    /// Aggregate service stats across workers.
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let mut agg = ServiceStats::default();
+        for tx in self.senders.iter() {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Request::Stats { reply: rtx }).map_err(|_| HiveError::Shutdown)?;
+            agg.merge(&rrx.recv().map_err(|_| HiveError::Shutdown)?);
+        }
+        Ok(agg)
+    }
+
+    /// Flush all pending windows (barrier; used by tests/benches).
+    pub fn flush(&self) -> Result<()> {
+        for tx in self.senders.iter() {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Request::Flush { reply: rtx }).map_err(|_| HiveError::Shutdown)?;
+            rrx.recv().map_err(|_| HiveError::Shutdown)?;
+        }
+        Ok(())
+    }
+}
+
+/// One worker: owns a backend shard, batches singles, executes bulks,
+/// runs the resize controller between windows.
+fn worker_loop(rx: Receiver<Request>, mut backend: Box<dyn Backend>, cfg: CoordinatorConfig) {
+    let mut batcher = Batcher::new(cfg.batch);
+    let mut waiting: Vec<(Instant, SyncSender<SingleReply>, Op)> = Vec::new();
+    let mut stats = ServiceStats::default();
+
+    let dispatch = |backend: &mut Box<dyn Backend>,
+                    batcher: &mut Batcher,
+                    waiting: &mut Vec<(Instant, SyncSender<SingleReply>, Op)>,
+                    stats: &mut ServiceStats| {
+        if batcher.is_empty() {
+            return;
+        }
+        let ops = batcher.take();
+        stats.batches += 1;
+        stats.ops += ops.len() as u64;
+        stats.batch_sizes.record(ops.len() as u64);
+        match backend.execute(&ops) {
+            Ok(res) => {
+                stats.inserted += res.inserted as u64;
+                stats.replaced += res.replaced as u64;
+                stats.stashed += res.stashed as u64;
+                stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
+                // replies in class order
+                let mut luk = res.lookups.into_iter();
+                let mut del = res.deletes.into_iter();
+                for (enq, reply, op) in waiting.drain(..) {
+                    stats.latency_ns.record(enq.elapsed().as_nanos() as u64);
+                    let msg = match op {
+                        Op::Insert { .. } => SingleReply::Inserted(true),
+                        Op::Lookup { .. } => SingleReply::Value(luk.next().flatten()),
+                        Op::Delete { .. } => SingleReply::Deleted(del.next().unwrap_or(false)),
+                    };
+                    let _ = reply.send(msg);
+                }
+            }
+            Err(e) => {
+                for (_, reply, _) in waiting.drain(..) {
+                    let _ = reply.send(SingleReply::Failed(e.to_string()));
+                }
+            }
+        }
+        // resize controller between windows
+        if stats.batches % cfg.resize_check_every == 0 {
+            match backend.maybe_resize() {
+                Ok(Some(ResizeEvent::Grew { .. })) => stats.grows += 1,
+                Ok(Some(ResizeEvent::Shrank { .. })) => stats.shrinks += 1,
+                _ => {}
+            }
+        }
+    };
+
+    loop {
+        let timeout =
+            batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Request::Single { op, enqueued, reply }) => {
+                waiting.push((enqueued, reply, op));
+                if batcher.push(op) {
+                    dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                }
+            }
+            Ok(Request::Bulk { ops, reply }) => {
+                // flush pending singles first to preserve window ordering
+                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                stats.batches += 1;
+                stats.ops += ops.len() as u64;
+                stats.batch_sizes.record(ops.len() as u64);
+                let res = backend.execute(&ops);
+                if let Ok(res) = &res {
+                    stats.inserted += res.inserted as u64;
+                    stats.replaced += res.replaced as u64;
+                    stats.stashed += res.stashed as u64;
+                    stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
+                }
+                let _ = reply.send(res);
+                if stats.batches % cfg.resize_check_every == 0 {
+                    match backend.maybe_resize() {
+                        Ok(Some(ResizeEvent::Grew { .. })) => stats.grows += 1,
+                        Ok(Some(ResizeEvent::Shrank { .. })) => stats.shrinks += 1,
+                        _ => {}
+                    }
+                }
+            }
+            Ok(Request::Stats { reply }) => {
+                let _ = reply.send(stats.clone());
+            }
+            Ok(Request::Flush { reply }) => {
+                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                let _ = reply.send(());
+            }
+            Ok(Request::Shutdown) => {
+                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                break;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if batcher.deadline_expired() {
+                    dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Shared-state convenience: a coordinator whose workers all use native
+/// backends over table shards sized by `cfg`.
+pub fn start_native(
+    coord_cfg: CoordinatorConfig,
+    table_cfg: crate::core::config::HiveConfig,
+) -> Result<(Coordinator, Handle)> {
+    let table_cfg = Arc::new(Mutex::new(table_cfg));
+    Coordinator::start(coord_cfg, move |_w| {
+        let cfg = table_cfg.lock().unwrap().clone();
+        Ok(Box::new(crate::backend::NativeBackend::new(cfg)?) as Box<dyn Backend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::HiveConfig;
+
+    fn quick_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 64, deadline: Duration::from_micros(100) },
+            resize_check_every: 2,
+        }
+    }
+
+    #[test]
+    fn single_op_roundtrip() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        assert!(h.insert(1, 100).unwrap());
+        assert_eq!(h.lookup(1).unwrap(), Some(100));
+        assert_eq!(h.lookup(2).unwrap(), None);
+        assert!(h.delete(1).unwrap());
+        assert!(!h.delete(1).unwrap());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn bulk_submit_reassembles_in_order() {
+        use crate::workload::Op;
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        let inserts: Vec<Op> =
+            (1..=500u32).map(|k| Op::Insert { key: k, value: k * 2 }).collect();
+        let r = h.submit(&inserts).unwrap();
+        assert_eq!(r.inserted, 500);
+        let lookups: Vec<Op> = (1..=500u32).map(|k| Op::Lookup { key: k }).collect();
+        let r = h.submit(&lookups).unwrap();
+        assert_eq!(r.lookups.len(), 500);
+        for (i, v) in r.lookups.iter().enumerate() {
+            assert_eq!(*v, Some((i as u32 + 1) * 2), "lookup {i} out of order");
+        }
+        let deletes: Vec<Op> = (1..=250u32).map(|k| Op::Delete { key: k }).collect();
+        let r = h.submit(&deletes).unwrap();
+        assert!(r.deletes.iter().all(|&d| d));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_accumulate_and_service_survives_clients() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || {
+            for k in 1..=200u32 {
+                h2.insert(k, k).unwrap();
+            }
+        });
+        t.join().unwrap();
+        h.flush().unwrap();
+        let s = h.stats().unwrap();
+        assert_eq!(s.ops, 200);
+        assert!(s.batches >= 1);
+        assert_eq!(s.inserted, 200);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_many_threads() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(256)).unwrap();
+        let threads: Vec<_> = (0..8u32)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        let k = t * 10_000 + i + 1;
+                        h.insert(k, k).unwrap();
+                        assert_eq!(h.lookup(k).unwrap(), Some(k));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn resize_controller_grows_under_load() {
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 128, deadline: Duration::from_micros(50) },
+            resize_check_every: 1,
+        };
+        let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(4)).unwrap();
+        use crate::workload::Op;
+        let ops: Vec<Op> = (1..=1000u32).map(|k| Op::Insert { key: k, value: k }).collect();
+        for chunk in ops.chunks(100) {
+            h.submit(chunk).unwrap();
+        }
+        let s = h.stats().unwrap();
+        assert!(s.grows > 0, "expected resize under load: {}", s.summary());
+        // all keys still present
+        let lookups: Vec<Op> = (1..=1000u32).map(|k| Op::Lookup { key: k }).collect();
+        let r = h.submit(&lookups).unwrap();
+        assert!(r.lookups.iter().all(Option::is_some));
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,85 @@
+//! Service-level statistics: throughput, latency, batch shapes, resize
+//! activity — aggregated across workers.
+
+use crate::core::histogram::Histogram;
+
+/// Per-worker counters merged into a service view.
+#[derive(Debug, Default, Clone)]
+pub struct ServiceStats {
+    /// Total operations completed.
+    pub ops: u64,
+    /// Dispatch windows executed.
+    pub batches: u64,
+    /// Entries inserted / replaced / stashed / deleted.
+    pub inserted: u64,
+    pub replaced: u64,
+    pub stashed: u64,
+    pub deleted: u64,
+    /// Resize events (grow, shrink).
+    pub grows: u64,
+    pub shrinks: u64,
+    /// Per-op latency in nanoseconds (request → reply, single-op path).
+    pub latency_ns: Histogram,
+    /// Batch size distribution.
+    pub batch_sizes: Histogram,
+}
+
+impl ServiceStats {
+    /// Merge another worker's stats into this aggregate.
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.ops += other.ops;
+        self.batches += other.batches;
+        self.inserted += other.inserted;
+        self.replaced += other.replaced;
+        self.stashed += other.stashed;
+        self.deleted += other.deleted;
+        self.grows += other.grows;
+        self.shrinks += other.shrinks;
+        self.latency_ns.merge(&other.latency_ns);
+        self.batch_sizes.merge(&other.batch_sizes);
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_sizes.mean()
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} latency[{}]",
+            self.ops,
+            self.batches,
+            self.mean_batch(),
+            self.inserted,
+            self.replaced,
+            self.stashed,
+            self.deleted,
+            self.grows,
+            self.shrinks,
+            self.latency_ns.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = ServiceStats::default();
+        a.ops = 10;
+        a.batches = 2;
+        a.latency_ns.record(100);
+        let mut b = ServiceStats::default();
+        b.ops = 5;
+        b.batches = 1;
+        b.latency_ns.record(300);
+        a.merge(&b);
+        assert_eq!(a.ops, 15);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.latency_ns.count(), 2);
+        assert!(a.summary().contains("ops=15"));
+    }
+}

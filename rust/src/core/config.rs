@@ -1,0 +1,251 @@
+//! Typed configuration for tables, the coordinator, and benchmarks.
+//!
+//! Configs can be built programmatically (builder-style setters), loaded
+//! from a simple `key = value` file (comments with `#`), or overridden from
+//! `HIVE_*` environment variables — a small, dependency-free analogue of the
+//! config systems in serving frameworks.
+
+use crate::core::error::{HiveError, Result};
+use crate::core::{
+    DEFAULT_GROW_THRESHOLD, DEFAULT_MAX_EVICTIONS, DEFAULT_SHRINK_THRESHOLD,
+    DEFAULT_STASH_FRACTION, SLOTS_PER_BUCKET,
+};
+use crate::hash::HashKind;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which bucket memory layout the native table uses. `PackedAos` is the
+/// paper's contribution; `SplitSoa` is the two-phase-update ablation
+/// (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// 64-bit packed key-value words, single-CAS publish (paper §III-A).
+    PackedAos,
+    /// Separate key / value arrays: CAS on key, relaxed store of value.
+    SplitSoa,
+}
+
+/// Top-level configuration for a Hive table instance.
+#[derive(Debug, Clone)]
+pub struct HiveConfig {
+    /// Initial number of buckets (rounded up to a power of two).
+    pub initial_buckets: usize,
+    /// Hash family used to derive candidate buckets (d = len ≥ 2).
+    pub hash_kinds: Vec<HashKind>,
+    /// Bound on cuckoo displacement chains (paper `max_evictions`).
+    pub max_evictions: u32,
+    /// Load factor that triggers expansion (paper: 0.9).
+    pub grow_threshold: f64,
+    /// Load factor that triggers contraction (paper: 0.25).
+    pub shrink_threshold: f64,
+    /// Overflow-stash capacity as a fraction of slot capacity (1–2 %).
+    pub stash_fraction: f64,
+    /// Buckets split/merged per resize batch (paper K).
+    pub resize_batch: usize,
+    /// Bucket layout (packed AoS vs split SoA ablation).
+    pub layout: Layout,
+}
+
+impl Default for HiveConfig {
+    fn default() -> Self {
+        HiveConfig {
+            initial_buckets: 1024,
+            hash_kinds: vec![HashKind::BitHash1, HashKind::BitHash2],
+            max_evictions: DEFAULT_MAX_EVICTIONS,
+            grow_threshold: DEFAULT_GROW_THRESHOLD,
+            shrink_threshold: DEFAULT_SHRINK_THRESHOLD,
+            stash_fraction: DEFAULT_STASH_FRACTION,
+            resize_batch: 256,
+            layout: Layout::PackedAos,
+        }
+    }
+}
+
+impl HiveConfig {
+    /// Config sized so `n` keys fit at `target_lf` load factor.
+    pub fn for_capacity(n: usize, target_lf: f64) -> Self {
+        let slots = (n as f64 / target_lf).ceil() as usize;
+        let buckets = (slots + SLOTS_PER_BUCKET - 1) / SLOTS_PER_BUCKET;
+        HiveConfig { initial_buckets: buckets.next_power_of_two().max(4), ..Self::default() }
+    }
+
+    /// Builder-style setter for the initial bucket count.
+    pub fn with_buckets(mut self, buckets: usize) -> Self {
+        self.initial_buckets = buckets;
+        self
+    }
+
+    /// Builder-style setter for the hash family.
+    pub fn with_hashes(mut self, kinds: Vec<HashKind>) -> Self {
+        self.hash_kinds = kinds;
+        self
+    }
+
+    /// Builder-style setter for the eviction bound.
+    pub fn with_max_evictions(mut self, bound: u32) -> Self {
+        self.max_evictions = bound;
+        self
+    }
+
+    /// Builder-style setter for the layout ablation.
+    pub fn with_layout(mut self, layout: Layout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    /// Builder-style setter for resize thresholds.
+    pub fn with_thresholds(mut self, grow: f64, shrink: f64) -> Self {
+        self.grow_threshold = grow;
+        self.shrink_threshold = shrink;
+        self
+    }
+
+    /// Validate invariants (hash family size, thresholds ordered, ...).
+    pub fn validate(&self) -> Result<()> {
+        if self.hash_kinds.len() < 2 || self.hash_kinds.len() > 4 {
+            return Err(HiveError::Config(format!(
+                "hash family must have 2..=4 functions, got {}",
+                self.hash_kinds.len()
+            )));
+        }
+        if self.initial_buckets < 2 {
+            return Err(HiveError::BadCapacity(self.initial_buckets));
+        }
+        if !(self.shrink_threshold < self.grow_threshold && self.grow_threshold <= 1.0) {
+            return Err(HiveError::Config(format!(
+                "thresholds must satisfy shrink < grow <= 1.0, got {} / {}",
+                self.shrink_threshold, self.grow_threshold
+            )));
+        }
+        if self.max_evictions == 0 {
+            return Err(HiveError::Config("max_evictions must be >= 1".into()));
+        }
+        if !(0.0..=0.5).contains(&self.stash_fraction) {
+            return Err(HiveError::Config("stash_fraction must be in [0, 0.5]".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file (`#` comments, blank lines ok).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| HiveError::Config(format!("{}: {e}", path.display())))?;
+        Self::from_kv_text(&text)
+    }
+
+    /// Parse config text in `key = value` form.
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                HiveError::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut cfg = HiveConfig::default();
+        cfg.apply_kv(&map)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `HIVE_*` environment variable overrides (e.g. `HIVE_MAX_EVICTIONS`).
+    pub fn apply_env(&mut self) -> Result<()> {
+        let mut map = BTreeMap::new();
+        for (k, v) in std::env::vars() {
+            if let Some(stripped) = k.strip_prefix("HIVE_") {
+                map.insert(stripped.to_ascii_lowercase(), v);
+            }
+        }
+        self.apply_kv(&map)
+    }
+
+    fn apply_kv(&mut self, map: &BTreeMap<String, String>) -> Result<()> {
+        fn parse<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+            v.parse::<T>().map_err(|_| HiveError::Config(format!("bad value for {key}: {v}")))
+        }
+        for (k, v) in map {
+            match k.as_str() {
+                "initial_buckets" => self.initial_buckets = parse(k, v)?,
+                "max_evictions" => self.max_evictions = parse(k, v)?,
+                "grow_threshold" => self.grow_threshold = parse(k, v)?,
+                "shrink_threshold" => self.shrink_threshold = parse(k, v)?,
+                "stash_fraction" => self.stash_fraction = parse(k, v)?,
+                "resize_batch" => self.resize_batch = parse(k, v)?,
+                "layout" => {
+                    self.layout = match v.as_str() {
+                        "packed_aos" | "aos" => Layout::PackedAos,
+                        "split_soa" | "soa" => Layout::SplitSoa,
+                        other => return Err(HiveError::Config(format!("bad layout: {other}"))),
+                    }
+                }
+                "hashes" => {
+                    let kinds = v
+                        .split(',')
+                        .map(|s| HashKind::parse(s.trim()))
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| HiveError::Config(format!("bad hash list: {v}")))?;
+                    self.hash_kinds = kinds;
+                }
+                other => return Err(HiveError::Config(format!("unknown config key: {other}"))),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        HiveConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn capacity_sizing() {
+        let cfg = HiveConfig::for_capacity(1 << 20, 0.9);
+        // 2^20 keys at lf 0.9 needs ~36k buckets -> next pow2 = 65536.
+        assert_eq!(cfg.initial_buckets, 65536);
+        assert!(cfg.initial_buckets * SLOTS_PER_BUCKET >= (1 << 20));
+    }
+
+    #[test]
+    fn kv_text_parsing() {
+        let cfg = HiveConfig::from_kv_text(
+            "# comment\ninitial_buckets = 2048\nmax_evictions = 8\nhashes = murmur3, crc32\nlayout = soa\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.initial_buckets, 2048);
+        assert_eq!(cfg.max_evictions, 8);
+        assert_eq!(cfg.hash_kinds, vec![HashKind::Murmur3, HashKind::Crc32]);
+        assert_eq!(cfg.layout, Layout::SplitSoa);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(HiveConfig::from_kv_text("max_evictions = 0").is_err());
+        assert!(HiveConfig::from_kv_text("grow_threshold = 0.1\nshrink_threshold = 0.5").is_err());
+        assert!(HiveConfig::from_kv_text("hashes = murmur3").is_err());
+        assert!(HiveConfig::from_kv_text("nonsense = 1").is_err());
+        assert!(HiveConfig::from_kv_text("initial_buckets = banana").is_err());
+    }
+
+    #[test]
+    fn builder_setters() {
+        let cfg = HiveConfig::default()
+            .with_buckets(512)
+            .with_max_evictions(4)
+            .with_thresholds(0.8, 0.2)
+            .with_layout(Layout::SplitSoa);
+        assert_eq!(cfg.initial_buckets, 512);
+        assert_eq!(cfg.max_evictions, 4);
+        assert_eq!(cfg.grow_threshold, 0.8);
+        assert_eq!(cfg.layout, Layout::SplitSoa);
+        cfg.validate().unwrap();
+    }
+}

@@ -1,0 +1,56 @@
+//! Error and result types shared across the crate.
+
+use std::fmt;
+
+/// Errors surfaced by table operations and the coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HiveError {
+    /// Key equals the reserved EMPTY sentinel.
+    InvalidKey(u32),
+    /// Insert failed: table and overflow stash are both full; the operation
+    /// is flagged pending for the next resize epoch (paper §IV-A step 4).
+    TableFull,
+    /// The requested capacity is not supported (e.g. not a power of two or
+    /// below the minimum bucket count).
+    BadCapacity(usize),
+    /// Resize could not proceed (e.g. merge aborted: destination bucket has
+    /// fewer free slots than the source has movers — paper §IV-C2).
+    ResizeAborted(&'static str),
+    /// Runtime/artifact failure in the XLA backend.
+    Runtime(String),
+    /// Configuration file / value error.
+    Config(String),
+    /// The coordinator is shutting down.
+    Shutdown,
+}
+
+impl fmt::Display for HiveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HiveError::InvalidKey(k) => write!(f, "invalid key {k:#x} (reserved sentinel)"),
+            HiveError::TableFull => write!(f, "table and overflow stash full; pending resize"),
+            HiveError::BadCapacity(c) => write!(f, "unsupported capacity {c}"),
+            HiveError::ResizeAborted(why) => write!(f, "resize aborted: {why}"),
+            HiveError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            HiveError::Config(msg) => write!(f, "config error: {msg}"),
+            HiveError::Shutdown => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for HiveError {}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, HiveError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        assert!(HiveError::InvalidKey(0xFFFF_FFFF).to_string().contains("0xffffffff"));
+        assert!(HiveError::TableFull.to_string().contains("stash"));
+        assert!(HiveError::ResizeAborted("merge").to_string().contains("merge"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite) used by the
+//! coordinator's stats and the benchmark harness.
+
+/// Power-of-two bucketed histogram over `u64` values (e.g. nanoseconds).
+///
+/// Each power-of-two range is subdivided into 16 linear sub-buckets, giving
+/// ≤ ~6 % quantile error — plenty for p50/p99 reporting.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB: usize = 16;
+const SUB_BITS: u32 = 4;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram covering the full `u64` range.
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; 64 * SUB], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros();
+        let bucket = msb as usize;
+        let sub = ((value >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        bucket * SUB + sub
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Representative value (lower edge) of histogram slot `i`.
+    fn slot_value(i: usize) -> u64 {
+        let bucket = i / SUB;
+        let sub = (i % SUB) as u64;
+        if bucket < SUB_BITS as usize + 1 && (i as u64) < SUB as u64 {
+            return i as u64;
+        }
+        let base = 1u64 << bucket;
+        base + (sub << (bucket as u32 - SUB_BITS))
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of observations (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Minimum observation (0 if empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Maximum observation.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile `q ∈ [0,1]`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::slot_value(i);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line summary: `count mean p50 p99 max`.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0} p50={} p99={} max={}",
+            self.total,
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let mut h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.count(), 16);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_close() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // within ~7% of the true quantile
+        assert!((p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.07, "p50={p50}");
+        assert!((p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.07, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 0..1000u64 {
+            if v % 2 == 0 {
+                a.record(v * 3);
+            } else {
+                b.record(v * 3);
+            }
+            c.record(v * 3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.5), c.quantile(0.5));
+        assert_eq!(a.max(), c.max());
+    }
+}

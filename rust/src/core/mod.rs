@@ -1,0 +1,29 @@
+//! Shared foundation types: packed key-value codec, configuration, errors,
+//! deterministic PRNG / samplers, and latency histograms.
+
+pub mod packed;
+pub mod config;
+pub mod error;
+pub mod rng;
+pub mod histogram;
+
+/// Number of slots per bucket. One warp (32 lanes) probes one bucket with
+/// one lane per slot (paper §III-A); a full bucket of 64-bit entries is
+/// 256 bytes = two 128-byte cache lines.
+pub const SLOTS_PER_BUCKET: usize = 32;
+
+/// A free-mask word with every slot available (bit i == 1 ⇒ slot i free).
+pub const FULL_FREE_MASK: u32 = u32::MAX;
+
+/// Default bound on cuckoo displacement chains (paper `max_evictions`).
+pub const DEFAULT_MAX_EVICTIONS: u32 = 16;
+
+/// Load factor above which the resize controller grows the table (§IV-C).
+pub const DEFAULT_GROW_THRESHOLD: f64 = 0.90;
+
+/// Load factor below which the resize controller shrinks the table (§IV-C).
+pub const DEFAULT_SHRINK_THRESHOLD: f64 = 0.25;
+
+/// Stash capacity as a fraction of main-table slot capacity (§IV-A step 4:
+/// "typically 1-2% of the main table capacity").
+pub const DEFAULT_STASH_FRACTION: f64 = 0.02;

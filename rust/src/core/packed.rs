@@ -1,0 +1,82 @@
+//! Packed 64-bit key-value words (paper §III-A, Figure 1b).
+//!
+//! Each entry is a single 64-bit word — key in the low 32 bits, value in the
+//! high 32 — so one 64-bit CAS publishes or removes both fields atomically.
+//! This is the "Packed Array-of-Structures" layout that eliminates the
+//! CAS+store two-phase update of a split key/value (SoA) layout.
+
+/// Reserved key denoting an empty slot. User keys must be `< EMPTY_KEY`.
+pub const EMPTY_KEY: u32 = u32::MAX;
+
+/// The word stored in an empty slot: `pack(EMPTY_KEY, u32::MAX)`.
+pub const EMPTY_WORD: u64 = u64::MAX;
+
+/// Pack a key-value pair into one 64-bit word (paper: `pair = (v << 32) | k`).
+#[inline(always)]
+pub const fn pack(key: u32, value: u32) -> u64 {
+    ((value as u64) << 32) | (key as u64)
+}
+
+/// Extract the key: `pair & 0xFFFFFFFF`.
+#[inline(always)]
+pub const fn unpack_key(word: u64) -> u32 {
+    (word & 0xFFFF_FFFF) as u32
+}
+
+/// Extract the value: `pair >> 32`.
+#[inline(always)]
+pub const fn unpack_value(word: u64) -> u32 {
+    (word >> 32) as u32
+}
+
+/// Unpack into `(key, value)`.
+#[inline(always)]
+pub const fn unpack(word: u64) -> (u32, u32) {
+    (unpack_key(word), unpack_value(word))
+}
+
+/// `true` if the word encodes an empty slot.
+#[inline(always)]
+pub const fn is_empty(word: u64) -> bool {
+    unpack_key(word) == EMPTY_KEY
+}
+
+/// `true` if `key` is a legal user key (the top key is the empty sentinel).
+#[inline(always)]
+pub const fn key_is_valid(key: u32) -> bool {
+    key != EMPTY_KEY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for &(k, v) in &[(0u32, 0u32), (1, 2), (0xDEAD_BEEF, 0xCAFE_BABE), (u32::MAX - 1, u32::MAX)] {
+            let w = pack(k, v);
+            assert_eq!(unpack_key(w), k);
+            assert_eq!(unpack_value(w), v);
+            assert_eq!(unpack(w), (k, v));
+        }
+    }
+
+    #[test]
+    fn empty_sentinel() {
+        assert!(is_empty(EMPTY_WORD));
+        assert_eq!(unpack_key(EMPTY_WORD), EMPTY_KEY);
+        assert!(!is_empty(pack(0, 0)));
+        assert!(!key_is_valid(EMPTY_KEY));
+        assert!(key_is_valid(0));
+        // Any word whose low half is EMPTY_KEY is empty regardless of value.
+        assert!(is_empty(pack(EMPTY_KEY, 123)));
+    }
+
+    #[test]
+    fn bit_layout_matches_paper() {
+        // key = pair & 0xFFFFFFFF, value = pair >> 32 (paper §III-A).
+        let w = pack(0x1234_5678, 0x9ABC_DEF0);
+        assert_eq!(w & 0xFFFF_FFFF, 0x1234_5678);
+        assert_eq!(w >> 32, 0x9ABC_DEF0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Deterministic, dependency-free PRNG and samplers.
+//!
+//! Benchmarks and tests need reproducible key streams; the registry has no
+//! `rand` crate, so we carry a SplitMix64 seeder + xoshiro256** generator
+//! (public-domain algorithms) and a Zipf rejection sampler for skewed
+//! workloads.
+
+/// SplitMix64 — used to seed xoshiro and as a cheap standalone mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** generator (Blackman & Vigna), deterministic from a seed.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed all four lanes through SplitMix64 (never all-zero).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        Xoshiro256 {
+            s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)],
+        }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (bound > 0).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf(θ) sampler over `{0, .., n-1}` using the rejection-inversion method
+/// (Hörmann & Derflinger); θ = 0 degenerates to uniform.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` items with skew `theta ∈ [0, ~2]`.
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        let h = |x: f64, t: f64| -> f64 {
+            if (t - 1.0).abs() < 1e-12 {
+                (x).ln()
+            } else {
+                (x).powf(1.0 - t) / (1.0 - t)
+            }
+        };
+        let h_x1 = h(1.5, theta) - 1.0f64.powf(-theta);
+        let h_n = h(n as f64 + 0.5, theta);
+        let s = 2.0 - {
+            // h^-1(h(2.5, t) - 2^-t) approximation seed
+            1.0
+        };
+        Zipf { n, theta, h_x1, h_n, s }
+    }
+
+    fn h(&self, x: f64) -> f64 {
+        if (self.theta - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            x.powf(1.0 - self.theta) / (1.0 - self.theta)
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.theta - 1.0).abs() < 1e-12 {
+            x.exp()
+        } else {
+            (x * (1.0 - self.theta)).powf(1.0 / (1.0 - self.theta))
+        }
+    }
+
+    /// Draw one sample (0-based rank; rank 0 is the hottest item).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        if self.theta < 1e-9 {
+            return rng.below(self.n);
+        }
+        loop {
+            let u = self.h_n + rng.f64() * (self.h_x1 - self.h_n);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if (k - x).abs() <= self.s || u >= self.h(k + 0.5) - (k).powf(-self.theta) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Xoshiro256::seeded(42);
+        let mut b = Xoshiro256::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256::seeded(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Xoshiro256::seeded(7);
+        for bound in [1u64, 2, 3, 10, 1000, 1 << 40] {
+            for _ in 0..200 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Xoshiro256::seeded(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_uniform_degenerates() {
+        let z = Zipf::new(100, 0.0);
+        let mut rng = Xoshiro256::seeded(1);
+        let mut counts = [0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // roughly uniform: every bin within 4x of the expectation
+        for &c in &counts {
+            assert!(c > 250 && c < 4000, "count {c}");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_orders_ranks() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Xoshiro256::seeded(2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // hottest rank dominates the tail by a wide margin
+        assert!(counts[0] > 10 * counts[500].max(1));
+        assert!(counts[0] > counts[1]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::seeded(3);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,77 @@
+//! CityHash-style hash for 32-bit integer keys (paper §III-C, [22]).
+//!
+//! CityHash32 over a fixed 4-byte input follows the `Hash32Len0to4` path:
+//! a byte-wise fold with the Murmur constants followed by fmix. We
+//! implement that path directly (it is what the paper's GPU kernel would
+//! evaluate for a 4-byte key).
+
+use super::murmur::fmix32;
+
+const C1: u32 = 0xcc9e_2d51;
+
+/// CityHash32's `Hash32Len0to4` specialized to the 4 LE bytes of `key`.
+#[inline(always)]
+pub const fn city32(key: u32) -> u32 {
+    let len: u32 = 4;
+    let mut b: u32 = 0;
+    let mut c: u32 = 9;
+    // byte-wise fold, little-endian byte order
+    let bytes = key.to_le_bytes();
+    let mut i = 0;
+    while i < 4 {
+        let v = bytes[i] as i8 as i32 as u32; // sign-extended like the C++ `signed char`
+        b = b.wrapping_mul(C1).wrapping_add(v);
+        c ^= b;
+        i += 1;
+    }
+    fmix32(mur(c, mur(b, mur(len, c))))
+}
+
+/// CityHash's `Mur` helper: a Murmur-style combine of `a` into `h`.
+#[inline(always)]
+const fn mur(mut a: u32, mut h: u32) -> u32 {
+    const C2: u32 = 0x1b87_3593;
+    a = a.wrapping_mul(C1);
+    a = a.rotate_right(17);
+    a = a.wrapping_mul(C2);
+    h ^= a;
+    h = h.rotate_right(19);
+    h.wrapping_mul(5).wrapping_add(0xe654_6b64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_nontrivial() {
+        assert_eq!(city32(42), city32(42));
+        assert_ne!(city32(0), city32(1));
+        assert_ne!(city32(0), 0);
+    }
+
+    #[test]
+    fn differs_from_murmur() {
+        use super::super::murmur::murmur3_32;
+        let mut differing = 0;
+        for key in 0..1000u32 {
+            if city32(key) != murmur3_32(key) {
+                differing += 1;
+            }
+        }
+        assert_eq!(differing, 1000);
+    }
+
+    #[test]
+    fn distribution_over_buckets() {
+        let mut bins = [0u32; 128];
+        let n = 128 * 1024;
+        for key in 0..n {
+            bins[(city32(key) & 127) as usize] += 1;
+        }
+        let mean = n / 128;
+        for &b in &bins {
+            assert!(b > mean / 2 && b < mean * 2);
+        }
+    }
+}

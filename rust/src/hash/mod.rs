@@ -1,0 +1,225 @@
+//! Hash functions and the bucket-addressing policy (paper §III-C).
+//!
+//! The paper evaluates six non-cryptographic functions — BitHash1, BitHash2
+//! (GPU-oriented Jenkins/Wang-style bit mixers), MurmurHash, CityHash, and
+//! table-based CRC-32 / CRC-64 — and adopts the `BitHash1 & BitHash2` pair
+//! as the default two-function cuckoo family (Fig. 5).
+//!
+//! Bucket addressing is *linear hashing*: the table exposes `index_mask`
+//! (2^m − 1) and `split_ptr`; a hash is first reduced with `index_mask`, and
+//! buckets below `split_ptr` (already split this round) are re-reduced with
+//! the next round's mask (§IV-C).
+
+pub mod bithash;
+pub mod murmur;
+pub mod city;
+pub mod crc;
+pub mod stats;
+
+pub use bithash::{bithash1, bithash2};
+pub use city::city32;
+pub use murmur::murmur3_32;
+
+/// Identifies one hash function of the evaluated family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HashKind {
+    /// Thomas-Wang-style 32-bit mixer (paper Listing 1, `BitHash1`).
+    BitHash1,
+    /// Bob-Jenkins-style 6-shift mixer (paper Listing 1, `BitHash2`).
+    BitHash2,
+    /// MurmurHash3 32-bit finalizer-based integer hash.
+    Murmur3,
+    /// CityHash-style 32-bit integer hash.
+    City32,
+    /// Table-based CRC-32 (Castagnoli polynomial).
+    Crc32,
+    /// Table-based CRC-64 (ECMA polynomial), folded to 32 bits.
+    Crc64,
+}
+
+impl HashKind {
+    /// All kinds in the order the paper's Fig. 3 lists them.
+    pub const ALL: [HashKind; 6] = [
+        HashKind::Crc32,
+        HashKind::Crc64,
+        HashKind::City32,
+        HashKind::Murmur3,
+        HashKind::BitHash1,
+        HashKind::BitHash2,
+    ];
+
+    /// Hash a 32-bit key to 32 bits of mixed output.
+    #[inline]
+    pub fn hash(self, key: u32) -> u32 {
+        match self {
+            HashKind::BitHash1 => bithash::bithash1(key),
+            HashKind::BitHash2 => bithash::bithash2(key),
+            HashKind::Murmur3 => murmur::murmur3_32(key),
+            HashKind::City32 => city::city32(key),
+            HashKind::Crc32 => crc::crc32(key),
+            HashKind::Crc64 => crc::crc64_folded(key),
+        }
+    }
+
+    /// Parse a lowercase name (config files / CLI).
+    pub fn parse(s: &str) -> Option<HashKind> {
+        Some(match s {
+            "bithash1" => HashKind::BitHash1,
+            "bithash2" => HashKind::BitHash2,
+            "murmur3" | "murmur" => HashKind::Murmur3,
+            "city32" | "city" => HashKind::City32,
+            "crc32" => HashKind::Crc32,
+            "crc64" => HashKind::Crc64,
+            _ => return None,
+        })
+    }
+
+    /// Display name used in benchmark tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            HashKind::BitHash1 => "BitHash1",
+            HashKind::BitHash2 => "BitHash2",
+            HashKind::Murmur3 => "MurmurHash",
+            HashKind::City32 => "CityHash",
+            HashKind::Crc32 => "CRC32",
+            HashKind::Crc64 => "CRC64",
+        }
+    }
+}
+
+/// An ordered family of `d` hash functions (d = 2 by default) plus the
+/// linear-hashing address reduction.
+#[derive(Debug, Clone)]
+pub struct HashFamily {
+    kinds: Vec<HashKind>,
+}
+
+impl HashFamily {
+    /// Build from an ordered list of kinds (`d = kinds.len()`).
+    pub fn new(kinds: Vec<HashKind>) -> Self {
+        assert!(!kinds.is_empty());
+        HashFamily { kinds }
+    }
+
+    /// The paper's default family: BitHash1 & BitHash2.
+    pub fn default_pair() -> Self {
+        HashFamily::new(vec![HashKind::BitHash1, HashKind::BitHash2])
+    }
+
+    /// Number of hash functions `d`.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Raw 32-bit hash of `key` under function `i`.
+    #[inline]
+    pub fn raw(&self, i: usize, key: u32) -> u32 {
+        self.kinds[i].hash(key)
+    }
+
+    /// Kinds in order.
+    pub fn kinds(&self) -> &[HashKind] {
+        &self.kinds
+    }
+
+    /// Linear-hashing bucket address for hash `h`:
+    /// `b = h & index_mask; if b < split_ptr { b = h & next_mask }`.
+    #[inline(always)]
+    pub fn address(h: u32, index_mask: u32, split_ptr: u32) -> u32 {
+        let b = h & index_mask;
+        if b < split_ptr {
+            h & ((index_mask << 1) | 1)
+        } else {
+            b
+        }
+    }
+
+    /// Candidate bucket for `key` under function `i` with the current
+    /// linear-hashing round state.
+    #[inline]
+    pub fn bucket(&self, i: usize, key: u32, index_mask: u32, split_ptr: u32) -> u32 {
+        Self::address(self.raw(i, key), index_mask, split_ptr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_are_deterministic() {
+        for kind in HashKind::ALL {
+            for key in [0u32, 1, 42, 0xDEAD_BEEF, u32::MAX - 1] {
+                assert_eq!(kind.hash(key), kind.hash(key), "{kind:?} not deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn kinds_differ_from_each_other() {
+        // A fixed key should hash differently under (almost) all kinds.
+        let key = 0x1234_5678;
+        let hashes: Vec<u32> = HashKind::ALL.iter().map(|k| k.hash(key)).collect();
+        let mut uniq = hashes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), hashes.len(), "hash kinds collide on {key:#x}: {hashes:?}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in HashKind::ALL {
+            let lower = kind.name().to_ascii_lowercase();
+            let token = match kind {
+                HashKind::Murmur3 => "murmur3".to_string(),
+                HashKind::City32 => "city32".to_string(),
+                _ => lower,
+            };
+            assert_eq!(HashKind::parse(&token), Some(kind));
+        }
+        assert_eq!(HashKind::parse("sha256"), None);
+    }
+
+    #[test]
+    fn linear_address_before_and_after_split() {
+        // Round m=2 (mask=3). Buckets 0..split_ptr use the next mask (7).
+        let h = 0b101u32; // raw address 1 under mask 3, 5 under mask 7
+        assert_eq!(HashFamily::address(h, 3, 0), 1);
+        assert_eq!(HashFamily::address(h, 3, 2), 5); // bucket 1 < split_ptr 2 -> rehash
+        let h2 = 0b110u32; // address 2 under mask 3 — not yet split
+        assert_eq!(HashFamily::address(h2, 3, 2), 2);
+    }
+
+    #[test]
+    fn addresses_stay_in_logical_range() {
+        let fam = HashFamily::default_pair();
+        let index_mask = 0xF; // m=4 -> 16 base buckets
+        for split_ptr in [0u32, 3, 8, 15] {
+            let logical = (index_mask + 1) + split_ptr;
+            for key in 0..10_000u32 {
+                for i in 0..fam.d() {
+                    let b = fam.bucket(i, key, index_mask, split_ptr);
+                    assert!(
+                        b < logical,
+                        "bucket {b} out of range (logical {logical}, sp {split_ptr})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_invariant_rehash_lands_on_src_or_partner() {
+        // For any key addressed to b < split_ptr, the next-round address is
+        // either b (stay) or b + 2^m (move) — the linear-hashing invariant
+        // the split migration relies on.
+        let index_mask = 0x3F; // m=6
+        for key in 0..50_000u32 {
+            let h = HashKind::BitHash1.hash(key);
+            let b = h & index_mask;
+            let next = h & ((index_mask << 1) | 1);
+            assert!(next == b || next == b + index_mask + 1);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # Hive Hash Table
+//!
+//! A reproduction of *"Hive Hash Table: A Warp-Cooperative, Dynamically
+//! Resizable Hash Table for GPUs"* (Polak, Troendle, Jang — CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a batching/routing service,
+//!   resize controller, overflow-stash management, plus three execution
+//!   substrates (native lock-free CPU, SIMT warp simulator, XLA/PJRT bulk
+//!   backend) and the baseline hash tables the paper compares against.
+//! * **Layer 2 (python/compile/model.py)** — JAX bulk formulations of the
+//!   table operations, AOT-lowered to HLO artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the probe /
+//!   hash / migration hot spots (interpret=True on CPU PJRT).
+//!
+//! The paper's three contributions map onto modules:
+//!
+//! 1. *Cache-aligned packed buckets* → [`core::packed`] + the bucket arrays
+//!    in [`native::table`] / [`simgpu`].
+//! 2. *Warp-cooperative protocols (WABC / WCME)* → lane-accurate versions in
+//!    [`simgpu`] over the [`simt`] simulator, atomic-CAS versions in
+//!    [`native::ops`], and vectorized bulk versions in the Pallas kernels.
+//! 3. *Load-aware linear-hashing resize* → [`native::resize`] and the
+//!    coordinator's [`coordinator::resize_ctl`].
+//!
+//! See `DESIGN.md` for the full system inventory and the CUDA→TPU hardware
+//! adaptation, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod core;
+pub mod hash;
+pub mod native;
+pub mod simt;
+pub mod simgpu;
+pub mod baselines;
+pub mod runtime;
+pub mod backend;
+pub mod coordinator;
+pub mod workload;
+pub mod report;
+
+pub use crate::core::config::HiveConfig;
+pub use crate::core::packed::{pack, unpack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
+pub use crate::native::table::HiveTable;

@@ -1,0 +1,238 @@
+//! `hivehash` CLI — the leader entry point.
+//!
+//! ```text
+//! hivehash serve   [--workers N] [--backend native|xla|simt] [--config FILE]
+//! hivehash bench   <fig3|fig5|fig6|fig7|fig8|fig9|resize|all>   (hints)
+//! hivehash csr     [--m BUCKETS] [--n KEYS]
+//! hivehash breakdown [--buckets N] [--lf X]
+//! hivehash e2e     [--ops N]
+//! hivehash info
+//! ```
+//!
+//! (Dependency-free argument parsing; the registry has no clap.)
+
+use hivehash::backend::{Backend, NativeBackend, SimtBackend, XlaBackend};
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hivehash::hash::stats as hstats;
+use hivehash::hash::HashKind;
+use hivehash::report::{mops, Table};
+use hivehash::simgpu::{SimHive, SimHiveConfig};
+use hivehash::workload::{self, Mix};
+use hivehash::HiveConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let code = match cmd {
+        "serve" => cmd_serve(&flags),
+        "bench" => cmd_bench(&args),
+        "csr" => cmd_csr(&flags),
+        "breakdown" => cmd_breakdown(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "hivehash — warp-cooperative, dynamically resizable hash table (paper reproduction)\n\n\
+         USAGE:\n  hivehash serve     [--workers N] [--backend native|xla|simt] [--config FILE] [--ops N]\n  \
+         hivehash bench <fig3|fig5|fig6|fig7|fig8|fig9|resize|all>\n  \
+         hivehash csr       [--m BUCKETS] [--n KEYS]\n  \
+         hivehash breakdown [--buckets N] [--lf X]\n  \
+         hivehash e2e       [--ops N]\n  \
+         hivehash info"
+    );
+}
+
+fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut map = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            map.insert(name.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn flag<T: std::str::FromStr>(
+    flags: &std::collections::HashMap<String, String>,
+    name: &str,
+    default: T,
+) -> T {
+    flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn make_factory(
+    backend: String,
+) -> impl Fn(usize) -> hivehash::core::error::Result<Box<dyn Backend>> + Send + Sync + 'static {
+    move |_w| match backend.as_str() {
+        "xla" => {
+            let rt = Arc::new(hivehash::runtime::Runtime::open_default()?);
+            let class = rt.classes()[0];
+            Ok(Box::new(XlaBackend::with_initial_buckets(rt, class, class / 4)?) as _)
+        }
+        "simt" => Ok(Box::new(SimtBackend::new(SimHiveConfig {
+            n_buckets: 4096,
+            ..Default::default()
+        })) as _),
+        _ => Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(256))?) as _),
+    }
+}
+
+fn cmd_serve(flags: &std::collections::HashMap<String, String>) -> i32 {
+    let workers = flag(flags, "workers", 4usize);
+    let backend: String = flag(flags, "backend", "native".to_string());
+    let total: usize = flag(flags, "ops", 1_000_000usize);
+    let mut table_cfg = HiveConfig::default().with_buckets(256);
+    if let Some(path) = flags.get("config") {
+        match HiveConfig::from_file(std::path::Path::new(path)) {
+            Ok(cfg) => table_cfg = cfg,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    }
+    let _ = table_cfg.apply_env();
+    println!("starting coordinator: {workers} workers, backend={backend}");
+    let cfg = CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch: 4096, deadline: Duration::from_micros(200) },
+        resize_check_every: 4,
+    };
+    let (coord, h) = match Coordinator::start(cfg, make_factory(backend)) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("failed to start: {e}");
+            return 1;
+        }
+    };
+    // demo load (a real deployment would attach a network front here)
+    println!("replaying {total} mixed ops (0.5:0.3:0.2) through the service...");
+    let ops = workload::mixed(total, Mix::PAPER_IMBALANCED, 7);
+    let t0 = Instant::now();
+    for window in ops.chunks(4096) {
+        if let Err(e) = h.submit(window) {
+            eprintln!("submit failed: {e}");
+            return 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let stats = h.stats().unwrap();
+    println!("done: {:.2} MOPS | {}", mops(total, dt), stats.summary());
+    coord.shutdown();
+    0
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    let which = args.get(1).map(String::as_str).unwrap_or("all");
+    println!("benchmarks are cargo bench targets:\n");
+    let benches = [
+        ("fig3", "fig3_csr", "CSR of hash functions (Fig. 3)"),
+        ("fig5", "fig5_hash_combos", "hash-combo insert throughput (Fig. 5)"),
+        ("fig6", "fig6_bulk_insert", "bulk insert vs baselines (Fig. 6)"),
+        ("fig7", "fig7_bulk_query", "bulk query vs baselines (Fig. 7)"),
+        ("fig8", "fig8_mixed", "mixed workload vs baselines (Fig. 8)"),
+        ("fig9", "fig9_step_breakdown", "insert step breakdown (Fig. 9)"),
+        ("resize", "resize_throughput", "resize throughput (§V-A)"),
+    ];
+    for (short, target, desc) in benches {
+        if which == "all" || which == short {
+            println!("  cargo bench --bench {target:<22} # {desc}");
+        }
+    }
+    0
+}
+
+fn cmd_csr(flags: &std::collections::HashMap<String, String>) -> i32 {
+    let m = flag(flags, "m", 512usize * 512);
+    let n = flag(flags, "n", 1u64 << 20);
+    let mut table = Table::new(
+        &format!("CSR at m={m}, n={n}"),
+        &["hash", "observed_Y", "expected_Y", "CSR"],
+    );
+    for kind in HashKind::ALL {
+        let loads = hstats::bucket_loads(kind, 0..n as u32, m);
+        let obs = hstats::observed_collisions(&loads);
+        let exp = hstats::expected_collisions(n, m as u64);
+        table.row(vec![
+            kind.name().into(),
+            obs.to_string(),
+            format!("{exp:.0}"),
+            format!("{:.4}", exp / obs.max(1) as f64),
+        ]);
+    }
+    table.emit(None);
+    0
+}
+
+fn cmd_breakdown(flags: &std::collections::HashMap<String, String>) -> i32 {
+    let n_buckets = flag(flags, "buckets", 4096usize);
+    let lf: f64 = flag(flags, "lf", 0.9f64);
+    let capacity = n_buckets * 32;
+    let mut sim = SimHive::new(SimHiveConfig { n_buckets, ..Default::default() });
+    let keys = workload::unique_uniform_keys((capacity as f64 * lf) as usize, 5);
+    for &k in &keys {
+        sim.insert(k, k);
+    }
+    let bd = sim.breakdown();
+    let p = bd.percentages();
+    println!("fill to lf={lf} over {n_buckets} buckets:");
+    println!(
+        "  replace {:.1}% | claim {:.1}% | evict {:.1}% | stash {:.1}%",
+        p[0], p[1], p[2], p[3]
+    );
+    println!("  lock rate {:.3}% (paper <0.85%)", 100.0 * bd.lock_rate());
+    let t = sim.mem_total();
+    println!(
+        "  memory: {} transactions, {} atomics ({:.2} trans/op, {:.2} atomics/op)",
+        t.transactions,
+        t.atomics,
+        t.transactions as f64 / keys.len() as f64,
+        t.atomics as f64 / keys.len() as f64
+    );
+    0
+}
+
+fn cmd_e2e(flags: &std::collections::HashMap<String, String>) -> i32 {
+    let total: usize = flag(flags, "ops", 200_000usize);
+    println!("(short alias of examples/kv_service.rs — run that for the full driver)");
+    let ops = workload::mixed(total, Mix::PAPER_IMBALANCED, 4242);
+    let cfg = CoordinatorConfig::default();
+    let (coord, h) = Coordinator::start(cfg, make_factory("native".into())).unwrap();
+    let t0 = Instant::now();
+    for w in ops.chunks(4096) {
+        h.submit(w).unwrap();
+    }
+    println!("native service: {:.2} MOPS", mops(total, t0.elapsed()));
+    coord.shutdown();
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("hivehash {} — paper: Hive Hash Table (CS.DC 2025)", env!("CARGO_PKG_VERSION"));
+    println!("slots/bucket: 32 | packed 64-bit KV words | linear-hashing resize");
+    match hivehash::runtime::Runtime::open_default() {
+        Ok(rt) => println!("artifacts: classes {:?}", rt.classes()),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    0
+}

@@ -1,0 +1,23 @@
+//! The production (native CPU) Hive hash table.
+//!
+//! This is the paper's data structure with GPU atomics mapped onto Rust
+//! `AtomicU64`/`AtomicU32` (DESIGN.md §2): packed 64-bit KV words published
+//! with a single CAS, a 32-bit free mask claimed with one `fetch_and`
+//! (WABC), match-and-elect probes (WCME), the four-step insert strategy
+//! with bounded cuckoo eviction and an overflow stash, and warp-parallel
+//! linear-hashing resize executed in K-bucket batches.
+//!
+//! OS threads play the role of concurrent warps: the *inter-warp*
+//! concurrency protocol is identical (same atomics, same linearization
+//! points); the *intra-warp* 32-lane cooperation becomes a 32-slot scan the
+//! compiler vectorizes. The lane-accurate version lives in [`crate::simgpu`].
+
+pub mod stash;
+pub mod stats;
+pub mod table;
+pub mod resize;
+pub mod soa;
+
+pub use stash::OverflowStash;
+pub use stats::{OpStats, StatsSnapshot, Step};
+pub use table::{HiveTable, InsertOutcome};

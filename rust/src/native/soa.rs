@@ -1,0 +1,183 @@
+//! Split structure-of-arrays ablation (paper §III-A, Figure 1a).
+//!
+//! The classical SoA layout keeps distinct key and value arrays, forcing a
+//! *two-phase update*: one 32-bit CAS to claim the key slot, then a relaxed
+//! store to publish the value — extra global traffic and a key/value
+//! consistency window. `SoaTable` implements exactly that scheme so the
+//! benchmarks can quantify what the packed-AoS layout buys (DESIGN.md §6).
+//!
+//! The probing scheme (two-choice buckets of 32 slots, same hash family) is
+//! kept identical to [`crate::native::table::HiveTable`] so the measured
+//! difference isolates the layout.
+
+use crate::core::config::HiveConfig;
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::EMPTY_KEY;
+use crate::core::SLOTS_PER_BUCKET;
+use crate::hash::HashFamily;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+/// SoA bucket table: `keys[i]` and `values[i]` live in separate arrays.
+pub struct SoaTable {
+    keys: Box<[AtomicU32]>,
+    values: Box<[AtomicU32]>,
+    family: HashFamily,
+    n_buckets: usize,
+    count: AtomicUsize,
+}
+
+impl SoaTable {
+    /// Fixed-capacity SoA table (the ablation does not resize).
+    pub fn new(cfg: &HiveConfig) -> Result<Self> {
+        let n_buckets = cfg.initial_buckets.next_power_of_two().max(4);
+        if cfg.hash_kinds.len() < 2 {
+            return Err(HiveError::Config("need >= 2 hash functions".into()));
+        }
+        let slots = n_buckets * SLOTS_PER_BUCKET;
+        Ok(SoaTable {
+            keys: (0..slots).map(|_| AtomicU32::new(EMPTY_KEY)).collect(),
+            values: (0..slots).map(|_| AtomicU32::new(0)).collect(),
+            family: HashFamily::new(cfg.hash_kinds.clone()),
+            n_buckets,
+            count: AtomicUsize::new(0),
+        })
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// `true` when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn bucket(&self, i: usize, key: u32) -> usize {
+        (self.family.raw(i, key) as usize) & (self.n_buckets - 1)
+    }
+
+    /// Two-phase insert: CAS the key slot, then store the value.
+    pub fn insert(&self, key: u32, value: u32) -> Result<()> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        // replace path: find existing key, store value (second transaction)
+        for i in 0..self.family.d() {
+            let b = self.bucket(i, key);
+            let base = b * SLOTS_PER_BUCKET;
+            for lane in 0..SLOTS_PER_BUCKET {
+                if self.keys[base + lane].load(Ordering::Acquire) == key {
+                    self.values[base + lane].store(value, Ordering::Release);
+                    return Ok(());
+                }
+            }
+        }
+        // claim path: CAS key slot EMPTY -> key, then publish value
+        for i in 0..self.family.d() {
+            let b = self.bucket(i, key);
+            let base = b * SLOTS_PER_BUCKET;
+            for lane in 0..SLOTS_PER_BUCKET {
+                if self.keys[base + lane]
+                    .compare_exchange(EMPTY_KEY, key, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    // Phase 2: the separate value store — the extra memory
+                    // transaction (and inconsistency window) AoS removes.
+                    self.values[base + lane].store(value, Ordering::Release);
+                    self.count.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+            }
+        }
+        Err(HiveError::TableFull)
+    }
+
+    /// Lookup — must read two arrays (two transactions per hit).
+    pub fn lookup(&self, key: u32) -> Option<u32> {
+        for i in 0..self.family.d() {
+            let b = self.bucket(i, key);
+            let base = b * SLOTS_PER_BUCKET;
+            for lane in 0..SLOTS_PER_BUCKET {
+                if self.keys[base + lane].load(Ordering::Acquire) == key {
+                    return Some(self.values[base + lane].load(Ordering::Acquire));
+                }
+            }
+        }
+        None
+    }
+
+    /// Delete: CAS the key away; the stale value slot is simply abandoned.
+    pub fn delete(&self, key: u32) -> bool {
+        for i in 0..self.family.d() {
+            let b = self.bucket(i, key);
+            let base = b * SLOTS_PER_BUCKET;
+            for lane in 0..SLOTS_PER_BUCKET {
+                if self.keys[base + lane]
+                    .compare_exchange(key, EMPTY_KEY, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    self.count.fetch_sub(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SoaTable {
+        SoaTable::new(&HiveConfig::default().with_buckets(64)).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = table();
+        for k in 1..=1000u32 {
+            t.insert(k, k * 2).unwrap();
+        }
+        for k in 1..=1000u32 {
+            assert_eq!(t.lookup(k), Some(k * 2));
+        }
+        assert_eq!(t.len(), 1000);
+    }
+
+    #[test]
+    fn replace_and_delete() {
+        let t = table();
+        t.insert(1, 10).unwrap();
+        t.insert(1, 11).unwrap();
+        assert_eq!(t.lookup(1), Some(11));
+        assert_eq!(t.len(), 1);
+        assert!(t.delete(1));
+        assert!(!t.delete(1));
+        assert_eq!(t.lookup(1), None);
+    }
+
+    #[test]
+    fn concurrent_inserts() {
+        use std::sync::Arc;
+        let t = Arc::new(table());
+        let handles: Vec<_> = (0..4u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    // ~49% load factor: two-choice without eviction still
+                    // succeeds at this occupancy.
+                    for i in 0..250 {
+                        t.insert(tid * 1000 + i + 1, i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 1000);
+    }
+}

@@ -1,0 +1,251 @@
+//! Overflow stash — a lock-free bounded ring of packed KV words
+//! (paper §IV-A step 4).
+//!
+//! Insertions that exhaust both candidate buckets *and* the eviction bound
+//! are redirected here; the stash is drained and its entries reinserted at
+//! the next resize epoch. Producers reserve a slot with one `fetch_add` on
+//! `tail`; lookups/deletes scan the live window racily (entries are
+//! self-describing packed words, EMPTY marks holes).
+
+use crate::core::packed::{unpack_key, unpack_value, EMPTY_WORD};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Lock-free bounded overflow stash.
+#[derive(Debug)]
+pub struct OverflowStash {
+    slots: Box<[AtomicU64]>,
+    /// Oldest potentially-live index (advanced only by the exclusive drain).
+    head: AtomicUsize,
+    /// Next index to reserve (monotonically increasing; `% capacity` maps
+    /// to a physical slot).
+    tail: AtomicUsize,
+}
+
+impl OverflowStash {
+    /// A stash with room for `capacity` entries (min 8, rounded to pow2 so
+    /// the ring index is a mask).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(8).next_power_of_two();
+        let slots = (0..cap).map(|_| AtomicU64::new(EMPTY_WORD)).collect::<Vec<_>>();
+        OverflowStash {
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Physical capacity.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// `true` if no entries have ever been pushed since the last drain.
+    /// (Cheap gate so the probe fast path skips the stash entirely.)
+    #[inline]
+    pub fn is_quiescent(&self) -> bool {
+        self.head.load(Ordering::Acquire) == self.tail.load(Ordering::Acquire)
+    }
+
+    /// Number of reserved (possibly deleted) entries in the live window.
+    pub fn window_len(&self) -> usize {
+        self.tail.load(Ordering::Acquire) - self.head.load(Ordering::Acquire)
+    }
+
+    /// Try to push a packed word. Returns `false` if the ring is full (the
+    /// operation is then flagged pending for the next resize — paper §IV-A).
+    pub fn push(&self, word: u64) -> bool {
+        debug_assert_ne!(word, EMPTY_WORD);
+        loop {
+            let tail = self.tail.load(Ordering::Relaxed);
+            let head = self.head.load(Ordering::Acquire);
+            if tail - head >= self.slots.len() {
+                return false;
+            }
+            // Reserve the slot; CAS (not fetch_add) so a full ring never
+            // over-reserves and tears the window invariant.
+            if self
+                .tail
+                .compare_exchange_weak(tail, tail + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.slots[tail & (self.slots.len() - 1)].store(word, Ordering::Release);
+                return true;
+            }
+        }
+    }
+
+    /// Linear-scan lookup over the live window. O(window) — the stash is
+    /// 1–2 % of table capacity and usually empty, so this is off the fast
+    /// path (guarded by [`Self::is_quiescent`]).
+    pub fn lookup(&self, key: u32) -> Option<u32> {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        for i in head..tail {
+            let w = self.slots[i & (self.slots.len() - 1)].load(Ordering::Acquire);
+            if unpack_key(w) == key {
+                return Some(unpack_value(w));
+            }
+        }
+        None
+    }
+
+    /// Replace the value of `key` if present. Returns true on success.
+    pub fn replace(&self, key: u32, new_word: u64) -> bool {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        for i in head..tail {
+            let slot = &self.slots[i & (self.slots.len() - 1)];
+            let w = slot.load(Ordering::Acquire);
+            if unpack_key(w) == key
+                && slot.compare_exchange(w, new_word, Ordering::AcqRel, Ordering::Relaxed).is_ok()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Delete `key` from the stash (leaves a hole skipped on drain).
+    pub fn delete(&self, key: u32) -> bool {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        for i in head..tail {
+            let slot = &self.slots[i & (self.slots.len() - 1)];
+            let w = slot.load(Ordering::Acquire);
+            if unpack_key(w) == key
+                && slot.compare_exchange(w, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed).is_ok()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Racy snapshot of live words in the window (diagnostics only).
+    pub fn peek_window(&self) -> Vec<u64> {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        let mut out = Vec::new();
+        for i in head..tail {
+            let w = self.slots[i & (self.slots.len() - 1)].load(Ordering::Acquire);
+            if w != EMPTY_WORD {
+                out.push(w);
+            }
+        }
+        out
+    }
+
+    /// Drain all live entries, resetting the window. **Caller must hold the
+    /// table's exclusive (resize) guard** — this is the "reprocessed during
+    /// table expansion" step of §IV-A.
+    pub fn drain_exclusive(&self) -> Vec<u64> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        let mut out = Vec::with_capacity(tail - head);
+        for i in head..tail {
+            let slot = &self.slots[i & (self.slots.len() - 1)];
+            let w = slot.swap(EMPTY_WORD, Ordering::Relaxed);
+            if w != EMPTY_WORD {
+                out.push(w);
+            }
+        }
+        self.head.store(tail, Ordering::Release);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::packed::pack;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_lookup_delete() {
+        let s = OverflowStash::new(16);
+        assert!(s.is_quiescent());
+        assert!(s.push(pack(7, 70)));
+        assert!(!s.is_quiescent());
+        assert_eq!(s.lookup(7), Some(70));
+        assert_eq!(s.lookup(8), None);
+        assert!(s.replace(7, pack(7, 71)));
+        assert_eq!(s.lookup(7), Some(71));
+        assert!(s.delete(7));
+        assert_eq!(s.lookup(7), None);
+        assert!(!s.delete(7));
+    }
+
+    #[test]
+    fn fills_up_and_rejects() {
+        let s = OverflowStash::new(8);
+        for i in 0..8u32 {
+            assert!(s.push(pack(i, i)));
+        }
+        assert!(!s.push(pack(99, 99)), "ring must reject when full");
+        assert_eq!(s.window_len(), 8);
+    }
+
+    #[test]
+    fn drain_returns_live_entries_and_resets() {
+        let s = OverflowStash::new(16);
+        for i in 0..10u32 {
+            s.push(pack(i, i * 2));
+        }
+        s.delete(3);
+        s.delete(7);
+        let mut drained = s.drain_exclusive();
+        drained.sort_unstable();
+        assert_eq!(drained.len(), 8);
+        assert!(s.is_quiescent());
+        assert_eq!(s.lookup(1), None);
+        // ring is reusable after drain
+        assert!(s.push(pack(100, 1)));
+        assert_eq!(s.lookup(100), Some(1));
+    }
+
+    #[test]
+    fn concurrent_pushes_land_exactly_once() {
+        let s = Arc::new(OverflowStash::new(1024));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..128u32 {
+                        assert!(s.push(pack(t * 1000 + i, i)));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let drained = s.drain_exclusive();
+        assert_eq!(drained.len(), 8 * 128);
+        let mut keys: Vec<u32> = drained.iter().map(|&w| unpack_key(w)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8 * 128, "duplicate or lost stash entries");
+    }
+
+    #[test]
+    fn concurrent_push_full_never_overcommits() {
+        let s = Arc::new(OverflowStash::new(64));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let mut ok = 0;
+                    for i in 0..64u32 {
+                        if s.push(pack(t * 100 + i + 1, i)) {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(total, 64, "exactly capacity pushes must succeed");
+        assert_eq!(s.drain_exclusive().len(), 64);
+    }
+}

@@ -1,0 +1,212 @@
+//! Always-on operation counters for the native table.
+//!
+//! These back two of the paper's measurements: the per-step insertion
+//! breakdown (Fig. 9 — counts here, cycle-accurate timing in
+//! [`crate::simgpu`]) and the "<0.85 % of operations take the eviction
+//! lock" claim (§III-B). Counters are `Relaxed` and padded to avoid false
+//! sharing on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Insert path steps (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Step 1 — key already present, value replaced (WCME + CAS).
+    Replace,
+    /// Step 2 — free slot claimed and committed (WABC).
+    Claim,
+    /// Step 3 — placed via bounded cuckoo eviction.
+    Evict,
+    /// Step 4 — redirected to the overflow stash.
+    Stash,
+}
+
+/// Cache-line padded atomic counter.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct Padded(AtomicU64);
+
+/// Operation statistics, shared by all threads operating on a table.
+#[derive(Debug, Default)]
+pub struct OpStats {
+    inserts: Padded,
+    replaces: Padded,
+    claims: Padded,
+    evict_placements: Padded,
+    evict_rounds: Padded,
+    stash_pushes: Padded,
+    stash_full: Padded,
+    lock_acquisitions: Padded,
+    lookups: Padded,
+    lookup_hits: Padded,
+    deletes: Padded,
+    delete_hits: Padded,
+    cas_retries: Padded,
+}
+
+impl OpStats {
+    /// Record which step completed an insert.
+    #[inline]
+    pub fn record_insert(&self, step: Step) {
+        self.inserts.0.fetch_add(1, Ordering::Relaxed);
+        match step {
+            Step::Replace => &self.replaces,
+            Step::Claim => &self.claims,
+            Step::Evict => &self.evict_placements,
+            Step::Stash => &self.stash_pushes,
+        }
+        .0
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cuckoo displacement round.
+    #[inline]
+    pub fn record_evict_round(&self) {
+        self.evict_rounds.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an eviction-lock acquisition (the §III-B rarity claim).
+    #[inline]
+    pub fn record_lock(&self) {
+        self.lock_acquisitions.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rejected stash push (table truly full).
+    #[inline]
+    pub fn record_stash_full(&self) {
+        self.stash_full.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a lookup and whether it hit.
+    #[inline]
+    pub fn record_lookup(&self, hit: bool) {
+        self.lookups.0.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.lookup_hits.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a delete and whether it removed an entry.
+    #[inline]
+    pub fn record_delete(&self, hit: bool) {
+        self.deletes.0.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.delete_hits.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a CAS retry (contention indicator).
+    #[inline]
+    pub fn record_cas_retry(&self) {
+        self.cas_retries.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Coherent-enough snapshot of all counters.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            inserts: self.inserts.0.load(Ordering::Relaxed),
+            replaces: self.replaces.0.load(Ordering::Relaxed),
+            claims: self.claims.0.load(Ordering::Relaxed),
+            evict_placements: self.evict_placements.0.load(Ordering::Relaxed),
+            evict_rounds: self.evict_rounds.0.load(Ordering::Relaxed),
+            stash_pushes: self.stash_pushes.0.load(Ordering::Relaxed),
+            stash_full: self.stash_full.0.load(Ordering::Relaxed),
+            lock_acquisitions: self.lock_acquisitions.0.load(Ordering::Relaxed),
+            lookups: self.lookups.0.load(Ordering::Relaxed),
+            lookup_hits: self.lookup_hits.0.load(Ordering::Relaxed),
+            deletes: self.deletes.0.load(Ordering::Relaxed),
+            delete_hits: self.delete_hits.0.load(Ordering::Relaxed),
+            cas_retries: self.cas_retries.0.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`OpStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub inserts: u64,
+    pub replaces: u64,
+    pub claims: u64,
+    pub evict_placements: u64,
+    pub evict_rounds: u64,
+    pub stash_pushes: u64,
+    pub stash_full: u64,
+    pub lock_acquisitions: u64,
+    pub lookups: u64,
+    pub lookup_hits: u64,
+    pub deletes: u64,
+    pub delete_hits: u64,
+    pub cas_retries: u64,
+}
+
+impl StatsSnapshot {
+    /// Fraction of *all operations* that acquired the eviction lock — the
+    /// quantity behind the paper's "<0.85 % of cases" claim.
+    pub fn lock_rate(&self) -> f64 {
+        let ops = self.inserts + self.lookups + self.deletes;
+        if ops == 0 {
+            0.0
+        } else {
+            self.lock_acquisitions as f64 / ops as f64
+        }
+    }
+
+    /// Fraction of inserts resolved per step `(s1, s2, s3, s4)` — the
+    /// count-based companion to Fig. 9.
+    pub fn step_fractions(&self) -> (f64, f64, f64, f64) {
+        let n = self.inserts.max(1) as f64;
+        (
+            self.replaces as f64 / n,
+            self.claims as f64 / n,
+            self.evict_placements as f64 / n,
+            self.stash_pushes as f64 / n,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let s = OpStats::default();
+        s.record_insert(Step::Claim);
+        s.record_insert(Step::Claim);
+        s.record_insert(Step::Replace);
+        s.record_insert(Step::Evict);
+        s.record_evict_round();
+        s.record_evict_round();
+        s.record_lock();
+        s.record_lookup(true);
+        s.record_lookup(false);
+        s.record_delete(true);
+        let snap = s.snapshot();
+        assert_eq!(snap.inserts, 4);
+        assert_eq!(snap.claims, 2);
+        assert_eq!(snap.replaces, 1);
+        assert_eq!(snap.evict_placements, 1);
+        assert_eq!(snap.evict_rounds, 2);
+        assert_eq!(snap.lock_acquisitions, 1);
+        assert_eq!(snap.lookups, 2);
+        assert_eq!(snap.lookup_hits, 1);
+        assert_eq!(snap.deletes, 1);
+    }
+
+    #[test]
+    fn lock_rate_and_fractions() {
+        let s = OpStats::default();
+        for _ in 0..99 {
+            s.record_insert(Step::Claim);
+        }
+        s.record_insert(Step::Evict);
+        s.record_lock();
+        let snap = s.snapshot();
+        assert!((snap.lock_rate() - 0.01).abs() < 1e-9);
+        let (s1, s2, s3, s4) = snap.step_fractions();
+        assert_eq!(s1, 0.0);
+        assert!((s2 - 0.99).abs() < 1e-9);
+        assert!((s3 - 0.01).abs() < 1e-9);
+        assert_eq!(s4, 0.0);
+    }
+}

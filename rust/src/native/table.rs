@@ -1,0 +1,879 @@
+//! `HiveTable` — the native concurrent Hive hash table.
+//!
+//! Concurrency model (DESIGN.md §2): GPU warps → OS threads. All operation
+//! fast paths are lock-free and match the paper's protocols instruction for
+//! instruction at the atomic level:
+//!
+//! * **WCME** (lookup / replace / delete): probe all 32 slots of each
+//!   candidate bucket, elect the first match, winner performs exactly one
+//!   64-bit CAS (replace/delete) or returns the value (lookup).
+//! * **WABC** (claim-then-commit): read the 32-bit free mask, elect the
+//!   lowest free bit, claim it with one `fetch_and`, publish the packed KV
+//!   with a release store.
+//! * **Bounded cuckoo eviction** under a short per-bucket spin lock, at most
+//!   `max_evictions` rounds, then the overflow stash.
+//!
+//! Resize (linear hashing, §IV-C) and physical reallocation run under the
+//! table's exclusive phase guard — the analogue of the GPU running resize
+//! as its own kernel launch between operation batches.
+//!
+//! ### Deviation from the paper
+//! Algorithm 2 line 15 restores a failed claim bit with `fetch_or`. With
+//! `fetch_and(!bit)`, a lost race means the bit was *already* zero, so the
+//! failed claimer changed nothing; restoring it would mark a slot free
+//! while its winner occupies it. We therefore simply retry with a fresh
+//! mask (no restore). See DESIGN.md §6.
+
+use crate::core::config::{HiveConfig, Layout};
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::{is_empty, pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
+use crate::core::{FULL_FREE_MASK, SLOTS_PER_BUCKET};
+use crate::hash::HashFamily;
+use crate::native::stash::OverflowStash;
+use crate::native::stats::{OpStats, StatsSnapshot, Step};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// Outcome of [`HiveTable::insert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// New key, committed via WABC claim (step 2).
+    Inserted,
+    /// Key existed; value replaced in place (step 1).
+    Replaced,
+    /// Placed after one or more cuckoo displacements (step 3).
+    Evicted,
+    /// Redirected to the overflow stash (step 4).
+    Stashed,
+}
+
+/// Bucket/metadata arrays. Swapped wholesale on physical reallocation, so
+/// everything lives behind the phase `RwLock`; operations only ever take
+/// the read side.
+pub(crate) struct State {
+    /// Packed KV words, `phys_buckets * 32` of them, bucket-major. A bucket
+    /// row is 256 B — the paper's two 128 B cache lines.
+    pub(crate) buckets: Box<[AtomicU64]>,
+    /// Per-bucket 32-bit free masks (bit i set ⇒ slot i free).
+    pub(crate) free_mask: Box<[AtomicU32]>,
+    /// Per-bucket eviction locks (0 = free). Only step 3 touches these.
+    pub(crate) locks: Box<[AtomicU32]>,
+    /// Linear-hashing round mask `2^m - 1`. Mutated only under the write
+    /// guard (resize), read under the read guard.
+    pub(crate) index_mask: u32,
+    /// Buckets of the current round already split.
+    pub(crate) split_ptr: u32,
+}
+
+impl State {
+    fn with_buckets(phys: usize, index_mask: u32, split_ptr: u32) -> Self {
+        State {
+            buckets: (0..phys * SLOTS_PER_BUCKET).map(|_| AtomicU64::new(EMPTY_WORD)).collect(),
+            free_mask: (0..phys).map(|_| AtomicU32::new(FULL_FREE_MASK)).collect(),
+            locks: (0..phys).map(|_| AtomicU32::new(0)).collect(),
+            index_mask,
+            split_ptr,
+        }
+    }
+
+    /// Logical bucket count `2^m + split_ptr`.
+    #[inline]
+    pub(crate) fn logical_buckets(&self) -> usize {
+        (self.index_mask as usize + 1) + self.split_ptr as usize
+    }
+
+    #[inline]
+    pub(crate) fn phys_buckets(&self) -> usize {
+        self.free_mask.len()
+    }
+
+    /// Slot index of `(bucket, lane)` in the flat word array.
+    #[inline(always)]
+    pub(crate) fn slot(&self, bucket: u32, lane: usize) -> usize {
+        bucket as usize * SLOTS_PER_BUCKET + lane
+    }
+}
+
+/// The native concurrent Hive hash table (paper §III–§IV).
+pub struct HiveTable {
+    pub(crate) state: RwLock<State>,
+    pub(crate) family: HashFamily,
+    pub(crate) cfg: HiveConfig,
+    pub(crate) stash: OverflowStash,
+    pub(crate) count: AtomicUsize,
+    /// Words flagged *pending* because both the table and the stash were
+    /// full (paper §IV-A step 4: "the operation is flagged as pending for
+    /// deferred reinsertion during the next resize epoch"). Rare path —
+    /// guarded by `pending_len` so the fast path never takes the lock.
+    pub(crate) pending: std::sync::Mutex<Vec<u64>>,
+    pub(crate) pending_len: AtomicUsize,
+    pub(crate) stats: OpStats,
+    /// Minimum round mask — the table never shrinks below its initial size.
+    pub(crate) min_index_mask: u32,
+}
+
+impl HiveTable {
+    /// Create a table from `cfg` (validated).
+    pub fn new(cfg: HiveConfig) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.layout == Layout::SplitSoa {
+            // The SoA ablation lives in `native::soa`; HiveTable is AoS.
+            return Err(HiveError::Config(
+                "HiveTable is the packed-AoS table; use native::soa::SoaTable for the ablation"
+                    .into(),
+            ));
+        }
+        let buckets = cfg.initial_buckets.next_power_of_two().max(4);
+        let index_mask = (buckets - 1) as u32;
+        let stash_cap =
+            ((buckets * SLOTS_PER_BUCKET) as f64 * cfg.stash_fraction).ceil().max(8.0) as usize;
+        Ok(HiveTable {
+            state: RwLock::new(State::with_buckets(buckets, index_mask, 0)),
+            family: HashFamily::new(cfg.hash_kinds.clone()),
+            stash: OverflowStash::new(stash_cap),
+            count: AtomicUsize::new(0),
+            pending: std::sync::Mutex::new(Vec::new()),
+            pending_len: AtomicUsize::new(0),
+            stats: OpStats::default(),
+            min_index_mask: index_mask,
+            cfg,
+        })
+    }
+
+    /// Convenience: table sized for `n` keys at `target_lf` load factor.
+    pub fn with_capacity(n: usize, target_lf: f64) -> Result<Self> {
+        Self::new(HiveConfig::for_capacity(n, target_lf))
+    }
+
+    /// Number of live entries (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// `true` if the table holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current logical bucket count `2^m + split_ptr`.
+    pub fn logical_buckets(&self) -> usize {
+        self.state.read().unwrap().logical_buckets()
+    }
+
+    /// Slot capacity = logical buckets × 32.
+    pub fn capacity(&self) -> usize {
+        self.logical_buckets() * SLOTS_PER_BUCKET
+    }
+
+    /// Load factor `len / capacity` (§IV-C's resize trigger input).
+    pub fn load_factor(&self) -> f64 {
+        self.len() as f64 / self.capacity() as f64
+    }
+
+    /// Snapshot of the operation counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Words parked past the stash (pending the next resize epoch).
+    pub fn pending_full(&self) -> usize {
+        self.pending_len.load(Ordering::Relaxed)
+    }
+
+    /// Park a word on the pending list (both table and stash full).
+    fn park_pending(&self, word: u64) {
+        self.pending.lock().unwrap().push(word);
+        self.pending_len.fetch_add(1, Ordering::Release);
+        self.stats.record_stash_full();
+    }
+
+    fn pending_lookup(&self, key: u32) -> Option<u32> {
+        if self.pending_len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let guard = self.pending.lock().unwrap();
+        guard.iter().rev().find(|&&w| unpack_key(w) == key).map(|&w| unpack_value(w))
+    }
+
+    fn pending_replace(&self, key: u32, word: u64) -> bool {
+        if self.pending_len.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        let mut guard = self.pending.lock().unwrap();
+        for w in guard.iter_mut() {
+            if unpack_key(*w) == key {
+                *w = word;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn pending_delete(&self, key: u32) -> bool {
+        if self.pending_len.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        let mut guard = self.pending.lock().unwrap();
+        if let Some(pos) = guard.iter().position(|&w| unpack_key(w) == key) {
+            guard.remove(pos);
+            self.pending_len.fetch_sub(1, Ordering::Release);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The configured hash family.
+    pub fn family(&self) -> &HashFamily {
+        &self.family
+    }
+
+    /// The configuration this table was built with.
+    pub fn config(&self) -> &HiveConfig {
+        &self.cfg
+    }
+
+    // ------------------------------------------------------------------
+    // WCME probe helpers
+    // ------------------------------------------------------------------
+
+    /// WCME match: scan the 32 slots of `bucket` for `key`; return the
+    /// matching lane and its cached word. The scan is the CPU analogue of
+    /// the warp's coalesced 32-lane load + ballot + ffs.
+    ///
+    /// Perf (§Perf log): slots are scanned with `Relaxed` loads — one
+    /// `Acquire` fence on a hit establishes the publish ordering — which
+    /// removes 32 acquire barriers per probe on weakly-ordered targets and
+    /// lets the compiler keep the loop tight on x86.
+    /// Perf (§Perf log): `Relaxed` loads + one `Acquire` fence on a hit.
+    /// Used by lookup/delete, whose operating point is a well-filled table
+    /// where a mask pre-load is pure overhead.
+    #[inline]
+    fn wcme_match(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
+        let base = bucket as usize * SLOTS_PER_BUCKET;
+        let key64 = key as u64;
+        for lane in 0..SLOTS_PER_BUCKET {
+            let w = state.buckets[base + lane].load(Ordering::Relaxed);
+            if w & 0xFFFF_FFFF == key64 {
+                std::sync::atomic::fence(Ordering::Acquire);
+                return Some((lane, w));
+            }
+        }
+        None
+    }
+
+    /// Mask-guided WCME variant for the insert replace-check (§Perf log):
+    /// one free-mask load selects the occupied lanes so only those are
+    /// compared — during a fill most buckets are part-empty, cutting the
+    /// replace probe sharply (insert +25 % measured). A lane whose claim
+    /// is mid-publish reads EMPTY and is skipped; a completed insert's
+    /// `fetch_and` happens-before any later mask load, so committed
+    /// entries are always scanned.
+    #[inline]
+    fn wcme_match_masked(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
+        let base = bucket as usize * SLOTS_PER_BUCKET;
+        let key64 = key as u64;
+        let mut occupied =
+            !(state.free_mask[bucket as usize].load(Ordering::Acquire)) & FULL_FREE_MASK;
+        while occupied != 0 {
+            let lane = occupied.trailing_zeros() as usize;
+            occupied &= occupied - 1;
+            let w = state.buckets[base + lane].load(Ordering::Relaxed);
+            if w & 0xFFFF_FFFF == key64 {
+                std::sync::atomic::fence(Ordering::Acquire);
+                return Some((lane, w));
+            }
+        }
+        None
+    }
+
+    // ------------------------------------------------------------------
+    // Public operations
+    // ------------------------------------------------------------------
+
+    /// Search(k): value of `key`, or `None` (paper §III-D).
+    pub fn lookup(&self, key: u32) -> Option<u32> {
+        if key == EMPTY_KEY {
+            return None;
+        }
+        let state = self.state.read().unwrap();
+        let (mask, sp) = (state.index_mask, state.split_ptr);
+        for i in 0..self.family.d() {
+            let b = self.family.bucket(i, key, mask, sp);
+            if let Some((_, w)) = Self::wcme_match(&state, b, key) {
+                self.stats.record_lookup(true);
+                return Some(unpack_value(w));
+            }
+        }
+        // Overflow stash participates in lookups for correctness (§IV-A).
+        if !self.stash.is_quiescent() {
+            if let Some(v) = self.stash.lookup(key) {
+                self.stats.record_lookup(true);
+                return Some(v);
+            }
+        }
+        if let Some(v) = self.pending_lookup(key) {
+            self.stats.record_lookup(true);
+            return Some(v);
+        }
+        self.stats.record_lookup(false);
+        None
+    }
+
+    /// Delete(k): remove `key`, returning `true` if it was present
+    /// (Algorithm 4: winner CAS to EMPTY, then publish the free bit).
+    pub fn delete(&self, key: u32) -> bool {
+        if key == EMPTY_KEY {
+            return false;
+        }
+        let state = self.state.read().unwrap();
+        let (mask, sp) = (state.index_mask, state.split_ptr);
+        for i in 0..self.family.d() {
+            let b = self.family.bucket(i, key, mask, sp);
+            // Retry the CAS a bounded number of times: a failed CAS means a
+            // concurrent replace updated the value — rescan and retry.
+            for _attempt in 0..4 {
+                match Self::wcme_match(&state, b, key) {
+                    None => break,
+                    Some((lane, w)) => {
+                        let slot = state.slot(b, lane);
+                        if state.buckets[slot]
+                            .compare_exchange(w, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                        {
+                            // Publish the vacancy (Algorithm 4 line 14).
+                            state.free_mask[b as usize]
+                                .fetch_or(1u32 << lane, Ordering::AcqRel);
+                            self.count.fetch_sub(1, Ordering::Relaxed);
+                            self.stats.record_delete(true);
+                            return true;
+                        }
+                        self.stats.record_cas_retry();
+                    }
+                }
+            }
+        }
+        if !self.stash.is_quiescent() && self.stash.delete(key) {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            self.stats.record_delete(true);
+            return true;
+        }
+        if self.pending_delete(key) {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            self.stats.record_delete(true);
+            return true;
+        }
+        self.stats.record_delete(false);
+        false
+    }
+
+    /// Insert(⟨k,v⟩) / Replace(⟨k,v⟩) — the four-step strategy (§IV-A).
+    pub fn insert(&self, key: u32, value: u32) -> Result<InsertOutcome> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let state = self.state.read().unwrap();
+        let outcome = self.insert_locked(&state, key, value)?;
+        match outcome {
+            InsertOutcome::Replaced => self.stats.record_insert(Step::Replace),
+            InsertOutcome::Inserted => self.stats.record_insert(Step::Claim),
+            InsertOutcome::Evicted => self.stats.record_insert(Step::Evict),
+            InsertOutcome::Stashed => self.stats.record_insert(Step::Stash),
+        }
+        Ok(outcome)
+    }
+
+    /// Insert body, called with the phase read guard held.
+    fn insert_locked(&self, state: &State, key: u32, value: u32) -> Result<InsertOutcome> {
+        let (mask, sp) = (state.index_mask, state.split_ptr);
+        let d = self.family.d();
+        let new_word = pack(key, value);
+
+        // Candidate buckets {h_1(k) .. h_d(k)}.
+        let mut cands = [0u32; 4];
+        for i in 0..d {
+            cands[i] = self.family.bucket(i, key, mask, sp);
+        }
+
+        // ---- Step 1: Replace (Algorithm 1) ----
+        for &b in &cands[..d] {
+            for _attempt in 0..4 {
+                match Self::wcme_match_masked(state, b, key) {
+                    None => break,
+                    Some((lane, old)) => {
+                        let slot = state.slot(b, lane);
+                        if state.buckets[slot]
+                            .compare_exchange(old, new_word, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                        {
+                            return Ok(InsertOutcome::Replaced);
+                        }
+                        self.stats.record_cas_retry();
+                    }
+                }
+            }
+        }
+        // Key may be parked in the stash or pending list; replace it there
+        // so the eventual drain does not resurrect a stale value.
+        if !self.stash.is_quiescent() && self.stash.replace(key, new_word) {
+            return Ok(InsertOutcome::Replaced);
+        }
+        if self.pending_replace(key, new_word) {
+            return Ok(InsertOutcome::Replaced);
+        }
+
+        // ---- Step 2: Claim-then-commit (Algorithm 2 / WABC) ----
+        // Bucketed two-choice: attempt the candidate with the most free
+        // slots first (§V: "bucketed two-choice placement policy").
+        let mut order = [0usize; 4];
+        for (i, o) in order.iter_mut().enumerate().take(d) {
+            *o = i;
+        }
+        if d == 2 {
+            let f0 = state.free_mask[cands[0] as usize].load(Ordering::Relaxed).count_ones();
+            let f1 = state.free_mask[cands[1] as usize].load(Ordering::Relaxed).count_ones();
+            if f1 > f0 {
+                order.swap(0, 1);
+            }
+        }
+        for &i in &order[..d] {
+            if let Some(_lane) = self.wabc_claim_commit(state, cands[i], new_word) {
+                self.count.fetch_add(1, Ordering::Relaxed);
+                return Ok(InsertOutcome::Inserted);
+            }
+        }
+
+        // ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
+        match self.cuckoo_evict_insert(state, cands[0], new_word) {
+            Some(()) => {
+                self.count.fetch_add(1, Ordering::Relaxed);
+                Ok(InsertOutcome::Evicted)
+            }
+            None => {
+                // ---- Step 4: overflow stash ----
+                // Stash full ⇒ the word is *flagged pending* for the next
+                // resize epoch (§IV-A) — never dropped, never an error.
+                if !self.stash.push(new_word) {
+                    self.park_pending(new_word);
+                }
+                self.count.fetch_add(1, Ordering::Relaxed);
+                Ok(InsertOutcome::Stashed)
+            }
+        }
+    }
+
+    /// WABC claim + immediate commit (Algorithm 2). Returns the claimed
+    /// lane on success, `None` if the bucket is full.
+    #[inline]
+    fn wabc_claim_commit(&self, state: &State, bucket: u32, word: u64) -> Option<usize> {
+        let fm = &state.free_mask[bucket as usize];
+        loop {
+            // Lane 0's relaxed load + broadcast.
+            let mask = fm.load(Ordering::Relaxed) & FULL_FREE_MASK;
+            if mask == 0 {
+                return None; // bucket full — early warp exit
+            }
+            // Winner = lowest free lane (ballot + ffs).
+            let lane = mask.trailing_zeros() as usize;
+            let bit = 1u32 << lane;
+            // One atomic RMW claims the slot.
+            let old = fm.fetch_and(!bit, Ordering::AcqRel);
+            if old & bit != 0 {
+                // Ownership confirmed: publish the packed entry.
+                state.buckets[state.slot(bucket, lane)].store(word, Ordering::Release);
+                return Some(lane);
+            }
+            // Lost the race — the bit was already claimed; *no restore*
+            // (see module docs) — re-read the mask and retry.
+            self.stats.record_cas_retry();
+        }
+    }
+
+    /// Bounded cuckoo eviction (Algorithm 3). Returns `Some(())` once the
+    /// newcomer (and every displaced victim) is placed, `None` if the
+    /// eviction bound is exhausted (→ stash).
+    fn cuckoo_evict_insert(&self, state: &State, start_bucket: u32, start_word: u64) -> Option<()> {
+        let mut word = start_word;
+        let mut bucket = start_bucket;
+        for _kick in 0..self.cfg.max_evictions {
+            self.stats.record_evict_round();
+            // Lock-free fast path: a slot may have freed up.
+            if self.wabc_claim_commit(state, bucket, word).is_some() {
+                return Some(());
+            }
+            // Short critical section on this bucket only (lane 0's lock).
+            let lock = &state.locks[bucket as usize];
+            if lock.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
+                // Someone else is evicting here; spin briefly then retry
+                // the round (bounded overall by max_evictions).
+                std::hint::spin_loop();
+                continue;
+            }
+            self.stats.record_lock();
+
+            let outcome = (|| {
+                let fm = &state.free_mask[bucket as usize];
+                let mask = fm.load(Ordering::Relaxed) & FULL_FREE_MASK;
+                if mask != 0 {
+                    // (i) a free bit exists: claim it under the lock.
+                    let lane = mask.trailing_zeros() as usize;
+                    let bit = 1u32 << lane;
+                    let old = fm.fetch_and(!bit, Ordering::AcqRel);
+                    if old & bit != 0 {
+                        state.buckets[state.slot(bucket, lane)].store(word, Ordering::Release);
+                        return EvictOutcome::Placed;
+                    }
+                    return EvictOutcome::Retry;
+                }
+                // (ii) displace the first occupied slot.
+                let occ = !mask; // all occupied here
+                let lane = occ.trailing_zeros() as usize;
+                let slot = state.slot(bucket, lane);
+                let victim = state.buckets[slot].load(Ordering::Acquire);
+                if is_empty(victim) {
+                    // Concurrent delete cleared it between mask read and
+                    // now; its free bit will appear — retry the round.
+                    return EvictOutcome::Retry;
+                }
+                // Swap newcomer in; CAS so a racing replace/delete of the
+                // victim is detected rather than silently overwritten.
+                if state.buckets[slot]
+                    .compare_exchange(victim, word, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    EvictOutcome::Evicted(victim)
+                } else {
+                    EvictOutcome::Retry
+                }
+            })();
+
+            lock.store(0, Ordering::Release);
+
+            match outcome {
+                EvictOutcome::Placed => return Some(()),
+                EvictOutcome::Retry => continue,
+                EvictOutcome::Evicted(victim) => {
+                    // Re-route the victim to its alternate bucket.
+                    let vkey = unpack_key(victim);
+                    bucket = self.alt_bucket(state, vkey, bucket);
+                    word = victim;
+                }
+            }
+        }
+        // Bound exceeded. If a victim is in hand (word != start_word) the
+        // newcomer was already placed and the *victim* needs the fallback;
+        // it must never be dropped — stash it, or park it pending.
+        if word != start_word {
+            if !self.stash.push(word) {
+                self.park_pending(word);
+            }
+            return Some(());
+        }
+        None
+    }
+
+    /// Alternate candidate bucket for `key` given it currently sits in (or
+    /// targets) `bucket` (Algorithm 3's `AltBucket`).
+    #[inline]
+    fn alt_bucket(&self, state: &State, key: u32, bucket: u32) -> u32 {
+        let (mask, sp) = (state.index_mask, state.split_ptr);
+        let d = self.family.d();
+        // First candidate that differs from the current bucket; fall back
+        // to rotating through the family.
+        for i in 0..d {
+            let b = self.family.bucket(i, key, mask, sp);
+            if b != bucket {
+                return b;
+            }
+        }
+        self.family.bucket(0, key, mask, sp)
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection used by resize, tests and the coordinator
+    // ------------------------------------------------------------------
+
+    /// Snapshot all live `(key, value)` pairs (table + stash). Takes the
+    /// read guard; concurrent mutations may or may not be observed.
+    pub fn entries(&self) -> Vec<(u32, u32)> {
+        let state = self.state.read().unwrap();
+        let logical = state.logical_buckets();
+        let mut out = Vec::with_capacity(self.len());
+        for b in 0..logical {
+            for lane in 0..SLOTS_PER_BUCKET {
+                let w = state.buckets[b * SLOTS_PER_BUCKET + lane].load(Ordering::Acquire);
+                if !is_empty(w) {
+                    out.push((unpack_key(w), unpack_value(w)));
+                }
+            }
+        }
+        if !self.stash.is_quiescent() {
+            for w in self.stash_words() {
+                out.push((unpack_key(w), unpack_value(w)));
+            }
+        }
+        if self.pending_len.load(Ordering::Acquire) > 0 {
+            for &w in self.pending.lock().unwrap().iter() {
+                out.push((unpack_key(w), unpack_value(w)));
+            }
+        }
+        out
+    }
+
+    /// Live stash words (racy snapshot, diagnostics only).
+    pub(crate) fn stash_words(&self) -> Vec<u64> {
+        self.stash.peek_window()
+    }
+
+    /// Occupancy of each logical bucket (used by CSR-style diagnostics and
+    /// resize decisions in tests).
+    pub fn bucket_loads(&self) -> Vec<u32> {
+        let state = self.state.read().unwrap();
+        (0..state.logical_buckets())
+            .map(|b| {
+                SLOTS_PER_BUCKET as u32
+                    - (state.free_mask[b].load(Ordering::Relaxed) & FULL_FREE_MASK).count_ones()
+            })
+            .collect()
+    }
+}
+
+enum EvictOutcome {
+    Placed,
+    Retry,
+    Evicted(u64),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashKind;
+    use std::sync::Arc;
+
+    fn small_table(buckets: usize) -> HiveTable {
+        HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap()
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip() {
+        let t = small_table(16);
+        for k in 0..500u32 {
+            assert!(matches!(
+                t.insert(k, k.wrapping_mul(3)).unwrap(),
+                InsertOutcome::Inserted | InsertOutcome::Evicted | InsertOutcome::Stashed
+            ));
+        }
+        assert_eq!(t.len(), 500);
+        for k in 0..500u32 {
+            assert_eq!(t.lookup(k), Some(k.wrapping_mul(3)), "key {k}");
+        }
+        assert_eq!(t.lookup(10_000), None);
+    }
+
+    #[test]
+    fn replace_updates_in_place() {
+        let t = small_table(16);
+        assert_eq!(t.insert(5, 50).unwrap(), InsertOutcome::Inserted);
+        assert_eq!(t.insert(5, 51).unwrap(), InsertOutcome::Replaced);
+        assert_eq!(t.len(), 1, "replace must not grow the table");
+        assert_eq!(t.lookup(5), Some(51));
+    }
+
+    #[test]
+    fn delete_frees_slots_for_reuse() {
+        let t = small_table(4);
+        for k in 0..100u32 {
+            t.insert(k, k).unwrap();
+        }
+        for k in 0..100u32 {
+            assert!(t.delete(k), "delete {k}");
+        }
+        assert_eq!(t.len(), 0);
+        for k in 0..100u32 {
+            assert_eq!(t.lookup(k), None);
+        }
+        // slots are immediately reusable (paper: "immediate slot reuse")
+        for k in 200..300u32 {
+            t.insert(k, k).unwrap();
+        }
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn rejects_sentinel_key() {
+        let t = small_table(4);
+        assert!(matches!(t.insert(EMPTY_KEY, 1), Err(HiveError::InvalidKey(_))));
+        assert_eq!(t.lookup(EMPTY_KEY), None);
+        assert!(!t.delete(EMPTY_KEY));
+    }
+
+    #[test]
+    fn fills_to_high_load_factor() {
+        // 8 buckets * 32 slots = 256 capacity; fill to 95%.
+        let t = small_table(8);
+        let n = (256.0 * 0.95) as u32;
+        let mut stashed = 0;
+        for k in 1..=n {
+            match t.insert(k, k).unwrap() {
+                InsertOutcome::Stashed => stashed += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(t.len(), n as usize);
+        assert!(t.load_factor() > 0.94, "lf {}", t.load_factor());
+        for k in 1..=n {
+            assert_eq!(t.lookup(k), Some(k), "key {k} lost at high lf");
+        }
+        // stash should absorb only a small minority
+        assert!(stashed < n / 10, "too many stashed: {stashed}");
+    }
+
+    #[test]
+    fn eviction_path_executes() {
+        let t = HiveTable::new(
+            HiveConfig::default().with_buckets(4).with_max_evictions(8),
+        )
+        .unwrap();
+        // Craft keys whose *both* candidate buckets fall in {0, 1}: their
+        // combined capacity is 64 slots, so the 66th insert must evict (and
+        // eventually stash, since victims re-route within {0, 1}).
+        let fam = t.family().clone();
+        let keys: Vec<u32> = (1..200_000u32)
+            .filter(|&k| {
+                let b0 = fam.bucket(0, k, 3, 0);
+                let b1 = fam.bucket(1, k, 3, 0);
+                b0 <= 1 && b1 <= 1
+            })
+            .take(66)
+            .collect();
+        assert_eq!(keys.len(), 66);
+        for &k in &keys {
+            t.insert(k, k).unwrap();
+        }
+        let snap = t.stats();
+        assert!(
+            snap.evict_rounds > 0 || snap.stash_pushes > 0,
+            "eviction path never ran: {snap:?}"
+        );
+        for &k in &keys {
+            assert_eq!(t.lookup(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn lock_rate_is_rare_at_moderate_load() {
+        // §III-B: the eviction lock is used in <0.85% of cases below ~0.85
+        // load factor.
+        let t = small_table(64);
+        let n = (64 * SLOTS_PER_BUCKET) as u32 * 80 / 100;
+        for k in 1..=n {
+            t.insert(k, k).unwrap();
+        }
+        for k in 1..=n {
+            t.lookup(k);
+        }
+        let rate = t.stats().lock_rate();
+        assert!(rate < 0.0085, "lock rate {rate} exceeds paper bound");
+    }
+
+    #[test]
+    fn concurrent_inserts_then_lookups() {
+        let t = Arc::new(small_table(512));
+        let per = 2000u32;
+        let threads: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let k = tid * per + i + 1;
+                        t.insert(k, k ^ 0xABCD).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(t.len(), 8 * per as usize);
+        for k in 1..=8 * per {
+            assert_eq!(t.lookup(k), Some(k ^ 0xABCD), "key {k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_workload_is_consistent() {
+        // Disjoint key ranges per thread: each thread's view must be
+        // perfectly consistent regardless of interleaving.
+        let t = Arc::new(small_table(256));
+        let threads: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    let base = tid * 10_000 + 1;
+                    for i in 0..1000 {
+                        let k = base + i;
+                        t.insert(k, k).unwrap();
+                        assert_eq!(t.lookup(k), Some(k));
+                        if i % 3 == 0 {
+                            assert!(t.delete(k));
+                            assert_eq!(t.lookup(k), None);
+                        } else if i % 3 == 1 {
+                            t.insert(k, k + 1).unwrap();
+                            assert_eq!(t.lookup(k), Some(k + 1));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_same_key_replaces_converge() {
+        let t = Arc::new(small_table(16));
+        t.insert(42, 0).unwrap();
+        let threads: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        t.insert(42, tid * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        // exactly one copy of the key, value is one of the written values
+        assert_eq!(t.len(), 1);
+        let v = t.lookup(42).unwrap();
+        assert!(v < 8000);
+        assert!(t.delete(42));
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn three_hash_family_works() {
+        let cfg = HiveConfig::default().with_buckets(8).with_hashes(vec![
+            HashKind::BitHash1,
+            HashKind::BitHash2,
+            HashKind::City32,
+        ]);
+        let t = HiveTable::new(cfg).unwrap();
+        for k in 1..=200u32 {
+            t.insert(k, k * 7).unwrap();
+        }
+        for k in 1..=200u32 {
+            assert_eq!(t.lookup(k), Some(k * 7));
+        }
+    }
+
+    #[test]
+    fn soa_layout_rejected_by_aos_table() {
+        let cfg = HiveConfig::default().with_layout(Layout::SplitSoa);
+        assert!(HiveTable::new(cfg).is_err());
+    }
+}

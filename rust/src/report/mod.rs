@@ -1,0 +1,186 @@
+//! Benchmark reporting: aligned tables, CSV emission, MOPS arithmetic and
+//! paper-comparison rows shared by `cargo bench` harnesses and the CLI.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Million operations per second for `ops` completed in `dur`.
+pub fn mops(ops: usize, dur: Duration) -> f64 {
+    if dur.as_secs_f64() == 0.0 {
+        return f64::INFINITY;
+    }
+    ops as f64 / dur.as_secs_f64() / 1e6
+}
+
+/// A simple fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append one row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line: String = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}  "))
+            .collect();
+        let _ = writeln!(out, "{}", line.trim_end());
+        let _ = writeln!(out, "{}", "-".repeat(line.trim_end().len()));
+        for row in &self.rows {
+            let line: String =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}  ")).collect();
+            let _ = writeln!(out, "{}", line.trim_end());
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and optionally save CSV next to the bench outputs.
+    pub fn emit(&self, csv_path: Option<&str>) {
+        print!("{}", self.render());
+        if let Some(path) = csv_path {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(path, self.to_csv()) {
+                eprintln!("warn: could not write {path}: {e}");
+            } else {
+                println!("(csv saved to {path})");
+            }
+        }
+    }
+}
+
+/// A paper-vs-measured comparison row for EXPERIMENTS.md.
+pub fn compare_row(what: &str, paper: &str, measured: &str, holds: bool) -> String {
+    format!(
+        "| {what} | {paper} | {measured} | {} |",
+        if holds { "✓" } else { "✗" }
+    )
+}
+
+/// Drive `ops` through a [`ConcurrentMap`](crate::baselines::ConcurrentMap)
+/// from `threads` OS threads (the benchmark's "warps"), returning the wall
+/// time. Ops are sharded round-robin so every thread gets an even mix.
+pub fn drive_parallel(
+    map: std::sync::Arc<dyn crate::baselines::ConcurrentMap>,
+    ops: &[crate::workload::Op],
+    threads: usize,
+) -> Duration {
+    use crate::workload::Op;
+    let shards: Vec<Vec<Op>> = (0..threads)
+        .map(|t| ops.iter().skip(t).step_by(threads).copied().collect())
+        .collect();
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for shard in &shards {
+            let map = std::sync::Arc::clone(&map);
+            s.spawn(move || {
+                for op in shard {
+                    match *op {
+                        Op::Insert { key, value } => {
+                            let _ = map.insert(key, value);
+                        }
+                        Op::Lookup { key } => {
+                            let _ = map.lookup(key);
+                        }
+                        Op::Delete { key } => {
+                            let _ = map.delete(key);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    start.elapsed()
+}
+
+/// Benchmark scale from the environment: `HIVE_BENCH_SCALE` ∈
+/// {smoke, small, paper}; defaults to `small`. Returns the max log2 key
+/// count per figure (the paper sweeps 2^20..2^25 on a 4090; CPU defaults
+/// are scaled down but the *shape* comparisons are preserved).
+pub fn bench_max_pow(default_small: u32, paper: u32) -> u32 {
+    match std::env::var("HIVE_BENCH_SCALE").as_deref() {
+        Ok("paper") => paper,
+        Ok("smoke") => default_small.saturating_sub(3).max(14),
+        _ => default_small,
+    }
+}
+
+/// Bench thread count: `HIVE_BENCH_THREADS` or available parallelism.
+pub fn bench_threads() -> usize {
+    std::env::var("HIVE_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mops_math() {
+        assert!((mops(1_000_000, Duration::from_secs(1)) - 1.0).abs() < 1e-9);
+        assert!((mops(3_000_000, Duration::from_millis(500)) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["keys", "MOPS"]);
+        t.row(vec!["1048576".into(), "123.4".into()]);
+        t.row(vec!["64".into(), "9.1".into()]);
+        let s = t.render();
+        assert!(s.contains("=== demo ==="));
+        assert!(s.contains("keys"));
+        assert!(s.contains("1048576"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("keys,MOPS"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,56 @@
+//! Literal marshalling helpers: Rust slices ⇄ XLA literals for the
+//! shapes the Hive artifacts use (u64 bucket arrays, u32 vectors).
+
+use crate::core::error::{HiveError, Result};
+
+fn rt(e: xla::Error) -> HiveError {
+    HiveError::Runtime(e.to_string())
+}
+
+/// Build a `u64[dims...]` literal from host data.
+pub fn u64_literal(data: &[u64], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U64, dims, bytes)
+        .map_err(rt)
+}
+
+/// Build a `u32[dims...]` literal from host data.
+pub fn u32_literal(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U32, dims, bytes)
+        .map_err(rt)
+}
+
+/// Extract a `Vec<u64>` from a literal.
+pub fn to_u64s(lit: &xla::Literal) -> Result<Vec<u64>> {
+    lit.to_vec::<u64>().map_err(rt)
+}
+
+/// Extract a `Vec<u32>` from a literal.
+pub fn to_u32s(lit: &xla::Literal) -> Result<Vec<u32>> {
+    lit.to_vec::<u32>().map_err(rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip() {
+        let data: Vec<u64> = (0..64).map(|i| u64::MAX - i).collect();
+        let lit = u64_literal(&data, &[8, 8]).unwrap();
+        assert_eq!(to_u64s(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 64);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let data: Vec<u32> = vec![1, 2, 3, u32::MAX];
+        let lit = u32_literal(&data, &[4]).unwrap();
+        assert_eq!(to_u32s(&lit).unwrap(), data);
+    }
+}

@@ -1,0 +1,205 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
+//! paper-system's request path. Python never runs here — the artifacts in
+//! `artifacts/` are produced once by `make artifacts`
+//! (`python/compile/aot.py`) and this module is self-contained after that.
+//!
+//! One executable exists per `(op, capacity_class)` (DESIGN.md §7),
+//! compiled lazily on first use and cached — the serving-framework
+//! "shape-specialized executable cache" idiom.
+
+pub mod literal;
+pub mod table;
+
+use crate::core::error::{HiveError, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+pub use table::XlaTable;
+
+/// One line of `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Operation name: lookup | insert | delete | split | merge.
+    pub op: String,
+    /// Physical bucket count (capacity class).
+    pub n_buckets: usize,
+    /// Operation batch size B.
+    pub batch: usize,
+    /// Resize batch K.
+    pub k_batch: usize,
+    /// Eviction bound baked into the insert program.
+    pub max_evictions: usize,
+    /// Slots per bucket (32).
+    pub slots: usize,
+    /// HLO text filename within the artifacts dir.
+    pub file: String,
+}
+
+impl ArtifactSpec {
+    fn parse(line: &str) -> Result<ArtifactSpec> {
+        let mut map = HashMap::new();
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| HiveError::Runtime(format!("bad manifest token: {tok}")))?;
+            map.insert(k, v);
+        }
+        let get = |k: &str| -> Result<&str> {
+            map.get(k).copied().ok_or_else(|| HiveError::Runtime(format!("manifest missing {k}")))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse().map_err(|_| HiveError::Runtime(format!("bad manifest value for {k}")))
+        };
+        Ok(ArtifactSpec {
+            op: get("op")?.to_string(),
+            n_buckets: num("n_buckets")?,
+            batch: num("batch")?,
+            k_batch: num("k_batch")?,
+            max_evictions: num("max_evictions")?,
+            slots: num("slots")?,
+            file: get("file")?.to_string(),
+        })
+    }
+}
+
+/// PJRT client + artifact manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactSpec>,
+    cache: Mutex<HashMap<(String, usize), Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (parses `manifest.txt`) and create the
+    /// PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            HiveError::Runtime(format!(
+                "cannot read {}/manifest.txt (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let manifest = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(ArtifactSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| HiveError::Runtime(format!("PJRT client: {e}")))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open `HIVE_ARTIFACTS` or the nearest `artifacts/` up the tree.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Self::default_dir())
+    }
+
+    /// `HIVE_ARTIFACTS` override or the nearest ancestor `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("HIVE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// All capacity classes present in the manifest, ascending.
+    pub fn classes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.manifest.iter().map(|a| a.n_buckets).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Spec for `(op, class)`.
+    pub fn spec(&self, op: &str, n_buckets: usize) -> Result<&ArtifactSpec> {
+        self.manifest
+            .iter()
+            .find(|a| a.op == op && a.n_buckets == n_buckets)
+            .ok_or_else(|| HiveError::Runtime(format!("no artifact for {op}@{n_buckets}")))
+    }
+
+    /// The PJRT client (for building input buffers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile (cached) the executable for `(op, class)`.
+    pub fn executable(&self, op: &str, n_buckets: usize) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&(op.to_string(), n_buckets)) {
+            return Ok(Arc::clone(exe));
+        }
+        let spec = self.spec(op, n_buckets)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| HiveError::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| HiveError::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| HiveError::Runtime(format!("compile {}: {e}", spec.file)))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert((op.to_string(), n_buckets), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute `(op, class)` on literal inputs; returns the tuple leaves.
+    pub fn run(
+        &self,
+        op: &str,
+        n_buckets: usize,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(op, n_buckets)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| HiveError::Runtime(format!("execute {op}@{n_buckets}: {e}")))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| HiveError::Runtime(format!("fetch result: {e}")))?;
+        tuple.to_tuple().map_err(|e| HiveError::Runtime(format!("untuple: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let a = ArtifactSpec::parse(
+            "op=insert n_buckets=4096 batch=4096 k_batch=256 max_evictions=16 slots=32 file=insert_4096.hlo.txt",
+        )
+        .unwrap();
+        assert_eq!(a.op, "insert");
+        assert_eq!(a.n_buckets, 4096);
+        assert_eq!(a.batch, 4096);
+        assert_eq!(a.file, "insert_4096.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(ArtifactSpec::parse("op insert").is_err());
+        assert!(ArtifactSpec::parse(
+            "op=insert n_buckets=banana batch=1 k_batch=1 max_evictions=1 slots=32 file=x"
+        )
+        .is_err());
+        assert!(ArtifactSpec::parse("op=insert").is_err());
+    }
+}

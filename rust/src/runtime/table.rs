@@ -1,0 +1,506 @@
+//! `XlaTable` — the Hive table whose operations execute as AOT-compiled
+//! XLA programs (the L1/L2 path), orchestrated from Rust.
+//!
+//! The table state (`buckets u64[N,32]`, round metadata) lives on the Rust
+//! side between calls; each bulk operation marshals the state through the
+//! `(op, capacity_class)` executable. The overflow stash is held here on
+//! the coordinator side — the insert artifact returns homeless packed
+//! words, exactly the §IV-A step-4 hand-off — and is re-injected after
+//! every resize epoch.
+//!
+//! Growing past the physical class migrates the state to the next class's
+//! executables (pad the bucket array; addressing is unchanged because
+//! linear hashing only appends buckets).
+
+use crate::core::error::Result;
+use crate::core::packed::{pack, unpack, unpack_key, EMPTY_KEY, EMPTY_WORD};
+use crate::core::SLOTS_PER_BUCKET;
+use crate::runtime::{literal, Runtime};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Insert-status codes produced by the insert artifact (must match
+/// `python/compile/kernels/common.py`).
+pub mod status {
+    /// Key existed; value replaced.
+    pub const REPLACED: u32 = 0;
+    /// Claimed a free slot.
+    pub const CLAIMED: u32 = 1;
+    /// Placed via cuckoo eviction.
+    pub const EVICTED: u32 = 2;
+    /// Handed back as overflow (stashed by the coordinator).
+    pub const OVERFLOW: u32 = 3;
+    /// Padded batch slot.
+    pub const SKIPPED: u32 = 4;
+}
+
+/// Aggregate outcome of one bulk insert.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct InsertReport {
+    /// Keys newly inserted (claimed or evicted path).
+    pub inserted: usize,
+    /// Keys whose value was replaced.
+    pub replaced: usize,
+    /// Keys that overflowed into the coordinator stash.
+    pub stashed: usize,
+}
+
+/// The XLA-backed Hive table.
+pub struct XlaTable {
+    rt: Arc<Runtime>,
+    /// Host copy of the bucket array (device round-trips per call; see
+    /// DESIGN.md §8 for the measured cost).
+    buckets: Vec<u64>,
+    /// Physical capacity class (power of two).
+    class: usize,
+    /// Linear-hashing round state.
+    index_mask: u32,
+    split_ptr: u32,
+    /// Batch size of the artifacts for this class.
+    batch: usize,
+    k_batch: usize,
+    /// Live entries (buckets + stash).
+    count: usize,
+    /// Coordinator-side overflow stash (packed words).
+    stash: VecDeque<u64>,
+    stash_cap: usize,
+    /// Resize thresholds (paper: 0.9 / 0.25).
+    pub grow_threshold: f64,
+    pub shrink_threshold: f64,
+    min_index_mask: u32,
+}
+
+impl XlaTable {
+    /// New empty table at capacity `class` (must exist in the manifest).
+    /// The initial round addresses the full class (`mask = class - 1`).
+    pub fn new(rt: Arc<Runtime>, class: usize) -> Result<Self> {
+        let spec = rt.spec("insert", class)?.clone();
+        Ok(XlaTable {
+            rt,
+            buckets: vec![EMPTY_WORD; class * SLOTS_PER_BUCKET],
+            class,
+            index_mask: (class - 1) as u32,
+            split_ptr: 0,
+            batch: spec.batch,
+            k_batch: spec.k_batch,
+            count: 0,
+            stash: VecDeque::new(),
+            stash_cap: (class * SLOTS_PER_BUCKET / 64).max(64),
+            grow_threshold: 0.90,
+            shrink_threshold: 0.25,
+            min_index_mask: (class - 1) as u32,
+        })
+    }
+
+    /// New table starting at a smaller addressable round within `class`
+    /// (leaves room to grow by splitting before a class migration).
+    pub fn with_initial_buckets(rt: Arc<Runtime>, class: usize, logical: usize) -> Result<Self> {
+        let logical = logical.next_power_of_two().max(4).min(class);
+        let mut t = Self::new(rt, class)?;
+        t.index_mask = (logical - 1) as u32;
+        t.min_index_mask = t.index_mask;
+        t.split_ptr = 0;
+        Ok(t)
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// `true` when empty.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Logical bucket count `2^m + split_ptr`.
+    pub fn logical_buckets(&self) -> usize {
+        (self.index_mask as usize + 1) + self.split_ptr as usize
+    }
+
+    /// Load factor over logical slots.
+    pub fn load_factor(&self) -> f64 {
+        self.count as f64 / (self.logical_buckets() * SLOTS_PER_BUCKET) as f64
+    }
+
+    /// Current capacity class.
+    pub fn class(&self) -> usize {
+        self.class
+    }
+
+    /// Artifact batch size (callers chunk to this).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Entries currently parked in the coordinator stash.
+    pub fn stash_len(&self) -> usize {
+        self.stash.len()
+    }
+
+    fn meta_literal(&self) -> Result<xla::Literal> {
+        literal::u32_literal(&[self.index_mask, self.split_ptr, 0, 0], &[4])
+    }
+
+    fn buckets_literal(&self) -> Result<xla::Literal> {
+        literal::u64_literal(&self.buckets, &[self.class, SLOTS_PER_BUCKET])
+    }
+
+    fn pad_batch(&self, keys: &[u32]) -> Vec<u32> {
+        let mut v = keys.to_vec();
+        v.resize(self.batch, EMPTY_KEY);
+        v
+    }
+
+    // ------------------------------------------------------------------
+    // Bulk operations
+    // ------------------------------------------------------------------
+
+    /// Bulk lookup. `keys.len()` may exceed the artifact batch (chunked).
+    pub fn lookup_batch(&mut self, keys: &[u32]) -> Result<Vec<Option<u32>>> {
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(self.batch) {
+            let padded = self.pad_batch(chunk);
+            let res = self.rt.run(
+                "lookup",
+                self.class,
+                &[
+                    self.buckets_literal()?,
+                    self.meta_literal()?,
+                    literal::u32_literal(&padded, &[self.batch])?,
+                ],
+            )?;
+            let values = literal::to_u32s(&res[0])?;
+            let found = literal::to_u32s(&res[1])?;
+            for i in 0..chunk.len() {
+                if found[i] != 0 {
+                    out.push(Some(values[i]));
+                } else {
+                    // the stash participates in lookups (§IV-A)
+                    out.push(self.stash_lookup(chunk[i]));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Bulk insert/replace. Overflow words land in the coordinator stash;
+    /// `TableFull` is returned only if the stash cap is also exceeded.
+    pub fn insert_batch(&mut self, keys: &[u32], vals: &[u32]) -> Result<InsertReport> {
+        assert_eq!(keys.len(), vals.len());
+        let mut report = InsertReport::default();
+        for (kc, vc) in keys.chunks(self.batch).zip(vals.chunks(self.batch)) {
+            // replace-in-stash first so the eventual drain cannot
+            // resurrect a stale value
+            let mut kc2: Vec<u32> = kc.to_vec();
+            if !self.stash.is_empty() {
+                for (i, &k) in kc.iter().enumerate() {
+                    if self.stash_replace(k, pack(k, vc[i])) {
+                        report.replaced += 1;
+                        kc2[i] = EMPTY_KEY; // already handled
+                    }
+                }
+            }
+            let padded_k = {
+                let mut v = kc2.clone();
+                v.resize(self.batch, EMPTY_KEY);
+                v
+            };
+            let padded_v = {
+                let mut v = vc.to_vec();
+                v.resize(self.batch, 0);
+                v
+            };
+            let res = self.rt.run(
+                "insert",
+                self.class,
+                &[
+                    self.buckets_literal()?,
+                    self.meta_literal()?,
+                    literal::u32_literal(&padded_k, &[self.batch])?,
+                    literal::u32_literal(&padded_v, &[self.batch])?,
+                ],
+            )?;
+            self.buckets = literal::to_u64s(&res[0])?;
+            let stat = literal::to_u32s(&res[1])?;
+            let overflow = literal::to_u64s(&res[2])?;
+            for i in 0..kc.len() {
+                match stat[i] {
+                    status::REPLACED => report.replaced += 1,
+                    status::CLAIMED | status::EVICTED => {
+                        report.inserted += 1;
+                        self.count += 1;
+                    }
+                    status::OVERFLOW => {
+                        // NEVER drop an overflow word: eviction chains can
+                        // hand back *old* entries as victims (§IV-A step 4
+                        // parks them "pending" — here the coordinator-side
+                        // stash absorbs them unconditionally).
+                        self.stash.push_back(overflow[i]);
+                        report.stashed += 1;
+                        self.count += 1;
+                    }
+                    _ => {}
+                }
+            }
+            // keep the stash bounded by growing eagerly once it exceeds
+            // its nominal capacity (the resize epoch drains it)
+            if self.stash.len() > self.stash_cap {
+                let logical = self.logical_buckets();
+                let _ = self.grow_buckets(logical.min(self.k_batch.max(logical / 2)))?;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Bulk delete. Returns per-key hit flags.
+    pub fn delete_batch(&mut self, keys: &[u32]) -> Result<Vec<bool>> {
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(self.batch) {
+            let padded = self.pad_batch(chunk);
+            let res = self.rt.run(
+                "delete",
+                self.class,
+                &[
+                    self.buckets_literal()?,
+                    self.meta_literal()?,
+                    literal::u32_literal(&padded, &[self.batch])?,
+                ],
+            )?;
+            self.buckets = literal::to_u64s(&res[0])?;
+            let deleted = literal::to_u32s(&res[1])?;
+            for i in 0..chunk.len() {
+                let mut hit = deleted[i] != 0;
+                if !hit {
+                    hit = self.stash_delete(chunk[i]);
+                }
+                if hit {
+                    self.count -= 1;
+                }
+                out.push(hit);
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Resize orchestration (coordinator chunks at round boundaries)
+    // ------------------------------------------------------------------
+
+    /// Check thresholds; grow/shrink one K-batch if crossed. Returns what
+    /// happened, mirroring the native table's controller contract.
+    pub fn maybe_resize(&mut self) -> Result<Option<crate::native::resize::ResizeEvent>> {
+        use crate::native::resize::ResizeEvent;
+        let lf = self.load_factor();
+        if lf > self.grow_threshold || !self.stash.is_empty() {
+            let n = self.grow_buckets(self.k_batch)?;
+            if n > 0 {
+                return Ok(Some(ResizeEvent::Grew { buckets_split: n }));
+            }
+        } else if lf < self.shrink_threshold {
+            let n = self.shrink_buckets(self.k_batch)?;
+            if n > 0 {
+                return Ok(Some(ResizeEvent::Shrank { buckets_merged: n }));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Split up to `k` buckets, chunking at round boundaries and migrating
+    /// capacity classes as needed. Drains the stash afterwards (§IV-A).
+    pub fn grow_buckets(&mut self, k: usize) -> Result<usize> {
+        let mut remaining = k;
+        let mut total = 0;
+        while remaining > 0 {
+            let m_base = self.index_mask as usize + 1;
+            // room left in this round and in this class
+            let round_left = m_base - self.split_ptr as usize;
+            let class_left = self.class.saturating_sub(self.logical_buckets());
+            if class_left == 0 {
+                if !self.migrate_class_up()? {
+                    break; // no bigger artifact class available
+                }
+                continue;
+            }
+            let step = remaining.min(round_left).min(class_left);
+            // artifacts are compiled for k_batch splits; smaller steps run
+            // per-bucket through the k=1..k_batch window by looping
+            let chunk = step.min(self.k_batch);
+            let n = self.run_split_chunk(chunk)?;
+            total += n;
+            remaining -= n;
+            if n == 0 {
+                break;
+            }
+        }
+        if total > 0 {
+            self.drain_stash()?;
+        }
+        Ok(total)
+    }
+
+    /// One split call of exactly `chunk <= k_batch` buckets. The artifact
+    /// splits `k_batch` buckets; to honour smaller chunks we only advance
+    /// when chunk == k_batch, otherwise split one-at-a-time via host-side
+    /// fallback (keeps correctness for round tails).
+    fn run_split_chunk(&mut self, chunk: usize) -> Result<usize> {
+        if chunk == self.k_batch {
+            let res = self.rt.run(
+                "split",
+                self.class,
+                &[self.buckets_literal()?, self.meta_literal()?],
+            )?;
+            self.buckets = literal::to_u64s(&res[0])?;
+            let meta = literal::to_u32s(&res[1])?;
+            self.index_mask = meta[0];
+            self.split_ptr = meta[1];
+            Ok(self.k_batch)
+        } else {
+            // host-side split for round tails (rare, O(chunk) buckets)
+            for _ in 0..chunk {
+                self.host_split_one();
+            }
+            Ok(chunk)
+        }
+    }
+
+    /// Merge up to `k` pairs; handles round regression on the host side.
+    pub fn shrink_buckets(&mut self, k: usize) -> Result<usize> {
+        let mut total = 0;
+        for _ in 0..k {
+            if self.split_ptr == 0 {
+                if self.index_mask <= self.min_index_mask {
+                    break;
+                }
+                // regress: (m, 0) == (m-1, 2^(m-1))
+                self.index_mask >>= 1;
+                self.split_ptr = self.index_mask + 1;
+            }
+            if !self.host_merge_one() {
+                // destination lacked room: restore round state if we had
+                // just regressed with no merge done
+                if self.split_ptr == self.index_mask + 1 {
+                    self.split_ptr = 0;
+                    self.index_mask = (self.index_mask << 1) | 1;
+                }
+                break;
+            }
+            total += 1;
+        }
+        if total > 0 {
+            self.drain_stash()?;
+        }
+        Ok(total)
+    }
+
+    // ------------------------------------------------------------------
+    // Host-side helpers (exclusive access by construction: &mut self)
+    // ------------------------------------------------------------------
+
+    fn host_split_one(&mut self) {
+        use crate::hash::HashFamily;
+        let fam = HashFamily::default_pair();
+        let m_base = self.index_mask as usize + 1;
+        let b_src = self.split_ptr as usize;
+        let b_dst = b_src + m_base;
+        let next_mask = (self.index_mask << 1) | 1;
+        let mut dst_rank = 0usize;
+        for lane in 0..SLOTS_PER_BUCKET {
+            let w = self.buckets[b_src * SLOTS_PER_BUCKET + lane];
+            let key = unpack_key(w);
+            if key == EMPTY_KEY {
+                continue;
+            }
+            let h1 = fam.raw(0, key);
+            let h = if (h1 & self.index_mask) as usize == b_src { h1 } else { fam.raw(1, key) };
+            if (h & next_mask) as usize == b_dst {
+                self.buckets[b_dst * SLOTS_PER_BUCKET + dst_rank] = w;
+                self.buckets[b_src * SLOTS_PER_BUCKET + lane] = EMPTY_WORD;
+                dst_rank += 1;
+            }
+        }
+        self.split_ptr += 1;
+        if self.split_ptr as usize == m_base {
+            self.index_mask = next_mask;
+            self.split_ptr = 0;
+        }
+    }
+
+    fn host_merge_one(&mut self) -> bool {
+        let m_base = self.index_mask as usize + 1;
+        let b_dst = self.split_ptr as usize - 1;
+        let b_src = b_dst + m_base;
+        let movers: Vec<usize> = (0..SLOTS_PER_BUCKET)
+            .filter(|&l| unpack_key(self.buckets[b_src * SLOTS_PER_BUCKET + l]) != EMPTY_KEY)
+            .collect();
+        let frees: Vec<usize> = (0..SLOTS_PER_BUCKET)
+            .filter(|&l| unpack_key(self.buckets[b_dst * SLOTS_PER_BUCKET + l]) == EMPTY_KEY)
+            .collect();
+        if movers.len() > frees.len() {
+            return false;
+        }
+        for (r, &src_lane) in movers.iter().enumerate() {
+            self.buckets[b_dst * SLOTS_PER_BUCKET + frees[r]] =
+                self.buckets[b_src * SLOTS_PER_BUCKET + src_lane];
+            self.buckets[b_src * SLOTS_PER_BUCKET + src_lane] = EMPTY_WORD;
+        }
+        self.split_ptr -= 1;
+        true
+    }
+
+    /// Move to the next capacity class (bigger artifacts). The bucket
+    /// array is padded; addressing is unchanged.
+    fn migrate_class_up(&mut self) -> Result<bool> {
+        let classes = self.rt.classes();
+        let next = classes.iter().copied().find(|&c| c > self.class);
+        let Some(next) = next else { return Ok(false) };
+        let spec = self.rt.spec("insert", next)?.clone();
+        self.buckets.resize(next * SLOTS_PER_BUCKET, EMPTY_WORD);
+        self.class = next;
+        self.batch = spec.batch;
+        self.k_batch = spec.k_batch;
+        self.stash_cap = (next * SLOTS_PER_BUCKET / 64).max(64);
+        Ok(true)
+    }
+
+    /// Reinsert stashed words (post-resize epoch, §IV-A).
+    fn drain_stash(&mut self) -> Result<()> {
+        if self.stash.is_empty() {
+            return Ok(());
+        }
+        let words: Vec<u64> = self.stash.drain(..).collect();
+        let keys: Vec<u32> = words.iter().map(|&w| unpack(w).0).collect();
+        let vals: Vec<u32> = words.iter().map(|&w| unpack(w).1).collect();
+        // the stashed entries leave the table and re-enter via insert
+        // (which re-counts inserted/stashed; a duplicate that ends up as a
+        // replace genuinely shrinks the entry count)
+        self.count -= words.len();
+        let _ = self.insert_batch(&keys, &vals)?;
+        Ok(())
+    }
+
+    // stash primitives -------------------------------------------------
+
+    fn stash_lookup(&self, key: u32) -> Option<u32> {
+        self.stash.iter().find(|&&w| unpack_key(w) == key).map(|&w| unpack(w).1)
+    }
+
+    fn stash_replace(&mut self, key: u32, word: u64) -> bool {
+        for w in self.stash.iter_mut() {
+            if unpack_key(*w) == key {
+                *w = word;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn stash_delete(&mut self, key: u32) -> bool {
+        if let Some(pos) = self.stash.iter().position(|&w| unpack_key(w) == key) {
+            self.stash.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Hive hash table on the SIMT simulator — lane-accurate Algorithms 1–4.
+//!
+//! Where [`crate::native`] maps the paper's protocols onto OS threads for
+//! real-concurrency throughput, this module executes them *as written*:
+//! every ballot, shuffle, elected winner, coalesced 32-lane bucket load and
+//! single-CAS publish happens exactly as in the paper, against the
+//! transaction-counting memory of [`crate::simt`]. It produces the paper's
+//! microarchitectural measurements:
+//!
+//! * per-step cycle breakdown of insertion (Fig. 9),
+//! * eviction-lock usage rate (<0.85 %, §III-B),
+//! * memory transactions / atomics per operation (the coalescing argument
+//!   of §III-A), including the WABC-off ablation.
+
+pub mod table;
+pub mod baselines;
+
+pub use baselines::{SimCost, SimDyCuckoo, SimSlab, SimWarpCore};
+pub use table::{SimHive, SimHiveConfig, StepBreakdown};

@@ -1,0 +1,126 @@
+//! Cycle cost model for the simulator.
+//!
+//! The paper times insertion steps with `clock64()` at warp granularity
+//! (§V-D). Our simulator has no hardware clock, so we charge each protocol
+//! action a latency drawn from public Ada-generation figures:
+//!
+//! * global-memory transaction (L2 miss): ~400 cycles
+//! * atomic RMW (L2-resident): ~40 cycles on top of its transaction
+//! * warp intrinsic (ballot/shfl/ffs): ~2 cycles
+//! * ALU/hash evaluation: ~10 cycles per BitHash-style mixer
+//! * lock spin iteration: ~20 cycles
+//!
+//! Absolute values matter less than *ratios* — Fig. 9 plots percentage
+//! shares, which depend only on relative costs. The model is configurable
+//! so the ablation benches can test sensitivity.
+
+/// Per-action cycle costs (defaults approximate an RTX 4090 at 2.52 GHz).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// One 128-byte global-memory transaction.
+    pub transaction: u64,
+    /// One atomic RMW (in addition to its transaction).
+    pub atomic: u64,
+    /// One warp intrinsic (ballot / shfl / ffs / popc).
+    pub intrinsic: u64,
+    /// One hash-function evaluation.
+    pub hash: u64,
+    /// One lock acquire/release pair.
+    pub lock: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { transaction: 400, atomic: 40, intrinsic: 2, hash: 10, lock: 80 }
+    }
+}
+
+/// Accumulates cycles for one logical warp's current operation.
+#[derive(Debug, Default, Clone)]
+pub struct CycleClock {
+    cycles: u64,
+}
+
+impl CycleClock {
+    /// Zeroed clock.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `n` memory transactions.
+    #[inline]
+    pub fn charge_transactions(&mut self, model: &CostModel, n: u64) {
+        self.cycles += model.transaction * n;
+    }
+
+    /// Charge one atomic RMW (transaction + RMW overhead).
+    #[inline]
+    pub fn charge_atomic(&mut self, model: &CostModel) {
+        self.cycles += model.transaction + model.atomic;
+    }
+
+    /// Charge `n` warp intrinsics.
+    #[inline]
+    pub fn charge_intrinsics(&mut self, model: &CostModel, n: u64) {
+        self.cycles += model.intrinsic * n;
+    }
+
+    /// Charge `n` hash evaluations.
+    #[inline]
+    pub fn charge_hash(&mut self, model: &CostModel, n: u64) {
+        self.cycles += model.hash * n;
+    }
+
+    /// Charge a lock acquire/release pair.
+    #[inline]
+    pub fn charge_lock(&mut self, model: &CostModel) {
+        self.cycles += model.lock;
+    }
+
+    /// Total cycles charged.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Reset to zero, returning the previous total.
+    pub fn take(&mut self) -> u64 {
+        std::mem::take(&mut self.cycles)
+    }
+}
+
+/// Convert cycles to seconds at the paper's nominal 2.52 GHz boost clock.
+pub fn cycles_to_seconds(cycles: u64) -> f64 {
+    cycles as f64 / 2.52e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let m = CostModel::default();
+        let mut c = CycleClock::new();
+        c.charge_transactions(&m, 2); // 800
+        c.charge_atomic(&m); // +440
+        c.charge_intrinsics(&m, 3); // +6
+        c.charge_hash(&m, 2); // +20
+        c.charge_lock(&m); // +80
+        assert_eq!(c.cycles(), 800 + 440 + 6 + 20 + 80);
+        assert_eq!(c.take(), 1346);
+        assert_eq!(c.cycles(), 0);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        assert!((cycles_to_seconds(2_520_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_dominates_intrinsics() {
+        // The model must preserve the paper's key ratio: protocol cost is
+        // dominated by memory transactions, not warp intrinsics.
+        let m = CostModel::default();
+        assert!(m.transaction > 50 * m.intrinsic);
+    }
+}

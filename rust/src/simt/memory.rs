@@ -1,0 +1,288 @@
+//! Global memory with cache-line transaction accounting.
+//!
+//! GPU DRAM traffic is issued in 128-byte cache-line transactions [19]; a
+//! warp's 32 loads coalesce into as few transactions as the distinct lines
+//! they touch. This model is the backbone of the paper's layout argument:
+//! a packed 256 B bucket probe costs *two* transactions, an SoA probe
+//! costs *four* (two key lines + two value lines), a slab traversal costs
+//! two *per hop* plus the pointer line.
+//!
+//! `GlobalMem` stores 64-bit words and counts, per named region:
+//! * warp transactions (distinct 128 B lines per warp access),
+//! * atomic RMWs (CAS / fetch_and / fetch_or / exchange),
+//! * total words moved.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bytes per cache-line transaction (L1/L2 line on modern NVIDIA parts).
+pub const LINE_BYTES: usize = 128;
+/// 64-bit words per cache line.
+pub const WORDS_PER_LINE: usize = LINE_BYTES / 8;
+
+/// Traffic counters for one memory region.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MemStats {
+    /// 128-byte line transactions issued by warp-wide accesses.
+    pub transactions: u64,
+    /// Atomic RMW operations (each also a transaction on real hardware,
+    /// counted separately to expose contention).
+    pub atomics: u64,
+    /// Total 64-bit words loaded or stored.
+    pub words: u64,
+}
+
+impl MemStats {
+    /// Sum of two stat blocks.
+    pub fn merged(self, other: MemStats) -> MemStats {
+        MemStats {
+            transactions: self.transactions + other.transactions,
+            atomics: self.atomics + other.atomics,
+            words: self.words + other.words,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct RegionCounters {
+    transactions: AtomicU64,
+    atomics: AtomicU64,
+    words: AtomicU64,
+}
+
+/// A named allocation in simulated global memory (64-bit words).
+pub struct Region {
+    data: Vec<AtomicU64>,
+    counters: RegionCounters,
+    name: &'static str,
+}
+
+impl Region {
+    fn new(name: &'static str, len: usize, init: u64) -> Self {
+        Region {
+            data: (0..len).map(|_| AtomicU64::new(init)).collect(),
+            counters: RegionCounters::default(),
+            name,
+        }
+    }
+
+    /// Region length in words.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// `true` if the region has no words.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Count the distinct 128 B lines touched by word indices `idxs`.
+    fn lines_touched(idxs: &[usize]) -> u64 {
+        let mut lines: Vec<usize> = idxs.iter().map(|&i| i / WORDS_PER_LINE).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        lines.len() as u64
+    }
+
+    /// Warp-coalesced load of `N` words (one per lane). Counts the distinct
+    /// cache lines as transactions — a contiguous aligned 32-word load is
+    /// the paper's "two aligned 128-byte memory transactions".
+    pub fn warp_load<const N: usize>(&self, idxs: [usize; N]) -> [u64; N] {
+        self.counters.transactions.fetch_add(Self::lines_touched(&idxs), Ordering::Relaxed);
+        self.counters.words.fetch_add(N as u64, Ordering::Relaxed);
+        let mut out = [0u64; N];
+        for (o, &i) in out.iter_mut().zip(idxs.iter()) {
+            *o = self.data[i].load(Ordering::Acquire);
+        }
+        out
+    }
+
+    /// Load without traffic accounting — models a value the warp already
+    /// holds in registers (e.g. rows cached by an earlier coalesced load:
+    /// "each slot is fetched exactly once", §III-F).
+    pub fn load_uncounted(&self, idx: usize) -> u64 {
+        self.data[idx].load(Ordering::Acquire)
+    }
+
+    /// Single-lane scalar load (e.g. lane 0 reading the free mask): one
+    /// transaction.
+    pub fn load(&self, idx: usize) -> u64 {
+        self.counters.transactions.fetch_add(1, Ordering::Relaxed);
+        self.counters.words.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].load(Ordering::Acquire)
+    }
+
+    /// Single-lane store: one transaction.
+    pub fn store(&self, idx: usize, value: u64) {
+        self.counters.transactions.fetch_add(1, Ordering::Relaxed);
+        self.counters.words.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].store(value, Ordering::Release);
+    }
+
+    /// Warp-coalesced store of `N` lanes.
+    pub fn warp_store<const N: usize>(&self, idxs: [usize; N], values: [u64; N]) {
+        self.counters.transactions.fetch_add(Self::lines_touched(&idxs), Ordering::Relaxed);
+        self.counters.words.fetch_add(N as u64, Ordering::Relaxed);
+        for (&i, &v) in idxs.iter().zip(values.iter()) {
+            self.data[i].store(v, Ordering::Release);
+        }
+    }
+
+    /// Atomic compare-and-swap (64-bit, the packed-KV publish primitive).
+    pub fn cas(&self, idx: usize, expected: u64, new: u64) -> Result<u64, u64> {
+        self.counters.atomics.fetch_add(1, Ordering::Relaxed);
+        self.data[idx]
+            .compare_exchange(expected, new, Ordering::AcqRel, Ordering::Acquire)
+            .map_err(|v| v)
+    }
+
+    /// Atomic fetch-AND (the WABC claim primitive on the free mask).
+    pub fn fetch_and(&self, idx: usize, mask: u64) -> u64 {
+        self.counters.atomics.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].fetch_and(mask, Ordering::AcqRel)
+    }
+
+    /// Atomic fetch-OR (free-bit publication on delete).
+    pub fn fetch_or(&self, idx: usize, mask: u64) -> u64 {
+        self.counters.atomics.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].fetch_or(mask, Ordering::AcqRel)
+    }
+
+    /// Atomic fetch-add (stash tail reservation).
+    pub fn fetch_add(&self, idx: usize, v: u64) -> u64 {
+        self.counters.atomics.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].fetch_add(v, Ordering::AcqRel)
+    }
+
+    /// Atomic exchange.
+    pub fn swap(&self, idx: usize, v: u64) -> u64 {
+        self.counters.atomics.fetch_add(1, Ordering::Relaxed);
+        self.data[idx].swap(v, Ordering::AcqRel)
+    }
+
+    /// Point-in-time traffic counters.
+    pub fn stats(&self) -> MemStats {
+        MemStats {
+            transactions: self.counters.transactions.load(Ordering::Relaxed),
+            atomics: self.counters.atomics.load(Ordering::Relaxed),
+            words: self.counters.words.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Region name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Simulated global memory: a set of named regions.
+#[derive(Default)]
+pub struct GlobalMem {
+    regions: BTreeMap<&'static str, Region>,
+}
+
+impl GlobalMem {
+    /// Empty memory.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a region of `len` 64-bit words initialized to `init`.
+    pub fn alloc(&mut self, name: &'static str, len: usize, init: u64) -> &Region {
+        self.regions.insert(name, Region::new(name, len, init));
+        &self.regions[name]
+    }
+
+    /// Access a region by name.
+    pub fn region(&self, name: &'static str) -> &Region {
+        &self.regions[name]
+    }
+
+    /// Aggregate traffic across all regions.
+    pub fn total_stats(&self) -> MemStats {
+        self.regions.values().fold(MemStats::default(), |acc, r| acc.merged(r.stats()))
+    }
+
+    /// Per-region traffic, in name order.
+    pub fn stats_by_region(&self) -> Vec<(&'static str, MemStats)> {
+        self.regions.iter().map(|(&n, r)| (n, r.stats())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesced_bucket_probe_is_two_transactions() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("buckets", 1024, 0);
+        let r = mem.region("buckets");
+        // 32 consecutive aligned words = 256 B = exactly 2 lines.
+        let idxs: [usize; 32] = std::array::from_fn(|i| 64 + i);
+        r.warp_load(idxs);
+        assert_eq!(r.stats().transactions, 2);
+        assert_eq!(r.stats().words, 32);
+    }
+
+    #[test]
+    fn scattered_probe_amplifies_transactions() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("buckets", 1 << 16, 0);
+        let r = mem.region("buckets");
+        // 32 words spread one per line: 32 transactions.
+        let idxs: [usize; 32] = std::array::from_fn(|i| i * WORDS_PER_LINE);
+        r.warp_load(idxs);
+        assert_eq!(r.stats().transactions, 32);
+    }
+
+    #[test]
+    fn unaligned_probe_touches_three_lines() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("b", 1024, 0);
+        let r = mem.region("b");
+        // Misaligned 32-word window straddles 3 lines — the case bucket
+        // alignment avoids ("any probe touches at most two cache lines").
+        let idxs: [usize; 32] = std::array::from_fn(|i| 8 + i);
+        r.warp_load(idxs);
+        assert_eq!(r.stats().transactions, 3);
+    }
+
+    #[test]
+    fn atomics_are_counted() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("m", 8, u64::MAX);
+        let r = mem.region("m");
+        assert_eq!(r.fetch_and(0, !(1 << 5)), u64::MAX);
+        assert_eq!(r.fetch_or(0, 1 << 5), u64::MAX & !(1 << 5));
+        assert!(r.cas(1, u64::MAX, 42).is_ok());
+        assert!(r.cas(1, u64::MAX, 43).is_err());
+        assert_eq!(r.stats().atomics, 4);
+    }
+
+    #[test]
+    fn cas_returns_current_on_failure() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("m", 1, 7);
+        let r = mem.region("m");
+        assert_eq!(r.cas(0, 9, 10), Err(7));
+        assert_eq!(r.cas(0, 7, 10), Ok(7));
+        assert_eq!(r.load(0), 10);
+    }
+
+    #[test]
+    fn region_totals_aggregate() {
+        let mut mem = GlobalMem::new();
+        mem.alloc("a", 64, 0);
+        mem.alloc("b", 64, 0);
+        mem.region("a").load(0);
+        mem.region("b").store(0, 1);
+        mem.region("b").fetch_add(1, 1);
+        let total = mem.total_stats();
+        assert_eq!(total.transactions, 2);
+        assert_eq!(total.atomics, 1);
+        let by = mem.stats_by_region();
+        assert_eq!(by.len(), 2);
+        assert_eq!(by[0].0, "a");
+    }
+}

@@ -1,0 +1,31 @@
+//! SIMT warp simulator — the substrate substituting for CUDA hardware
+//! (DESIGN.md §2).
+//!
+//! The paper's protocols are *warp-cooperative*: 32 lanes execute in
+//! lockstep, exchange predicates with `__ballot_sync`, broadcast registers
+//! with `__shfl_sync`, and elect winners with `__ffs`. This module models
+//! exactly that execution shape in Rust:
+//!
+//! * [`warp`] — the lockstep lane vector and the warp intrinsics;
+//! * [`memory`] — global memory with 128-byte cache-line *transaction*
+//!   accounting (the quantity GPU memory coalescing optimizes) and counted
+//!   atomic RMWs;
+//! * [`clock`] — a cycle cost model (transactions, atomics, intrinsics)
+//!   used for the Fig. 9 per-step time breakdown;
+//! * [`sched`] — a seeded interleaving scheduler that runs many logical
+//!   warps against shared memory in a randomized but reproducible order,
+//!   standing in for the GPU's warp scheduler.
+//!
+//! The simulator is *behaviourally* faithful (same protocol steps, same
+//! atomics, same transaction counts per protocol action) rather than
+//! timing-faithful; EXPERIMENTS.md reports the derived shapes, not absolute
+//! GPU numbers.
+
+pub mod warp;
+pub mod memory;
+pub mod clock;
+pub mod sched;
+
+pub use clock::{CostModel, CycleClock};
+pub use memory::{GlobalMem, MemStats};
+pub use warp::{Warp, LANES};

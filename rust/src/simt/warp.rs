@@ -1,0 +1,180 @@
+//! The lockstep warp: 32 lanes and the CUDA warp-level intrinsics the
+//! paper's protocols are written in ([24]).
+//!
+//! A warp-cooperative routine is expressed as straight-line Rust over
+//! `[T; 32]` lane vectors; the intrinsics translate directly:
+//!
+//! | CUDA                    | here                       |
+//! |-------------------------|----------------------------|
+//! | `__ballot_sync(pred)`   | [`Warp::ballot`]           |
+//! | `__shfl_sync(v, src)`   | [`Warp::shfl`]             |
+//! | `__ffs(mask)`           | [`first_set`]              |
+//! | `__popc(mask)`          | `u32::count_ones`          |
+//! | `popc(mask & ((1<<lane)-1))` (prefix rank) | [`Warp::prefix_rank`] |
+
+/// Lanes per warp — fixed at 32 on every NVIDIA architecture the paper
+/// targets, and equal to the paper's bucket slot count by design.
+pub const LANES: usize = 32;
+
+/// A logical warp. Carries its id (for scheduling/diagnostics) and counts
+/// the intrinsic operations it executes (fed to the cycle cost model).
+#[derive(Debug, Clone)]
+pub struct Warp {
+    /// Warp id within the launched "grid".
+    pub id: usize,
+    /// Number of warp-level intrinsic operations executed.
+    pub intrinsic_ops: u64,
+}
+
+impl Warp {
+    /// A fresh warp with the given id.
+    pub fn new(id: usize) -> Self {
+        Warp { id, intrinsic_ops: 0 }
+    }
+
+    /// `__ballot_sync`: aggregate one predicate per lane into a 32-bit mask
+    /// (bit i ⇔ lane i's predicate).
+    #[inline]
+    pub fn ballot(&mut self, preds: [bool; LANES]) -> u32 {
+        self.intrinsic_ops += 1;
+        let mut mask = 0u32;
+        for (i, &p) in preds.iter().enumerate() {
+            if p {
+                mask |= 1 << i;
+            }
+        }
+        mask
+    }
+
+    /// `__shfl_sync`: broadcast lane `src`'s register to every lane.
+    /// (Returns the scalar; in lockstep Rust all lanes share it.)
+    #[inline]
+    pub fn shfl<T: Copy>(&mut self, values: &[T; LANES], src: usize) -> T {
+        self.intrinsic_ops += 1;
+        values[src]
+    }
+
+    /// Broadcast of an already-scalar value (shfl from an elected winner) —
+    /// counted like a shuffle, returns the value unchanged.
+    #[inline]
+    pub fn broadcast<T>(&mut self, value: T) -> T {
+        self.intrinsic_ops += 1;
+        value
+    }
+
+    /// Prefix rank of `lane` within `mask`: `popc(mask & ((1<<lane)-1))` —
+    /// the compaction rank used by the split/merge migration (§IV-C1).
+    #[inline]
+    pub fn prefix_rank(&mut self, mask: u32, lane: usize) -> u32 {
+        self.intrinsic_ops += 1;
+        (mask & ((1u32 << lane) - 1)).count_ones()
+    }
+
+    /// Per-lane map helper: evaluate `f` on every lane index, producing a
+    /// lane vector (the SIMT "each lane computes" idiom).
+    #[inline]
+    pub fn lanes<T, F: FnMut(usize) -> T>(mut f: F) -> [T; LANES]
+    where
+        T: Copy + Default,
+    {
+        let mut out = [T::default(); LANES];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        out
+    }
+}
+
+/// `__ffs`-style first-set-bit election: index of the lowest set bit, or
+/// `None` if the mask is empty. (CUDA `__ffs` returns 1-based; we return a
+/// 0-based lane index which is what every call site wants.)
+#[inline]
+pub fn first_set(mask: u32) -> Option<usize> {
+    if mask == 0 {
+        None
+    } else {
+        Some(mask.trailing_zeros() as usize)
+    }
+}
+
+/// Select the index of the `n`-th (0-based) set bit of `mask` — the
+/// `select_nth_one` prefix-rank mapping from the merge phase (§IV-C2).
+#[inline]
+pub fn select_nth_one(mask: u32, n: u32) -> Option<usize> {
+    let mut m = mask;
+    let mut seen = 0;
+    while m != 0 {
+        let i = m.trailing_zeros();
+        if seen == n {
+            return Some(i as usize);
+        }
+        seen += 1;
+        m &= m - 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ballot_collects_lane_predicates() {
+        let mut w = Warp::new(0);
+        let preds = Warp::lanes(|i| i % 3 == 0);
+        let mask = w.ballot(preds);
+        for i in 0..LANES {
+            assert_eq!(mask & (1 << i) != 0, i % 3 == 0);
+        }
+        assert_eq!(w.intrinsic_ops, 1);
+    }
+
+    #[test]
+    fn shfl_broadcasts() {
+        let mut w = Warp::new(0);
+        let vals = Warp::lanes(|i| (i * 10) as u64);
+        assert_eq!(w.shfl(&vals, 0), 0);
+        assert_eq!(w.shfl(&vals, 31), 310);
+    }
+
+    #[test]
+    fn first_set_elects_lowest() {
+        assert_eq!(first_set(0), None);
+        assert_eq!(first_set(0b1000), Some(3));
+        assert_eq!(first_set(u32::MAX), Some(0));
+        assert_eq!(first_set(0x8000_0000), Some(31));
+    }
+
+    #[test]
+    fn prefix_rank_is_exclusive_popcount() {
+        let mut w = Warp::new(0);
+        let mask = 0b1011_0110u32;
+        assert_eq!(w.prefix_rank(mask, 0), 0);
+        assert_eq!(w.prefix_rank(mask, 2), 1); // one set bit below lane 2
+        assert_eq!(w.prefix_rank(mask, 7), 4);
+        assert_eq!(w.prefix_rank(mask, 31), mask.count_ones());
+    }
+
+    #[test]
+    fn select_nth_one_matches_rank() {
+        let mask = 0b1010_1100u32;
+        assert_eq!(select_nth_one(mask, 0), Some(2));
+        assert_eq!(select_nth_one(mask, 1), Some(3));
+        assert_eq!(select_nth_one(mask, 2), Some(5));
+        assert_eq!(select_nth_one(mask, 3), Some(7));
+        assert_eq!(select_nth_one(mask, 4), None);
+        assert_eq!(select_nth_one(0, 0), None);
+    }
+
+    #[test]
+    fn rank_and_select_are_inverse() {
+        let mut w = Warp::new(0);
+        let mask = 0xDEAD_BEEFu32;
+        for lane in 0..LANES {
+            if mask & (1 << lane) != 0 {
+                let r = w.prefix_rank(mask, lane);
+                assert_eq!(select_nth_one(mask, r), Some(lane));
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Workload generators for benchmarks, tests and examples.
+//!
+//! Reproduces the paper's evaluation workloads (§V): uniformly distributed
+//! unique key-value pairs for the balanced bulk insert/query experiments,
+//! and mixed insert:lookup:delete streams (e.g. 0.5:0.3:0.2, Fig. 8) for
+//! the imbalanced experiment. Zipfian key streams are provided for skew
+//! ablations beyond the paper.
+
+use crate::core::packed::EMPTY_KEY;
+use crate::core::rng::{Xoshiro256, Zipf};
+
+/// One table operation with its operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Insert or replace `key → value`.
+    Insert { key: u32, value: u32 },
+    /// Point lookup.
+    Lookup { key: u32 },
+    /// Remove `key`.
+    Delete { key: u32 },
+}
+
+impl Op {
+    /// The key this operation touches.
+    pub fn key(&self) -> u32 {
+        match *self {
+            Op::Insert { key, .. } | Op::Lookup { key } | Op::Delete { key } => key,
+        }
+    }
+}
+
+/// Mixed-workload ratios (must sum to 1.0).
+#[derive(Debug, Clone, Copy)]
+pub struct Mix {
+    /// Fraction of inserts.
+    pub insert: f64,
+    /// Fraction of lookups.
+    pub lookup: f64,
+    /// Fraction of deletes.
+    pub delete: f64,
+}
+
+impl Mix {
+    /// The paper's Fig. 8 imbalanced mix 0.5 : 0.3 : 0.2.
+    pub const PAPER_IMBALANCED: Mix = Mix { insert: 0.5, lookup: 0.3, delete: 0.2 };
+    /// Insert-only (bulk build).
+    pub const INSERT_ONLY: Mix = Mix { insert: 1.0, lookup: 0.0, delete: 0.0 };
+    /// Lookup-only (bulk query).
+    pub const LOOKUP_ONLY: Mix = Mix { insert: 0.0, lookup: 1.0, delete: 0.0 };
+}
+
+/// `n` unique uniformly distributed keys (no EMPTY sentinel, no dups),
+/// shuffled deterministically by `seed`.
+pub fn unique_uniform_keys(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    // Draw-without-replacement via a Feistel-style permutation of a dense
+    // range is overkill here; use a set-free approach: random odd stride
+    // over the u32 ring guarantees uniqueness.
+    let stride = (rng.next_u32() | 1).max(3);
+    let start = rng.next_u32();
+    let mut keys: Vec<u32> = (0..n as u64)
+        .map(|i| start.wrapping_add((i as u32).wrapping_mul(stride)))
+        .map(|k| if k == EMPTY_KEY { 0x7FFF_FFFF } else { k })
+        .collect();
+    rng.shuffle(&mut keys);
+    keys
+}
+
+/// Bulk insert workload: `n` unique `(key, value)` pairs.
+pub fn bulk_insert(n: usize, seed: u64) -> Vec<Op> {
+    unique_uniform_keys(n, seed)
+        .into_iter()
+        .map(|key| Op::Insert { key, value: key.wrapping_mul(0x9E37) })
+        .collect()
+}
+
+/// Bulk query workload over a previously inserted key set.
+pub fn bulk_lookup(keys: &[u32]) -> Vec<Op> {
+    keys.iter().map(|&key| Op::Lookup { key }).collect()
+}
+
+/// Mixed workload of `n` ops at the given `mix`. Lookups and deletes
+/// target previously inserted keys (uniformly chosen); inserts use fresh
+/// unique keys. Deterministic in `seed`.
+pub fn mixed(n: usize, mix: Mix, seed: u64) -> Vec<Op> {
+    assert!((mix.insert + mix.lookup + mix.delete - 1.0).abs() < 1e-9);
+    let mut rng = Xoshiro256::seeded(seed);
+    let fresh = unique_uniform_keys(n, seed ^ 0xDEAD_BEEF);
+    let mut live: Vec<u32> = Vec::with_capacity(n);
+    let mut ops = Vec::with_capacity(n);
+    for key in fresh {
+        let r = rng.f64();
+        if r < mix.insert || live.is_empty() {
+            ops.push(Op::Insert { key, value: key ^ 0x5555 });
+            live.push(key);
+        } else if r < mix.insert + mix.lookup {
+            let target = live[rng.below(live.len() as u64) as usize];
+            ops.push(Op::Lookup { key: target });
+        } else {
+            let idx = rng.below(live.len() as u64) as usize;
+            let target = live.swap_remove(idx);
+            ops.push(Op::Delete { key: target });
+        }
+    }
+    ops
+}
+
+/// Zipf-skewed lookup stream over `universe` ranked keys.
+pub fn zipf_lookups(n: usize, universe: &[u32], theta: f64, seed: u64) -> Vec<Op> {
+    let z = Zipf::new(universe.len() as u64, theta);
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n).map(|_| Op::Lookup { key: universe[z.sample(&mut rng) as usize] }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_keys_are_unique() {
+        let keys = unique_uniform_keys(100_000, 7);
+        assert_eq!(keys.len(), 100_000);
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100_000, "duplicate keys generated");
+        assert!(!keys.contains(&EMPTY_KEY));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(unique_uniform_keys(1000, 1), unique_uniform_keys(1000, 1));
+        assert_ne!(unique_uniform_keys(1000, 1), unique_uniform_keys(1000, 2));
+        assert_eq!(mixed(1000, Mix::PAPER_IMBALANCED, 3), mixed(1000, Mix::PAPER_IMBALANCED, 3));
+    }
+
+    #[test]
+    fn mixed_ratios_approximate_target() {
+        let ops = mixed(100_000, Mix::PAPER_IMBALANCED, 11);
+        let ins = ops.iter().filter(|o| matches!(o, Op::Insert { .. })).count() as f64;
+        let luk = ops.iter().filter(|o| matches!(o, Op::Lookup { .. })).count() as f64;
+        let del = ops.iter().filter(|o| matches!(o, Op::Delete { .. })).count() as f64;
+        let n = ops.len() as f64;
+        assert!((ins / n - 0.5).abs() < 0.02, "insert ratio {}", ins / n);
+        assert!((luk / n - 0.3).abs() < 0.02, "lookup ratio {}", luk / n);
+        assert!((del / n - 0.2).abs() < 0.02, "delete ratio {}", del / n);
+    }
+
+    #[test]
+    fn mixed_deletes_target_live_keys() {
+        // replaying a mixed stream against a reference map never deletes
+        // or looks up a key that was not inserted first
+        use std::collections::HashSet;
+        let ops = mixed(20_000, Mix::PAPER_IMBALANCED, 5);
+        let mut live: HashSet<u32> = HashSet::new();
+        for op in &ops {
+            match *op {
+                Op::Insert { key, .. } => {
+                    live.insert(key);
+                }
+                Op::Lookup { key } => assert!(live.contains(&key), "lookup of dead key"),
+                Op::Delete { key } => assert!(live.remove(&key), "delete of dead key"),
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_lookups_hit_universe() {
+        let universe = unique_uniform_keys(1000, 9);
+        let ops = zipf_lookups(10_000, &universe, 0.99, 10);
+        let set: std::collections::HashSet<u32> = universe.iter().copied().collect();
+        for op in ops {
+            assert!(set.contains(&op.key()));
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! All evaluated tables (Hive + baselines) must agree on workload
+//! semantics — the precondition for the Fig. 6–8 comparisons being fair.
+
+use hivehash::baselines::{ConcurrentMap, DyCuckooLike, ShardedStd, SlabHashLike, WarpCoreLike};
+use hivehash::workload::{self, Mix, Op};
+use hivehash::{HiveConfig, HiveTable};
+use std::collections::HashMap;
+
+fn tables_for(n: usize) -> Vec<Box<dyn ConcurrentMap>> {
+    vec![
+        Box::new(HiveTable::new(HiveConfig::for_capacity(n, 0.7)).unwrap()),
+        Box::new(SlabHashLike::for_capacity(n)),
+        Box::new(DyCuckooLike::for_capacity(n)),
+        Box::new(WarpCoreLike::for_capacity(n)),
+        Box::new(ShardedStd::for_capacity(n)),
+    ]
+}
+
+#[test]
+fn all_tables_agree_on_sequential_mixed_stream() {
+    let ops = workload::mixed(15_000, Mix::PAPER_IMBALANCED, 7);
+    for table in tables_for(15_000) {
+        let mut spec: HashMap<u32, u32> = HashMap::new();
+        for op in &ops {
+            match *op {
+                Op::Insert { key, value } => {
+                    table.insert(key, value).unwrap();
+                    spec.insert(key, value);
+                }
+                Op::Delete { key } => {
+                    // WarpCore's delete is sequential-only; in this
+                    // single-threaded test it must still agree
+                    let hit = table.delete(key);
+                    assert_eq!(hit, spec.remove(&key).is_some(), "{} delete {key}", table.name());
+                }
+                Op::Lookup { key } => {
+                    assert_eq!(
+                        table.lookup(key),
+                        spec.get(&key).copied(),
+                        "{} lookup {key}",
+                        table.name()
+                    );
+                }
+            }
+        }
+        assert_eq!(table.len(), spec.len(), "{} final count", table.name());
+    }
+}
+
+#[test]
+fn all_tables_sustain_their_claimed_load_factor() {
+    // paper §V-C: each system is evaluated at its max achievable LF
+    let slots = 1 << 12;
+    let tables: Vec<Box<dyn ConcurrentMap>> = vec![
+        Box::new(HiveTable::new(HiveConfig::default().with_buckets(slots / 32)).unwrap()),
+        Box::new(SlabHashLike::new(slots / 30, slots / 15)),
+        Box::new(DyCuckooLike::new(2, slots / 16)),
+        Box::new(WarpCoreLike::new(slots)),
+    ];
+    for table in tables {
+        let n = (slots as f64 * table.max_load_factor() * 0.98) as u32;
+        for k in 1..=n {
+            table
+                .insert(k, k)
+                .unwrap_or_else(|e| panic!("{} failed at {k}/{n}: {e}", table.name()));
+        }
+        for k in 1..=n {
+            assert_eq!(table.lookup(k), Some(k), "{} lost {k}", table.name());
+        }
+    }
+}
+
+#[test]
+fn concurrent_parity_insert_lookup() {
+    use std::sync::Arc;
+    // every table must be linearizable for disjoint concurrent writers
+    let tables: Vec<Arc<dyn ConcurrentMap>> = vec![
+        Arc::new(HiveTable::new(HiveConfig::default().with_buckets(512)).unwrap()),
+        Arc::new(SlabHashLike::for_capacity(20_000)),
+        Arc::new(DyCuckooLike::for_capacity(20_000)),
+        Arc::new(WarpCoreLike::for_capacity(20_000)),
+        Arc::new(ShardedStd::for_capacity(20_000)),
+    ];
+    for table in tables {
+        let threads: Vec<_> = (0..6u32)
+            .map(|tid| {
+                let t = Arc::clone(&table);
+                std::thread::spawn(move || {
+                    for i in 0..2000 {
+                        let k = tid * 100_000 + i + 1;
+                        t.insert(k, k ^ 0xBEEF).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(table.len(), 12_000, "{}", table.name());
+        for tid in 0..6u32 {
+            for i in (0..2000).step_by(97) {
+                let k = tid * 100_000 + i + 1;
+                assert_eq!(table.lookup(k), Some(k ^ 0xBEEF), "{} key {k}", table.name());
+            }
+        }
+    }
+}

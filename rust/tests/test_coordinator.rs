@@ -1,0 +1,140 @@
+//! Integration: coordinator service over all three backends, including
+//! the XLA substrate (skipped without artifacts).
+
+use hivehash::backend::{Backend, NativeBackend, SimtBackend, XlaBackend};
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hivehash::simgpu::SimHiveConfig;
+use hivehash::workload::{self, Mix, Op};
+use hivehash::HiveConfig;
+use std::time::Duration;
+
+fn cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch: 512, deadline: Duration::from_micros(200) },
+        resize_check_every: 2,
+    }
+}
+
+/// Replay a mixed workload through a coordinator and cross-check every
+/// lookup against a reference HashMap with the same window semantics
+/// (per-window: inserts, then deletes, then lookups).
+fn verify_backend_through_service<F>(factory: F, workers: usize)
+where
+    F: Fn(usize) -> hivehash::core::error::Result<Box<dyn Backend>> + Send + Sync + 'static,
+{
+    let (coord, h) = Coordinator::start(cfg(workers), factory).unwrap();
+    let ops = workload::mixed(20_000, Mix::PAPER_IMBALANCED, 99);
+    let mut reference = std::collections::HashMap::new();
+
+    for window in ops.chunks(1000) {
+        let res = h.submit(window).unwrap();
+        // apply the same window semantics to the reference
+        for op in window {
+            if let Op::Insert { key, value } = *op {
+                reference.insert(key, value);
+            }
+        }
+        for op in window {
+            if let Op::Delete { key } = *op {
+                reference.remove(&key);
+            }
+        }
+        let mut li = 0;
+        for op in window {
+            if let Op::Lookup { key } = *op {
+                assert_eq!(
+                    res.lookups[li],
+                    reference.get(&key).copied(),
+                    "lookup divergence on key {key}"
+                );
+                li += 1;
+            }
+        }
+    }
+    let stats = h.stats().unwrap();
+    assert_eq!(stats.ops, 20_000);
+    coord.shutdown();
+}
+
+#[test]
+fn native_backend_service_consistency() {
+    verify_backend_through_service(
+        |_w| Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(256))?) as _),
+        4,
+    );
+}
+
+#[test]
+fn simt_backend_service_consistency() {
+    verify_backend_through_service(
+        |_w| {
+            Ok(Box::new(SimtBackend::new(SimHiveConfig {
+                n_buckets: 512,
+                ..Default::default()
+            })) as _)
+        },
+        2,
+    );
+}
+
+#[test]
+fn xla_backend_service_consistency() {
+    // artifacts gate
+    if hivehash::runtime::Runtime::open_default().is_err() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    verify_backend_through_service(
+        |_w| {
+            let rt = std::sync::Arc::new(hivehash::runtime::Runtime::open_default()?);
+            let class = rt.classes()[0];
+            Ok(Box::new(XlaBackend::new(rt, class)?) as _)
+        },
+        2,
+    );
+}
+
+#[test]
+fn service_handles_interleaved_single_and_bulk() {
+    let (coord, h) = Coordinator::start(cfg(2), |_w| {
+        Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(64))?) as _)
+    })
+    .unwrap();
+    // singles from one thread, bulks from another, disjoint key ranges
+    let h2 = h.clone();
+    let t = std::thread::spawn(move || {
+        for k in 1..=500u32 {
+            h2.insert(k, k).unwrap();
+        }
+        for k in 1..=500u32 {
+            assert_eq!(h2.lookup(k).unwrap(), Some(k));
+        }
+    });
+    let bulk: Vec<Op> = (10_001..=10_500u32).map(|k| Op::Insert { key: k, value: k }).collect();
+    h.submit(&bulk).unwrap();
+    t.join().unwrap();
+    let lookups: Vec<Op> = (10_001..=10_500u32).map(|k| Op::Lookup { key: k }).collect();
+    let r = h.submit(&lookups).unwrap();
+    assert!(r.lookups.iter().all(Option::is_some));
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_batching_flushes_lone_requests() {
+    // a single request must not hang waiting for a full window
+    let cfgd = CoordinatorConfig {
+        workers: 1,
+        batch: BatchPolicy { max_batch: 1_000_000, deadline: Duration::from_millis(2) },
+        resize_check_every: 8,
+    };
+    let (coord, h) = Coordinator::start(cfgd, |_w| {
+        Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(16))?) as _)
+    })
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    h.insert(1, 1).unwrap();
+    assert!(t0.elapsed() < Duration::from_millis(500), "deadline flush too slow");
+    assert_eq!(h.lookup(1).unwrap(), Some(1));
+    coord.shutdown();
+}

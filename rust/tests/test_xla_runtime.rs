@@ -1,0 +1,166 @@
+//! Integration: AOT artifacts → PJRT runtime → XlaTable semantics.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise). This is the
+//! end-to-end proof that the three layers compose: Pallas kernels (L1)
+//! inside JAX programs (L2) executed from Rust via PJRT (L3), Python-free.
+
+use hivehash::runtime::{Runtime, XlaTable};
+use std::sync::Arc;
+
+fn runtime_or_skip() -> Option<Arc<Runtime>> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP xla tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_has_all_ops_per_class() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let classes = rt.classes();
+    assert!(!classes.is_empty());
+    for &c in &classes {
+        for op in ["lookup", "insert", "delete", "split", "merge"] {
+            rt.spec(op, c).unwrap_or_else(|e| panic!("missing {op}@{c}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn insert_lookup_delete_roundtrip() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let class = rt.classes()[0];
+    let mut t = XlaTable::new(rt, class).unwrap();
+
+    let n = 2000u32;
+    let keys: Vec<u32> = (1..=n).collect();
+    let vals: Vec<u32> = keys.iter().map(|k| k.wrapping_mul(7)).collect();
+    let report = t.insert_batch(&keys, &vals).unwrap();
+    assert_eq!(report.inserted, n as usize);
+    assert_eq!(report.replaced, 0);
+    assert_eq!(t.len(), n as usize);
+
+    let got = t.lookup_batch(&keys).unwrap();
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, Some(vals[i]), "key {}", keys[i]);
+    }
+    // misses
+    let miss: Vec<u32> = (n + 1..=n + 100).collect();
+    assert!(t.lookup_batch(&miss).unwrap().iter().all(Option::is_none));
+
+    // replace
+    let new_vals: Vec<u32> = keys.iter().map(|k| k + 1).collect();
+    let report = t.insert_batch(&keys, &new_vals).unwrap();
+    assert_eq!(report.replaced, n as usize);
+    assert_eq!(t.len(), n as usize);
+    let got = t.lookup_batch(&keys).unwrap();
+    assert!(got.iter().enumerate().all(|(i, v)| *v == Some(new_vals[i])));
+
+    // delete half
+    let (del, keep) = keys.split_at(n as usize / 2);
+    let hits = t.delete_batch(del).unwrap();
+    assert!(hits.iter().all(|&h| h));
+    assert_eq!(t.len(), keep.len());
+    assert!(t.lookup_batch(del).unwrap().iter().all(Option::is_none));
+    assert!(t.lookup_batch(keep).unwrap().iter().all(Option::is_some));
+}
+
+#[test]
+fn grow_preserves_entries_and_drains_stash() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let class = rt.classes()[0];
+    // start at 1/4 of the class so splits stay inside it
+    let mut t = XlaTable::with_initial_buckets(rt, class, class / 4).unwrap();
+    let logical0 = t.logical_buckets();
+
+    let n = (logical0 * 32) as u32 * 85 / 100;
+    let keys: Vec<u32> = (1..=n).collect();
+    let vals: Vec<u32> = keys.iter().map(|k| k ^ 0xAA).collect();
+    t.insert_batch(&keys, &vals).unwrap();
+    assert!(t.load_factor() > 0.8);
+
+    let split = t.grow_buckets(logical0).unwrap(); // full round
+    assert_eq!(split, logical0);
+    assert_eq!(t.logical_buckets(), logical0 * 2);
+    assert!(t.load_factor() < 0.5);
+
+    let got = t.lookup_batch(&keys).unwrap();
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, Some(vals[i]), "key {} lost across split", keys[i]);
+    }
+}
+
+#[test]
+fn shrink_merges_back() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let class = rt.classes()[0];
+    let mut t = XlaTable::with_initial_buckets(rt, class, class / 4).unwrap();
+    let logical0 = t.logical_buckets();
+    let keys: Vec<u32> = (1..=200).collect();
+    t.insert_batch(&keys, &keys).unwrap();
+    t.grow_buckets(logical0).unwrap();
+    let merged = t.shrink_buckets(logical0).unwrap();
+    assert_eq!(merged, logical0, "sparse table should merge fully");
+    assert_eq!(t.logical_buckets(), logical0);
+    let got = t.lookup_batch(&keys).unwrap();
+    assert!(got.iter().all(Option::is_some), "entries lost across merge");
+}
+
+#[test]
+fn maybe_resize_policy_grows_at_090() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let class = rt.classes()[0];
+    let mut t = XlaTable::with_initial_buckets(rt, class, class / 4).unwrap();
+    let cap = t.logical_buckets() * 32;
+    let n = (cap as f64 * 0.92) as u32;
+    let keys: Vec<u32> = (1..=n).collect();
+    t.insert_batch(&keys, &keys).unwrap();
+    assert!(t.load_factor() > 0.9);
+    let ev = t.maybe_resize().unwrap();
+    assert!(ev.is_some(), "resize must trigger above 0.9");
+    assert!(t.load_factor() < 0.9);
+    let got = t.lookup_batch(&keys).unwrap();
+    assert!(got.iter().all(Option::is_some));
+}
+
+#[test]
+fn agrees_with_native_table_on_random_workload() {
+    use hivehash::core::rng::Xoshiro256;
+    use hivehash::HiveTable;
+    let Some(rt) = runtime_or_skip() else { return };
+    let class = rt.classes()[0];
+    let mut xla = XlaTable::new(rt, class).unwrap();
+    let native = HiveTable::new(
+        hivehash::HiveConfig::default().with_buckets(class),
+    )
+    .unwrap();
+
+    let mut rng = Xoshiro256::seeded(42);
+    let mut live: Vec<u32> = Vec::new();
+    for _round in 0..5 {
+        let keys: Vec<u32> = (0..500).map(|_| (rng.next_u32() >> 1) + 1).collect();
+        let vals: Vec<u32> = keys.iter().map(|k| k ^ 0x1234).collect();
+        xla.insert_batch(&keys, &vals).unwrap();
+        for (&k, &v) in keys.iter().zip(&vals) {
+            native.insert(k, v).unwrap();
+        }
+        live.extend_from_slice(&keys);
+        // delete a random third
+        let del: Vec<u32> = live.iter().copied().filter(|_| rng.f64() < 0.33).collect();
+        xla.delete_batch(&del).unwrap();
+        for &k in &del {
+            native.delete(k);
+        }
+        live.retain(|k| !del.contains(k));
+        // spot-check agreement on live + dead keys
+        let probe: Vec<u32> = live.iter().take(200).copied().chain(del.into_iter().take(50)).collect();
+        let xla_got = xla.lookup_batch(&probe).unwrap();
+        for (i, &k) in probe.iter().enumerate() {
+            assert_eq!(xla_got[i], native.lookup(k), "disagreement on key {k}");
+        }
+    }
+    assert_eq!(xla.len(), native.len());
+}

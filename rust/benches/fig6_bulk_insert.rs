@@ -4,14 +4,26 @@
 //! and DyCuckoo, ~4× over SlabHash, each at its max load factor
 //! (Hive .95, Slab .92, WarpCore .95, DyCuckoo .9).
 //!
+//! All systems are driven through the `ConcurrentMap` batch methods
+//! (Hive's bulk fast path vs. the default single-op loop for baselines —
+//! the same batch-granularity dispatch the paper's kernels get). A per-op
+//! reference run of Hive quantifies the batching speedup; both numbers
+//! land in `bench_out/fig6_bulk_insert.json` for trajectory tracking.
+//!
 //! Run: `cargo bench --bench fig6_bulk_insert`
 //! Scale: HIVE_BENCH_SCALE=smoke|small|paper (default small = 2^20 max).
+//! Batch: HIVE_BENCH_BATCH per-thread window (default 4096).
 
-use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike, WarpCoreLike};
-use hivehash::report::{bench_max_pow, bench_threads, drive_parallel, mops, Table};
+use hivehash::report::json::{bench_row, save_figure, JsonVal};
+use hivehash::report::{
+    bench_batch, bench_max_pow, bench_threads, drive_parallel, drive_parallel_batched, mops,
+    Table,
+};
 use hivehash::workload::bulk_insert;
 use hivehash::{HiveConfig, HiveTable};
 use std::sync::Arc;
+
+use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike, WarpCoreLike};
 
 fn hive_for(n: usize) -> Arc<dyn ConcurrentMap> {
     Arc::new(HiveTable::new(HiveConfig::for_capacity(n, 0.95)).unwrap())
@@ -19,36 +31,62 @@ fn hive_for(n: usize) -> Arc<dyn ConcurrentMap> {
 
 fn main() {
     let threads = bench_threads();
+    let batch = bench_batch();
     let max_pow = bench_max_pow(20, 25);
     let mut table = Table::new(
-        &format!("Fig. 6 — bulk insert MOPS ({threads} threads, to max load factor)"),
-        &["keys", "HiveHash", "WarpCore", "DyCuckoo", "SlabHash", "hive/slab", "hive/dycuckoo"],
+        &format!("Fig. 6 — bulk insert MOPS ({threads} threads, batch {batch}, to max load factor)"),
+        &[
+            "keys",
+            "Hive(batched)",
+            "Hive(per-op)",
+            "batch-x",
+            "WarpCore",
+            "DyCuckoo",
+            "SlabHash",
+            "hive/slab",
+            "hive/dycuckoo",
+        ],
     );
+    let mut json_rows: Vec<JsonVal> = Vec::new();
 
     for pow in 17..=max_pow {
         let n = 1usize << pow;
         let ops = bulk_insert(n, 0x6006 + pow as u64);
-        let mut row = vec![format!("2^{pow}")];
-        let mut results = Vec::new();
-        let builders: Vec<(&str, Arc<dyn ConcurrentMap>)> = vec![
-            ("Hive", hive_for(n)),
-            ("WarpCore", Arc::new(WarpCoreLike::for_capacity(n))),
-            ("DyCuckoo", Arc::new(DyCuckooLike::for_capacity(n))),
-            ("SlabHash", Arc::new(SlabHashLike::for_capacity(n))),
+
+        // Per-op reference: the pre-batching driver on a fresh Hive table.
+        let per_op_map = hive_for(n);
+        let per_op = mops(n, drive_parallel(Arc::clone(&per_op_map), &ops, threads));
+        assert_eq!(per_op_map.len(), n, "per-op driver lost inserts");
+
+        let builders: Vec<Arc<dyn ConcurrentMap>> = vec![
+            hive_for(n),
+            Arc::new(WarpCoreLike::for_capacity(n)),
+            Arc::new(DyCuckooLike::for_capacity(n)),
+            Arc::new(SlabHashLike::for_capacity(n)),
         ];
-        for (_name, map) in builders {
-            let dur = drive_parallel(Arc::clone(&map), &ops, threads);
+        let mut results = Vec::new();
+        for map in &builders {
+            let dur = drive_parallel_batched(Arc::clone(map), &ops, threads, batch);
             assert_eq!(map.len(), n, "{} lost inserts", map.name());
             results.push(mops(n, dur));
+            json_rows.push(bench_row("keys", n, map.name(), "batched", results[results.len() - 1]));
         }
-        for r in &results {
-            row.push(format!("{r:.1}"));
-        }
-        row.push(format!("{:.2}x", results[0] / results[3]));
-        row.push(format!("{:.2}x", results[0] / results[2]));
-        table.row(row);
+        json_rows.push(bench_row("keys", n, "HiveHash", "per_op", per_op));
+
+        table.row(vec![
+            format!("2^{pow}"),
+            format!("{:.1}", results[0]),
+            format!("{per_op:.1}"),
+            format!("{:.2}x", results[0] / per_op),
+            format!("{:.1}", results[1]),
+            format!("{:.1}", results[2]),
+            format!("{:.1}", results[3]),
+            format!("{:.2}x", results[0] / results[3]),
+            format!("{:.2}x", results[0] / results[2]),
+        ]);
     }
     table.emit(Some("bench_out/fig6_bulk_insert.csv"));
+    save_figure("fig6_bulk_insert", threads, batch, json_rows);
     println!("paper shape: Hive highest; ~4x over SlabHash, ~2.5x over DyCuckoo/WarpCore at scale");
 
     // --- GPU cost-model comparison (cycles/op on the SIMT substrate) ---

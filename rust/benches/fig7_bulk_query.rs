@@ -4,27 +4,59 @@
 //! competitive at 2^20 but declines sharply at scale (must probe all d
 //! subtables); WarpCore and SlabHash stable but lower.
 //!
+//! All systems are driven through the `ConcurrentMap` batch methods (see
+//! fig6); a per-op reference run of Hive quantifies the batching speedup,
+//! and both numbers land in `bench_out/fig7_bulk_query.json`.
+//!
 //! Run: `cargo bench --bench fig7_bulk_query`
 
 use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike, WarpCoreLike};
-use hivehash::report::{bench_max_pow, bench_threads, drive_parallel, mops, Table};
+use hivehash::report::json::{bench_row, save_figure, JsonVal};
+use hivehash::report::{
+    bench_batch, bench_max_pow, bench_threads, drive_parallel, drive_parallel_batched, mops,
+    Table,
+};
 use hivehash::workload::{bulk_insert, bulk_lookup};
 use hivehash::{HiveConfig, HiveTable};
 use std::sync::Arc;
 
 fn main() {
     let threads = bench_threads();
+    let batch = bench_batch();
     let max_pow = bench_max_pow(20, 25);
     let mut table = Table::new(
-        &format!("Fig. 7 — bulk query MOPS ({threads} threads, pre-filled tables)"),
-        &["keys", "HiveHash", "WarpCore", "DyCuckoo", "SlabHash", "hive/dycuckoo"],
+        &format!("Fig. 7 — bulk query MOPS ({threads} threads, batch {batch}, pre-filled tables)"),
+        &[
+            "keys",
+            "Hive(batched)",
+            "Hive(per-op)",
+            "batch-x",
+            "WarpCore",
+            "DyCuckoo",
+            "SlabHash",
+            "hive/dycuckoo",
+        ],
     );
+    let mut json_rows: Vec<JsonVal> = Vec::new();
 
     for pow in 17..=max_pow {
         let n = 1usize << pow;
         let fill = bulk_insert(n, 0x7007 + pow as u64);
+        let pairs: Vec<(u32, u32)> = fill
+            .iter()
+            .filter_map(|o| match *o {
+                hivehash::workload::Op::Insert { key, value } => Some((key, value)),
+                _ => None,
+            })
+            .collect();
         let keys: Vec<u32> = fill.iter().map(|o| o.key()).collect();
         let queries = bulk_lookup(&keys);
+
+        // Per-op reference: pre-batching driver on a fresh pre-filled Hive.
+        let per_op_map: Arc<dyn ConcurrentMap> =
+            Arc::new(HiveTable::new(HiveConfig::for_capacity(n, 0.95)).unwrap());
+        per_op_map.insert_batch(&pairs).unwrap();
+        let per_op = mops(n, drive_parallel(Arc::clone(&per_op_map), &queries, threads));
 
         let builders: Vec<Arc<dyn ConcurrentMap>> = vec![
             Arc::new(HiveTable::new(HiveConfig::for_capacity(n, 0.95)).unwrap()),
@@ -33,23 +65,27 @@ fn main() {
             Arc::new(SlabHashLike::for_capacity(n)),
         ];
         let mut results = Vec::new();
-        for map in builders {
-            // pre-fill single-threaded (not timed)
-            for op in &fill {
-                if let hivehash::workload::Op::Insert { key, value } = *op {
-                    map.insert(key, value).unwrap();
-                }
-            }
-            let dur = drive_parallel(Arc::clone(&map), &queries, threads);
+        for map in &builders {
+            // pre-fill through the batch interface (not timed)
+            map.insert_batch(&pairs).unwrap();
+            let dur = drive_parallel_batched(Arc::clone(map), &queries, threads, batch);
             results.push(mops(n, dur));
+            json_rows.push(bench_row("keys", n, map.name(), "batched", results[results.len() - 1]));
         }
-        let mut row = vec![format!("2^{pow}")];
-        for r in &results {
-            row.push(format!("{r:.1}"));
-        }
-        row.push(format!("{:.2}x", results[0] / results[2]));
-        table.row(row);
+        json_rows.push(bench_row("keys", n, "HiveHash", "per_op", per_op));
+
+        table.row(vec![
+            format!("2^{pow}"),
+            format!("{:.1}", results[0]),
+            format!("{per_op:.1}"),
+            format!("{:.2}x", results[0] / per_op),
+            format!("{:.1}", results[1]),
+            format!("{:.1}", results[2]),
+            format!("{:.1}", results[3]),
+            format!("{:.2}x", results[0] / results[2]),
+        ]);
     }
     table.emit(Some("bench_out/fig7_bulk_query.csv"));
+    save_figure("fig7_bulk_query", threads, batch, json_rows);
     println!("paper shape: Hive highest and stable; DyCuckoo declines with scale (d-subtable probing)");
 }

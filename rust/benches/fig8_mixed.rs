@@ -5,45 +5,69 @@
 //! near 2^21 then declines (eviction cascades); WarpCore excluded — its
 //! per-thread atomic model has no safe concurrent delete.
 //!
+//! All systems are driven through the `ConcurrentMap` batch methods;
+//! within each per-thread window ops execute grouped (insert → delete →
+//! lookup), the same window linearization the coordinator's backend uses.
+//! A per-op reference run of Hive quantifies the batching speedup; both
+//! numbers land in `bench_out/fig8_mixed.json`.
+//!
 //! Run: `cargo bench --bench fig8_mixed`
 
 use hivehash::baselines::{ConcurrentMap, DyCuckooLike, SlabHashLike};
-use hivehash::report::{bench_max_pow, bench_threads, drive_parallel, mops, Table};
+use hivehash::report::json::{bench_row, save_figure, JsonVal};
+use hivehash::report::{
+    bench_batch, bench_max_pow, bench_threads, drive_parallel, drive_parallel_batched, mops,
+    Table,
+};
 use hivehash::workload::{mixed, Mix};
 use hivehash::{HiveConfig, HiveTable};
 use std::sync::Arc;
 
 fn main() {
     let threads = bench_threads();
+    let batch = bench_batch();
     let max_pow = bench_max_pow(20, 25);
     let mut table = Table::new(
-        &format!("Fig. 8 — mixed 0.5:0.3:0.2 MOPS ({threads} threads); WarpCore excluded (unsafe concurrent delete)"),
-        &["ops", "HiveHash", "DyCuckoo", "SlabHash", "hive/slab"],
+        &format!("Fig. 8 — mixed 0.5:0.3:0.2 MOPS ({threads} threads, batch {batch}); WarpCore excluded (unsafe concurrent delete)"),
+        &["ops", "Hive(batched)", "Hive(per-op)", "batch-x", "DyCuckoo", "SlabHash", "hive/slab"],
     );
+    let mut json_rows: Vec<JsonVal> = Vec::new();
 
     for pow in 17..=max_pow {
         let n = 1usize << pow;
         let ops = mixed(n, Mix::PAPER_IMBALANCED, 0x8008 + pow as u64);
         // live set peaks around n/2; capacity planned for that
         let cap = n * 6 / 10;
+
+        let per_op_map: Arc<dyn ConcurrentMap> =
+            Arc::new(HiveTable::new(HiveConfig::for_capacity(cap, 0.9)).unwrap());
+        let per_op = mops(n, drive_parallel(Arc::clone(&per_op_map), &ops, threads));
+
         let builders: Vec<Arc<dyn ConcurrentMap>> = vec![
             Arc::new(HiveTable::new(HiveConfig::for_capacity(cap, 0.9)).unwrap()),
             Arc::new(DyCuckooLike::for_capacity(cap)),
             Arc::new(SlabHashLike::for_capacity(cap)),
         ];
         let mut results = Vec::new();
-        for map in builders {
-            let dur = drive_parallel(Arc::clone(&map), &ops, threads);
+        for map in &builders {
+            let dur = drive_parallel_batched(Arc::clone(map), &ops, threads, batch);
             results.push(mops(n, dur));
+            json_rows.push(bench_row("ops", n, map.name(), "batched", results[results.len() - 1]));
         }
-        let mut row = vec![format!("2^{pow}")];
-        for r in &results {
-            row.push(format!("{r:.1}"));
-        }
-        row.push(format!("{:.2}x", results[0] / results[2]));
-        table.row(row);
+        json_rows.push(bench_row("ops", n, "HiveHash", "per_op", per_op));
+
+        table.row(vec![
+            format!("2^{pow}"),
+            format!("{:.1}", results[0]),
+            format!("{per_op:.1}"),
+            format!("{:.2}x", results[0] / per_op),
+            format!("{:.1}", results[1]),
+            format!("{:.1}", results[2]),
+            format!("{:.2}x", results[0] / results[2]),
+        ]);
     }
     table.emit(Some("bench_out/fig8_mixed.csv"));
+    save_figure("fig8_mixed", threads, batch, json_rows);
     println!("paper shape: Hive stable; SlabHash collapses at scale; DyCuckoo peaks early then declines");
 
     // --- GPU cost-model churn comparison (the Fig. 8 collapse) ---

@@ -33,32 +33,35 @@ impl NativeBackend {
 
 impl Backend for NativeBackend {
     fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
-        use crate::core::error::HiveError;
         use crate::native::table::InsertOutcome;
         let (ins, del, luk) = group_ops(ops);
         let mut res = BatchResult::default();
-        for (_, key, value) in ins {
-            let outcome = match self.table.insert(key, value) {
-                Ok(o) => o,
-                Err(HiveError::TableFull) => {
-                    // a window can outgrow capacity before the between-batch
-                    // resize check fires: grow one K-batch and retry once
-                    self.table.grow_buckets(self.table.config().resize_batch);
-                    self.table.insert(key, value)?
+        // Forward each op class to the table's bulk fast path: one phase
+        // guard acquisition per class instead of one per op.
+        if !ins.is_empty() {
+            let pairs: Vec<(u32, u32)> = ins.iter().map(|&(_, k, v)| (k, v)).collect();
+            // `insert_batch` validates keys up front and never fails
+            // mid-batch: a window that outgrows capacity parks words
+            // pending the next resize epoch (§IV-A step 4) instead of
+            // erroring, and the between-batch resize controller grows the
+            // table. Errors here are therefore pre-mutation and safe to
+            // propagate without retry logic.
+            let outcomes = self.table.insert_batch(&pairs)?;
+            for outcome in outcomes {
+                match outcome {
+                    InsertOutcome::Replaced => res.replaced += 1,
+                    InsertOutcome::Stashed => res.stashed += 1,
+                    _ => res.inserted += 1,
                 }
-                Err(e) => return Err(e),
-            };
-            match outcome {
-                InsertOutcome::Replaced => res.replaced += 1,
-                InsertOutcome::Stashed => res.stashed += 1,
-                _ => res.inserted += 1,
             }
         }
-        for (_, key) in del {
-            res.deletes.push(self.table.delete(key));
+        if !del.is_empty() {
+            let keys: Vec<u32> = del.iter().map(|&(_, k)| k).collect();
+            res.deletes = self.table.delete_batch(&keys);
         }
-        for (_, key) in luk {
-            res.lookups.push(self.table.lookup(key));
+        if !luk.is_empty() {
+            let keys: Vec<u32> = luk.iter().map(|&(_, k)| k).collect();
+            res.lookups = self.table.lookup_batch(&keys);
         }
         Ok(res)
     }

@@ -312,13 +312,21 @@ impl super::ConcurrentMap for DyCuckooLike {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::suite::common_suite;
+    use crate::baselines::suite::{batch_suite, common_suite};
     use crate::baselines::ConcurrentMap;
 
     #[test]
     fn satisfies_common_suite() {
         let t = DyCuckooLike::for_capacity(4000);
         common_suite(&t, 2000);
+    }
+
+    #[test]
+    fn satisfies_batch_suite() {
+        // default trait impls loop the single-op path; this keeps the
+        // batched benches apples-to-apples across all baselines
+        let t = DyCuckooLike::for_capacity(4000);
+        batch_suite(&t, 2000);
     }
 
     #[test]

@@ -48,6 +48,43 @@ pub trait ConcurrentMap: Send + Sync {
     fn supports_concurrent_delete(&self) -> bool {
         true
     }
+
+    // ---- Batched operations -------------------------------------------
+    //
+    // Bulk entry points mirroring the GPU tables' kernel-granularity
+    // dispatch. The default impls loop the single-op path, so every
+    // baseline is drivable through the same batch interface and the
+    // Hive-vs-baseline ratios stay apples-to-apples; tables with a real
+    // bulk fast path (HiveTable) override them.
+
+    /// Bulk insert/replace, one pair per op in submission order. The
+    /// default attempts **every** pair even if some fail (mirroring the
+    /// per-op bench driver, which drops individual failures and carries
+    /// on) and returns the first error afterwards, so a single failed
+    /// eviction cascade near peak load does not silently skip the rest
+    /// of a window.
+    fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<()> {
+        let mut first_err = None;
+        for &(key, value) in pairs {
+            if let Err(e) = self.insert(key, value) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Bulk lookup: one `Option<u32>` per key, in submission order.
+    fn lookup_batch(&self, keys: &[u32]) -> Vec<Option<u32>> {
+        keys.iter().map(|&key| self.lookup(key)).collect()
+    }
+
+    /// Bulk delete: one hit flag per key, in submission order.
+    fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
+        keys.iter().map(|&key| self.delete(key)).collect()
+    }
 }
 
 impl ConcurrentMap for HiveTable {
@@ -68,6 +105,17 @@ impl ConcurrentMap for HiveTable {
     }
     fn max_load_factor(&self) -> f64 {
         0.95
+    }
+    // Forward the batch interface to the native bulk fast path (one phase
+    // guard per batch, hash-ahead, pipelined probes — `native::batch`).
+    fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<()> {
+        HiveTable::insert_batch(self, pairs).map(|_| ())
+    }
+    fn lookup_batch(&self, keys: &[u32]) -> Vec<Option<u32>> {
+        HiveTable::lookup_batch(self, keys)
+    }
+    fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
+        HiveTable::delete_batch(self, keys)
     }
 }
 
@@ -104,10 +152,44 @@ pub(crate) mod suite {
         }
     }
 
+    /// Exercise the batch trait methods (default impls or overrides)
+    /// against the single-op path on a fresh key range.
+    pub(crate) fn batch_suite(map: &dyn ConcurrentMap, n: u32) {
+        let base = 1_000_000u32;
+        let pairs: Vec<(u32, u32)> = (1..=n).map(|k| (base + k, k.wrapping_mul(13))).collect();
+        map.insert_batch(&pairs).unwrap();
+        assert_eq!(map.len(), n as usize, "{} batch insert count", map.name());
+        let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+        let got = map.lookup_batch(&keys);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, Some((i as u32 + 1).wrapping_mul(13)), "{} batch lookup", map.name());
+        }
+        // batch results must agree with the single-op path
+        for &k in &keys[..(n as usize).min(64)] {
+            assert_eq!(map.lookup(k), map.lookup_batch(&[k])[0], "{} path mismatch", map.name());
+        }
+        // batch replace must not duplicate
+        map.insert_batch(&pairs).unwrap();
+        assert_eq!(map.len(), n as usize, "{} batch replace duplicated", map.name());
+        if map.supports_concurrent_delete() {
+            let hits = map.delete_batch(&keys);
+            assert!(hits.iter().all(|&h| h), "{} batch delete missed", map.name());
+            assert_eq!(map.len(), 0);
+            assert!(map.lookup_batch(&keys).iter().all(Option::is_none));
+        }
+    }
+
     #[test]
     fn hive_satisfies_common_suite() {
         use crate::core::config::HiveConfig;
         let t = HiveTable::new(HiveConfig::default().with_buckets(64)).unwrap();
         common_suite(&t, 1000);
+    }
+
+    #[test]
+    fn hive_satisfies_batch_suite() {
+        use crate::core::config::HiveConfig;
+        let t = HiveTable::new(HiveConfig::default().with_buckets(64)).unwrap();
+        batch_suite(&t, 1000);
     }
 }

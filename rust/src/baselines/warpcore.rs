@@ -183,7 +183,7 @@ impl super::ConcurrentMap for WarpCoreLike {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::suite::common_suite;
+    use crate::baselines::suite::{batch_suite, common_suite};
     use crate::baselines::ConcurrentMap;
 
     #[test]
@@ -192,6 +192,13 @@ mod tests {
         // tests sequential delete via the flag check — here it is skipped.
         let t = WarpCoreLike::for_capacity(4000);
         common_suite(&t, 2000);
+    }
+
+    #[test]
+    fn satisfies_batch_suite() {
+        // batch_suite likewise skips the delete leg via the capability flag
+        let t = WarpCoreLike::for_capacity(4000);
+        batch_suite(&t, 2000);
     }
 
     #[test]

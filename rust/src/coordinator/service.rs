@@ -173,6 +173,27 @@ impl Handle {
         }
     }
 
+    /// Bulk insert/replace: shards by key and rides the workers' batched
+    /// backend path (one phase-guard acquisition per shard window instead
+    /// of one per op). Returns the merged batch counters.
+    pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<BatchResult> {
+        let ops: Vec<Op> =
+            pairs.iter().map(|&(key, value)| Op::Insert { key, value }).collect();
+        self.submit(&ops)
+    }
+
+    /// Bulk lookup in submission order, via the batched backend path.
+    pub fn lookup_batch(&self, keys: &[u32]) -> Result<Vec<Option<u32>>> {
+        let ops: Vec<Op> = keys.iter().map(|&key| Op::Lookup { key }).collect();
+        Ok(self.submit(&ops)?.lookups)
+    }
+
+    /// Bulk delete in submission order, via the batched backend path.
+    pub fn delete_batch(&self, keys: &[u32]) -> Result<Vec<bool>> {
+        let ops: Vec<Op> = keys.iter().map(|&key| Op::Delete { key }).collect();
+        Ok(self.submit(&ops)?.deletes)
+    }
+
     /// Submit a pre-batched workload: ops are sharded by key, executed on
     /// all workers, and the per-class results are reassembled in
     /// submission order.
@@ -415,6 +436,25 @@ mod tests {
         let deletes: Vec<Op> = (1..=250u32).map(|k| Op::Delete { key: k }).collect();
         let r = h.submit(&deletes).unwrap();
         assert!(r.deletes.iter().all(|&d| d));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn handle_batch_api_roundtrip() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        let pairs: Vec<(u32, u32)> = (1..=300u32).map(|k| (k, k * 5)).collect();
+        let r = h.insert_batch(&pairs).unwrap();
+        assert_eq!(r.inserted, 300);
+        let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+        let vals = h.lookup_batch(&keys).unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, Some((i as u32 + 1) * 5), "lookup {i}");
+        }
+        let hits = h.delete_batch(&keys[..100]).unwrap();
+        assert!(hits.iter().all(|&d| d));
+        let vals = h.lookup_batch(&keys[..100]).unwrap();
+        assert!(vals.iter().all(Option::is_none));
         coord.shutdown();
     }
 

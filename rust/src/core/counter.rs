@@ -1,0 +1,127 @@
+//! Cache-line-padded striped counter for hot shared tallies.
+//!
+//! The GPU table tracks occupancy with one global atomic that every warp
+//! updates; the CPU analogue — a single `AtomicUsize` hit by every
+//! insert/delete — becomes a coherence hot spot: one cache line ping-pongs
+//! between all cores, and at batch op rates the `lock xadd` traffic
+//! dominates the actual probe work. [`StripedCounter`] splits the tally
+//! across [`STRIPES`] cache-line-padded cells; each thread is assigned a
+//! home stripe at first use, so concurrent updates from different threads
+//! land on distinct lines. Reads sum all stripes — exact when quiescent,
+//! approximate under concurrent updates (the same contract as the single
+//! atomic it replaces).
+
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+
+/// Stripe count (power of two). 16 stripes × 128 B = 2 KiB per counter —
+/// enough to spread realistic CPU thread counts with rare collisions.
+pub const STRIPES: usize = 16;
+
+/// One padded cell. 128-byte alignment keeps stripes on distinct lines
+/// even with the x86 adjacent-line prefetcher pairing 64-byte lines.
+#[repr(align(128))]
+struct Stripe(AtomicI64);
+
+/// A signed striped counter. Individual stripes may go negative (a thread
+/// that only deletes drives its stripe below zero) even though the logical
+/// total stays non-negative; [`StripedCounter::sum`] clamps at zero.
+pub struct StripedCounter {
+    stripes: [Stripe; STRIPES],
+}
+
+impl Default for StripedCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StripedCounter {
+    /// New counter at zero.
+    pub fn new() -> Self {
+        StripedCounter { stripes: std::array::from_fn(|_| Stripe(AtomicI64::new(0))) }
+    }
+
+    /// This thread's home stripe: threads are numbered in first-use order
+    /// and mapped round-robin, so up to [`STRIPES`] concurrent threads
+    /// never share a line.
+    #[inline]
+    fn home() -> usize {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        thread_local! {
+            static HOME: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+        }
+        HOME.with(|h| *h) & (STRIPES - 1)
+    }
+
+    /// Add `delta` (possibly negative) to this thread's home stripe.
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.stripes[Self::home()].0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Decrement by one.
+    #[inline]
+    pub fn decr(&self) {
+        self.add(-1);
+    }
+
+    /// Sum of all stripes, clamped at zero. Exact when no updates are in
+    /// flight; otherwise approximate, like any concurrently-read counter.
+    pub fn sum(&self) -> usize {
+        let total: i64 = self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum();
+        total.max(0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn starts_at_zero_and_counts() {
+        let c = StripedCounter::new();
+        assert_eq!(c.sum(), 0);
+        c.incr();
+        c.incr();
+        c.decr();
+        assert_eq!(c.sum(), 1);
+        c.add(10);
+        assert_eq!(c.sum(), 11);
+    }
+
+    #[test]
+    fn concurrent_updates_sum_exactly() {
+        let c = Arc::new(StripedCounter::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.incr();
+                    }
+                    for _ in 0..2_500 {
+                        c.decr();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.sum(), 8 * 7_500);
+    }
+
+    #[test]
+    fn stripes_are_padded() {
+        // each stripe occupies its own (pair of) cache line(s)
+        assert_eq!(std::mem::align_of::<Stripe>(), 128);
+        assert!(std::mem::size_of::<StripedCounter>() >= STRIPES * 128);
+    }
+}

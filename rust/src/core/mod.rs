@@ -3,9 +3,12 @@
 
 pub mod packed;
 pub mod config;
+pub mod counter;
 pub mod error;
 pub mod rng;
 pub mod histogram;
+
+pub use counter::StripedCounter;
 
 /// Number of slots per bucket. One warp (32 lanes) probes one bucket with
 /// one lane per slot (paper §III-A); a full bucket of 64-bit entries is

@@ -19,7 +19,9 @@
 //!    in [`native::table`] / [`simgpu`].
 //! 2. *Warp-cooperative protocols (WABC / WCME)* → lane-accurate versions in
 //!    [`simgpu`] over the [`simt`] simulator, atomic-CAS versions in
-//!    [`native::ops`], and vectorized bulk versions in the Pallas kernels.
+//!    [`native::table`] (single-op) and [`native::batch`] (bulk,
+//!    kernel-launch-shaped), and vectorized bulk versions in the Pallas
+//!    kernels.
 //! 3. *Load-aware linear-hashing resize* → [`native::resize`] and the
 //!    coordinator's [`coordinator::resize_ctl`].
 //!

@@ -1,0 +1,167 @@
+//! Batched operations — the paper's bulk-kernel-launch shape on CPU.
+//!
+//! The GPU table gets its throughput from *batch-granularity dispatch*:
+//! one kernel launch amortizes setup over millions of operations, and the
+//! warps inside it overlap each other's memory latency. The per-op CPU
+//! path pays the amortizable costs on **every** call — a phase `RwLock`
+//! read acquisition (an atomic RMW on a shared line) per op. The batch
+//! entry points here restore the kernel-launch shape:
+//!
+//! 1. **One guard acquisition per batch.** The phase read guard is taken
+//!    once and held across the whole batch; resize (which takes the write
+//!    side) waits for batch boundaries, exactly like a GPU resize kernel
+//!    waits for the previous operation kernel to drain.
+//! 2. **Hash-ahead.** Candidate buckets for the *entire* batch are
+//!    computed up front into a dense candidate table, separating the
+//!    arithmetic (hashing) phase from the memory (probing) phase.
+//! 3. **Software-pipelined probes.** While op *i* probes, op *i+1*'s
+//!    first bucket row is touched (free mask + first slot word), a
+//!    prefetch-style hint that overlaps the next op's cache miss with the
+//!    current op's compare loop — the CPU analogue of warp-level latency
+//!    hiding.
+//!
+//! Batched and single-op execution share the same `*_locked` bodies in
+//! [`crate::native::table`], so their observable behaviour is identical;
+//! a batch interleaved with concurrent single ops is a legal
+//! linearization of both.
+
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::EMPTY_KEY;
+use crate::core::SLOTS_PER_BUCKET;
+use crate::native::table::{HiveTable, InsertOutcome, State};
+use std::sync::atomic::Ordering;
+
+/// Prefetch-style touch of `bucket`'s metadata + first slot word. A plain
+/// relaxed load is enough to pull both lines toward this core before the
+/// pipelined probe for the next op lands on them.
+#[inline(always)]
+fn touch_bucket(state: &State, bucket: u32) {
+    let _ = state.free_mask[bucket as usize].load(Ordering::Relaxed);
+    let _ = state.buckets[bucket as usize * SLOTS_PER_BUCKET].load(Ordering::Relaxed);
+}
+
+impl HiveTable {
+    /// Bulk Insert/Replace: one phase-guard acquisition, hash-ahead, and
+    /// pipelined probes for the whole batch (module docs). Returns one
+    /// [`InsertOutcome`] per pair, in submission order.
+    ///
+    /// Errors (without mutating the table) if any key is the reserved
+    /// EMPTY sentinel — the batch analogue of the single-op
+    /// `InvalidKey` check.
+    pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<InsertOutcome>> {
+        if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
+            return Err(HiveError::InvalidKey(bad));
+        }
+        let state = self.state.read().unwrap();
+        let cands: Vec<[u32; 4]> =
+            pairs.iter().map(|&(k, _)| self.candidates(&state, k)).collect();
+        let mut out = Vec::with_capacity(pairs.len());
+        for (i, &(key, value)) in pairs.iter().enumerate() {
+            if i + 1 < pairs.len() {
+                touch_bucket(&state, cands[i + 1][0]);
+            }
+            let outcome = self.insert_locked(&state, key, value, &cands[i])?;
+            self.record_insert_outcome(outcome);
+            out.push(outcome);
+        }
+        Ok(out)
+    }
+
+    /// Bulk Search: one `Option<u32>` per key, in submission order. Keys
+    /// equal to the EMPTY sentinel yield `None`, as in the single-op path.
+    pub fn lookup_batch(&self, keys: &[u32]) -> Vec<Option<u32>> {
+        let state = self.state.read().unwrap();
+        let cands: Vec<[u32; 4]> =
+            keys.iter().map(|&k| self.candidates(&state, k)).collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            if i + 1 < keys.len() {
+                touch_bucket(&state, cands[i + 1][0]);
+            }
+            out.push(if key == EMPTY_KEY {
+                None
+            } else {
+                self.lookup_locked(&state, key, &cands[i])
+            });
+        }
+        out
+    }
+
+    /// Bulk Delete: one hit flag per key, in submission order. Keys equal
+    /// to the EMPTY sentinel yield `false`, as in the single-op path.
+    pub fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
+        let state = self.state.read().unwrap();
+        let cands: Vec<[u32; 4]> =
+            keys.iter().map(|&k| self.candidates(&state, k)).collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for (i, &key) in keys.iter().enumerate() {
+            if i + 1 < keys.len() {
+                touch_bucket(&state, cands[i + 1][0]);
+            }
+            out.push(key != EMPTY_KEY && self.delete_locked(&state, key, &cands[i]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::core::config::HiveConfig;
+    use crate::core::packed::EMPTY_KEY;
+    use crate::native::table::{HiveTable, InsertOutcome};
+
+    fn table(buckets: usize) -> HiveTable {
+        HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap()
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let t = table(64);
+        let pairs: Vec<(u32, u32)> = (1..=1000u32).map(|k| (k, k * 3)).collect();
+        let outcomes = t.insert_batch(&pairs).unwrap();
+        assert_eq!(outcomes.len(), 1000);
+        assert!(outcomes.iter().all(|o| *o != InsertOutcome::Replaced));
+        assert_eq!(t.len(), 1000);
+        let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+        let vals = t.lookup_batch(&keys);
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, Some((i as u32 + 1) * 3), "key {}", i + 1);
+        }
+        let hits = t.delete_batch(&keys[..500]);
+        assert!(hits.iter().all(|&h| h));
+        assert_eq!(t.len(), 500);
+        let vals = t.lookup_batch(&keys);
+        assert!(vals[..500].iter().all(Option::is_none));
+        assert!(vals[500..].iter().all(Option::is_some));
+    }
+
+    #[test]
+    fn batch_replace_reports_replaced() {
+        let t = table(16);
+        t.insert_batch(&[(7, 70), (8, 80)]).unwrap();
+        let outcomes = t.insert_batch(&[(7, 71), (9, 90)]).unwrap();
+        assert_eq!(outcomes[0], InsertOutcome::Replaced);
+        assert_ne!(outcomes[1], InsertOutcome::Replaced);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.lookup(7), Some(71));
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let t = table(4);
+        assert!(t.insert_batch(&[]).unwrap().is_empty());
+        assert!(t.lookup_batch(&[]).is_empty());
+        assert!(t.delete_batch(&[]).is_empty());
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn sentinel_key_handling() {
+        let t = table(4);
+        assert!(t.insert_batch(&[(1, 1), (EMPTY_KEY, 2)]).is_err());
+        // the failed batch must not have mutated the table
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.lookup_batch(&[EMPTY_KEY, 1]), vec![None, None]);
+        assert_eq!(t.delete_batch(&[EMPTY_KEY]), vec![false]);
+    }
+}

@@ -12,6 +12,7 @@
 //! points); the *intra-warp* 32-lane cooperation becomes a 32-slot scan the
 //! compiler vectorizes. The lane-accurate version lives in [`crate::simgpu`].
 
+pub mod batch;
 pub mod stash;
 pub mod stats;
 pub mod table;

@@ -17,6 +17,17 @@
 //! table's exclusive phase guard — the analogue of the GPU running resize
 //! as its own kernel launch between operation batches.
 //!
+//! ### Batched operations
+//! [`crate::native::batch`] adds `insert_batch` / `lookup_batch` /
+//! `delete_batch`: one phase read-guard acquisition per batch (not per
+//! op), candidate buckets hashed for the whole batch up front, and a
+//! software-pipelined probe loop that touches op *i+1*'s bucket row while
+//! probing op *i* — the CPU analogue of the paper's bulk kernel launches.
+//! The single-op paths below delegate to the same `*_locked` bodies, so
+//! batched and per-op execution are behaviourally identical. Occupancy is
+//! tracked by a cache-line-padded [`StripedCounter`] so concurrent batches
+//! do not serialize on one `count` cache line.
+//!
 //! ### Deviation from the paper
 //! Algorithm 2 line 15 restores a failed claim bit with `fetch_or`. With
 //! `fetch_and(!bit)`, a lost race means the bit was *already* zero, so the
@@ -25,6 +36,7 @@
 //! mask (no restore). See DESIGN.md §6.
 
 use crate::core::config::{HiveConfig, Layout};
+use crate::core::counter::StripedCounter;
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::{is_empty, pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
 use crate::core::{FULL_FREE_MASK, SLOTS_PER_BUCKET};
@@ -100,7 +112,10 @@ pub struct HiveTable {
     pub(crate) family: HashFamily,
     pub(crate) cfg: HiveConfig,
     pub(crate) stash: OverflowStash,
-    pub(crate) count: AtomicUsize,
+    /// Live-entry tally. Striped + cache-line padded: a single shared
+    /// `AtomicUsize` here bounces one line between every inserting and
+    /// deleting thread, which caps batch throughput (§Perf log).
+    pub(crate) count: StripedCounter,
     /// Words flagged *pending* because both the table and the stash were
     /// full (paper §IV-A step 4: "the operation is flagged as pending for
     /// deferred reinsertion during the next resize epoch"). Rare path —
@@ -131,7 +146,7 @@ impl HiveTable {
             state: RwLock::new(State::with_buckets(buckets, index_mask, 0)),
             family: HashFamily::new(cfg.hash_kinds.clone()),
             stash: OverflowStash::new(stash_cap),
-            count: AtomicUsize::new(0),
+            count: StripedCounter::new(),
             pending: std::sync::Mutex::new(Vec::new()),
             pending_len: AtomicUsize::new(0),
             stats: OpStats::default(),
@@ -147,7 +162,7 @@ impl HiveTable {
 
     /// Number of live entries (approximate under concurrency).
     pub fn len(&self) -> usize {
-        self.count.load(Ordering::Relaxed)
+        self.count.sum()
     }
 
     /// `true` if the table holds no entries.
@@ -244,12 +259,11 @@ impl HiveTable {
     /// Perf (§Perf log): slots are scanned with `Relaxed` loads — one
     /// `Acquire` fence on a hit establishes the publish ordering — which
     /// removes 32 acquire barriers per probe on weakly-ordered targets and
-    /// lets the compiler keep the loop tight on x86.
-    /// Perf (§Perf log): `Relaxed` loads + one `Acquire` fence on a hit.
-    /// Used by lookup/delete, whose operating point is a well-filled table
-    /// where a mask pre-load is pure overhead.
+    /// lets the compiler keep the loop tight on x86. Used by lookup/delete,
+    /// whose operating point is a well-filled table where a mask pre-load
+    /// is pure overhead.
     #[inline]
-    fn wcme_match(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
+    pub(crate) fn wcme_match(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
         let base = bucket as usize * SLOTS_PER_BUCKET;
         let key64 = key as u64;
         for lane in 0..SLOTS_PER_BUCKET {
@@ -291,16 +305,33 @@ impl HiveTable {
     // Public operations
     // ------------------------------------------------------------------
 
+    /// Candidate buckets `{h_1(k) .. h_d(k)}` under the current round
+    /// state. Only the first `family.d()` entries are meaningful.
+    #[inline]
+    pub(crate) fn candidates(&self, state: &State, key: u32) -> [u32; 4] {
+        let (mask, sp) = (state.index_mask, state.split_ptr);
+        let mut c = [0u32; 4];
+        for (i, slot) in c.iter_mut().enumerate().take(self.family.d()) {
+            *slot = self.family.bucket(i, key, mask, sp);
+        }
+        c
+    }
+
     /// Search(k): value of `key`, or `None` (paper §III-D).
     pub fn lookup(&self, key: u32) -> Option<u32> {
         if key == EMPTY_KEY {
             return None;
         }
         let state = self.state.read().unwrap();
-        let (mask, sp) = (state.index_mask, state.split_ptr);
-        for i in 0..self.family.d() {
-            let b = self.family.bucket(i, key, mask, sp);
-            if let Some((_, w)) = Self::wcme_match(&state, b, key) {
+        let cands = self.candidates(&state, key);
+        self.lookup_locked(&state, key, &cands)
+    }
+
+    /// Lookup body, called with the phase read guard held and the
+    /// candidate buckets already hashed (shared with the batch layer).
+    pub(crate) fn lookup_locked(&self, state: &State, key: u32, cands: &[u32; 4]) -> Option<u32> {
+        for &b in &cands[..self.family.d()] {
+            if let Some((_, w)) = Self::wcme_match(state, b, key) {
                 self.stats.record_lookup(true);
                 return Some(unpack_value(w));
             }
@@ -327,13 +358,18 @@ impl HiveTable {
             return false;
         }
         let state = self.state.read().unwrap();
-        let (mask, sp) = (state.index_mask, state.split_ptr);
-        for i in 0..self.family.d() {
-            let b = self.family.bucket(i, key, mask, sp);
+        let cands = self.candidates(&state, key);
+        self.delete_locked(&state, key, &cands)
+    }
+
+    /// Delete body, called with the phase read guard held and the
+    /// candidate buckets already hashed (shared with the batch layer).
+    pub(crate) fn delete_locked(&self, state: &State, key: u32, cands: &[u32; 4]) -> bool {
+        for &b in &cands[..self.family.d()] {
             // Retry the CAS a bounded number of times: a failed CAS means a
             // concurrent replace updated the value — rescan and retry.
             for _attempt in 0..4 {
-                match Self::wcme_match(&state, b, key) {
+                match Self::wcme_match(state, b, key) {
                     None => break,
                     Some((lane, w)) => {
                         let slot = state.slot(b, lane);
@@ -344,7 +380,7 @@ impl HiveTable {
                             // Publish the vacancy (Algorithm 4 line 14).
                             state.free_mask[b as usize]
                                 .fetch_or(1u32 << lane, Ordering::AcqRel);
-                            self.count.fetch_sub(1, Ordering::Relaxed);
+                            self.count.decr();
                             self.stats.record_delete(true);
                             return true;
                         }
@@ -354,12 +390,12 @@ impl HiveTable {
             }
         }
         if !self.stash.is_quiescent() && self.stash.delete(key) {
-            self.count.fetch_sub(1, Ordering::Relaxed);
+            self.count.decr();
             self.stats.record_delete(true);
             return true;
         }
         if self.pending_delete(key) {
-            self.count.fetch_sub(1, Ordering::Relaxed);
+            self.count.decr();
             self.stats.record_delete(true);
             return true;
         }
@@ -373,27 +409,34 @@ impl HiveTable {
             return Err(HiveError::InvalidKey(key));
         }
         let state = self.state.read().unwrap();
-        let outcome = self.insert_locked(&state, key, value)?;
+        let cands = self.candidates(&state, key);
+        let outcome = self.insert_locked(&state, key, value, &cands)?;
+        self.record_insert_outcome(outcome);
+        Ok(outcome)
+    }
+
+    /// Bump the per-step insert counters (shared with the batch layer).
+    #[inline]
+    pub(crate) fn record_insert_outcome(&self, outcome: InsertOutcome) {
         match outcome {
             InsertOutcome::Replaced => self.stats.record_insert(Step::Replace),
             InsertOutcome::Inserted => self.stats.record_insert(Step::Claim),
             InsertOutcome::Evicted => self.stats.record_insert(Step::Evict),
             InsertOutcome::Stashed => self.stats.record_insert(Step::Stash),
         }
-        Ok(outcome)
     }
 
-    /// Insert body, called with the phase read guard held.
-    fn insert_locked(&self, state: &State, key: u32, value: u32) -> Result<InsertOutcome> {
-        let (mask, sp) = (state.index_mask, state.split_ptr);
+    /// Insert body, called with the phase read guard held and the
+    /// candidate buckets already hashed (shared with the batch layer).
+    pub(crate) fn insert_locked(
+        &self,
+        state: &State,
+        key: u32,
+        value: u32,
+        cands: &[u32; 4],
+    ) -> Result<InsertOutcome> {
         let d = self.family.d();
         let new_word = pack(key, value);
-
-        // Candidate buckets {h_1(k) .. h_d(k)}.
-        let mut cands = [0u32; 4];
-        for i in 0..d {
-            cands[i] = self.family.bucket(i, key, mask, sp);
-        }
 
         // ---- Step 1: Replace (Algorithm 1) ----
         for &b in &cands[..d] {
@@ -438,7 +481,7 @@ impl HiveTable {
         }
         for &i in &order[..d] {
             if let Some(_lane) = self.wabc_claim_commit(state, cands[i], new_word) {
-                self.count.fetch_add(1, Ordering::Relaxed);
+                self.count.incr();
                 return Ok(InsertOutcome::Inserted);
             }
         }
@@ -446,7 +489,7 @@ impl HiveTable {
         // ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
         match self.cuckoo_evict_insert(state, cands[0], new_word) {
             Some(()) => {
-                self.count.fetch_add(1, Ordering::Relaxed);
+                self.count.incr();
                 Ok(InsertOutcome::Evicted)
             }
             None => {
@@ -456,7 +499,7 @@ impl HiveTable {
                 if !self.stash.push(new_word) {
                     self.park_pending(new_word);
                 }
-                self.count.fetch_add(1, Ordering::Relaxed);
+                self.count.incr();
                 Ok(InsertOutcome::Stashed)
             }
         }

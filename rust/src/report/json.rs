@@ -1,0 +1,218 @@
+//! Minimal machine-readable JSON emission for bench outputs — no external
+//! deps (the registry has no serde). Benches write one `bench_out/*.json`
+//! next to each CSV so future PRs can track the perf trajectory
+//! automatically.
+
+use std::fmt::Write as _;
+
+/// A JSON value. Construct with the helper fns ([`obj`], [`arr`], and the
+/// `From` impls) and render with [`JsonVal::render`].
+#[derive(Debug, Clone)]
+pub enum JsonVal {
+    /// `null`.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Integer (emitted without a decimal point).
+    Int(i64),
+    /// Float; non-finite values render as `null`.
+    Num(f64),
+    /// String (escaped on render).
+    Str(String),
+    /// Array.
+    Arr(Vec<JsonVal>),
+    /// Object with insertion-ordered keys.
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl From<bool> for JsonVal {
+    fn from(v: bool) -> Self {
+        JsonVal::Bool(v)
+    }
+}
+impl From<i64> for JsonVal {
+    fn from(v: i64) -> Self {
+        JsonVal::Int(v)
+    }
+}
+impl From<usize> for JsonVal {
+    fn from(v: usize) -> Self {
+        JsonVal::Int(v as i64)
+    }
+}
+impl From<u32> for JsonVal {
+    fn from(v: u32) -> Self {
+        JsonVal::Int(v as i64)
+    }
+}
+impl From<f64> for JsonVal {
+    fn from(v: f64) -> Self {
+        JsonVal::Num(v)
+    }
+}
+impl From<&str> for JsonVal {
+    fn from(v: &str) -> Self {
+        JsonVal::Str(v.to_string())
+    }
+}
+impl From<String> for JsonVal {
+    fn from(v: String) -> Self {
+        JsonVal::Str(v)
+    }
+}
+impl From<Vec<JsonVal>> for JsonVal {
+    fn from(v: Vec<JsonVal>) -> Self {
+        JsonVal::Arr(v)
+    }
+}
+
+/// Object literal helper: `obj(vec![("keys", 42.into()), ...])`.
+pub fn obj(pairs: Vec<(&str, JsonVal)>) -> JsonVal {
+    JsonVal::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Array literal helper.
+pub fn arr(items: Vec<JsonVal>) -> JsonVal {
+    JsonVal::Arr(items)
+}
+
+/// One standard per-system bench row: `{<size_field>, system, driver,
+/// mops}` — the schema the Perf log tooling reads (`size_field` is
+/// `"keys"` for fig6/fig7, `"ops"` for fig8).
+pub fn bench_row(size_field: &str, n: usize, system: &str, driver: &str, mops: f64) -> JsonVal {
+    obj(vec![
+        (size_field, n.into()),
+        ("system", system.into()),
+        ("driver", driver.into()),
+        ("mops", mops.into()),
+    ])
+}
+
+/// Wrap bench rows in the standard figure envelope and save to
+/// `bench_out/<figure>.json`.
+pub fn save_figure(figure: &str, threads: usize, batch: usize, rows: Vec<JsonVal>) {
+    obj(vec![
+        ("figure", figure.into()),
+        ("threads", threads.into()),
+        ("batch", batch.into()),
+        ("rows", arr(rows)),
+    ])
+    .save(&format!("bench_out/{figure}.json"));
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl JsonVal {
+    fn write_into(&self, out: &mut String) {
+        match self {
+            JsonVal::Null => out.push_str("null"),
+            JsonVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonVal::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            JsonVal::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonVal::Str(s) => escape_into(out, s),
+            JsonVal::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_into(out);
+                }
+                out.push(']');
+            }
+            JsonVal::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(out, k);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    /// Write to `path` (creating parent dirs), logging like
+    /// [`super::Table::emit`].
+    pub fn save(&self, path: &str) {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, self.render()) {
+            eprintln!("warn: could not write {path}: {e}");
+        } else {
+            println!("(json saved to {path})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars_and_nesting() {
+        let v = obj(vec![
+            ("figure", "fig6".into()),
+            ("threads", 8usize.into()),
+            ("mops", 123.5f64.into()),
+            ("ok", true.into()),
+            ("missing", JsonVal::Null),
+            ("rows", arr(vec![obj(vec![("keys", 1048576usize.into())])])),
+        ]);
+        assert_eq!(
+            v.render(),
+            r#"{"figure":"fig6","threads":8,"mops":123.5,"ok":true,"missing":null,"rows":[{"keys":1048576}]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings_and_handles_nonfinite() {
+        let v = obj(vec![
+            ("s", "a\"b\\c\nd".into()),
+            ("inf", f64::INFINITY.into()),
+            ("nan", f64::NAN.into()),
+        ]);
+        assert_eq!(v.render(), r#"{"s":"a\"b\\c\nd","inf":null,"nan":null}"#);
+    }
+
+    #[test]
+    fn integers_have_no_decimal_point() {
+        assert_eq!(JsonVal::Int(3).render(), "3");
+        assert_eq!(JsonVal::Num(3.0).render(), "3");
+    }
+}

@@ -1,5 +1,8 @@
-//! Benchmark reporting: aligned tables, CSV emission, MOPS arithmetic and
-//! paper-comparison rows shared by `cargo bench` harnesses and the CLI.
+//! Benchmark reporting: aligned tables, CSV + JSON emission, MOPS
+//! arithmetic, paper-comparison rows, and the per-op / batched parallel
+//! drivers shared by `cargo bench` harnesses and the CLI.
+
+pub mod json;
 
 use std::fmt::Write as _;
 use std::time::Duration;
@@ -131,6 +134,70 @@ pub fn drive_parallel(
     start.elapsed()
 }
 
+/// Batched counterpart of [`drive_parallel`]: each thread splits its
+/// round-robin shard into `batch`-sized windows and drives every window
+/// through the [`ConcurrentMap`](crate::baselines::ConcurrentMap) batch
+/// methods (inserts, then deletes, then lookups — the same grouped-window
+/// linearization the coordinator's backend applies). Tables without a
+/// bulk fast path fall back to the trait's default loop, so the same
+/// driver compares all baselines fairly.
+pub fn drive_parallel_batched(
+    map: std::sync::Arc<dyn crate::baselines::ConcurrentMap>,
+    ops: &[crate::workload::Op],
+    threads: usize,
+    batch: usize,
+) -> Duration {
+    use crate::workload::Op;
+    assert!(batch > 0, "batch size must be positive");
+    let shards: Vec<Vec<Op>> = (0..threads)
+        .map(|t| ops.iter().skip(t).step_by(threads).copied().collect())
+        .collect();
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for shard in &shards {
+            let map = std::sync::Arc::clone(&map);
+            s.spawn(move || {
+                let mut ins: Vec<(u32, u32)> = Vec::with_capacity(batch);
+                let mut del: Vec<u32> = Vec::with_capacity(batch);
+                let mut luk: Vec<u32> = Vec::with_capacity(batch);
+                for window in shard.chunks(batch) {
+                    ins.clear();
+                    del.clear();
+                    luk.clear();
+                    for op in window {
+                        match *op {
+                            Op::Insert { key, value } => ins.push((key, value)),
+                            Op::Delete { key } => del.push(key),
+                            Op::Lookup { key } => luk.push(key),
+                        }
+                    }
+                    if !ins.is_empty() {
+                        let _ = map.insert_batch(&ins);
+                    }
+                    if !del.is_empty() {
+                        let _ = map.delete_batch(&del);
+                    }
+                    if !luk.is_empty() {
+                        let _ = map.lookup_batch(&luk);
+                    }
+                }
+            });
+        }
+    });
+    start.elapsed()
+}
+
+/// Per-thread batch window for the batched driver: `HIVE_BENCH_BATCH`,
+/// default 4096 ops (big enough to amortize the phase guard, small enough
+/// to keep the candidate table cache-resident).
+pub fn bench_batch() -> usize {
+    std::env::var("HIVE_BENCH_BATCH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&b| b > 0)
+        .unwrap_or(4096)
+}
+
 /// Benchmark scale from the environment: `HIVE_BENCH_SCALE` ∈
 /// {smoke, small, paper}; defaults to `small`. Returns the max log2 key
 /// count per figure (the paper sweeps 2^20..2^25 on a 4090; CPU defaults
@@ -182,5 +249,18 @@ mod tests {
     fn row_width_mismatch_panics() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn batched_driver_executes_all_ops() {
+        use crate::baselines::ConcurrentMap;
+        use std::sync::Arc;
+        let t = Arc::new(crate::native::table::HiveTable::with_capacity(4096, 0.8).unwrap());
+        let ops = crate::workload::bulk_insert(2048, 42);
+        let map: Arc<dyn ConcurrentMap> = Arc::clone(&t) as Arc<dyn ConcurrentMap>;
+        drive_parallel_batched(map, &ops, 4, 128);
+        assert_eq!(t.len(), 2048);
+        let keys: Vec<u32> = ops.iter().map(|o| o.key()).collect();
+        assert!(t.lookup_batch(&keys).iter().all(Option::is_some));
     }
 }

@@ -1,0 +1,185 @@
+//! Integration tests for the batched operation layer: equivalence with
+//! the single-op path, batches racing concurrent single-op threads, and
+//! batches spanning resize epochs.
+
+use hivehash::workload::{mixed, Mix, Op};
+use hivehash::{HiveConfig, HiveTable};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Replay `ops` through the batch API, flushing one batch per run of
+/// same-class ops — the identical linearization to a single-op replay.
+fn replay_batched(t: &HiveTable, ops: &[Op]) {
+    let mut i = 0;
+    while i < ops.len() {
+        let mut j = i + 1;
+        while j < ops.len()
+            && std::mem::discriminant(&ops[j]) == std::mem::discriminant(&ops[i])
+        {
+            j += 1;
+        }
+        match ops[i] {
+            Op::Insert { .. } => {
+                let pairs: Vec<(u32, u32)> = ops[i..j]
+                    .iter()
+                    .map(|o| match *o {
+                        Op::Insert { key, value } => (key, value),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                t.insert_batch(&pairs).unwrap();
+            }
+            Op::Lookup { .. } => {
+                let keys: Vec<u32> = ops[i..j].iter().map(|o| o.key()).collect();
+                t.lookup_batch(&keys);
+            }
+            Op::Delete { .. } => {
+                let keys: Vec<u32> = ops[i..j].iter().map(|o| o.key()).collect();
+                t.delete_batch(&keys);
+            }
+        }
+        i = j;
+    }
+}
+
+#[test]
+fn batch_path_matches_single_op_path_on_mixed_workload() {
+    let ops = mixed(50_000, Mix::PAPER_IMBALANCED, 0xBA7C);
+
+    let single = HiveTable::new(HiveConfig::default().with_buckets(256)).unwrap();
+    let batched = HiveTable::new(HiveConfig::default().with_buckets(256)).unwrap();
+    let mut reference: HashMap<u32, u32> = HashMap::new();
+
+    for op in &ops {
+        match *op {
+            Op::Insert { key, value } => {
+                single.insert(key, value).unwrap();
+                reference.insert(key, value);
+            }
+            Op::Lookup { key } => {
+                single.lookup(key);
+            }
+            Op::Delete { key } => {
+                single.delete(key);
+                reference.remove(&key);
+            }
+        }
+    }
+    replay_batched(&batched, &ops);
+
+    assert_eq!(single.len(), reference.len());
+    assert_eq!(batched.len(), reference.len(), "batch replay count diverged");
+    let keys: Vec<u32> = reference.keys().copied().collect();
+    let batch_vals = batched.lookup_batch(&keys);
+    for (k, got) in keys.iter().zip(&batch_vals) {
+        let want = reference.get(k).copied();
+        assert_eq!(*got, want, "batched table wrong for key {k}");
+        assert_eq!(single.lookup(*k), want, "single-op table wrong for key {k}");
+        assert_eq!(batched.lookup(*k), *got, "intra-table path mismatch for key {k}");
+    }
+}
+
+#[test]
+fn batches_race_concurrent_single_op_threads() {
+    // Disjoint key ranges: the batch thread and the single-op threads must
+    // each see a perfectly consistent view regardless of interleaving.
+    let t = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(512)).unwrap());
+    let batch_range = 1..=20_000u32;
+    let batcher = {
+        let t = Arc::clone(&t);
+        let pairs: Vec<(u32, u32)> =
+            batch_range.clone().map(|k| (k, k.wrapping_mul(9))).collect();
+        std::thread::spawn(move || {
+            for chunk in pairs.chunks(1_000) {
+                t.insert_batch(chunk).unwrap();
+            }
+        })
+    };
+    let singles: Vec<_> = (0..4u32)
+        .map(|tid| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = 1_000_000 + tid * 100_000;
+                for i in 0..2_000 {
+                    let k = base + i;
+                    t.insert(k, k).unwrap();
+                    assert_eq!(t.lookup(k), Some(k));
+                    if i % 2 == 0 {
+                        assert!(t.delete(k));
+                    }
+                }
+            })
+        })
+        .collect();
+    batcher.join().unwrap();
+    for s in singles {
+        s.join().unwrap();
+    }
+    // batch range fully present, single ranges half-deleted
+    let keys: Vec<u32> = batch_range.clone().collect();
+    let vals = t.lookup_batch(&keys);
+    for (k, v) in keys.iter().zip(&vals) {
+        assert_eq!(*v, Some(k.wrapping_mul(9)), "batched key {k} lost");
+    }
+    assert_eq!(t.len(), 20_000 + 4 * 1_000, "striped counter drifted");
+}
+
+#[test]
+fn batches_span_resize_epochs() {
+    // Tiny initial table + aggressive growth: batches and K-bucket resize
+    // epochs interleave; nothing may be lost or duplicated.
+    let t = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(4)).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let resizer = {
+        let t = Arc::clone(&t);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                t.maybe_resize();
+                std::thread::yield_now();
+            }
+        })
+    };
+    let writers: Vec<_> = (0..4u32)
+        .map(|tid| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = tid * 100_000 + 1;
+                let pairs: Vec<(u32, u32)> =
+                    (0..5_000).map(|i| (base + i, base + i + 7)).collect();
+                for chunk in pairs.chunks(512) {
+                    t.insert_batch(chunk).unwrap();
+                    t.maybe_resize();
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    resizer.join().unwrap();
+
+    assert!(t.logical_buckets() > 4, "table never grew across batches");
+    assert_eq!(t.len(), 4 * 5_000);
+    for tid in 0..4u32 {
+        let base = tid * 100_000 + 1;
+        let keys: Vec<u32> = (0..5_000).map(|i| base + i).collect();
+        let vals = t.lookup_batch(&keys);
+        for (k, v) in keys.iter().zip(&vals) {
+            assert_eq!(*v, Some(k + 7), "key {k} lost across a resize epoch");
+        }
+    }
+    // deletes across further epochs
+    for tid in 0..4u32 {
+        let base = tid * 100_000 + 1;
+        let keys: Vec<u32> = (0..5_000).map(|i| base + i).collect();
+        for chunk in keys.chunks(777) {
+            let hits = t.delete_batch(chunk);
+            assert!(hits.iter().all(|&h| h));
+            t.maybe_resize(); // may shrink mid-stream
+        }
+    }
+    assert_eq!(t.len(), 0);
+}

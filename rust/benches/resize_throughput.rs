@@ -1,33 +1,74 @@
-//! §V-A — resize (expansion / contraction) throughput.
+//! §V-A — resize (expansion / contraction) throughput, quiescent *and*
+//! with operations racing the migration.
 //!
 //! Paper: 16.8 GOPS expansion, 23.7 GOPS contraction at 32,768 buckets on
 //! the RTX 4090 — "3–4× faster than SlabHash under identical conditions"
 //! (SlabHash has no incremental resize: growth is a full-table rehash).
 //!
 //! We report buckets/s and entries-moved/s for Hive's K-batch linear
-//! hashing, against the SlabHash full-rehash cost, plus the XLA-path
-//! split/merge artifact if artifacts are present.
+//! hashing, against the SlabHash full-rehash cost, plus — new with the
+//! epoch scheme — **operation throughput measured while the migration is
+//! in progress** (the paper's Fig. 9 scenario): reader threads hammer
+//! lookups while `grow_buckets` splits the full round concurrently. Under
+//! the old exclusive phase guard this number was identically zero.
+//!
+//! Output: table + CSV + machine-readable `bench_out/resize_throughput.json`.
 //!
 //! Run: `cargo bench --bench resize_throughput`
+//! Scale: HIVE_BENCH_SCALE=smoke shrinks to 2,048 buckets for CI.
 
 use hivehash::baselines::slab::{full_rehash_cost, SlabHashLike};
 use hivehash::baselines::ConcurrentMap;
-use hivehash::report::Table;
+use hivehash::report::json::{arr, obj, JsonVal};
+use hivehash::report::{bench_threads, Table};
 use hivehash::workload::unique_uniform_keys;
 use hivehash::{HiveConfig, HiveTable};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
+fn row_json(
+    system: &str,
+    direction: &str,
+    mode: &str,
+    buckets_per_s: f64,
+    entries_per_s: f64,
+    wall_ms: f64,
+    concurrent_mops: Option<f64>,
+) -> JsonVal {
+    obj(vec![
+        ("system", system.into()),
+        ("direction", direction.into()),
+        ("mode", mode.into()),
+        ("buckets_per_s", buckets_per_s.into()),
+        ("entries_per_s", entries_per_s.into()),
+        ("wall_ms", wall_ms.into()),
+        ("concurrent_mops", concurrent_mops.map_or(JsonVal::Null, JsonVal::from)),
+    ])
+}
+
 fn main() {
-    let buckets = 32_768usize; // paper's resize benchmark size
+    let smoke = std::env::var("HIVE_BENCH_SCALE").as_deref() == Ok("smoke");
+    // paper's resize benchmark size; CI smoke uses a small table
+    let buckets = if smoke { 2_048usize } else { 32_768usize };
     let entries = buckets * 32 / 2; // 50% occupancy
+    let threads = bench_threads();
     let keys = unique_uniform_keys(entries, 44);
 
     let mut table = Table::new(
-        "§V-A — resize throughput at 32,768 buckets (50% occupancy)",
-        &["system", "direction", "buckets/s (M)", "entries moved/s (M)", "wall ms"],
+        &format!("§V-A — resize throughput at {buckets} buckets (50% occupancy)"),
+        &[
+            "system",
+            "direction",
+            "buckets/s (M)",
+            "entries moved/s (M)",
+            "wall ms",
+            "ops during (MOPS)",
+        ],
     );
+    let mut json_rows: Vec<JsonVal> = Vec::new();
 
-    // --- Hive native: split a full round, merge it back ---
+    // --- Hive native, quiescent: split a full round, merge it back ---
     let hive = HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap();
     for &k in &keys {
         hive.insert(k, k).unwrap();
@@ -39,31 +80,106 @@ fn main() {
     let t1 = Instant::now();
     let merged = hive.shrink_buckets(buckets);
     let d_shrink = t1.elapsed();
-    table.row(vec![
-        "HiveHash".into(),
-        "expand".into(),
-        format!("{:.2}", split as f64 / d_grow.as_secs_f64() / 1e6),
-        format!("{:.2}", entries as f64 / d_grow.as_secs_f64() / 1e6),
-        format!("{:.1}", d_grow.as_secs_f64() * 1e3),
-    ]);
-    table.row(vec![
-        "HiveHash".into(),
-        "contract".into(),
-        format!("{:.2}", merged as f64 / d_shrink.as_secs_f64() / 1e6),
-        format!("{:.2}", entries as f64 / d_shrink.as_secs_f64() / 1e6),
-        format!("{:.1}", d_shrink.as_secs_f64() * 1e3),
-    ]);
+    for (direction, n, d) in
+        [("expand", split, d_grow), ("contract", merged, d_shrink)]
+    {
+        let bps = n as f64 / d.as_secs_f64() / 1e6;
+        let eps = entries as f64 / d.as_secs_f64() / 1e6;
+        table.row(vec![
+            "HiveHash".into(),
+            direction.into(),
+            format!("{bps:.2}"),
+            format!("{eps:.2}"),
+            format!("{:.1}", d.as_secs_f64() * 1e3),
+            "-".into(),
+        ]);
+        json_rows.push(row_json(
+            "HiveHash",
+            direction,
+            "quiescent",
+            bps * 1e6,
+            eps * 1e6,
+            d.as_secs_f64() * 1e3,
+            None,
+        ));
+    }
     // spot-check correctness after the round trip
     for &k in keys.iter().step_by(1013) {
         assert_eq!(hive.lookup(k), Some(k));
     }
+
+    // --- Hive native, concurrent: lookups race the full-round split ---
+    // (the Fig. 9 scenario: the epoch scheme keeps op throughput nonzero
+    // while K-bucket batches migrate; the old RwLock design measured 0)
+    let chive = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap());
+    for &k in &keys {
+        chive.insert(k, k).unwrap();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let counters: Vec<Arc<AtomicU64>> =
+        (0..threads).map(|_| Arc::new(AtomicU64::new(0))).collect();
+    let ckeys = Arc::new(keys.clone());
+    let workers: Vec<_> = (0..threads)
+        .map(|w| {
+            let t = Arc::clone(&chive);
+            let stop = Arc::clone(&stop);
+            let ctr = Arc::clone(&counters[w]);
+            let keys = Arc::clone(&ckeys);
+            std::thread::spawn(move || {
+                let mut i = w;
+                while !stop.load(Ordering::Relaxed) {
+                    let k = keys[i % keys.len()];
+                    assert_eq!(t.lookup(k), Some(k), "key lost during live migration");
+                    ctr.fetch_add(1, Ordering::Relaxed);
+                    i += 1;
+                }
+            })
+        })
+        .collect();
+    // Sample the counters at the migration window's edges so warm-up and
+    // drain-down lookups do not inflate the "during migration" number.
+    let base: u64 = counters.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    let t2 = Instant::now();
+    let split = chive.grow_buckets(buckets);
+    let d_conc = t2.elapsed();
+    let at_end: u64 = counters.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    let ops_during = at_end - base;
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(split, buckets);
+    assert!(
+        ops_during > 0,
+        "acceptance: op throughput during migration must be nonzero"
+    );
+    let conc_mops = ops_during as f64 / d_conc.as_secs_f64() / 1e6;
+    let bps = split as f64 / d_conc.as_secs_f64() / 1e6;
+    let eps = entries as f64 / d_conc.as_secs_f64() / 1e6;
+    table.row(vec![
+        "HiveHash".into(),
+        format!("expand (+{threads}T lookups)"),
+        format!("{bps:.2}"),
+        format!("{eps:.2}"),
+        format!("{:.1}", d_conc.as_secs_f64() * 1e3),
+        format!("{conc_mops:.1}"),
+    ]);
+    json_rows.push(row_json(
+        "HiveHash",
+        "expand",
+        "concurrent",
+        bps * 1e6,
+        eps * 1e6,
+        d_conc.as_secs_f64() * 1e3,
+        Some(conc_mops),
+    ));
 
     // --- SlabHash: growth = full rehash of every live entry ---
     let slab = SlabHashLike::new(buckets / 4, buckets);
     for &k in &keys {
         slab.insert(k, k).unwrap();
     }
-    let t2 = Instant::now();
+    let t3 = Instant::now();
     // the rehash cost model: enumerate + re-place every live entry into a
     // doubled table (we measure enumeration + reinsertion)
     let live = full_rehash_cost(&slab);
@@ -71,15 +187,27 @@ fn main() {
     for &k in &keys {
         bigger.insert(k, k).unwrap();
     }
-    let d_rehash = t2.elapsed();
+    let d_rehash = t3.elapsed();
     assert_eq!(live, entries);
+    let bps = (buckets / 4) as f64 / d_rehash.as_secs_f64() / 1e6;
+    let eps = entries as f64 / d_rehash.as_secs_f64() / 1e6;
     table.row(vec![
         "SlabHash".into(),
         "expand (full rehash)".into(),
-        format!("{:.2}", (buckets / 4) as f64 / d_rehash.as_secs_f64() / 1e6),
-        format!("{:.2}", entries as f64 / d_rehash.as_secs_f64() / 1e6),
+        format!("{bps:.2}"),
+        format!("{eps:.2}"),
         format!("{:.1}", d_rehash.as_secs_f64() * 1e3),
+        "0.0 (stop-the-world)".into(),
     ]);
+    json_rows.push(row_json(
+        "SlabHash",
+        "expand",
+        "full_rehash",
+        bps * 1e6,
+        eps * 1e6,
+        d_rehash.as_secs_f64() * 1e3,
+        Some(0.0),
+    ));
 
     // --- XLA path: split/merge artifacts (if built) ---
     if let Ok(rt) = hivehash::runtime::Runtime::open_default() {
@@ -93,22 +221,41 @@ fn main() {
         let xkeys = unique_uniform_keys(logical * 16, 45);
         let vals = xkeys.clone();
         xt.insert_batch(&xkeys, &vals).unwrap();
-        let t3 = Instant::now();
+        let t4 = Instant::now();
         let split = xt.grow_buckets(logical).unwrap();
-        let d = t3.elapsed();
+        let d = t4.elapsed();
         table.row(vec![
             "Hive (XLA artifact)".into(),
             "expand".into(),
             format!("{:.3}", split as f64 / d.as_secs_f64() / 1e6),
             format!("{:.3}", xkeys.len() as f64 / d.as_secs_f64() / 1e6),
             format!("{:.1}", d.as_secs_f64() * 1e3),
+            "-".into(),
         ]);
+        json_rows.push(row_json(
+            "Hive (XLA artifact)",
+            "expand",
+            "quiescent",
+            split as f64 / d.as_secs_f64(),
+            xkeys.len() as f64 / d.as_secs_f64(),
+            d.as_secs_f64() * 1e3,
+            None,
+        ));
     }
 
     table.emit(Some("bench_out/resize_throughput.csv"));
+    obj(vec![
+        ("figure", "resize_throughput".into()),
+        ("buckets", buckets.into()),
+        ("entries", entries.into()),
+        ("threads", threads.into()),
+        ("rows", arr(json_rows)),
+    ])
+    .save("bench_out/resize_throughput.json");
+
     let speedup = d_rehash.as_secs_f64() / d_grow.as_secs_f64();
     println!(
         "Hive incremental expand is {speedup:.1}x faster than SlabHash full rehash \
-         (paper: 3-4x)"
+         (paper: 3-4x); {conc_mops:.1} MOPS of lookups flowed *during* the live migration"
     );
 }

@@ -36,8 +36,10 @@ impl Backend for NativeBackend {
         use crate::native::table::InsertOutcome;
         let (ins, del, luk) = group_ops(ops);
         let mut res = BatchResult::default();
-        // Forward each op class to the table's bulk fast path: one phase
-        // guard acquisition per class instead of one per op.
+        // Forward each op class to the table's bulk fast path: one epoch
+        // pin per class instead of one per op. Incremental migration runs
+        // concurrently with these windows; only a physical reallocation
+        // (capacity-class crossing) waits for the pin to drain.
         if !ins.is_empty() {
             let pairs: Vec<(u32, u32)> = ins.iter().map(|&(_, k, v)| (k, v)).collect();
             // `insert_batch` validates keys up front and never fails

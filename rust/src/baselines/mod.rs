@@ -13,7 +13,7 @@ pub mod dycuckoo;
 pub mod warpcore;
 pub mod stdshard;
 
-use crate::core::error::Result;
+use crate::core::error::{HiveError, Result};
 use crate::native::table::HiveTable;
 
 pub use dycuckoo::DyCuckooLike;
@@ -60,18 +60,21 @@ pub trait ConcurrentMap: Send + Sync {
     /// Bulk insert/replace, one pair per op in submission order. The
     /// default attempts **every** pair even if some fail (mirroring the
     /// per-op bench driver, which drops individual failures and carries
-    /// on) and returns the first error afterwards, so a single failed
-    /// eviction cascade near peak load does not silently skip the rest
-    /// of a window.
+    /// on) and then reports *how many* ops failed alongside the first
+    /// error ([`HiveError::BatchErrors`]), so a failed eviction cascade
+    /// near peak load is quantified in the error instead of reading as a
+    /// single stray failure.
     fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<()> {
+        let mut failed = 0usize;
         let mut first_err = None;
         for &(key, value) in pairs {
             if let Err(e) = self.insert(key, value) {
+                failed += 1;
                 first_err.get_or_insert(e);
             }
         }
         match first_err {
-            Some(e) => Err(e),
+            Some(first) => Err(HiveError::BatchErrors { failed, first: Box::new(first) }),
             None => Ok(()),
         }
     }
@@ -177,6 +180,64 @@ pub(crate) mod suite {
             assert_eq!(map.len(), 0);
             assert!(map.lookup_batch(&keys).iter().all(Option::is_none));
         }
+    }
+
+    /// A map whose insert rejects odd keys — exercises the default batch
+    /// impls' failure accounting.
+    struct RejectsOdd {
+        inner: std::sync::Mutex<std::collections::HashMap<u32, u32>>,
+    }
+
+    impl RejectsOdd {
+        fn new() -> Self {
+            RejectsOdd { inner: std::sync::Mutex::new(std::collections::HashMap::new()) }
+        }
+    }
+
+    impl ConcurrentMap for RejectsOdd {
+        fn insert(&self, key: u32, value: u32) -> Result<()> {
+            if key % 2 == 1 {
+                return Err(HiveError::TableFull);
+            }
+            self.inner.lock().unwrap().insert(key, value);
+            Ok(())
+        }
+        fn lookup(&self, key: u32) -> Option<u32> {
+            self.inner.lock().unwrap().get(&key).copied()
+        }
+        fn delete(&self, key: u32) -> bool {
+            self.inner.lock().unwrap().remove(&key).is_some()
+        }
+        fn len(&self) -> usize {
+            self.inner.lock().unwrap().len()
+        }
+        fn name(&self) -> &'static str {
+            "RejectsOdd"
+        }
+        fn max_load_factor(&self) -> f64 {
+            1.0
+        }
+    }
+
+    #[test]
+    fn default_insert_batch_reports_failure_count() {
+        let m = RejectsOdd::new();
+        let pairs: Vec<(u32, u32)> = (1..=10u32).map(|k| (k, k * 2)).collect();
+        let err = m.insert_batch(&pairs).unwrap_err();
+        match err {
+            HiveError::BatchErrors { failed, first } => {
+                assert_eq!(failed, 5, "five odd keys must be counted");
+                assert_eq!(*first, HiveError::TableFull);
+            }
+            other => panic!("expected BatchErrors, got {other:?}"),
+        }
+        // every even pair was still attempted and landed
+        assert_eq!(m.len(), 5);
+        for k in [2u32, 4, 6, 8, 10] {
+            assert_eq!(m.lookup(k), Some(k * 2));
+        }
+        // an all-good batch stays Ok
+        assert!(m.insert_batch(&[(20, 1), (22, 2)]).is_ok());
     }
 
     #[test]

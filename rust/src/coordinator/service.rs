@@ -174,8 +174,8 @@ impl Handle {
     }
 
     /// Bulk insert/replace: shards by key and rides the workers' batched
-    /// backend path (one phase-guard acquisition per shard window instead
-    /// of one per op). Returns the merged batch counters.
+    /// backend path (one epoch pin per shard window instead of one per
+    /// op). Returns the merged batch counters.
     pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<BatchResult> {
         let ops: Vec<Op> =
             pairs.iter().map(|&(key, value)| Op::Insert { key, value }).collect();
@@ -317,7 +317,11 @@ fn worker_loop(rx: Receiver<Request>, mut backend: Box<dyn Backend>, cfg: Coordi
                 }
             }
         }
-        // resize controller between windows
+        // Resize controller between windows. The call still runs a full
+        // K-bucket migration batch synchronously on this worker thread,
+        // but with the epoch scheme other threads' operations (and other
+        // shards) proceed concurrently instead of blocking on a write
+        // guard.
         if stats.batches % cfg.resize_check_every == 0 {
             match backend.maybe_resize() {
                 Ok(Some(ResizeEvent::Grew { .. })) => stats.grows += 1,

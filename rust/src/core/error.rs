@@ -22,6 +22,15 @@ pub enum HiveError {
     Config(String),
     /// The coordinator is shutting down.
     Shutdown,
+    /// A bulk operation attempted every element but `failed` of them
+    /// errored; `first` is the first error observed. The rest of the batch
+    /// was still executed.
+    BatchErrors {
+        /// How many individual operations failed.
+        failed: usize,
+        /// The first error observed in submission order.
+        first: Box<HiveError>,
+    },
 }
 
 impl fmt::Display for HiveError {
@@ -34,6 +43,9 @@ impl fmt::Display for HiveError {
             HiveError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             HiveError::Config(msg) => write!(f, "config error: {msg}"),
             HiveError::Shutdown => write!(f, "coordinator shut down"),
+            HiveError::BatchErrors { failed, first } => {
+                write!(f, "batch: {failed} ops failed; first error: {first}")
+            }
         }
     }
 }
@@ -52,5 +64,8 @@ mod tests {
         assert!(HiveError::InvalidKey(0xFFFF_FFFF).to_string().contains("0xffffffff"));
         assert!(HiveError::TableFull.to_string().contains("stash"));
         assert!(HiveError::ResizeAborted("merge").to_string().contains("merge"));
+        let batch = HiveError::BatchErrors { failed: 3, first: Box::new(HiveError::TableFull) };
+        let msg = batch.to_string();
+        assert!(msg.contains("3 ops failed") && msg.contains("stash"), "{msg}");
     }
 }

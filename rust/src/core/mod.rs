@@ -4,11 +4,13 @@
 pub mod packed;
 pub mod config;
 pub mod counter;
+pub mod epoch;
 pub mod error;
 pub mod rng;
 pub mod histogram;
 
 pub use counter::StripedCounter;
+pub use epoch::{EpochDomain, EpochGuard};
 
 /// Number of slots per bucket. One warp (32 lanes) probes one bucket with
 /// one lane per slot (paper §III-A); a full bucket of 64-bit entries is

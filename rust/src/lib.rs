@@ -23,7 +23,11 @@
 //!    kernel-launch-shaped), and vectorized bulk versions in the Pallas
 //!    kernels.
 //! 3. *Load-aware linear-hashing resize* → [`native::resize`] and the
-//!    coordinator's [`coordinator::resize_ctl`].
+//!    coordinator's [`coordinator::resize_ctl`]. Migration is incremental
+//!    and operation-concurrent: operations pin an epoch
+//!    ([`core::epoch`]) instead of taking a phase lock, buckets in
+//!    flight carry migration markers, and physical reallocation swaps
+//!    the state pointer after a grace period.
 //!
 //! See `DESIGN.md` for the full system inventory and the CUDA→TPU hardware
 //! adaptation, and `EXPERIMENTS.md` for paper-vs-measured results.

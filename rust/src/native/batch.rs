@@ -3,24 +3,26 @@
 //! The GPU table gets its throughput from *batch-granularity dispatch*:
 //! one kernel launch amortizes setup over millions of operations, and the
 //! warps inside it overlap each other's memory latency. The per-op CPU
-//! path pays the amortizable costs on **every** call — a phase `RwLock`
-//! read acquisition (an atomic RMW on a shared line) per op. The batch
-//! entry points here restore the kernel-launch shape:
+//! path pays the amortizable costs on **every** call — an epoch pin (one
+//! striped RMW + one shared load) per op. The batch entry points here
+//! restore the kernel-launch shape:
 //!
-//! 1. **One guard acquisition per batch.** The phase read guard is taken
-//!    once and held across the whole batch; resize (which takes the write
-//!    side) waits for batch boundaries, exactly like a GPU resize kernel
-//!    waits for the previous operation kernel to drain.
-//! 2. **Hash-ahead.** Candidate buckets for the *entire* batch are
-//!    computed up front into a dense candidate table, separating the
-//!    arithmetic (hashing) phase from the memory (probing) phase.
+//! 1. **One epoch pin per batch.** The pin is taken once and held across
+//!    the whole batch. Incremental migration proceeds *concurrently* with
+//!    the batch (only physical reallocation — a rare capacity-class
+//!    crossing — waits for the pin to drain at the batch boundary, exactly
+//!    like a GPU realloc kernel waits for the previous operation kernel).
+//! 2. **Hash-ahead.** Raw hashes for the *entire* batch are computed up
+//!    front into a dense table, separating the arithmetic (hashing) phase
+//!    from the memory (probing) phase. Only the cheap round reduction
+//!    stays per-op, because the round word can advance mid-batch.
 //! 3. **Software-pipelined probes.** While op *i* probes, op *i+1*'s
-//!    first bucket row is touched (free mask + first slot word), a
+//!    first bucket row is touched (mask word + first slot word), a
 //!    prefetch-style hint that overlaps the next op's cache miss with the
 //!    current op's compare loop — the CPU analogue of warp-level latency
 //!    hiding.
 //!
-//! Batched and single-op execution share the same `*_locked` bodies in
+//! Batched and single-op execution share the same `*_core` bodies in
 //! [`crate::native::table`], so their observable behaviour is identical;
 //! a batch interleaved with concurrent single ops is a legal
 //! linearization of both.
@@ -28,6 +30,7 @@
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::EMPTY_KEY;
 use crate::core::SLOTS_PER_BUCKET;
+use crate::hash::HashFamily;
 use crate::native::table::{HiveTable, InsertOutcome, State};
 use std::sync::atomic::Ordering;
 
@@ -36,13 +39,20 @@ use std::sync::atomic::Ordering;
 /// pipelined probe for the next op lands on them.
 #[inline(always)]
 fn touch_bucket(state: &State, bucket: u32) {
-    let _ = state.free_mask[bucket as usize].load(Ordering::Relaxed);
+    let _ = state.masks[bucket as usize].load(Ordering::Relaxed);
     let _ = state.buckets[bucket as usize * SLOTS_PER_BUCKET].load(Ordering::Relaxed);
 }
 
+/// Touch the next op's first candidate bucket under the current round.
+#[inline(always)]
+fn touch_next(state: &State, raw0: u32) {
+    let (mask, sp) = state.round();
+    touch_bucket(state, HashFamily::address(raw0, mask, sp));
+}
+
 impl HiveTable {
-    /// Bulk Insert/Replace: one phase-guard acquisition, hash-ahead, and
-    /// pipelined probes for the whole batch (module docs). Returns one
+    /// Bulk Insert/Replace: one epoch pin, hash-ahead, and pipelined
+    /// probes for the whole batch (module docs). Returns one
     /// [`InsertOutcome`] per pair, in submission order.
     ///
     /// Errors (without mutating the table) if any key is the reserved
@@ -52,15 +62,15 @@ impl HiveTable {
         if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
             return Err(HiveError::InvalidKey(bad));
         }
-        let state = self.state.read().unwrap();
-        let cands: Vec<[u32; 4]> =
-            pairs.iter().map(|&(k, _)| self.candidates(&state, k)).collect();
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
         let mut out = Vec::with_capacity(pairs.len());
         for (i, &(key, value)) in pairs.iter().enumerate() {
             if i + 1 < pairs.len() {
-                touch_bucket(&state, cands[i + 1][0]);
+                touch_next(state, raws[i + 1][0]);
             }
-            let outcome = self.insert_locked(&state, key, value, &cands[i])?;
+            let outcome = self.insert_core(state, key, value, &raws[i])?;
             self.record_insert_outcome(outcome);
             out.push(outcome);
         }
@@ -70,18 +80,18 @@ impl HiveTable {
     /// Bulk Search: one `Option<u32>` per key, in submission order. Keys
     /// equal to the EMPTY sentinel yield `None`, as in the single-op path.
     pub fn lookup_batch(&self, keys: &[u32]) -> Vec<Option<u32>> {
-        let state = self.state.read().unwrap();
-        let cands: Vec<[u32; 4]> =
-            keys.iter().map(|&k| self.candidates(&state, k)).collect();
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = keys.iter().map(|&k| self.raw_hashes(k)).collect();
         let mut out = Vec::with_capacity(keys.len());
         for (i, &key) in keys.iter().enumerate() {
             if i + 1 < keys.len() {
-                touch_bucket(&state, cands[i + 1][0]);
+                touch_next(state, raws[i + 1][0]);
             }
             out.push(if key == EMPTY_KEY {
                 None
             } else {
-                self.lookup_locked(&state, key, &cands[i])
+                self.lookup_core(state, key, &raws[i])
             });
         }
         out
@@ -90,15 +100,15 @@ impl HiveTable {
     /// Bulk Delete: one hit flag per key, in submission order. Keys equal
     /// to the EMPTY sentinel yield `false`, as in the single-op path.
     pub fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
-        let state = self.state.read().unwrap();
-        let cands: Vec<[u32; 4]> =
-            keys.iter().map(|&k| self.candidates(&state, k)).collect();
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = keys.iter().map(|&k| self.raw_hashes(k)).collect();
         let mut out = Vec::with_capacity(keys.len());
         for (i, &key) in keys.iter().enumerate() {
             if i + 1 < keys.len() {
-                touch_bucket(&state, cands[i + 1][0]);
+                touch_next(state, raws[i + 1][0]);
             }
-            out.push(key != EMPTY_KEY && self.delete_locked(&state, key, &cands[i]));
+            out.push(key != EMPTY_KEY && self.delete_core(state, key, &raws[i]));
         }
         out
     }

@@ -1,5 +1,5 @@
 //! Load-aware dynamic resizing via warp-parallel linear hashing
-//! (paper §IV-C).
+//! (paper §IV-C) — **incremental and operation-concurrent**.
 //!
 //! The table grows/contracts in K-bucket batches. One *split* pairs source
 //! bucket `b_src = split_ptr` with partner `b_dst = b_src + 2^m` and moves
@@ -10,17 +10,57 @@
 //! (`index_mask = (mask << 1) | 1; split_ptr = 0`); merging past
 //! `split_ptr == 0` regresses the round.
 //!
-//! Resize runs under the table's exclusive phase guard — the analogue of a
-//! dedicated GPU kernel launch between operation batches — so the bodies
-//! use relaxed atomics freely. Physical bucket arrays are reallocated only
-//! at power-of-two *capacity class* boundaries (DESIGN.md §7); a split
-//! within a class moves exactly the K source buckets' entries, giving the
-//! paper's O(K) migration cost.
+//! ### Migration protocol (no stop-the-world)
+//! Unlike the old exclusive phase guard, a migration batch runs while
+//! operations continue on the rest of the table:
+//!
+//! 1. The migrator takes the two buckets' eviction locks (excluding cuckoo
+//!    displacement) and sets their [`MIGRATING`] marker bits with RMWs on
+//!    the mask words, totally ordering itself against concurrent claims.
+//! 2. *Settle*: wait for claimed-but-unpublished slots (a claim that beat
+//!    the marker will publish; one that lost backs out and re-routes).
+//! 3. Entries move copy-then-clear: the word is stored in the destination
+//!    *before* the source slot is CAS-cleared, so a concurrent probe
+//!    always finds the entry in source or destination. A failed clear-CAS
+//!    means a racing replace (re-copy the fresh word) or delete (retract
+//!    the destination copy) — the migrator self-fixes and retries.
+//! 4. The new round word is published, *then* the markers clear; stale
+//!    operations waiting on a marker re-route through the fresh round.
+//!
+//! Physical bucket arrays are reallocated only at power-of-two *capacity
+//! class* boundaries (DESIGN.md §7). Reallocation is the one remaining
+//! exclusive step: the epoch domain flips odd, the grace period drains all
+//! pinned operations, the new `State` is published by pointer swap, and
+//! the old allocation is freed immediately (no pin can outlive the drain).
+//! A split within a class still moves exactly the K source buckets'
+//! entries, giving the paper's O(K) migration cost.
+//!
+//! ### Stash drain vs. concurrent operations
+//! Draining a stashed word back into the grown table publishes the table
+//! copy *first* and retracts the stash copy second, so the key is always
+//! in at least one place. Because the drain moves entries stash→table
+//! while probes scan table→stash, a probe that misses in both places
+//! revalidates the table's seqlock-style `drain_epoch` (odd while a drain
+//! runs) and re-probes if a drain overlapped its scan. The transient
+//! duplicate is benign: replace/delete purge shadow copies (see
+//! `HiveTable::purge_shadow`), and if the stash copy vanishes mid-drain
+//! (a racing delete or replace won) the drain retracts the table copy it
+//! just published. Three corners remain approximate, as counts
+//! already are under concurrency — all require a racing op on one stashed
+//! key inside a single drain window: two racing deletes of the *same
+//! stashed key* can both report a hit; a delete-then-reinsert of the same
+//! key with the *bit-identical value* can be undone by the drain's
+//! retraction (`remove_exact` cannot tell the fresh identical word from
+//! the one it published); and a replace/delete that wins on the *stash*
+//! copy leaves the drain's just-published stale table copy readable for
+//! the microseconds until the drain's own `remove_word` failure triggers
+//! `remove_exact`.
 
 use crate::core::packed::{is_empty, unpack_key, EMPTY_WORD};
-use crate::core::{FULL_FREE_MASK, SLOTS_PER_BUCKET};
-use crate::hash::HashFamily;
-use crate::native::table::{HiveTable, State};
+use crate::core::SLOTS_PER_BUCKET;
+use crate::native::table::{
+    pack_round, HiveTable, State, FREE_BITS, MIGRATING, MIGRATION_SEQ_SHIFT,
+};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// What a resize pass did (returned by [`HiveTable::maybe_resize`]).
@@ -32,24 +72,144 @@ pub enum ResizeEvent {
     Shrank { buckets_merged: usize },
 }
 
+/// Spin until `bucket`'s eviction lock is acquired.
+fn lock_bucket(state: &State, bucket: u32) {
+    let lock = &state.locks[bucket as usize];
+    while lock.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
+        std::hint::spin_loop();
+    }
+}
+
+fn unlock_bucket(state: &State, bucket: u32) {
+    state.locks[bucket as usize].store(0, Ordering::Release);
+}
+
+/// Wait until no slot of `bucket` is claimed-but-unpublished: every lane
+/// whose free bit is clear must hold a non-EMPTY word. Claims that beat
+/// the marker publish promptly; claims that lost hand their bit back;
+/// deletes publish their free bit right after clearing the word — all
+/// wait-free, so this settles in bounded time.
+fn settle_bucket(state: &State, bucket: u32) {
+    let base = bucket as usize * SLOTS_PER_BUCKET;
+    loop {
+        let free = (state.masks[bucket as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
+        let mut occ = !free;
+        let mut pending = false;
+        while occ != 0 {
+            let lane = occ.trailing_zeros() as usize;
+            occ &= occ - 1;
+            if state.buckets[base + lane].load(Ordering::Acquire) == EMPTY_WORD {
+                pending = true;
+                break;
+            }
+        }
+        if !pending {
+            return;
+        }
+        std::hint::spin_loop();
+    }
+}
+
+/// Migrate one entry from `src_slot` into `dst_slot`, racing in-flight
+/// replaces and deletes safely (module docs §3). On entry the migrator
+/// has claimed `dst_bit` in `dst_mask`'s word and the dst slot is EMPTY,
+/// so the initial publish cannot race anything (probes skip EMPTY words;
+/// claims are blocked by the marker / the claimed bit). Everything after
+/// that is CAS-only: a mutated copy is never overwritten blindly — if the
+/// destination copy diverges under concurrent ops, ownership transfers to
+/// them and the source copy is discarded instead. All resulting free-mask
+/// bits are published here.
+fn migrate_word(
+    state: &State,
+    src_slot: usize,
+    src_mask: usize,
+    src_bit: u64,
+    dst_slot: usize,
+    dst_mask: usize,
+    dst_bit: u64,
+    word: u64,
+) {
+    state.buckets[dst_slot].store(word, Ordering::Release);
+    let mut expect = word;
+    loop {
+        match state.buckets[src_slot].compare_exchange(
+            expect,
+            EMPTY_WORD,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                // moved: release the source slot
+                state.masks[src_mask].fetch_or(src_bit, Ordering::AcqRel);
+                return;
+            }
+            Err(cur) if is_empty(cur) => {
+                // A racing delete consumed the source copy (and published
+                // its free bit). Retract our duplicate if it is still
+                // exactly ours; if not, a racing op took the destination
+                // copy over (a deleter freed its bit, a replacer keeps the
+                // slot occupied) and the mask/slot state is already
+                // consistent without us.
+                if state.buckets[dst_slot]
+                    .compare_exchange(expect, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    state.masks[dst_mask].fetch_or(dst_bit, Ordering::AcqRel);
+                }
+                return;
+            }
+            Err(cur) => {
+                // A racing replace refreshed the source copy: forward the
+                // fresh value to the destination copy, CAS-guarded...
+                if state.buckets[dst_slot]
+                    .compare_exchange(expect, cur, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    expect = cur; // ...and retry clearing the source
+                } else {
+                    // ...but the destination copy diverged under racing
+                    // ops — it is canonical now. Discard the source copy;
+                    // a racing delete that beats these CASes publishes the
+                    // source free bit itself.
+                    loop {
+                        let s = state.buckets[src_slot].load(Ordering::Acquire);
+                        if is_empty(s) {
+                            return;
+                        }
+                        if state.buckets[src_slot]
+                            .compare_exchange(s, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                        {
+                            state.masks[src_mask].fetch_or(src_bit, Ordering::AcqRel);
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl HiveTable {
     /// Check the load-factor thresholds and, if crossed, run one K-bucket
     /// resize batch (plus a stash drain). Returns what happened.
     ///
     /// This is the entry point the coordinator's resize controller calls
     /// between operation batches; it is also safe to call from application
-    /// threads (it takes the exclusive guard).
+    /// threads at any time — migration runs concurrently with operations,
+    /// and concurrent resize callers serialize on the resize mutex.
     pub fn maybe_resize(&self) -> Option<ResizeEvent> {
         let lf = self.load_factor();
-        // Opportunistic pre-check without the write guard.
         if lf > self.cfg.grow_threshold || self.pending_full() > 0 {
-            let split = self.grow_buckets(self.cfg.resize_batch);
+            let _g = self.resize_mutex.lock().unwrap();
+            let split = self.grow_locked(self.cfg.resize_batch);
             if split > 0 {
                 return Some(ResizeEvent::Grew { buckets_split: split });
             }
             None
         } else if lf < self.cfg.shrink_threshold {
-            let merged = self.shrink_buckets(self.cfg.resize_batch);
+            let _g = self.resize_mutex.lock().unwrap();
+            let merged = self.shrink_locked(self.cfg.resize_batch);
             if merged > 0 {
                 return Some(ResizeEvent::Shrank { buckets_merged: merged });
             }
@@ -60,294 +220,431 @@ impl HiveTable {
     }
 
     /// Split up to `k` buckets (expansion). Returns how many were split.
-    /// Takes the exclusive phase guard; drains the stash afterwards.
+    /// Operations keep running throughout; drains the stash afterwards.
     pub fn grow_buckets(&self, k: usize) -> usize {
-        let mut state = self.state.write().unwrap();
-        let mut split = 0;
-        for _ in 0..k {
-            let needed = state.logical_buckets() + 1;
-            Self::ensure_physical(&mut state, needed);
-            split_one(&mut state, &self.family);
-            split += 1;
-        }
-        let drained = self.drain_stash_into(&state);
-        drop(state);
-        let _ = drained;
-        split
+        let _g = self.resize_mutex.lock().unwrap();
+        self.grow_locked(k)
     }
 
     /// Merge up to `k` bucket pairs (contraction). Stops early if a merge
     /// would overflow its destination or the table is at its minimum size.
     pub fn shrink_buckets(&self, k: usize) -> usize {
-        let mut state = self.state.write().unwrap();
+        let _g = self.resize_mutex.lock().unwrap();
+        self.shrink_locked(k)
+    }
+
+    fn grow_locked(&self, k: usize) -> usize {
+        let mut split = 0;
+        for _ in 0..k {
+            self.ensure_physical_for_split();
+            let guard = self.epoch.pin();
+            let state = self.state_ref(&guard);
+            self.split_one_concurrent(state);
+            split += 1;
+        }
+        if split > 0 {
+            self.drain_stash_concurrent();
+        }
+        split
+    }
+
+    fn shrink_locked(&self, k: usize) -> usize {
         let mut merged = 0;
         for _ in 0..k {
+            let guard = self.epoch.pin();
+            let state = self.state_ref(&guard);
             // Never shrink below the initial round.
-            if state.split_ptr == 0 && state.index_mask <= self.min_index_mask {
+            let (mask, sp) = state.round();
+            if sp == 0 && mask <= self.min_index_mask {
                 break;
             }
-            if !merge_one(&mut state) {
+            let ok = self.merge_one_concurrent(state);
+            drop(guard);
+            if !ok {
                 break; // destination lacked room — abort (paper §IV-C2)
             }
             merged += 1;
         }
         if merged > 0 {
-            Self::maybe_shrink_physical(&mut state);
-            let _ = self.drain_stash_into(&state);
+            self.maybe_shrink_physical();
+            self.drain_stash_concurrent();
         }
         merged
     }
 
-    /// Reinsert stashed entries into the (resized) table — §IV-A step 4's
-    /// "reprocessed during table expansion". Called with the write guard
-    /// held (exclusive), so plain probe/claim logic suffices.
-    fn drain_stash_into(&self, state: &State) -> usize {
-        use std::sync::atomic::Ordering as O;
-        let mut words = Vec::new();
-        if !self.stash.is_quiescent() {
-            words.extend(self.stash.drain_exclusive());
-        }
-        if self.pending_len.load(O::Acquire) > 0 {
-            let mut pending = self.pending.lock().unwrap();
-            words.append(&mut pending);
-            self.pending_len.store(0, O::Release);
-        }
-        let mut reinserted = 0;
-        for word in words {
-            let key = unpack_key(word);
-            match exclusive_insert(state, &self.family, key, word, self.cfg.max_evictions) {
-                None => reinserted += 1,
-                Some(leftover) => {
-                    // Still no room. `leftover` is whatever word is still
-                    // homeless — the original, or a victim displaced along
-                    // the eviction chain (never drop a victim!). Push back
-                    // to the ring; overflow past it re-parks pending.
-                    if !self.stash.push(leftover) {
-                        self.pending.lock().unwrap().push(leftover);
-                        self.pending_len.fetch_add(1, O::Release);
-                    }
-                }
-            }
-        }
-        reinserted
-    }
-
-    /// Grow the physical arrays to the next capacity class if the logical
-    /// bucket count is about to exceed them.
-    fn ensure_physical(state: &mut State, needed_buckets: usize) {
-        let phys = state.phys_buckets();
-        if needed_buckets <= phys {
+    /// Grow the physical arrays to the next capacity class if the next
+    /// split's partner bucket would not fit. Runs the epoch's exclusive
+    /// phase (grace period + pointer swap); only resize-mutex holders get
+    /// here, so exclusive phases never nest.
+    fn ensure_physical_for_split(&self) {
+        let (needed, phys) = {
+            let guard = self.epoch.pin();
+            let state = self.state_ref(&guard);
+            (state.logical_buckets() + 1, state.phys_buckets())
+        };
+        if needed <= phys {
             return;
         }
-        let new_phys = (phys * 2).max(needed_buckets.next_power_of_two());
-        let mut buckets: Vec<AtomicU64> = Vec::with_capacity(new_phys * SLOTS_PER_BUCKET);
-        let mut free_mask: Vec<AtomicU32> = Vec::with_capacity(new_phys);
-        let mut locks: Vec<AtomicU32> = Vec::with_capacity(new_phys);
-        for w in state.buckets.iter() {
-            buckets.push(AtomicU64::new(w.load(Ordering::Relaxed)));
-        }
-        buckets.resize_with(new_phys * SLOTS_PER_BUCKET, || AtomicU64::new(EMPTY_WORD));
-        for m in state.free_mask.iter() {
-            free_mask.push(AtomicU32::new(m.load(Ordering::Relaxed)));
-        }
-        free_mask.resize_with(new_phys, || AtomicU32::new(FULL_FREE_MASK));
-        locks.resize_with(new_phys, || AtomicU32::new(0));
-        state.buckets = buckets.into_boxed_slice();
-        state.free_mask = free_mask.into_boxed_slice();
-        state.locks = locks.into_boxed_slice();
+        let new_phys = (phys * 2).max(needed.next_power_of_two());
+        self.swap_physical(new_phys);
     }
 
     /// Halve the physical arrays when occupancy drops below a quarter of
     /// the capacity class (keeps memory proportional to the logical size).
-    fn maybe_shrink_physical(state: &mut State) {
-        let phys = state.phys_buckets();
-        let logical = state.logical_buckets();
+    fn maybe_shrink_physical(&self) {
+        let (phys, logical) = {
+            let guard = self.epoch.pin();
+            let state = self.state_ref(&guard);
+            (state.phys_buckets(), state.logical_buckets())
+        };
         if phys >= 8 && logical <= phys / 4 {
-            let new_phys = phys / 2;
-            let mut buckets: Vec<AtomicU64> = Vec::with_capacity(new_phys * SLOTS_PER_BUCKET);
-            for w in state.buckets.iter().take(new_phys * SLOTS_PER_BUCKET) {
-                buckets.push(AtomicU64::new(w.load(Ordering::Relaxed)));
-            }
-            let mut free_mask: Vec<AtomicU32> = Vec::with_capacity(new_phys);
-            for m in state.free_mask.iter().take(new_phys) {
-                free_mask.push(AtomicU32::new(m.load(Ordering::Relaxed)));
-            }
-            let mut locks: Vec<AtomicU32> = Vec::new();
-            locks.resize_with(new_phys, || AtomicU32::new(0));
-            state.buckets = buckets.into_boxed_slice();
-            state.free_mask = free_mask.into_boxed_slice();
-            state.locks = locks.into_boxed_slice();
+            self.swap_physical(phys / 2);
         }
     }
-}
 
-/// Split the bucket at `split_ptr` into itself and its partner
-/// `split_ptr + 2^m` (paper §IV-C1). Exclusive access assumed.
-fn split_one(state: &mut State, family: &HashFamily) {
-    let m_base = state.index_mask + 1; // 2^m
-    let b_src = state.split_ptr;
-    let b_dst = b_src + m_base;
-    let next_mask = (state.index_mask << 1) | 1;
+    /// Publish a new `State` with `new_phys` buckets: enter the exclusive
+    /// phase (drains every pinned op — the grace period), copy the live
+    /// prefix, swap the pointer, and free the old allocation.
+    fn swap_physical(&self, new_phys: usize) {
+        self.epoch.enter_exclusive();
+        let old_ptr = self.state.load(Ordering::Acquire);
+        // SAFETY: the pointer is the table's live allocation; we are inside
+        // the exclusive phase, so no other thread dereferences it.
+        let old = unsafe { &*old_ptr };
+        let copy_buckets = old.phys_buckets().min(new_phys);
 
-    debug_assert!((b_dst as usize) < state.phys_buckets());
-
-    // Pass 1: each "lane" decides stay-vs-move for its slot; movers are
-    // compacted into the (empty) partner bucket.
-    let mut n_movers = 0usize;
-    let src_base = b_src as usize * SLOTS_PER_BUCKET;
-    let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
-    let mut src_freed_bits: u32 = 0;
-    for lane in 0..SLOTS_PER_BUCKET {
-        let w = state.buckets[src_base + lane].load(Ordering::Relaxed);
-        if is_empty(w) {
-            continue;
+        let mut buckets: Vec<AtomicU64> = Vec::with_capacity(new_phys * SLOTS_PER_BUCKET);
+        for w in old.buckets.iter().take(copy_buckets * SLOTS_PER_BUCKET) {
+            buckets.push(AtomicU64::new(w.load(Ordering::Relaxed)));
         }
-        let key = unpack_key(w);
-        // Which hash function addressed this entry here? Try each; the
-        // placement invariant guarantees one matches.
-        let mut should_move = false;
-        let mut found_home = false;
-        for i in 0..family.d() {
-            let h = family.raw(i, key);
-            if (h & state.index_mask) == b_src {
-                found_home = true;
-                should_move = (h & next_mask) == b_dst;
-                break;
+        buckets.resize_with(new_phys * SLOTS_PER_BUCKET, || AtomicU64::new(EMPTY_WORD));
+
+        let mut masks: Vec<AtomicU64> = Vec::with_capacity(new_phys);
+        for m in old.masks.iter().take(copy_buckets) {
+            let mw = m.load(Ordering::Relaxed);
+            debug_assert_eq!(mw & MIGRATING, 0, "marker set during exclusive phase");
+            // keep the migration-sequence bits: no probe spans a swap (the
+            // grace period drains all pins), but preserving them costs
+            // nothing and keeps the counters globally monotonic
+            masks.push(AtomicU64::new(mw & !MIGRATING));
+        }
+        masks.resize_with(new_phys, || AtomicU64::new(FREE_BITS));
+
+        let mut locks: Vec<AtomicU32> = Vec::new();
+        locks.resize_with(new_phys, || AtomicU32::new(0));
+
+        let new_state = Box::new(State {
+            buckets: buckets.into_boxed_slice(),
+            masks: masks.into_boxed_slice(),
+            locks: locks.into_boxed_slice(),
+            round: AtomicU64::new(old.round.load(Ordering::Relaxed)),
+        });
+        self.state.store(Box::into_raw(new_state), Ordering::Release);
+        self.epoch.exit_exclusive();
+        // Grace period already elapsed (the drain): nothing can still hold
+        // the old allocation.
+        // SAFETY: unique Box::into_raw pointer, unreachable since the swap.
+        unsafe { drop(Box::from_raw(old_ptr)) };
+    }
+
+    /// Split the bucket at `split_ptr` into itself and its partner
+    /// `split_ptr + 2^m` (paper §IV-C1), concurrently with operations
+    /// (module docs).
+    fn split_one_concurrent(&self, state: &State) {
+        let (index_mask, split_ptr) = state.round();
+        let m_base = index_mask + 1; // 2^m
+        let b_src = split_ptr;
+        let b_dst = b_src + m_base;
+        let next_mask = (index_mask << 1) | 1;
+        debug_assert!((b_dst as usize) < state.phys_buckets());
+
+        // 1. Exclude cuckoo displacement, then announce the migration.
+        lock_bucket(state, b_src);
+        lock_bucket(state, b_dst);
+        state.masks[b_src as usize].fetch_or(MIGRATING, Ordering::SeqCst);
+        state.masks[b_dst as usize].fetch_or(MIGRATING, Ordering::SeqCst);
+
+        // 2. Settle claims that beat the marker — on *both* buckets. The
+        //    partner is not addressable under the current round, but after
+        //    a shrink regression an inserter still routing by the older
+        //    (wider) round can transiently claim one of its bits; its
+        //    publish validation cannot pass while the round pre-dates this
+        //    split, so every such claim resolves by handing the bit back.
+        settle_bucket(state, b_src);
+        settle_bucket(state, b_dst);
+
+        // 3. Move entries whose next-round hash selects the partner;
+        //    movers are compacted into the (empty) partner bucket.
+        let src_base = b_src as usize * SLOTS_PER_BUCKET;
+        let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
+        let mut n_movers = 0usize;
+        for lane in 0..SLOTS_PER_BUCKET {
+            let w = state.buckets[src_base + lane].load(Ordering::Acquire);
+            if is_empty(w) {
+                continue;
             }
-        }
-        debug_assert!(found_home, "entry {key} not addressed to its bucket {b_src}");
-        if should_move {
-            // compacted placement: dst->kv[rank] = kv
-            state.buckets[dst_base + n_movers].store(w, Ordering::Relaxed);
-            state.buckets[src_base + lane].store(EMPTY_WORD, Ordering::Relaxed);
-            src_freed_bits |= 1 << lane;
+            let key = unpack_key(w);
+            // Which hash function addressed this entry here? Try each; the
+            // placement invariant guarantees one matches.
+            let mut should_move = false;
+            let mut found_home = false;
+            for i in 0..self.family.d() {
+                let h = self.family.raw(i, key);
+                if (h & index_mask) == b_src {
+                    found_home = true;
+                    should_move = (h & next_mask) == b_dst;
+                    break;
+                }
+            }
+            debug_assert!(found_home, "entry {key} not addressed to its bucket {b_src}");
+            if !should_move {
+                continue;
+            }
+            // Compacted placement: dst->kv[rank] = kv. Claim the rank's
+            // bit with the same flicker-tolerant loop as the merge path: a
+            // stale-round claimer that lands after the marker hands its
+            // bit straight back on seeing MIGRATING in its RMW return, so
+            // the retry is short and bounded. `migrate_word` publishes all
+            // mask bits, including handing slots back when a racing delete
+            // wins.
+            let dst_bit = 1u64 << n_movers;
+            loop {
+                let old = state.masks[b_dst as usize].fetch_and(!dst_bit, Ordering::AcqRel);
+                if old & dst_bit != 0 {
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+            migrate_word(
+                state,
+                src_base + lane,
+                b_src as usize,
+                1u64 << lane,
+                dst_base + n_movers,
+                b_dst as usize,
+                dst_bit,
+                w,
+            );
             n_movers += 1;
         }
-    }
-    // Lane 0 updates both free masks: released slots in src, occupied
-    // prefix in dst (paper: `src_mask |= move_mask; dst_mask &= ~((1<<n)-1)`).
-    if n_movers > 0 {
-        let src_mask = state.free_mask[b_src as usize].load(Ordering::Relaxed) | src_freed_bits;
-        state.free_mask[b_src as usize].store(src_mask, Ordering::Relaxed);
-        let dst_occupied = if n_movers >= 32 { u32::MAX } else { (1u32 << n_movers) - 1 };
-        state.free_mask[b_dst as usize].store(FULL_FREE_MASK & !dst_occupied, Ordering::Relaxed);
-    }
 
-    // Advance the round pointer; when all 2^m low buckets are split the
-    // table doubles its addressable range.
-    state.split_ptr += 1;
-    if state.split_ptr == m_base {
-        state.index_mask = next_mask;
-        state.split_ptr = 0;
-    }
-}
-
-/// Merge the most recently split pair back together (paper §IV-C2).
-/// Returns `false` (no state change) if the destination lacks room.
-fn merge_one(state: &mut State) -> bool {
-    // Regress the round if no bucket of this round has been split yet.
-    let (m_base, sp) = if state.split_ptr == 0 {
-        let prev_mask = state.index_mask >> 1;
-        ((prev_mask + 1), prev_mask + 1) // state (m-1, sp = 2^(m-1))
-    } else {
-        (state.index_mask + 1, state.split_ptr)
-    };
-    let b_dst = sp - 1;
-    let b_src = b_dst + m_base;
-
-    let src_base = b_src as usize * SLOTS_PER_BUCKET;
-    let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
-
-    // Count movers (all live entries of src) and free slots of dst.
-    let src_free = state.free_mask[b_src as usize].load(Ordering::Relaxed);
-    let dst_free = state.free_mask[b_dst as usize].load(Ordering::Relaxed);
-    let n_move = SLOTS_PER_BUCKET as u32 - src_free.count_ones();
-    let n_free = dst_free.count_ones();
-    if n_move > n_free {
-        return false; // abort early (paper: merge aborts if it can't fit)
-    }
-
-    // Each mover takes the r-th free slot of dst (prefix-rank mapping).
-    let mut dst_mask = dst_free;
-    for lane in 0..SLOTS_PER_BUCKET {
-        let w = state.buckets[src_base + lane].load(Ordering::Relaxed);
-        if is_empty(w) {
-            continue;
-        }
-        let pos = dst_mask.trailing_zeros() as usize; // select_nth_one
-        debug_assert!(pos < SLOTS_PER_BUCKET);
-        state.buckets[dst_base + pos].store(w, Ordering::Relaxed);
-        state.buckets[src_base + lane].store(EMPTY_WORD, Ordering::Relaxed);
-        dst_mask &= !(1u32 << pos);
-    }
-    // Lane 0 publishes: src fully free, dst minus the used slots.
-    state.free_mask[b_src as usize].store(FULL_FREE_MASK, Ordering::Relaxed);
-    state.free_mask[b_dst as usize].store(dst_mask, Ordering::Relaxed);
-
-    // Commit the regressed round state.
-    if state.split_ptr == 0 {
-        state.index_mask >>= 1;
-        state.split_ptr = state.index_mask + 1; // == m_base of new round
-    }
-    state.split_ptr -= 1;
-    true
-}
-
-/// Exclusive-mode insert used by the stash drain: plain (non-contended)
-/// probe → claim → bounded eviction. Returns `None` when everything is
-/// placed, or `Some(leftover_word)` — the still-homeless word (possibly a
-/// displaced *victim*, which must not be dropped) when the bound runs out.
-fn exclusive_insert(
-    state: &State,
-    family: &HashFamily,
-    key: u32,
-    word: u64,
-    max_evictions: u32,
-) -> Option<u64> {
-    let (mask, sp) = (state.index_mask, state.split_ptr);
-    // replace if present
-    for i in 0..family.d() {
-        let b = family.bucket(i, key, mask, sp);
-        let base = b as usize * SLOTS_PER_BUCKET;
-        for lane in 0..SLOTS_PER_BUCKET {
-            let w = state.buckets[base + lane].load(Ordering::Relaxed);
-            if unpack_key(w) == key {
-                state.buckets[base + lane].store(word, Ordering::Relaxed);
-                return None;
-            }
-        }
-    }
-    // claim
-    let mut cur = word;
-    let mut bucket = family.bucket(0, key, mask, sp);
-    for _kick in 0..=max_evictions {
-        let k = unpack_key(cur);
-        for i in 0..family.d() {
-            let b = family.bucket(i, k, mask, sp);
-            let fm = state.free_mask[b as usize].load(Ordering::Relaxed);
-            if fm != 0 {
-                let lane = fm.trailing_zeros() as usize;
-                state.buckets[b as usize * SLOTS_PER_BUCKET + lane].store(cur, Ordering::Relaxed);
-                state.free_mask[b as usize].store(fm & !(1 << lane), Ordering::Relaxed);
-                return None;
-            }
-        }
-        // evict first occupied slot of the first candidate
-        let b = if family.bucket(0, k, mask, sp) != bucket || family.d() == 1 {
-            family.bucket(0, k, mask, sp)
+        // 4. Advance the round pointer (when all 2^m low buckets are split
+        //    the table doubles its addressable range), *then* clear the
+        //    markers: waiters re-route through the fresh round word.
+        let (new_mask, new_sp) = if split_ptr + 1 == m_base {
+            (next_mask, 0)
         } else {
-            family.bucket(1 % family.d(), k, mask, sp)
+            (index_mask, split_ptr + 1)
         };
-        let base = b as usize * SLOTS_PER_BUCKET;
-        let victim = state.buckets[base].load(Ordering::Relaxed);
-        state.buckets[base].store(cur, Ordering::Relaxed);
-        cur = victim;
-        bucket = b;
-        if is_empty(cur) {
-            return None;
+        state.round.store(pack_round(new_mask, new_sp), Ordering::SeqCst);
+        // Bump both buckets' migration sequences (defeats round-word ABA
+        // in the miss-path validation), then clear the markers.
+        state.masks[b_src as usize].fetch_add(1u64 << MIGRATION_SEQ_SHIFT, Ordering::SeqCst);
+        state.masks[b_dst as usize].fetch_add(1u64 << MIGRATION_SEQ_SHIFT, Ordering::SeqCst);
+        state.masks[b_src as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+        state.masks[b_dst as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+        unlock_bucket(state, b_dst);
+        unlock_bucket(state, b_src);
+    }
+
+    /// Merge the most recently split pair back together (paper §IV-C2),
+    /// concurrently with operations. Returns `false` (no state change) if
+    /// the destination lacks room.
+    fn merge_one_concurrent(&self, state: &State) -> bool {
+        let (index_mask, split_ptr) = state.round();
+        // Regress the round if no bucket of this round has been split yet.
+        let (m_base, sp) = if split_ptr == 0 {
+            let prev_mask = index_mask >> 1;
+            (prev_mask + 1, prev_mask + 1) // state (m-1, sp = 2^(m-1))
+        } else {
+            (index_mask + 1, split_ptr)
+        };
+        let b_dst = sp - 1;
+        let b_src = b_dst + m_base;
+
+        lock_bucket(state, b_dst);
+        lock_bucket(state, b_src);
+        state.masks[b_dst as usize].fetch_or(MIGRATING, Ordering::SeqCst);
+        state.masks[b_src as usize].fetch_or(MIGRATING, Ordering::SeqCst);
+        settle_bucket(state, b_dst);
+        settle_bucket(state, b_src);
+
+        // Count movers (all live entries of src) vs free slots of dst. The
+        // markers block new claims on both buckets and concurrent deletes
+        // only add room, so a passing check stays valid until the markers
+        // clear.
+        let src_free = (state.masks[b_src as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
+        let dst_free = (state.masks[b_dst as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
+        let n_move = SLOTS_PER_BUCKET as u32 - src_free.count_ones();
+        if n_move > dst_free.count_ones() {
+            // abort early (paper: merge aborts if it can't fit)
+            state.masks[b_src as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+            state.masks[b_dst as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+            unlock_bucket(state, b_src);
+            unlock_bucket(state, b_dst);
+            return false;
+        }
+
+        let src_base = b_src as usize * SLOTS_PER_BUCKET;
+        let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
+        for lane in 0..SLOTS_PER_BUCKET {
+            let w = state.buckets[src_base + lane].load(Ordering::Acquire);
+            if is_empty(w) {
+                continue;
+            }
+            // Claim the r-th free slot of dst (prefix-rank mapping). The
+            // marker blocks *lasting* claims, but an insert that loaded the
+            // mask just before the marker landed can transiently clear a
+            // bit and then restore it on seeing MIGRATING in the RMW
+            // return — so free bits can flicker and this claim must loop:
+            // re-read on an empty snapshot, re-pick on a lost bit. The
+            // capacity check above (taken after settle) guarantees enough
+            // bits reappear once the flickering claimers back out.
+            let pos = loop {
+                let dst_mask =
+                    (state.masks[b_dst as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
+                if dst_mask == 0 {
+                    std::hint::spin_loop();
+                    continue;
+                }
+                let pos = dst_mask.trailing_zeros() as usize;
+                let bit = 1u64 << pos;
+                let old = state.masks[b_dst as usize].fetch_and(!bit, Ordering::AcqRel);
+                if old & bit != 0 {
+                    break pos;
+                }
+                // a backing-out claimer transiently holds it; it restores
+                std::hint::spin_loop();
+            };
+            migrate_word(
+                state,
+                src_base + lane,
+                b_src as usize,
+                1u64 << lane,
+                dst_base + pos,
+                b_dst as usize,
+                1u64 << pos,
+                w,
+            );
+        }
+
+        // Commit the regressed round state, bump the migration sequences,
+        // then clear the markers.
+        let new_mask = if split_ptr == 0 { index_mask >> 1 } else { index_mask };
+        state.round.store(pack_round(new_mask, sp - 1), Ordering::SeqCst);
+        state.masks[b_src as usize].fetch_add(1u64 << MIGRATION_SEQ_SHIFT, Ordering::SeqCst);
+        state.masks[b_dst as usize].fetch_add(1u64 << MIGRATION_SEQ_SHIFT, Ordering::SeqCst);
+        state.masks[b_src as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+        state.masks[b_dst as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
+        unlock_bucket(state, b_src);
+        unlock_bucket(state, b_dst);
+        true
+    }
+
+    /// Reinsert stashed/pending entries into the (resized) table — §IV-A
+    /// step 4's "reprocessed during table expansion". Runs concurrently
+    /// with operations: the table copy is published before the shadow copy
+    /// is retracted (module docs). Returns how many words went home.
+    fn drain_stash_concurrent(&self) -> usize {
+        // Nothing parked ⇒ no drain, no epoch flip: the steady-state miss
+        // paths never pay a re-probe. (A word pushed concurrently with
+        // this check is simply left for the next resize epoch.)
+        if self.stash.is_quiescent() && self.pending_len.load(Ordering::Acquire) == 0 {
+            return 0;
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let mut reinserted = 0;
+
+        // Flip the drain epoch odd before the first republish: the
+        // delete/replace shadow purge activates, and every op miss path
+        // re-probes instead of trusting a scan that raced the drain.
+        let e = self.drain_epoch.fetch_add(1, Ordering::SeqCst);
+        debug_assert_eq!(e & 1, 0, "stash drains must not nest");
+
+        if !self.stash.is_quiescent() {
+            for word in self.stash.peek_window() {
+                let key = unpack_key(word);
+                if !self.reinsert_word(state, key, word) {
+                    continue; // still no room anywhere: stays in the stash
+                }
+                if self.stash.remove_word(word) {
+                    reinserted += 1;
+                } else {
+                    // The stash copy vanished mid-drain: a delete or
+                    // replace raced us and owns the key now. Retract the
+                    // copy we just published unless it was already updated
+                    // or removed.
+                    self.remove_exact(state, key, word);
+                }
+            }
+        }
+
+        if self.pending_len.load(Ordering::Acquire) > 0 {
+            let snapshot: Vec<u64> = self.pending.lock().unwrap().clone();
+            for word in snapshot {
+                let key = unpack_key(word);
+                if !self.reinsert_word(state, key, word) {
+                    continue; // stays pending
+                }
+                let removed = {
+                    let mut pending = self.pending.lock().unwrap();
+                    if let Some(pos) = pending.iter().position(|&w| w == word) {
+                        pending.remove(pos);
+                        self.pending_len.fetch_sub(1, Ordering::Release);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if removed {
+                    reinserted += 1;
+                } else {
+                    self.remove_exact(state, key, word);
+                }
+            }
+        }
+        self.drain_epoch.fetch_add(1, Ordering::SeqCst);
+        reinserted
+    }
+
+    /// Remove the exact `word` from `key`'s current candidate buckets, if
+    /// it is still there (drain-undo path). No count/stat updates — the
+    /// logical entry was accounted elsewhere.
+    fn remove_exact(&self, state: &State, key: u32, word: u64) {
+        let raws = self.raw_hashes(key);
+        let d = self.family.d();
+        'retry: loop {
+            let (mask, sp) = state.round();
+            let cands = HiveTable::route(&raws, d, mask, sp);
+            let mut pre = [0u64; 4];
+            for (i, &b) in cands[..d].iter().enumerate() {
+                let mw = state.masks[b as usize].load(Ordering::SeqCst);
+                if mw & MIGRATING != 0 {
+                    HiveTable::wait_unmarked(state, b);
+                    continue 'retry;
+                }
+                pre[i] = mw;
+                let base = b as usize * SLOTS_PER_BUCKET;
+                for lane in 0..SLOTS_PER_BUCKET {
+                    if state.buckets[base + lane].load(Ordering::Acquire) == word
+                        && state.buckets[base + lane]
+                            .compare_exchange(word, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                    {
+                        state.masks[b as usize].fetch_or(1u64 << lane, Ordering::AcqRel);
+                        return;
+                    }
+                }
+            }
+            // Miss: confirm no candidate migrated under the probe.
+            if !self.validate_miss(state, &raws, &cands, &pre) {
+                continue 'retry;
+            }
+            // Not found: a concurrent replace/delete already owns it.
+            return;
         }
     }
-    Some(cur)
 }
 
 #[cfg(test)]

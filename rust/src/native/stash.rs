@@ -1,11 +1,17 @@
-//! Overflow stash — a lock-free bounded ring of packed KV words
+//! Overflow stash — a lock-free bounded pool of packed KV words
 //! (paper §IV-A step 4).
 //!
 //! Insertions that exhaust both candidate buckets *and* the eviction bound
 //! are redirected here; the stash is drained and its entries reinserted at
-//! the next resize epoch. Producers reserve a slot with one `fetch_add` on
-//! `tail`; lookups/deletes scan the live window racily (entries are
-//! self-describing packed words, EMPTY marks holes).
+//! the next resize epoch. A slot is claimed by CASing the word directly
+//! into it (EMPTY ⇒ free), so a slot is never reserved-but-unpublished:
+//! scans, removals and the concurrent drain all race safely against
+//! pushes, and a removed slot is immediately reusable. A padded live
+//! counter gates the probe fast path (`is_quiescent`).
+//!
+//! (Earlier revisions used a head/tail ring; with the operation-concurrent
+//! drain the head could never advance safely past a reserved slot, so the
+//! window degenerated to permanently-full. The pool has no window at all.)
 
 use crate::core::packed::{unpack_key, unpack_value, EMPTY_WORD};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -14,24 +20,17 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 #[derive(Debug)]
 pub struct OverflowStash {
     slots: Box<[AtomicU64]>,
-    /// Oldest potentially-live index (advanced only by the exclusive drain).
-    head: AtomicUsize,
-    /// Next index to reserve (monotonically increasing; `% capacity` maps
-    /// to a physical slot).
-    tail: AtomicUsize,
+    /// Number of live (non-EMPTY) slots. Zero ⇒ probes may skip the stash.
+    live: AtomicUsize,
 }
 
 impl OverflowStash {
-    /// A stash with room for `capacity` entries (min 8, rounded to pow2 so
-    /// the ring index is a mask).
+    /// A stash with room for `capacity` entries (min 8, rounded to pow2 to
+    /// keep sizing identical to the earlier ring).
     pub fn new(capacity: usize) -> Self {
         let cap = capacity.max(8).next_power_of_two();
         let slots = (0..cap).map(|_| AtomicU64::new(EMPTY_WORD)).collect::<Vec<_>>();
-        OverflowStash {
-            slots: slots.into_boxed_slice(),
-            head: AtomicUsize::new(0),
-            tail: AtomicUsize::new(0),
-        }
+        OverflowStash { slots: slots.into_boxed_slice(), live: AtomicUsize::new(0) }
     }
 
     /// Physical capacity.
@@ -39,50 +38,48 @@ impl OverflowStash {
         self.slots.len()
     }
 
-    /// `true` if no entries have ever been pushed since the last drain.
-    /// (Cheap gate so the probe fast path skips the stash entirely.)
+    /// `true` if the stash holds no entries. (Cheap gate so the probe fast
+    /// path skips the stash entirely.)
     #[inline]
     pub fn is_quiescent(&self) -> bool {
-        self.head.load(Ordering::Acquire) == self.tail.load(Ordering::Acquire)
+        self.live.load(Ordering::Acquire) == 0
     }
 
-    /// Number of reserved (possibly deleted) entries in the live window.
+    /// Number of live entries.
     pub fn window_len(&self) -> usize {
-        self.tail.load(Ordering::Acquire) - self.head.load(Ordering::Acquire)
+        self.live.load(Ordering::Acquire)
     }
 
-    /// Try to push a packed word. Returns `false` if the ring is full (the
-    /// operation is then flagged pending for the next resize — paper §IV-A).
+    /// Try to push a packed word. Returns `false` if every slot is
+    /// occupied (the operation is then flagged pending for the next
+    /// resize — paper §IV-A).
     pub fn push(&self, word: u64) -> bool {
         debug_assert_ne!(word, EMPTY_WORD);
-        loop {
-            let tail = self.tail.load(Ordering::Relaxed);
-            let head = self.head.load(Ordering::Acquire);
-            if tail - head >= self.slots.len() {
-                return false;
-            }
-            // Reserve the slot; CAS (not fetch_add) so a full ring never
-            // over-reserves and tears the window invariant.
-            if self
-                .tail
-                .compare_exchange_weak(tail, tail + 1, Ordering::AcqRel, Ordering::Relaxed)
-                .is_ok()
+        // Start the scan at a key-derived offset so concurrent pushers
+        // spread across the pool instead of all racing slot 0.
+        let cap = self.slots.len();
+        let start = unpack_key(word) as usize & (cap - 1);
+        for i in 0..cap {
+            let slot = &self.slots[(start + i) & (cap - 1)];
+            if slot.load(Ordering::Relaxed) == EMPTY_WORD
+                && slot
+                    .compare_exchange(EMPTY_WORD, word, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
             {
-                self.slots[tail & (self.slots.len() - 1)].store(word, Ordering::Release);
+                self.live.fetch_add(1, Ordering::Release);
                 return true;
             }
         }
+        false
     }
 
-    /// Linear-scan lookup over the live window. O(window) — the stash is
-    /// 1–2 % of table capacity and usually empty, so this is off the fast
-    /// path (guarded by [`Self::is_quiescent`]).
+    /// Linear-scan lookup. O(capacity) — the stash is 1–2 % of table
+    /// capacity and usually empty, so this is off the fast path (guarded
+    /// by [`Self::is_quiescent`]).
     pub fn lookup(&self, key: u32) -> Option<u32> {
-        let head = self.head.load(Ordering::Acquire);
-        let tail = self.tail.load(Ordering::Acquire);
-        for i in head..tail {
-            let w = self.slots[i & (self.slots.len() - 1)].load(Ordering::Acquire);
-            if unpack_key(w) == key {
+        for slot in self.slots.iter() {
+            let w = slot.load(Ordering::Acquire);
+            if w != EMPTY_WORD && unpack_key(w) == key {
                 return Some(unpack_value(w));
             }
         }
@@ -91,12 +88,10 @@ impl OverflowStash {
 
     /// Replace the value of `key` if present. Returns true on success.
     pub fn replace(&self, key: u32, new_word: u64) -> bool {
-        let head = self.head.load(Ordering::Acquire);
-        let tail = self.tail.load(Ordering::Acquire);
-        for i in head..tail {
-            let slot = &self.slots[i & (self.slots.len() - 1)];
+        for slot in self.slots.iter() {
             let w = slot.load(Ordering::Acquire);
-            if unpack_key(w) == key
+            if w != EMPTY_WORD
+                && unpack_key(w) == key
                 && slot.compare_exchange(w, new_word, Ordering::AcqRel, Ordering::Relaxed).is_ok()
             {
                 return true;
@@ -105,29 +100,45 @@ impl OverflowStash {
         false
     }
 
-    /// Delete `key` from the stash (leaves a hole skipped on drain).
+    /// Delete `key` from the stash; its slot is immediately reusable.
     pub fn delete(&self, key: u32) -> bool {
-        let head = self.head.load(Ordering::Acquire);
-        let tail = self.tail.load(Ordering::Acquire);
-        for i in head..tail {
-            let slot = &self.slots[i & (self.slots.len() - 1)];
+        for slot in self.slots.iter() {
             let w = slot.load(Ordering::Acquire);
-            if unpack_key(w) == key
+            if w != EMPTY_WORD
+                && unpack_key(w) == key
                 && slot.compare_exchange(w, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed).is_ok()
             {
+                self.live.fetch_sub(1, Ordering::Release);
                 return true;
             }
         }
         false
     }
 
-    /// Racy snapshot of live words in the window (diagnostics only).
+    /// Remove the *exact* `word` from the stash (one copy), returning
+    /// `true` if this call retired it. The concurrent stash drain uses
+    /// this to retract a word it has just republished in the main table
+    /// without disturbing a concurrently-replaced (different-valued) copy
+    /// of the same key.
+    pub fn remove_word(&self, word: u64) -> bool {
+        for slot in self.slots.iter() {
+            if slot.load(Ordering::Acquire) == word
+                && slot
+                    .compare_exchange(word, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                self.live.fetch_sub(1, Ordering::Release);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Racy snapshot of live words (diagnostics and the drain's worklist).
     pub fn peek_window(&self) -> Vec<u64> {
-        let head = self.head.load(Ordering::Acquire);
-        let tail = self.tail.load(Ordering::Acquire);
         let mut out = Vec::new();
-        for i in head..tail {
-            let w = self.slots[i & (self.slots.len() - 1)].load(Ordering::Acquire);
+        for slot in self.slots.iter() {
+            let w = slot.load(Ordering::Acquire);
             if w != EMPTY_WORD {
                 out.push(w);
             }
@@ -135,21 +146,18 @@ impl OverflowStash {
         out
     }
 
-    /// Drain all live entries, resetting the window. **Caller must hold the
-    /// table's exclusive (resize) guard** — this is the "reprocessed during
-    /// table expansion" step of §IV-A.
+    /// Drain all live entries at once. Unlike the per-word concurrent
+    /// drain (`remove_word`), this assumes no racing pushes — callers
+    /// holding the table exclusively (tests, teardown paths) only.
     pub fn drain_exclusive(&self) -> Vec<u64> {
-        let head = self.head.load(Ordering::Relaxed);
-        let tail = self.tail.load(Ordering::Relaxed);
-        let mut out = Vec::with_capacity(tail - head);
-        for i in head..tail {
-            let slot = &self.slots[i & (self.slots.len() - 1)];
-            let w = slot.swap(EMPTY_WORD, Ordering::Relaxed);
+        let mut out = Vec::new();
+        for slot in self.slots.iter() {
+            let w = slot.swap(EMPTY_WORD, Ordering::AcqRel);
             if w != EMPTY_WORD {
+                self.live.fetch_sub(1, Ordering::Release);
                 out.push(w);
             }
         }
-        self.head.store(tail, Ordering::Release);
         out
     }
 }
@@ -173,16 +181,31 @@ mod tests {
         assert!(s.delete(7));
         assert_eq!(s.lookup(7), None);
         assert!(!s.delete(7));
+        assert!(s.is_quiescent(), "deleting the last entry re-quiesces the pool");
     }
 
     #[test]
-    fn fills_up_and_rejects() {
+    fn fills_up_and_rejects_then_reuses_holes() {
         let s = OverflowStash::new(8);
         for i in 0..8u32 {
             assert!(s.push(pack(i, i)));
         }
-        assert!(!s.push(pack(99, 99)), "ring must reject when full");
+        assert!(!s.push(pack(99, 99)), "pool must reject when full");
         assert_eq!(s.window_len(), 8);
+        // a deleted slot is immediately reusable (no ring-window pinning)
+        assert!(s.delete(3));
+        assert!(s.push(pack(99, 99)), "freed slot must be claimable");
+        assert_eq!(s.lookup(99), Some(99));
+        assert_eq!(s.window_len(), 8);
+    }
+
+    #[test]
+    fn remove_word_is_exact() {
+        let s = OverflowStash::new(8);
+        s.push(pack(5, 50));
+        assert!(!s.remove_word(pack(5, 51)), "different value must not match");
+        assert!(s.remove_word(pack(5, 50)));
+        assert!(s.is_quiescent());
     }
 
     #[test]
@@ -193,12 +216,11 @@ mod tests {
         }
         s.delete(3);
         s.delete(7);
-        let mut drained = s.drain_exclusive();
-        drained.sort_unstable();
+        let drained = s.drain_exclusive();
         assert_eq!(drained.len(), 8);
         assert!(s.is_quiescent());
         assert_eq!(s.lookup(1), None);
-        // ring is reusable after drain
+        // pool is reusable after drain
         assert!(s.push(pack(100, 1)));
         assert_eq!(s.lookup(100), Some(1));
     }

@@ -7,44 +7,98 @@
 //! * **WCME** (lookup / replace / delete): probe all 32 slots of each
 //!   candidate bucket, elect the first match, winner performs exactly one
 //!   64-bit CAS (replace/delete) or returns the value (lookup).
-//! * **WABC** (claim-then-commit): read the 32-bit free mask, elect the
-//!   lowest free bit, claim it with one `fetch_and`, publish the packed KV
-//!   with a release store.
+//! * **WABC** (claim-then-commit): read the free mask, elect the lowest
+//!   free bit, claim it with one `fetch_and`, publish the packed KV with a
+//!   release store.
 //! * **Bounded cuckoo eviction** under a short per-bucket spin lock, at most
 //!   `max_evictions` rounds, then the overflow stash.
 //!
-//! Resize (linear hashing, §IV-C) and physical reallocation run under the
-//! table's exclusive phase guard — the analogue of the GPU running resize
-//! as its own kernel launch between operation batches.
+//! ### Epoch scheme (no phase lock)
+//! There is no reader-writer phase guard. An operation *pins an epoch*
+//! ([`crate::core::epoch::EpochDomain`]): one RMW on its own padded pin
+//! stripe plus one plain load of the epoch word — never an RMW on a shared
+//! cache line — and then works directly against the current [`State`]
+//! allocation behind an `AtomicPtr`.
+//!
+//! Linear-hashing resize ([`crate::native::resize`]) migrates K buckets at
+//! a time **concurrently with operations**:
+//!
+//! * The round state (`index_mask`, `split_ptr`) is one packed atomic
+//!   *round word* inside `State`; operations snapshot it, route, and
+//!   re-validate the snapshot on the miss path.
+//! * A bucket being migrated carries a **migration marker** — a reserved
+//!   bit (bit 32) in its 64-bit free-mask word. Claims detect the marker
+//!   in the `fetch_and` return value (same word ⇒ totally ordered with the
+//!   marker), hand back any won slot, and retry with fresh routing; probes
+//!   that miss while a marker is (or was) set re-route and retry. Only
+//!   operations touching the one or two buckets in flight ever wait — the
+//!   rest of the table proceeds at full speed during a resize.
+//! * Physical reallocation builds a new `State`, publishes it with a
+//!   pointer swap inside the epoch's exclusive phase, and frees the old
+//!   allocation after the grace period (all pins drained — quiescent-state
+//!   reclamation).
 //!
 //! ### Batched operations
 //! [`crate::native::batch`] adds `insert_batch` / `lookup_batch` /
-//! `delete_batch`: one phase read-guard acquisition per batch (not per
-//! op), candidate buckets hashed for the whole batch up front, and a
-//! software-pipelined probe loop that touches op *i+1*'s bucket row while
-//! probing op *i* — the CPU analogue of the paper's bulk kernel launches.
-//! The single-op paths below delegate to the same `*_locked` bodies, so
-//! batched and per-op execution are behaviourally identical. Occupancy is
-//! tracked by a cache-line-padded [`StripedCounter`] so concurrent batches
-//! do not serialize on one `count` cache line.
+//! `delete_batch`: one epoch pin per batch (not per op), raw hashes
+//! computed for the whole batch up front, and a software-pipelined probe
+//! loop that touches op *i+1*'s bucket row while probing op *i* — the CPU
+//! analogue of the paper's bulk kernel launches. The single-op paths below
+//! delegate to the same `*_core` bodies, so batched and per-op execution
+//! are behaviourally identical. Occupancy is tracked by a
+//! cache-line-padded [`StripedCounter`] so concurrent batches do not
+//! serialize on one `count` cache line.
 //!
 //! ### Deviation from the paper
 //! Algorithm 2 line 15 restores a failed claim bit with `fetch_or`. With
 //! `fetch_and(!bit)`, a lost race means the bit was *already* zero, so the
 //! failed claimer changed nothing; restoring it would mark a slot free
 //! while its winner occupies it. We therefore simply retry with a fresh
-//! mask (no restore). See DESIGN.md §6.
+//! mask (no restore). A claimer that *won* its bit but cannot publish
+//! (migration marker, or the bucket stopped being a candidate) owns the
+//! slot and may safely hand the bit back with `fetch_or`. See DESIGN.md §6.
 
 use crate::core::config::{HiveConfig, Layout};
 use crate::core::counter::StripedCounter;
+use crate::core::epoch::{EpochDomain, EpochGuard};
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::{is_empty, pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
 use crate::core::{FULL_FREE_MASK, SLOTS_PER_BUCKET};
 use crate::hash::HashFamily;
 use crate::native::stash::OverflowStash;
 use crate::native::stats::{OpStats, StatsSnapshot, Step};
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Migration marker: bit 32 of a bucket's 64-bit free-mask word. Set while
+/// that bucket is being split or merged; the low 32 bits stay the per-slot
+/// free mask.
+pub(crate) const MIGRATING: u64 = 1 << 32;
+
+/// The free-mask bits of a mask word (low 32).
+pub(crate) const FREE_BITS: u64 = FULL_FREE_MASK as u64;
+
+/// Bits 33+ of a mask word hold the bucket's *migration sequence*: bumped
+/// once for every completed split/merge touching the bucket (before the
+/// marker clears). Miss-path validation compares it across a probe, which
+/// defeats round-word ABA — a split+merge pair that restores an identical
+/// `(index_mask, split_ptr)` while a probe is preempted still leaves both
+/// buckets' sequences advanced.
+pub(crate) const MIGRATION_SEQ_SHIFT: u32 = 33;
+
+/// Pack the linear-hashing round state into one word (high 32 =
+/// `index_mask`, low 32 = `split_ptr`) so operations snapshot both with a
+/// single load.
+#[inline(always)]
+pub(crate) fn pack_round(index_mask: u32, split_ptr: u32) -> u64 {
+    ((index_mask as u64) << 32) | split_ptr as u64
+}
+
+/// Inverse of [`pack_round`].
+#[inline(always)]
+pub(crate) fn unpack_round(r: u64) -> (u32, u32) {
+    ((r >> 32) as u32, r as u32)
+}
 
 /// Outcome of [`HiveTable::insert`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,44 +113,51 @@ pub enum InsertOutcome {
     Stashed,
 }
 
-/// Bucket/metadata arrays. Swapped wholesale on physical reallocation, so
-/// everything lives behind the phase `RwLock`; operations only ever take
-/// the read side.
+/// Bucket/metadata arrays. Swapped wholesale on physical reallocation via
+/// the table's `AtomicPtr` (inside the epoch's exclusive phase); all
+/// mutation in the stable phase is per-word atomic.
 pub(crate) struct State {
     /// Packed KV words, `phys_buckets * 32` of them, bucket-major. A bucket
     /// row is 256 B — the paper's two 128 B cache lines.
     pub(crate) buckets: Box<[AtomicU64]>,
-    /// Per-bucket 32-bit free masks (bit i set ⇒ slot i free).
-    pub(crate) free_mask: Box<[AtomicU32]>,
-    /// Per-bucket eviction locks (0 = free). Only step 3 touches these.
+    /// Per-bucket mask words: low 32 bits are the free mask (bit i set ⇒
+    /// slot i free), bit 32 is the [`MIGRATING`] marker.
+    pub(crate) masks: Box<[AtomicU64]>,
+    /// Per-bucket eviction locks (0 = free). Step 3 and the migrator take
+    /// these; operation fast paths never do.
     pub(crate) locks: Box<[AtomicU32]>,
-    /// Linear-hashing round mask `2^m - 1`. Mutated only under the write
-    /// guard (resize), read under the read guard.
-    pub(crate) index_mask: u32,
-    /// Buckets of the current round already split.
-    pub(crate) split_ptr: u32,
+    /// Packed round word (see [`pack_round`]). Stored by the migrator after
+    /// each bucket migration, loaded (once per routing decision) by every
+    /// operation.
+    pub(crate) round: AtomicU64,
 }
 
 impl State {
-    fn with_buckets(phys: usize, index_mask: u32, split_ptr: u32) -> Self {
+    pub(crate) fn with_buckets(phys: usize, index_mask: u32, split_ptr: u32) -> Self {
         State {
             buckets: (0..phys * SLOTS_PER_BUCKET).map(|_| AtomicU64::new(EMPTY_WORD)).collect(),
-            free_mask: (0..phys).map(|_| AtomicU32::new(FULL_FREE_MASK)).collect(),
+            masks: (0..phys).map(|_| AtomicU64::new(FREE_BITS)).collect(),
             locks: (0..phys).map(|_| AtomicU32::new(0)).collect(),
-            index_mask,
-            split_ptr,
+            round: AtomicU64::new(pack_round(index_mask, split_ptr)),
         }
+    }
+
+    /// One-load snapshot of `(index_mask, split_ptr)`.
+    #[inline(always)]
+    pub(crate) fn round(&self) -> (u32, u32) {
+        unpack_round(self.round.load(Ordering::Acquire))
     }
 
     /// Logical bucket count `2^m + split_ptr`.
     #[inline]
     pub(crate) fn logical_buckets(&self) -> usize {
-        (self.index_mask as usize + 1) + self.split_ptr as usize
+        let (mask, sp) = self.round();
+        (mask as usize + 1) + sp as usize
     }
 
     #[inline]
     pub(crate) fn phys_buckets(&self) -> usize {
-        self.free_mask.len()
+        self.masks.len()
     }
 
     /// Slot index of `(bucket, lane)` in the flat word array.
@@ -104,11 +165,53 @@ impl State {
     pub(crate) fn slot(&self, bucket: u32, lane: usize) -> usize {
         bucket as usize * SLOTS_PER_BUCKET + lane
     }
+
+    /// The 32-bit free mask of `bucket` (marker bit stripped).
+    #[inline(always)]
+    pub(crate) fn free_mask_of(&self, bucket: u32, order: Ordering) -> u32 {
+        (self.masks[bucket as usize].load(order) & FREE_BITS) as u32
+    }
+}
+
+/// Result of one WABC claim attempt against a bucket.
+pub(crate) enum ClaimOutcome {
+    /// Word published; the claimed lane is recorded in stats only.
+    Placed,
+    /// Bucket has no free slot.
+    Full,
+    /// A migration marker (or a routing change) was detected; the caller
+    /// must re-snapshot the round word and retry.
+    Restart,
+}
+
+/// Result of a bounded cuckoo eviction chain.
+enum EvictResult {
+    /// The newcomer (and any displaced victim) found a home.
+    Placed,
+    /// Routing moved under us before any displacement; retry the insert.
+    Restart,
+    /// Eviction bound exhausted with the newcomer still homeless.
+    Bound,
+}
+
+enum EvictOutcome {
+    Placed,
+    Retry,
+    Rerouted,
+    Evicted(u64),
 }
 
 /// The native concurrent Hive hash table (paper §III–§IV).
 pub struct HiveTable {
-    pub(crate) state: RwLock<State>,
+    /// Current state allocation. Only [`crate::native::resize`] swaps it,
+    /// inside `epoch`'s exclusive phase.
+    pub(crate) state: AtomicPtr<State>,
+    /// Epoch domain guarding `state` (pin on every op; exclusive phase +
+    /// grace period around pointer swaps).
+    pub(crate) epoch: EpochDomain,
+    /// Serializes resize passes (migration batches and reallocation).
+    /// Never taken on the lookup/insert/delete fast paths.
+    pub(crate) resize_mutex: Mutex<()>,
     pub(crate) family: HashFamily,
     pub(crate) cfg: HiveConfig,
     pub(crate) stash: OverflowStash,
@@ -120,11 +223,26 @@ pub struct HiveTable {
     /// full (paper §IV-A step 4: "the operation is flagged as pending for
     /// deferred reinsertion during the next resize epoch"). Rare path —
     /// guarded by `pending_len` so the fast path never takes the lock.
-    pub(crate) pending: std::sync::Mutex<Vec<u64>>,
+    pub(crate) pending: Mutex<Vec<u64>>,
     pub(crate) pending_len: AtomicUsize,
+    /// Seqlock-style stash-drain epoch: odd while a drain is republishing
+    /// words into the table (the one window where a key can have a table
+    /// copy *and* a stash/pending shadow, and where entries move
+    /// stash→table against the probes' table→stash scan order).
+    /// Delete/replace gate the shadow purge on "odd", and every miss path
+    /// re-probes unless the word was even and unchanged across its scan.
+    pub(crate) drain_epoch: AtomicU64,
     pub(crate) stats: OpStats,
     /// Minimum round mask — the table never shrinks below its initial size.
     pub(crate) min_index_mask: u32,
+}
+
+impl Drop for HiveTable {
+    fn drop(&mut self) {
+        // SAFETY: `state` always holds the unique pointer produced by
+        // `Box::into_raw`, and `&mut self` proves no guard can be live.
+        unsafe { drop(Box::from_raw(self.state.load(Ordering::Acquire))) };
+    }
 }
 
 impl HiveTable {
@@ -142,13 +260,17 @@ impl HiveTable {
         let index_mask = (buckets - 1) as u32;
         let stash_cap =
             ((buckets * SLOTS_PER_BUCKET) as f64 * cfg.stash_fraction).ceil().max(8.0) as usize;
+        let state = Box::new(State::with_buckets(buckets, index_mask, 0));
         Ok(HiveTable {
-            state: RwLock::new(State::with_buckets(buckets, index_mask, 0)),
+            state: AtomicPtr::new(Box::into_raw(state)),
+            epoch: EpochDomain::new(),
+            resize_mutex: Mutex::new(()),
             family: HashFamily::new(cfg.hash_kinds.clone()),
             stash: OverflowStash::new(stash_cap),
             count: StripedCounter::new(),
-            pending: std::sync::Mutex::new(Vec::new()),
+            pending: Mutex::new(Vec::new()),
             pending_len: AtomicUsize::new(0),
+            drain_epoch: AtomicU64::new(0),
             stats: OpStats::default(),
             min_index_mask: index_mask,
             cfg,
@@ -158,6 +280,17 @@ impl HiveTable {
     /// Convenience: table sized for `n` keys at `target_lf` load factor.
     pub fn with_capacity(n: usize, target_lf: f64) -> Result<Self> {
         Self::new(HiveConfig::for_capacity(n, target_lf))
+    }
+
+    /// Dereference the current state under a live pin. The returned
+    /// reference is valid for the guard's lifetime: reallocation frees a
+    /// state only after every pin of the old epoch has dropped.
+    #[inline(always)]
+    pub(crate) fn state_ref<'g>(&self, _guard: &'g EpochGuard<'_>) -> &'g State {
+        // SAFETY: the pointer is always a live Box::into_raw allocation;
+        // the pin (witnessed by `_guard`) blocks the grace period that
+        // precedes its deallocation.
+        unsafe { &*self.state.load(Ordering::Acquire) }
     }
 
     /// Number of live entries (approximate under concurrency).
@@ -172,7 +305,8 @@ impl HiveTable {
 
     /// Current logical bucket count `2^m + split_ptr`.
     pub fn logical_buckets(&self) -> usize {
-        self.state.read().unwrap().logical_buckets()
+        let guard = self.epoch.pin();
+        self.state_ref(&guard).logical_buckets()
     }
 
     /// Slot capacity = logical buckets × 32.
@@ -196,7 +330,7 @@ impl HiveTable {
     }
 
     /// Park a word on the pending list (both table and stash full).
-    fn park_pending(&self, word: u64) {
+    pub(crate) fn park_pending(&self, word: u64) {
         self.pending.lock().unwrap().push(word);
         self.pending_len.fetch_add(1, Ordering::Release);
         self.stats.record_stash_full();
@@ -238,6 +372,29 @@ impl HiveTable {
         }
     }
 
+    /// Remove any shadow copy of `key` from the stash/pending list after a
+    /// table-resident copy was updated or removed. During a stash drain the
+    /// word is briefly duplicated (table copy published *before* the stash
+    /// copy is retracted, so lookups never observe a hole); replace/delete
+    /// purge the shadow so the duplicate can never resurrect a key. No
+    /// count adjustment: a shadow is a physical duplicate, not an entry.
+    ///
+    /// Gated on the drain epoch being odd: outside a drain no shadow can
+    /// exist, and the drain flips the epoch odd before publishing its
+    /// first table copy, so any op that can observe a duplicate also
+    /// observes the odd epoch.
+    fn purge_shadow(&self, key: u32) {
+        if self.drain_epoch.load(Ordering::Acquire) & 1 == 0 {
+            return;
+        }
+        if !self.stash.is_quiescent() {
+            self.stash.delete(key);
+        }
+        if self.pending_len.load(Ordering::Acquire) > 0 {
+            self.pending_delete(key);
+        }
+    }
+
     /// The configured hash family.
     pub fn family(&self) -> &HashFamily {
         &self.family
@@ -246,6 +403,121 @@ impl HiveTable {
     /// The configuration this table was built with.
     pub fn config(&self) -> &HiveConfig {
         &self.cfg
+    }
+
+    // ------------------------------------------------------------------
+    // Routing
+    // ------------------------------------------------------------------
+
+    /// Raw (round-independent) hashes of `key` under the family. Only the
+    /// first `family.d()` entries are meaningful. Batch layers hoist this
+    /// per-batch; the round reduction stays per-attempt because the round
+    /// word can move mid-operation.
+    #[inline]
+    pub(crate) fn raw_hashes(&self, key: u32) -> [u32; 4] {
+        let mut r = [0u32; 4];
+        for (slot, i) in r.iter_mut().zip(0..self.family.d()) {
+            *slot = self.family.raw(i, key);
+        }
+        r
+    }
+
+    /// Reduce raw hashes to candidate buckets under a round snapshot.
+    #[inline(always)]
+    pub(crate) fn route(raws: &[u32; 4], d: usize, mask: u32, sp: u32) -> [u32; 4] {
+        let mut c = [0u32; 4];
+        for (slot, &h) in c.iter_mut().zip(raws.iter()).take(d) {
+            *slot = HashFamily::address(h, mask, sp);
+        }
+        c
+    }
+
+    /// `true` while `bucket` is a candidate of `key` under the *current*
+    /// round word.
+    #[inline]
+    fn still_candidate(&self, state: &State, key: u32, bucket: u32) -> bool {
+        let (mask, sp) = state.round();
+        (0..self.family.d()).any(|i| self.family.bucket(i, key, mask, sp) == bucket)
+    }
+
+    /// `true` if no stash drain ran or is running since `since` was
+    /// sampled from `drain_epoch` — i.e. a probe's table→stash scan order
+    /// could not have raced a drain's stash→table move, so its miss is
+    /// authoritative.
+    #[inline]
+    fn stash_stable(&self, since: u64) -> bool {
+        since & 1 == 0 && self.drain_epoch.load(Ordering::SeqCst) == since
+    }
+
+    /// Park until any in-flight stash drain finishes, instead of
+    /// hot-looping full table+stash re-scans against it (the drain can
+    /// span many bounded eviction chains).
+    #[inline]
+    fn wait_drain_quiesced(&self) {
+        while self.drain_epoch.load(Ordering::Acquire) & 1 == 1 {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Spin until `bucket`'s migration marker clears. Migrating one bucket
+    /// is O(32) slot moves, so the wait is short and bounded.
+    #[inline]
+    pub(crate) fn wait_unmarked(state: &State, bucket: u32) {
+        while state.masks[bucket as usize].load(Ordering::SeqCst) & MIGRATING != 0 {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Shared miss-path validation for lookup/delete/insert-replace and
+    /// the drain's exact-word retraction. `pre` holds each candidate's
+    /// mask word as loaded at the pre-probe marker check. Returns `true`
+    /// only if the probe's routing was authoritative end to end:
+    ///
+    /// * re-routing under the *current* round still yields `cands` — this
+    ///   catches a split that completed between the caller's round
+    ///   snapshot and its first mask load (the probe would have scanned a
+    ///   bucket the key had already left);
+    /// * no candidate's marker is set *now* and no candidate's migration
+    ///   sequence (mask-word bits 33+) moved across the probe — the
+    ///   sequences, unlike the round word, are monotonic, so a preempted
+    ///   probe spanning a split+merge pair cannot be fooled by an
+    ///   identically restored round (ABA).
+    ///
+    /// The `SeqCst` fence orders the probe's relaxed slot loads before
+    /// the re-loads here (a migrator's marker RMW is a full barrier
+    /// before its copy-then-clear stores), so a probe that observed a
+    /// migrator's clear also observes its marker or sequence bump. On
+    /// `false`, markers have been waited out; the caller re-routes and
+    /// re-probes.
+    #[inline]
+    pub(crate) fn validate_miss(
+        &self,
+        state: &State,
+        raws: &[u32; 4],
+        cands: &[u32; 4],
+        pre: &[u64; 4],
+    ) -> bool {
+        let d = self.family.d();
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let mut stale = false;
+        for (&b, &before) in cands[..d].iter().zip(pre[..d].iter()) {
+            let now = state.masks[b as usize].load(Ordering::SeqCst);
+            let seq_moved = (now >> MIGRATION_SEQ_SHIFT) != (before >> MIGRATION_SEQ_SHIFT);
+            if now & MIGRATING != 0 || seq_moved {
+                stale = true;
+            }
+        }
+        let (mask_now, sp_now) = state.round();
+        if Self::route(raws, d, mask_now, sp_now) != *cands {
+            stale = true;
+        }
+        if stale {
+            for &b in &cands[..d] {
+                Self::wait_unmarked(state, b);
+            }
+            return false;
+        }
+        true
     }
 
     // ------------------------------------------------------------------
@@ -277,7 +549,7 @@ impl HiveTable {
     }
 
     /// Mask-guided WCME variant for the insert replace-check (§Perf log):
-    /// one free-mask load selects the occupied lanes so only those are
+    /// one mask-word load selects the occupied lanes so only those are
     /// compared — during a fill most buckets are part-empty, cutting the
     /// replace probe sharply (insert +25 % measured). A lane whose claim
     /// is mid-publish reads EMPTY and is skipped; a completed insert's
@@ -287,8 +559,7 @@ impl HiveTable {
     fn wcme_match_masked(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
         let base = bucket as usize * SLOTS_PER_BUCKET;
         let key64 = key as u64;
-        let mut occupied =
-            !(state.free_mask[bucket as usize].load(Ordering::Acquire)) & FULL_FREE_MASK;
+        let mut occupied = !state.free_mask_of(bucket, Ordering::Acquire);
         while occupied != 0 {
             let lane = occupied.trailing_zeros() as usize;
             occupied &= occupied - 1;
@@ -305,50 +576,64 @@ impl HiveTable {
     // Public operations
     // ------------------------------------------------------------------
 
-    /// Candidate buckets `{h_1(k) .. h_d(k)}` under the current round
-    /// state. Only the first `family.d()` entries are meaningful.
-    #[inline]
-    pub(crate) fn candidates(&self, state: &State, key: u32) -> [u32; 4] {
-        let (mask, sp) = (state.index_mask, state.split_ptr);
-        let mut c = [0u32; 4];
-        for (i, slot) in c.iter_mut().enumerate().take(self.family.d()) {
-            *slot = self.family.bucket(i, key, mask, sp);
-        }
-        c
-    }
-
     /// Search(k): value of `key`, or `None` (paper §III-D).
     pub fn lookup(&self, key: u32) -> Option<u32> {
         if key == EMPTY_KEY {
             return None;
         }
-        let state = self.state.read().unwrap();
-        let cands = self.candidates(&state, key);
-        self.lookup_locked(&state, key, &cands)
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.lookup_core(state, key, &raws)
     }
 
-    /// Lookup body, called with the phase read guard held and the
-    /// candidate buckets already hashed (shared with the batch layer).
-    pub(crate) fn lookup_locked(&self, state: &State, key: u32, cands: &[u32; 4]) -> Option<u32> {
-        for &b in &cands[..self.family.d()] {
-            if let Some((_, w)) = Self::wcme_match(state, b, key) {
-                self.stats.record_lookup(true);
-                return Some(unpack_value(w));
+    /// Lookup body, called with an epoch pin held and the raw hashes
+    /// already computed (shared with the batch layer).
+    pub(crate) fn lookup_core(&self, state: &State, key: u32, raws: &[u32; 4]) -> Option<u32> {
+        let d = self.family.d();
+        'retry: loop {
+            // A concurrent stash drain moves entries stash→table, opposite
+            // to this probe's table→stash order; a miss below is only
+            // authoritative if no drain overlapped the whole scan.
+            let de = self.drain_epoch.load(Ordering::SeqCst);
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            let mut pre = [0u64; 4];
+            for (i, &b) in cands[..d].iter().enumerate() {
+                let mw = state.masks[b as usize].load(Ordering::SeqCst);
+                if mw & MIGRATING != 0 {
+                    Self::wait_unmarked(state, b);
+                    continue 'retry;
+                }
+                pre[i] = mw;
+                if let Some((_, w)) = Self::wcme_match(state, b, key) {
+                    self.stats.record_lookup(true);
+                    return Some(unpack_value(w));
+                }
             }
-        }
-        // Overflow stash participates in lookups for correctness (§IV-A).
-        if !self.stash.is_quiescent() {
-            if let Some(v) = self.stash.lookup(key) {
+            // Miss: confirm no candidate migrated under the probe.
+            if !self.validate_miss(state, raws, &cands, &pre) {
+                continue 'retry;
+            }
+            // Overflow stash participates in lookups for correctness
+            // (§IV-A).
+            if !self.stash.is_quiescent() {
+                if let Some(v) = self.stash.lookup(key) {
+                    self.stats.record_lookup(true);
+                    return Some(v);
+                }
+            }
+            if let Some(v) = self.pending_lookup(key) {
                 self.stats.record_lookup(true);
                 return Some(v);
             }
+            if self.stash_stable(de) {
+                self.stats.record_lookup(false);
+                return None;
+            }
+            // a drain overlapped the scan — wait it out, then re-probe
+            self.wait_drain_quiesced();
         }
-        if let Some(v) = self.pending_lookup(key) {
-            self.stats.record_lookup(true);
-            return Some(v);
-        }
-        self.stats.record_lookup(false);
-        None
     }
 
     /// Delete(k): remove `key`, returning `true` if it was present
@@ -357,50 +642,84 @@ impl HiveTable {
         if key == EMPTY_KEY {
             return false;
         }
-        let state = self.state.read().unwrap();
-        let cands = self.candidates(&state, key);
-        self.delete_locked(&state, key, &cands)
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.delete_core(state, key, &raws)
     }
 
-    /// Delete body, called with the phase read guard held and the
-    /// candidate buckets already hashed (shared with the batch layer).
-    pub(crate) fn delete_locked(&self, state: &State, key: u32, cands: &[u32; 4]) -> bool {
-        for &b in &cands[..self.family.d()] {
-            // Retry the CAS a bounded number of times: a failed CAS means a
-            // concurrent replace updated the value — rescan and retry.
-            for _attempt in 0..4 {
-                match Self::wcme_match(state, b, key) {
-                    None => break,
-                    Some((lane, w)) => {
-                        let slot = state.slot(b, lane);
-                        if state.buckets[slot]
-                            .compare_exchange(w, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
-                            .is_ok()
-                        {
-                            // Publish the vacancy (Algorithm 4 line 14).
-                            state.free_mask[b as usize]
-                                .fetch_or(1u32 << lane, Ordering::AcqRel);
-                            self.count.decr();
-                            self.stats.record_delete(true);
-                            return true;
+    /// Delete body, called with an epoch pin held and the raw hashes
+    /// already computed (shared with the batch layer).
+    pub(crate) fn delete_core(&self, state: &State, key: u32, raws: &[u32; 4]) -> bool {
+        let d = self.family.d();
+        'retry: loop {
+            // drain-overlap guard: see lookup_core
+            let de = self.drain_epoch.load(Ordering::SeqCst);
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            let mut pre = [0u64; 4];
+            for (i, &b) in cands[..d].iter().enumerate() {
+                let mw = state.masks[b as usize].load(Ordering::SeqCst);
+                if mw & MIGRATING != 0 {
+                    Self::wait_unmarked(state, b);
+                    continue 'retry;
+                }
+                pre[i] = mw;
+                // Retry the CAS a bounded number of times: a failed CAS
+                // means a concurrent replace updated the value — rescan.
+                for _attempt in 0..4 {
+                    match Self::wcme_match(state, b, key) {
+                        None => break,
+                        Some((lane, w)) => {
+                            let slot = state.slot(b, lane);
+                            if state.buckets[slot]
+                                .compare_exchange(
+                                    w,
+                                    EMPTY_WORD,
+                                    Ordering::AcqRel,
+                                    Ordering::Relaxed,
+                                )
+                                .is_ok()
+                            {
+                                // Publish the vacancy (Algorithm 4 line 14).
+                                // RMW, so it composes with the migrator's
+                                // concurrent mask updates. If a migrator
+                                // already copied this word to its partner
+                                // bucket, its clear-CAS will fail against
+                                // our EMPTY and it retracts the copy.
+                                state.masks[b as usize]
+                                    .fetch_or(1u64 << lane, Ordering::AcqRel);
+                                self.count.decr();
+                                self.purge_shadow(key);
+                                self.stats.record_delete(true);
+                                return true;
+                            }
+                            self.stats.record_cas_retry();
                         }
-                        self.stats.record_cas_retry();
                     }
                 }
             }
+            // Miss: confirm no candidate migrated under the probe.
+            if !self.validate_miss(state, raws, &cands, &pre) {
+                continue 'retry;
+            }
+            if !self.stash.is_quiescent() && self.stash.delete(key) {
+                self.count.decr();
+                self.stats.record_delete(true);
+                return true;
+            }
+            if self.pending_delete(key) {
+                self.count.decr();
+                self.stats.record_delete(true);
+                return true;
+            }
+            if self.stash_stable(de) {
+                self.stats.record_delete(false);
+                return false;
+            }
+            // a drain overlapped the scan — wait it out, then re-probe
+            self.wait_drain_quiesced();
         }
-        if !self.stash.is_quiescent() && self.stash.delete(key) {
-            self.count.decr();
-            self.stats.record_delete(true);
-            return true;
-        }
-        if self.pending_delete(key) {
-            self.count.decr();
-            self.stats.record_delete(true);
-            return true;
-        }
-        self.stats.record_delete(false);
-        false
     }
 
     /// Insert(⟨k,v⟩) / Replace(⟨k,v⟩) — the four-step strategy (§IV-A).
@@ -408,9 +727,10 @@ impl HiveTable {
         if key == EMPTY_KEY {
             return Err(HiveError::InvalidKey(key));
         }
-        let state = self.state.read().unwrap();
-        let cands = self.candidates(&state, key);
-        let outcome = self.insert_locked(&state, key, value, &cands)?;
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        let outcome = self.insert_core(state, key, value, &raws)?;
         self.record_insert_outcome(outcome);
         Ok(outcome)
     }
@@ -426,141 +746,253 @@ impl HiveTable {
         }
     }
 
-    /// Insert body, called with the phase read guard held and the
-    /// candidate buckets already hashed (shared with the batch layer).
-    pub(crate) fn insert_locked(
+    /// Insert body, called with an epoch pin held and the raw hashes
+    /// already computed (shared with the batch layer).
+    pub(crate) fn insert_core(
         &self,
         state: &State,
         key: u32,
         value: u32,
-        cands: &[u32; 4],
+        raws: &[u32; 4],
     ) -> Result<InsertOutcome> {
         let d = self.family.d();
         let new_word = pack(key, value);
 
         // ---- Step 1: Replace (Algorithm 1) ----
-        for &b in &cands[..d] {
-            for _attempt in 0..4 {
-                match Self::wcme_match_masked(state, b, key) {
-                    None => break,
-                    Some((lane, old)) => {
-                        let slot = state.slot(b, lane);
-                        if state.buckets[slot]
-                            .compare_exchange(old, new_word, Ordering::AcqRel, Ordering::Relaxed)
-                            .is_ok()
-                        {
-                            return Ok(InsertOutcome::Replaced);
+        'probe: loop {
+            // drain-overlap guard: see lookup_core
+            let de = self.drain_epoch.load(Ordering::SeqCst);
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            let mut pre = [0u64; 4];
+            for (i, &b) in cands[..d].iter().enumerate() {
+                let mw = state.masks[b as usize].load(Ordering::SeqCst);
+                if mw & MIGRATING != 0 {
+                    Self::wait_unmarked(state, b);
+                    continue 'probe;
+                }
+                pre[i] = mw;
+                for _attempt in 0..4 {
+                    match Self::wcme_match_masked(state, b, key) {
+                        None => break,
+                        Some((lane, old)) => {
+                            let slot = state.slot(b, lane);
+                            if state.buckets[slot]
+                                .compare_exchange(
+                                    old,
+                                    new_word,
+                                    Ordering::AcqRel,
+                                    Ordering::Relaxed,
+                                )
+                                .is_ok()
+                            {
+                                // A migrator racing this bucket re-copies on
+                                // clear-CAS failure, so the fresh value
+                                // always reaches the partner bucket.
+                                self.purge_shadow(key);
+                                return Ok(InsertOutcome::Replaced);
+                            }
+                            self.stats.record_cas_retry();
                         }
-                        self.stats.record_cas_retry();
                     }
                 }
             }
-        }
-        // Key may be parked in the stash or pending list; replace it there
-        // so the eventual drain does not resurrect a stale value.
-        if !self.stash.is_quiescent() && self.stash.replace(key, new_word) {
-            return Ok(InsertOutcome::Replaced);
-        }
-        if self.pending_replace(key, new_word) {
-            return Ok(InsertOutcome::Replaced);
+            // Miss: confirm no candidate migrated under the probe.
+            if !self.validate_miss(state, raws, &cands, &pre) {
+                continue 'probe;
+            }
+            // Key may be parked in the stash or pending list; replace it
+            // there so the eventual drain does not resurrect a stale value.
+            if !self.stash.is_quiescent() && self.stash.replace(key, new_word) {
+                return Ok(InsertOutcome::Replaced);
+            }
+            if self.pending_replace(key, new_word) {
+                return Ok(InsertOutcome::Replaced);
+            }
+            if self.stash_stable(de) {
+                break;
+            }
+            // A drain overlapped the replace scan: the key may have moved
+            // stash→table behind the probe. Wait it out and re-probe
+            // before claiming, or the drained copy would be silently
+            // duplicated.
+            self.wait_drain_quiesced();
         }
 
-        // ---- Step 2: Claim-then-commit (Algorithm 2 / WABC) ----
-        // Bucketed two-choice: attempt the candidate with the most free
-        // slots first (§V: "bucketed two-choice placement policy").
-        let mut order = [0usize; 4];
-        for (i, o) in order.iter_mut().enumerate().take(d) {
-            *o = i;
-        }
-        if d == 2 {
-            let f0 = state.free_mask[cands[0] as usize].load(Ordering::Relaxed).count_ones();
-            let f1 = state.free_mask[cands[1] as usize].load(Ordering::Relaxed).count_ones();
-            if f1 > f0 {
-                order.swap(0, 1);
+        // ---- Steps 2–4: claim / evict / stash ----
+        'place: loop {
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            // Bucketed two-choice: attempt the candidate with the most free
+            // slots first (§V: "bucketed two-choice placement policy").
+            let mut order = [0usize; 4];
+            for (i, o) in order.iter_mut().enumerate().take(d) {
+                *o = i;
             }
-        }
-        for &i in &order[..d] {
-            if let Some(_lane) = self.wabc_claim_commit(state, cands[i], new_word) {
-                self.count.incr();
-                return Ok(InsertOutcome::Inserted);
-            }
-        }
-
-        // ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
-        match self.cuckoo_evict_insert(state, cands[0], new_word) {
-            Some(()) => {
-                self.count.incr();
-                Ok(InsertOutcome::Evicted)
-            }
-            None => {
-                // ---- Step 4: overflow stash ----
-                // Stash full ⇒ the word is *flagged pending* for the next
-                // resize epoch (§IV-A) — never dropped, never an error.
-                if !self.stash.push(new_word) {
-                    self.park_pending(new_word);
+            if d == 2 {
+                let f0 = state.free_mask_of(cands[0], Ordering::Relaxed).count_ones();
+                let f1 = state.free_mask_of(cands[1], Ordering::Relaxed).count_ones();
+                if f1 > f0 {
+                    order.swap(0, 1);
                 }
-                self.count.incr();
-                Ok(InsertOutcome::Stashed)
+            }
+            // ---- Step 2: Claim-then-commit (Algorithm 2 / WABC) ----
+            for &i in &order[..d] {
+                match self.wabc_claim_commit(state, cands[i], key, new_word) {
+                    ClaimOutcome::Placed => {
+                        self.count.incr();
+                        return Ok(InsertOutcome::Inserted);
+                    }
+                    ClaimOutcome::Restart => continue 'place,
+                    ClaimOutcome::Full => {}
+                }
+            }
+
+            // ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
+            match self.cuckoo_evict_insert(state, cands[0], new_word) {
+                EvictResult::Placed => {
+                    self.count.incr();
+                    return Ok(InsertOutcome::Evicted);
+                }
+                EvictResult::Restart => continue 'place,
+                EvictResult::Bound => {
+                    // ---- Step 4: overflow stash ----
+                    // Stash full ⇒ the word is *flagged pending* for the
+                    // next resize epoch (§IV-A) — never dropped, never an
+                    // error.
+                    if !self.stash.push(new_word) {
+                        self.park_pending(new_word);
+                    }
+                    self.count.incr();
+                    return Ok(InsertOutcome::Stashed);
+                }
             }
         }
     }
 
-    /// WABC claim + immediate commit (Algorithm 2). Returns the claimed
-    /// lane on success, `None` if the bucket is full.
+    /// WABC claim + commit (Algorithm 2) with migration awareness. The
+    /// claim `fetch_and` and the migrator's marker `fetch_or` hit the same
+    /// mask word, so they are totally ordered: a claim that lands *after*
+    /// the marker sees it in the returned value and backs out; a claim
+    /// that lands *before* is seen by the migrator, which then waits for
+    /// the publish store before migrating (settle phase). After winning a
+    /// bit the claimer re-validates the routing — a split that completed
+    /// between the round snapshot and the claim would otherwise strand the
+    /// entry in a bucket lookups no longer probe.
     #[inline]
-    fn wabc_claim_commit(&self, state: &State, bucket: u32, word: u64) -> Option<usize> {
-        let fm = &state.free_mask[bucket as usize];
+    pub(crate) fn wabc_claim_commit(
+        &self,
+        state: &State,
+        bucket: u32,
+        key: u32,
+        word: u64,
+    ) -> ClaimOutcome {
+        let fm = &state.masks[bucket as usize];
         loop {
             // Lane 0's relaxed load + broadcast.
-            let mask = fm.load(Ordering::Relaxed) & FULL_FREE_MASK;
+            let mw = fm.load(Ordering::Relaxed);
+            if mw & MIGRATING != 0 {
+                Self::wait_unmarked(state, bucket);
+                return ClaimOutcome::Restart;
+            }
+            let mask = (mw & FREE_BITS) as u32;
             if mask == 0 {
-                return None; // bucket full — early warp exit
+                return ClaimOutcome::Full; // bucket full — early warp exit
             }
             // Winner = lowest free lane (ballot + ffs).
             let lane = mask.trailing_zeros() as usize;
-            let bit = 1u32 << lane;
+            let bit = 1u64 << lane;
             // One atomic RMW claims the slot.
             let old = fm.fetch_and(!bit, Ordering::AcqRel);
-            if old & bit != 0 {
-                // Ownership confirmed: publish the packed entry.
-                state.buckets[state.slot(bucket, lane)].store(word, Ordering::Release);
-                return Some(lane);
+            if old & MIGRATING != 0 {
+                // Migration began between the load and the claim. If we won
+                // the bit we own an unpublished slot: hand it back (safe —
+                // nothing was published) and re-route.
+                if old & bit != 0 {
+                    fm.fetch_or(bit, Ordering::AcqRel);
+                }
+                Self::wait_unmarked(state, bucket);
+                return ClaimOutcome::Restart;
             }
-            // Lost the race — the bit was already claimed; *no restore*
-            // (see module docs) — re-read the mask and retry.
-            self.stats.record_cas_retry();
+            if old & bit == 0 {
+                // Lost the race — the bit was already claimed; *no restore*
+                // (see module docs) — re-read the mask and retry.
+                self.stats.record_cas_retry();
+                continue;
+            }
+            // Ownership confirmed. Validate routing before publishing: the
+            // round store is ordered before the marker clear, and our
+            // claim's Acquire synchronizes with that clear, so this load
+            // sees any round that retired this bucket for `key`.
+            if !self.still_candidate(state, key, bucket) {
+                fm.fetch_or(bit, Ordering::AcqRel);
+                return ClaimOutcome::Restart;
+            }
+            state.buckets[state.slot(bucket, lane)].store(word, Ordering::Release);
+            return ClaimOutcome::Placed;
         }
     }
 
-    /// Bounded cuckoo eviction (Algorithm 3). Returns `Some(())` once the
-    /// newcomer (and every displaced victim) is placed, `None` if the
-    /// eviction bound is exhausted (→ stash).
-    fn cuckoo_evict_insert(&self, state: &State, start_bucket: u32, start_word: u64) -> Option<()> {
+    /// First candidate bucket of `key` under the current round word.
+    #[inline]
+    fn current_bucket_of(&self, state: &State, key: u32) -> u32 {
+        let (mask, sp) = state.round();
+        self.family.bucket(0, key, mask, sp)
+    }
+
+    /// Bounded cuckoo eviction (Algorithm 3). Returns [`EvictResult`]; a
+    /// displaced victim is *never* dropped — if the bound runs out with a
+    /// victim in hand it goes to the stash (or the pending list).
+    fn cuckoo_evict_insert(
+        &self,
+        state: &State,
+        start_bucket: u32,
+        start_word: u64,
+    ) -> EvictResult {
         let mut word = start_word;
         let mut bucket = start_bucket;
         for _kick in 0..self.cfg.max_evictions {
             self.stats.record_evict_round();
             // Lock-free fast path: a slot may have freed up.
-            if self.wabc_claim_commit(state, bucket, word).is_some() {
-                return Some(());
+            match self.wabc_claim_commit(state, bucket, unpack_key(word), word) {
+                ClaimOutcome::Placed => return EvictResult::Placed,
+                ClaimOutcome::Restart => {
+                    if word == start_word {
+                        return EvictResult::Restart;
+                    }
+                    // Carrying a displaced victim: re-route it under the
+                    // fresh round word and keep going.
+                    bucket = self.current_bucket_of(state, unpack_key(word));
+                    continue;
+                }
+                ClaimOutcome::Full => {}
             }
             // Short critical section on this bucket only (lane 0's lock).
+            // The migrator takes this lock before marking the bucket, so
+            // holding it excludes migration entirely.
             let lock = &state.locks[bucket as usize];
             if lock.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
-                // Someone else is evicting here; spin briefly then retry
-                // the round (bounded overall by max_evictions).
+                // Someone else is evicting (or migrating) here; spin
+                // briefly then retry the round (bounded overall by
+                // max_evictions).
                 std::hint::spin_loop();
                 continue;
             }
             self.stats.record_lock();
 
             let outcome = (|| {
-                let fm = &state.free_mask[bucket as usize];
-                let mask = fm.load(Ordering::Relaxed) & FULL_FREE_MASK;
+                // Re-validate routing under the lock: a split of this
+                // bucket that completed before we locked may have moved
+                // `word`'s home. The check stays true until unlock.
+                if !self.still_candidate(state, unpack_key(word), bucket) {
+                    return EvictOutcome::Rerouted;
+                }
+                let fm = &state.masks[bucket as usize];
+                let mask = (fm.load(Ordering::Relaxed) & FREE_BITS) as u32;
                 if mask != 0 {
                     // (i) a free bit exists: claim it under the lock.
                     let lane = mask.trailing_zeros() as usize;
-                    let bit = 1u32 << lane;
+                    let bit = 1u64 << lane;
                     let old = fm.fetch_and(!bit, Ordering::AcqRel);
                     if old & bit != 0 {
                         state.buckets[state.slot(bucket, lane)].store(word, Ordering::Release);
@@ -593,8 +1025,15 @@ impl HiveTable {
             lock.store(0, Ordering::Release);
 
             match outcome {
-                EvictOutcome::Placed => return Some(()),
+                EvictOutcome::Placed => return EvictResult::Placed,
                 EvictOutcome::Retry => continue,
+                EvictOutcome::Rerouted => {
+                    if word == start_word {
+                        return EvictResult::Restart;
+                    }
+                    bucket = self.current_bucket_of(state, unpack_key(word));
+                    continue;
+                }
                 EvictOutcome::Evicted(victim) => {
                     // Re-route the victim to its alternate bucket.
                     let vkey = unpack_key(victim);
@@ -610,16 +1049,16 @@ impl HiveTable {
             if !self.stash.push(word) {
                 self.park_pending(word);
             }
-            return Some(());
+            return EvictResult::Placed;
         }
-        None
+        EvictResult::Bound
     }
 
     /// Alternate candidate bucket for `key` given it currently sits in (or
     /// targets) `bucket` (Algorithm 3's `AltBucket`).
     #[inline]
     fn alt_bucket(&self, state: &State, key: u32, bucket: u32) -> u32 {
-        let (mask, sp) = (state.index_mask, state.split_ptr);
+        let (mask, sp) = state.round();
         let d = self.family.d();
         // First candidate that differs from the current bucket; fall back
         // to rotating through the family.
@@ -632,14 +1071,47 @@ impl HiveTable {
         self.family.bucket(0, key, mask, sp)
     }
 
+    /// Claim-only reinsertion used by the stash drain: the key is known to
+    /// be absent from the main table, the word is already counted, and the
+    /// caller keeps the stash copy alive until this returns `true` (so
+    /// concurrent lookups never observe a hole). No stats, no count.
+    pub(crate) fn reinsert_word(&self, state: &State, key: u32, word: u64) -> bool {
+        let raws = self.raw_hashes(key);
+        let d = self.family.d();
+        loop {
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            let mut restart = false;
+            for &b in &cands[..d] {
+                match self.wabc_claim_commit(state, b, key, word) {
+                    ClaimOutcome::Placed => return true,
+                    ClaimOutcome::Restart => {
+                        restart = true;
+                        break;
+                    }
+                    ClaimOutcome::Full => {}
+                }
+            }
+            if restart {
+                continue;
+            }
+            match self.cuckoo_evict_insert(state, cands[0], word) {
+                EvictResult::Placed => return true,
+                EvictResult::Restart => continue,
+                EvictResult::Bound => return false,
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // Introspection used by resize, tests and the coordinator
     // ------------------------------------------------------------------
 
-    /// Snapshot all live `(key, value)` pairs (table + stash). Takes the
-    /// read guard; concurrent mutations may or may not be observed.
+    /// Snapshot all live `(key, value)` pairs (table + stash). Pins an
+    /// epoch; concurrent mutations may or may not be observed.
     pub fn entries(&self) -> Vec<(u32, u32)> {
-        let state = self.state.read().unwrap();
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
         let logical = state.logical_buckets();
         let mut out = Vec::with_capacity(self.len());
         for b in 0..logical {
@@ -671,20 +1143,15 @@ impl HiveTable {
     /// Occupancy of each logical bucket (used by CSR-style diagnostics and
     /// resize decisions in tests).
     pub fn bucket_loads(&self) -> Vec<u32> {
-        let state = self.state.read().unwrap();
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
         (0..state.logical_buckets())
             .map(|b| {
-                SLOTS_PER_BUCKET as u32
-                    - (state.free_mask[b].load(Ordering::Relaxed) & FULL_FREE_MASK).count_ones()
+                let free = state.free_mask_of(b as u32, Ordering::Relaxed).count_ones();
+                SLOTS_PER_BUCKET as u32 - free
             })
             .collect()
     }
-}
-
-enum EvictOutcome {
-    Placed,
-    Retry,
-    Evicted(u64),
 }
 
 #[cfg(test)]
@@ -757,9 +1224,8 @@ mod tests {
         let n = (256.0 * 0.95) as u32;
         let mut stashed = 0;
         for k in 1..=n {
-            match t.insert(k, k).unwrap() {
-                InsertOutcome::Stashed => stashed += 1,
-                _ => {}
+            if matches!(t.insert(k, k).unwrap(), InsertOutcome::Stashed) {
+                stashed += 1;
             }
         }
         assert_eq!(t.len(), n as usize);
@@ -918,5 +1384,23 @@ mod tests {
     fn soa_layout_rejected_by_aos_table() {
         let cfg = HiveConfig::default().with_layout(Layout::SplitSoa);
         assert!(HiveTable::new(cfg).is_err());
+    }
+
+    #[test]
+    fn round_word_packs_and_unpacks() {
+        let r = pack_round(0x3F, 17);
+        assert_eq!(unpack_round(r), (0x3F, 17));
+        assert_eq!(unpack_round(pack_round(u32::MAX, 0)), (u32::MAX, 0));
+    }
+
+    #[test]
+    fn no_lock_on_fast_path_smoke() {
+        // The op fast paths must never touch the resize mutex: exercising
+        // them while the mutex is held would deadlock if they did.
+        let t = small_table(16);
+        let _held = t.resize_mutex.lock().unwrap();
+        t.insert(1, 10).unwrap();
+        assert_eq!(t.lookup(1), Some(10));
+        assert!(t.delete(1));
     }
 }

@@ -34,6 +34,7 @@ where
         workers,
         batch: BatchPolicy { max_batch: WINDOW, deadline: Duration::from_micros(200) },
         resize_check_every: 4,
+        cache_capacity: 4096,
     };
     let (coord, h) = Coordinator::start(cfg, factory).expect("start service");
 

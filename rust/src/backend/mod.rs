@@ -52,6 +52,16 @@ pub trait Backend {
     fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>>;
     /// Substrate name for logs/stats.
     fn name(&self) -> &'static str;
+    /// Stamp consumed by read-through caches layered above this backend
+    /// (`coordinator::cache`): any change means cached entries may no
+    /// longer reflect table state that moved outside the caller's own
+    /// operation stream (reallocation, stash drain) and must be dropped
+    /// wholesale. `None` — the default — means the substrate cannot
+    /// vouch for cached entries at all and the caching layer must stay
+    /// disabled for it.
+    fn coherence_stamp(&self) -> Option<u64> {
+        None
+    }
 }
 
 pub mod native;

@@ -83,6 +83,10 @@ impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn coherence_stamp(&self) -> Option<u64> {
+        Some(self.table.coherence_stamp())
+    }
 }
 
 #[cfg(test)]

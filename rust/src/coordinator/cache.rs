@@ -1,0 +1,294 @@
+//! Skew-adaptive hot-key cache for the coordinator's lookup fast path.
+//!
+//! Each worker owns one [`HotKeyCache`] in front of its backend shard: a
+//! fixed-size, set-associative array of packed 64-bit `(key, value)`
+//! words (`core::packed`) with per-set CLOCK eviction. Under a Zipf-
+//! skewed stream the hot head of the key distribution pins itself into
+//! the cache via the reference bits, and lookup hits skip the backend —
+//! no epoch pin, no bucket probe, no candidate hashing.
+//!
+//! # Coherence
+//!
+//! The cache is only ever touched by its owning worker thread, which
+//! also serializes every mutation of the shard, so coherence reduces to
+//! two rules (enforced by `coordinator::service`, not here):
+//!
+//! 1. **Per-key invalidation** — each insert/delete executed by the
+//!    worker retires the cached copy of that key before the window's
+//!    results are published.
+//! 2. **Wholesale validation** — before serving any hit, the worker
+//!    compares the backend's coherence stamp ([`crate::backend::Backend::
+//!    coherence_stamp`]; for the native table a fusion of the
+//!    reallocation epoch and the stash-drain epoch) against the stamp
+//!    the cache last validated under. A moved stamp drops every entry
+//!    ([`HotKeyCache::validate`]), so entries cached across a physical
+//!    reallocation or a stash drain — the windows where table state
+//!    moves outside the worker's own op stream — can never be served.
+//!
+//! A backend that cannot produce a stamp (`None`) gets no cache at all.
+
+use crate::core::packed::{pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
+use crate::core::rng::splitmix64;
+
+/// Associativity: ways scanned per set. Eight packed words = one 64-byte
+/// line of entries per set probe.
+pub const CACHE_WAYS: usize = 8;
+
+/// Per-worker read-through hot-key cache (see module docs).
+#[derive(Debug)]
+pub struct HotKeyCache {
+    /// `sets × CACHE_WAYS` packed entry words; `EMPTY_WORD` = vacant.
+    entries: Vec<u64>,
+    /// CLOCK reference bits, parallel to `entries`.
+    refbit: Vec<bool>,
+    /// Per-set clock hands.
+    hands: Vec<u8>,
+    set_mask: usize,
+    /// Backend coherence stamp the current contents were validated under.
+    stamp: u64,
+    len: usize,
+}
+
+impl HotKeyCache {
+    /// Cache holding ~`capacity` entries (rounded so the set count is a
+    /// power of two), coherent as of backend `stamp`.
+    pub fn new(capacity: usize, stamp: u64) -> Self {
+        let sets = (capacity.max(CACHE_WAYS) / CACHE_WAYS).next_power_of_two();
+        HotKeyCache {
+            entries: vec![EMPTY_WORD; sets * CACHE_WAYS],
+            refbit: vec![false; sets * CACHE_WAYS],
+            hands: vec![0; sets],
+            set_mask: sets - 1,
+            stamp,
+            len: 0,
+        }
+    }
+
+    /// First entry index of `key`'s set. The set hash is independent of
+    /// the table's bucket family so a pathological bucket collision
+    /// cannot also collapse the cache.
+    #[inline]
+    fn set_base(&self, key: u32) -> usize {
+        let mut s = key as u64 ^ 0xA076_1D64_78BD_642F;
+        (splitmix64(&mut s) as usize & self.set_mask) * CACHE_WAYS
+    }
+
+    /// Cached value of `key`, marking it recently used on a hit. The
+    /// `EMPTY_KEY` sentinel is never cached — scanning for it would
+    /// match every vacant way — so it always misses.
+    pub fn get(&mut self, key: u32) -> Option<u32> {
+        if key == EMPTY_KEY {
+            return None;
+        }
+        let base = self.set_base(key);
+        for w in 0..CACHE_WAYS {
+            let word = self.entries[base + w];
+            if unpack_key(word) == key {
+                self.refbit[base + w] = true;
+                return Some(unpack_value(word));
+            }
+        }
+        None
+    }
+
+    /// Cached value of `key` without touching recency state (stats and
+    /// test instrumentation; the serving path uses [`get`](Self::get)).
+    pub fn peek(&self, key: u32) -> Option<u32> {
+        if key == EMPTY_KEY {
+            return None;
+        }
+        let base = self.set_base(key);
+        for w in 0..CACHE_WAYS {
+            let word = self.entries[base + w];
+            if unpack_key(word) == key {
+                return Some(unpack_value(word));
+            }
+        }
+        None
+    }
+
+    /// Insert or update `key → value` (read-through fill). Evicts the
+    /// set's first cold way (CLOCK) when the set is full.
+    pub fn put(&mut self, key: u32, value: u32) {
+        debug_assert_ne!(key, EMPTY_KEY, "sentinel is not cacheable");
+        let base = self.set_base(key);
+        let mut vacant = None;
+        for w in 0..CACHE_WAYS {
+            let word = self.entries[base + w];
+            if unpack_key(word) == key {
+                self.entries[base + w] = pack(key, value);
+                self.refbit[base + w] = true;
+                return;
+            }
+            if word == EMPTY_WORD && vacant.is_none() {
+                vacant = Some(w);
+            }
+        }
+        let w = match vacant {
+            Some(w) => {
+                self.len += 1;
+                w
+            }
+            None => self.evict(base),
+        };
+        self.entries[base + w] = pack(key, value);
+        self.refbit[base + w] = true;
+    }
+
+    /// CLOCK sweep within one set: clear reference bits from the hand
+    /// until a cold way turns up (bounded by two revolutions).
+    fn evict(&mut self, base: usize) -> usize {
+        let set = base / CACHE_WAYS;
+        loop {
+            let w = self.hands[set] as usize;
+            self.hands[set] = ((w + 1) % CACHE_WAYS) as u8;
+            if self.refbit[base + w] {
+                self.refbit[base + w] = false;
+            } else {
+                return w;
+            }
+        }
+    }
+
+    /// Drop `key`'s entry (a write retired it). Returns whether a copy
+    /// was present. The `EMPTY_KEY` sentinel matches vacant ways, so it
+    /// is rejected up front (it can never have been cached).
+    pub fn invalidate(&mut self, key: u32) -> bool {
+        if key == EMPTY_KEY {
+            return false;
+        }
+        let base = self.set_base(key);
+        for w in 0..CACHE_WAYS {
+            if unpack_key(self.entries[base + w]) == key {
+                self.entries[base + w] = EMPTY_WORD;
+                self.refbit[base + w] = false;
+                self.len -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drop everything (wholesale invalidation).
+    pub fn clear(&mut self) {
+        self.entries.fill(EMPTY_WORD);
+        self.refbit.fill(false);
+        self.hands.fill(0);
+        self.len = 0;
+    }
+
+    /// Wholesale validation against the backend's current coherence
+    /// stamp: `true` means the contents remain servable; `false` means
+    /// the stamp moved (reallocation or stash drain since the last
+    /// window) and every entry was dropped.
+    pub fn validate(&mut self, stamp: u64) -> bool {
+        if stamp == self.stamp {
+            return true;
+        }
+        self.stamp = stamp;
+        self.clear();
+        false
+    }
+
+    /// Live cached entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total entry slots.
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_put_invalidate_roundtrip() {
+        let mut c = HotKeyCache::new(1024, 0);
+        assert_eq!(c.get(1), None);
+        c.put(1, 100);
+        c.put(2, 200);
+        assert_eq!(c.get(1), Some(100));
+        assert_eq!(c.get(2), Some(200));
+        assert_eq!(c.len(), 2);
+        // update in place
+        c.put(1, 101);
+        assert_eq!(c.get(1), Some(101));
+        assert_eq!(c.len(), 2);
+        assert!(c.invalidate(1));
+        assert!(!c.invalidate(1));
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn validate_drops_on_stamp_move_only() {
+        let mut c = HotKeyCache::new(64, 7);
+        c.put(10, 1);
+        assert!(c.validate(7), "same stamp must keep contents");
+        assert_eq!(c.get(10), Some(1));
+        assert!(!c.validate(8), "moved stamp must flush");
+        assert_eq!(c.get(10), None);
+        assert!(c.is_empty());
+        assert!(c.validate(8), "stamp now current");
+    }
+
+    #[test]
+    fn clock_evicts_cold_before_recent() {
+        // capacity = one set of CACHE_WAYS ways: every key collides
+        let mut c = HotKeyCache::new(CACHE_WAYS, 0);
+        let keys: Vec<u32> = (1..=CACHE_WAYS as u32).collect();
+        for &k in &keys {
+            c.put(k, k * 10);
+        }
+        assert_eq!(c.len(), CACHE_WAYS);
+        // the set is full; a new key sweeps the clock (clearing all the
+        // insertion reference bits) and evicts the way at the hand
+        c.put(100, 1000);
+        assert_eq!(c.len(), CACHE_WAYS);
+        assert_eq!(c.peek(100), Some(1000));
+        // peek, not get: counting survivors must not set reference bits
+        let survivors = keys.iter().filter(|&&k| c.peek(k).is_some()).count();
+        assert_eq!(survivors, CACHE_WAYS - 1, "exactly one way evicted");
+        // touch one survivor so its reference bit shields it through the
+        // next sweep, then force another eviction
+        let touched = keys.iter().copied().find(|&k| c.peek(k).is_some()).unwrap();
+        assert_eq!(c.get(touched), Some(touched * 10));
+        c.put(200, 2000);
+        assert_eq!(c.peek(touched), Some(touched * 10), "recently-used way evicted");
+        assert_eq!(c.peek(200), Some(2000));
+        assert_eq!(c.len(), CACHE_WAYS);
+    }
+
+    #[test]
+    fn sentinel_key_never_hits_or_underflows() {
+        // EMPTY_KEY's low half equals a vacant word's key field: lookups
+        // of the sentinel must not fabricate a hit from an empty way, and
+        // invalidating it must not decrement len below zero.
+        let mut c = HotKeyCache::new(64, 0);
+        assert_eq!(c.get(EMPTY_KEY), None, "vacant way served as a sentinel hit");
+        assert_eq!(c.peek(EMPTY_KEY), None);
+        assert!(!c.invalidate(EMPTY_KEY), "sentinel invalidated a vacant way");
+        assert_eq!(c.len(), 0);
+        c.put(3, 30);
+        assert!(!c.invalidate(EMPTY_KEY));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(3), Some(30));
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two_sets() {
+        let c = HotKeyCache::new(100, 0);
+        assert_eq!(c.capacity(), 16 * CACHE_WAYS); // 100/8 = 12 → 16 sets
+        let c = HotKeyCache::new(0, 0);
+        assert_eq!(c.capacity(), CACHE_WAYS); // floor: one set
+    }
+}

@@ -11,6 +11,9 @@
 //!  worker 0   worker 1  ...  worker W-1       (std::thread + mpsc)
 //!  [batcher]  [batcher]      [batcher]        size+deadline windows
 //!     │          │              │
+//!  [hot-key]  [hot-key]      [hot-key]        read-through CLOCK cache:
+//!  [ cache ]  [ cache ]      [ cache ]        lookup hits skip the backend
+//!     │          │              │
 //!  Backend    Backend        Backend          native | xla | simt
 //!     │          │              │
 //!  resize-ctl per worker (load-factor watcher between batches)
@@ -19,14 +22,22 @@
 //! Each worker owns one table shard; requests are routed by key hash, so
 //! shards are disjoint and workers never contend. Within a dispatch
 //! window the batcher groups by op type (legal for concurrent requests —
-//! see `backend`). The resize controller runs the §IV-C policy between
-//! batches, amortized across the service's lifetime — no global pauses.
+//! see `backend`). Between the batcher and the backend sits a per-worker
+//! hot-key cache ([`cache::HotKeyCache`]): under skewed traffic the hot
+//! head of the key distribution is served without an epoch pin or bucket
+//! probe, and coherence is kept by per-key invalidation on every write
+//! plus wholesale validation against the backend's coherence stamp
+//! (reallocation epoch + stash-drain epoch — see `cache` module docs).
+//! The resize controller runs the §IV-C policy between batches,
+//! amortized across the service's lifetime — no global pauses.
 
 pub mod batcher;
+pub mod cache;
 pub mod service;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use cache::HotKeyCache;
 pub use service::{Coordinator, CoordinatorConfig, Handle};
 pub use stats::ServiceStats;
 

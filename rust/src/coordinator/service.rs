@@ -3,11 +3,13 @@
 
 use crate::backend::{Backend, BatchResult};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::cache::HotKeyCache;
 use crate::coordinator::stats::ServiceStats;
 use crate::core::error::{HiveError, Result};
 use crate::hash::HashKind;
 use crate::native::resize::ResizeEvent;
 use crate::workload::Op;
+use std::collections::HashSet;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -22,6 +24,13 @@ pub struct CoordinatorConfig {
     pub batch: BatchPolicy,
     /// Run the resize controller every N dispatch windows.
     pub resize_check_every: u64,
+    /// Per-worker hot-key cache entries (`0` disables the cache). Only
+    /// backends that produce a coherence stamp get a cache; the rest
+    /// execute every lookup. Cached results are observationally
+    /// identical to uncached ones — lookups whose key is written in the
+    /// same window bypass the cache, so every window linearizes exactly
+    /// as the backend's grouped execution does.
+    pub cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -30,6 +39,7 @@ impl Default for CoordinatorConfig {
             workers: 4,
             batch: BatchPolicy::default(),
             resize_check_every: 8,
+            cache_capacity: 4096,
         }
     }
 }
@@ -274,35 +284,147 @@ impl Handle {
     }
 }
 
-/// One worker: owns a backend shard, batches singles, executes bulks,
-/// runs the resize controller between windows.
-fn worker_loop(rx: Receiver<Request>, mut backend: Box<dyn Backend>, cfg: CoordinatorConfig) {
-    let mut batcher = Batcher::new(cfg.batch);
-    let mut waiting: Vec<(Instant, SyncSender<SingleReply>, Op)> = Vec::new();
-    let mut stats = ServiceStats::default();
+/// One worker: owns a backend shard and the hot-key cache in front of
+/// it, batches singles, executes bulks, runs the resize controller
+/// between windows.
+struct Worker {
+    backend: Box<dyn Backend>,
+    batcher: Batcher,
+    waiting: Vec<(Instant, SyncSender<SingleReply>, Op)>,
+    stats: ServiceStats,
+    /// Read-through hot-key cache; `None` when disabled by config or
+    /// when the backend cannot produce a coherence stamp.
+    cache: Option<HotKeyCache>,
+    cfg: CoordinatorConfig,
+}
 
-    let dispatch = |backend: &mut Box<dyn Backend>,
-                    batcher: &mut Batcher,
-                    waiting: &mut Vec<(Instant, SyncSender<SingleReply>, Op)>,
-                    stats: &mut ServiceStats| {
-        if batcher.is_empty() {
+impl Worker {
+    /// Execute one dispatch window through the cache + backend stack:
+    /// wholesale-validate the cache against the backend's coherence
+    /// stamp, serve lookup hits without touching the backend, execute
+    /// the remainder, retire the window's written keys from the cache,
+    /// then read-through-fill from the backend's lookup results.
+    ///
+    /// Lookups whose key is *written in the same window* never consult
+    /// the cache: the backend groups windows as insert → delete →
+    /// lookup, so serving such a lookup from the cache would observe the
+    /// pre-window value where the uncached path observes the post-write
+    /// one. Bypassing them keeps the cached path observationally
+    /// identical to the uncached one for every window — which the
+    /// cross-path differential test (`tests/test_cache.rs`) pins down.
+    fn execute_window(&mut self, ops: &[Op]) -> Result<BatchResult> {
+        self.stats.batches += 1;
+        self.stats.ops += ops.len() as u64;
+        self.stats.batch_sizes.record(ops.len() as u64);
+        let Some(cache) = self.cache.as_mut() else {
+            return self.backend.execute(ops);
+        };
+        let stamp = self.backend.coherence_stamp().expect("cached backend lost its stamp");
+        if !cache.validate(stamp) {
+            self.stats.cache_flushes += 1;
+        }
+        // Write-only window: nothing to serve or fill — skip the
+        // conflict-set and splice bookkeeping, but still retire the
+        // written keys' cached copies.
+        if !ops.iter().any(|op| matches!(op, Op::Lookup { .. })) {
+            let res = self.backend.execute(ops)?;
+            for op in ops {
+                if let Op::Insert { key, .. } | Op::Delete { key } = *op {
+                    if cache.invalidate(key) {
+                        self.stats.cache_invalidations += 1;
+                    }
+                }
+            }
+            return Ok(res);
+        }
+        let written: HashSet<u32> = ops
+            .iter()
+            .filter_map(|op| match *op {
+                Op::Insert { key, .. } | Op::Delete { key } => Some(key),
+                Op::Lookup { .. } => None,
+            })
+            .collect();
+        // Serve lookup hits out of the cache; everything else (writes,
+        // misses, write-conflicting lookups) goes to the backend.
+        // `served[i]` is the i-th lookup's cache answer, if any.
+        let mut served: Vec<Option<u32>> = Vec::new();
+        let mut backend_ops: Vec<Op> = Vec::with_capacity(ops.len());
+        for op in ops {
+            if let Op::Lookup { key } = *op {
+                // write-conflicted lookups bypass the cache without
+                // touching the hit/miss counters: they never consult it,
+                // and counting them as misses would understate the hit
+                // rate fig10 publishes
+                if !written.contains(&key) {
+                    match cache.get(key) {
+                        Some(v) => {
+                            self.stats.cache_hits += 1;
+                            served.push(Some(v));
+                            continue;
+                        }
+                        None => self.stats.cache_misses += 1,
+                    }
+                }
+                served.push(None);
+            }
+            backend_ops.push(*op);
+        }
+        let mut res = if backend_ops.is_empty() {
+            BatchResult::default()
+        } else {
+            self.backend.execute(&backend_ops)?
+        };
+        // Per-key invalidation: the window's writes retire cached copies
+        // before any result is published.
+        for op in ops {
+            if let Op::Insert { key, .. } | Op::Delete { key } = *op {
+                if cache.invalidate(key) {
+                    self.stats.cache_invalidations += 1;
+                }
+            }
+        }
+        // Splice cached hits back in lookup submission order and fill
+        // the cache from backend results. The backend values are
+        // post-window (grouped execution runs writes first), so filling
+        // after the invalidation pass leaves the cache coherent with the
+        // window's own writes. Misses are never cached: absent keys
+        // churn fastest under skewed delete/re-insert traffic.
+        let from_backend = std::mem::take(&mut res.lookups);
+        let mut backend_iter = from_backend.into_iter();
+        let mut lookups = Vec::with_capacity(served.len());
+        let mut served_iter = served.into_iter();
+        for op in ops {
+            if let Op::Lookup { key } = *op {
+                match served_iter.next().expect("one served slot per lookup") {
+                    Some(hit) => lookups.push(Some(hit)),
+                    None => {
+                        let v = backend_iter.next().flatten();
+                        if let Some(val) = v {
+                            cache.put(key, val);
+                        }
+                        lookups.push(v);
+                    }
+                }
+            }
+        }
+        res.lookups = lookups;
+        Ok(res)
+    }
+
+    /// Flush the pending single-op window, reply to each waiter.
+    fn dispatch(&mut self) {
+        if self.batcher.is_empty() {
             return;
         }
-        let ops = batcher.take();
-        stats.batches += 1;
-        stats.ops += ops.len() as u64;
-        stats.batch_sizes.record(ops.len() as u64);
-        match backend.execute(&ops) {
+        let ops = self.batcher.take();
+        match self.execute_window(&ops) {
             Ok(res) => {
-                stats.inserted += res.inserted as u64;
-                stats.replaced += res.replaced as u64;
-                stats.stashed += res.stashed as u64;
-                stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
+                self.record_result(&res);
                 // replies in class order
                 let mut luk = res.lookups.into_iter();
                 let mut del = res.deletes.into_iter();
-                for (enq, reply, op) in waiting.drain(..) {
-                    stats.latency_ns.record(enq.elapsed().as_nanos() as u64);
+                for (enq, reply, op) in self.waiting.drain(..) {
+                    self.stats.latency_ns.record(enq.elapsed().as_nanos() as u64);
                     let msg = match op {
                         Op::Insert { .. } => SingleReply::Inserted(true),
                         Op::Lookup { .. } => SingleReply::Value(luk.next().flatten()),
@@ -312,71 +434,87 @@ fn worker_loop(rx: Receiver<Request>, mut backend: Box<dyn Backend>, cfg: Coordi
                 }
             }
             Err(e) => {
-                for (_, reply, _) in waiting.drain(..) {
+                for (_, reply, _) in self.waiting.drain(..) {
                     let _ = reply.send(SingleReply::Failed(e.to_string()));
                 }
             }
         }
-        // Resize controller between windows. The call still runs a full
-        // K-bucket migration batch synchronously on this worker thread,
-        // but with the epoch scheme other threads' operations (and other
-        // shards) proceed concurrently instead of blocking on a write
-        // guard.
-        if stats.batches % cfg.resize_check_every == 0 {
-            match backend.maybe_resize() {
-                Ok(Some(ResizeEvent::Grew { .. })) => stats.grows += 1,
-                Ok(Some(ResizeEvent::Shrank { .. })) => stats.shrinks += 1,
-                _ => {}
-            }
-        }
-    };
+        self.check_resize();
+    }
 
+    fn record_result(&mut self, res: &BatchResult) {
+        self.stats.inserted += res.inserted as u64;
+        self.stats.replaced += res.replaced as u64;
+        self.stats.stashed += res.stashed as u64;
+        self.stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
+    }
+
+    /// Resize controller between windows. The call still runs a full
+    /// K-bucket migration batch synchronously on this worker thread,
+    /// but with the epoch scheme other threads' operations (and other
+    /// shards) proceed concurrently instead of blocking on a write
+    /// guard. A resize that drains the stash or swaps the state pointer
+    /// moves the coherence stamp, so the next window's wholesale
+    /// validation flushes the cache.
+    fn check_resize(&mut self) {
+        if self.stats.batches % self.cfg.resize_check_every != 0 {
+            return;
+        }
+        match self.backend.maybe_resize() {
+            Ok(Some(ResizeEvent::Grew { .. })) => self.stats.grows += 1,
+            Ok(Some(ResizeEvent::Shrank { .. })) => self.stats.shrinks += 1,
+            _ => {}
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Request>, backend: Box<dyn Backend>, cfg: CoordinatorConfig) {
+    let cache = if cfg.cache_capacity > 0 {
+        backend.coherence_stamp().map(|s| HotKeyCache::new(cfg.cache_capacity, s))
+    } else {
+        None
+    };
+    let mut w = Worker {
+        batcher: Batcher::new(cfg.batch),
+        waiting: Vec::new(),
+        stats: ServiceStats::default(),
+        backend,
+        cache,
+        cfg,
+    };
     loop {
-        let timeout =
-            batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+        let timeout = w.batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Request::Single { op, enqueued, reply }) => {
-                waiting.push((enqueued, reply, op));
-                if batcher.push(op) {
-                    dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                w.waiting.push((enqueued, reply, op));
+                if w.batcher.push(op) {
+                    w.dispatch();
                 }
             }
             Ok(Request::Bulk { ops, reply }) => {
                 // flush pending singles first to preserve window ordering
-                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
-                stats.batches += 1;
-                stats.ops += ops.len() as u64;
-                stats.batch_sizes.record(ops.len() as u64);
-                let res = backend.execute(&ops);
+                w.dispatch();
+                let res = w.execute_window(&ops);
                 if let Ok(res) = &res {
-                    stats.inserted += res.inserted as u64;
-                    stats.replaced += res.replaced as u64;
-                    stats.stashed += res.stashed as u64;
-                    stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
+                    w.record_result(res);
                 }
                 let _ = reply.send(res);
-                if stats.batches % cfg.resize_check_every == 0 {
-                    match backend.maybe_resize() {
-                        Ok(Some(ResizeEvent::Grew { .. })) => stats.grows += 1,
-                        Ok(Some(ResizeEvent::Shrank { .. })) => stats.shrinks += 1,
-                        _ => {}
-                    }
-                }
+                w.check_resize();
             }
             Ok(Request::Stats { reply }) => {
-                let _ = reply.send(stats.clone());
+                let _ = reply.send(w.stats.clone());
             }
             Ok(Request::Flush { reply }) => {
-                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                w.dispatch();
                 let _ = reply.send(());
             }
             Ok(Request::Shutdown) => {
-                dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                w.dispatch();
                 break;
             }
             Err(RecvTimeoutError::Timeout) => {
-                if batcher.deadline_expired() {
-                    dispatch(&mut backend, &mut batcher, &mut waiting, &mut stats);
+                if w.batcher.deadline_expired() {
+                    w.dispatch();
                 }
             }
             Err(RecvTimeoutError::Disconnected) => break,
@@ -407,6 +545,7 @@ mod tests {
             workers: 2,
             batch: BatchPolicy { max_batch: 64, deadline: Duration::from_micros(100) },
             resize_check_every: 2,
+            cache_capacity: 256,
         }
     }
 
@@ -504,11 +643,67 @@ mod tests {
     }
 
     #[test]
+    fn cache_serves_repeat_lookups_and_stays_coherent() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        assert!(h.insert(1, 100).unwrap());
+        // first lookup fills, repeats hit
+        for _ in 0..5 {
+            assert_eq!(h.lookup(1).unwrap(), Some(100));
+        }
+        let s = h.stats().unwrap();
+        assert!(s.cache_hits >= 3, "repeat lookups should hit: {}", s.summary());
+        assert!(s.cache_misses >= 1, "first lookup must miss: {}", s.summary());
+        // a replace retires the cached copy
+        h.insert(1, 200).unwrap();
+        assert_eq!(h.lookup(1).unwrap(), Some(200), "stale value served after replace");
+        // a delete retires it again
+        assert!(h.delete(1).unwrap());
+        assert_eq!(h.lookup(1).unwrap(), None, "deleted key resurrected by the cache");
+        let s = h.stats().unwrap();
+        assert!(s.cache_invalidations >= 2, "writes must invalidate: {}", s.summary());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cache_disabled_when_capacity_zero() {
+        let cfg = CoordinatorConfig { cache_capacity: 0, ..quick_cfg() };
+        let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(64)).unwrap();
+        h.insert(7, 70).unwrap();
+        for _ in 0..5 {
+            assert_eq!(h.lookup(7).unwrap(), Some(70));
+        }
+        let s = h.stats().unwrap();
+        assert_eq!(s.cache_hits + s.cache_misses, 0, "disabled cache saw traffic");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn window_with_write_conflict_matches_uncached_semantics() {
+        use crate::workload::Op;
+        // one worker so the whole window lands on one shard
+        let cfg = CoordinatorConfig { workers: 1, ..quick_cfg() };
+        let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(64)).unwrap();
+        h.insert(5, 50).unwrap();
+        assert_eq!(h.lookup(5).unwrap(), Some(50)); // now cached
+        // window deletes 5 and looks it up: grouped execution (insert →
+        // delete → lookup) must observe the delete, not the cached copy
+        let r = h.submit(&[Op::Delete { key: 5 }, Op::Lookup { key: 5 }]).unwrap();
+        assert_eq!(r.deletes, vec![true]);
+        assert_eq!(r.lookups, vec![None], "cache leaked a pre-window value");
+        // and a window that writes-then-reads sees the fresh value
+        let r = h.submit(&[Op::Insert { key: 5, value: 55 }, Op::Lookup { key: 5 }]).unwrap();
+        assert_eq!(r.lookups, vec![Some(55)]);
+        coord.shutdown();
+    }
+
+    #[test]
     fn resize_controller_grows_under_load() {
         let cfg = CoordinatorConfig {
             workers: 1,
             batch: BatchPolicy { max_batch: 128, deadline: Duration::from_micros(50) },
             resize_check_every: 1,
+            cache_capacity: 256,
         };
         let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(4)).unwrap();
         use crate::workload::Op;

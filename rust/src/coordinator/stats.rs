@@ -18,6 +18,14 @@ pub struct ServiceStats {
     /// Resize events (grow, shrink).
     pub grows: u64,
     pub shrinks: u64,
+    /// Hot-key cache traffic: lookups served from the cache, lookups
+    /// that consulted the cache and missed (write-conflicted lookups
+    /// bypass it and count as neither), per-key entries retired by
+    /// writes, and wholesale flushes forced by a moved coherence stamp.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_invalidations: u64,
+    pub cache_flushes: u64,
     /// Per-op latency in nanoseconds (request → reply, single-op path).
     pub latency_ns: Histogram,
     /// Batch size distribution.
@@ -35,8 +43,23 @@ impl ServiceStats {
         self.deleted += other.deleted;
         self.grows += other.grows;
         self.shrinks += other.shrinks;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_invalidations += other.cache_invalidations;
+        self.cache_flushes += other.cache_flushes;
         self.latency_ns.merge(&other.latency_ns);
         self.batch_sizes.merge(&other.batch_sizes);
+    }
+
+    /// Hot-key cache hit rate over lookups that consulted the cache
+    /// (0.0 while the cache is disabled or untouched).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     /// Mean batch size.
@@ -47,7 +70,7 @@ impl ServiceStats {
     /// Human summary line.
     pub fn summary(&self) -> String {
         format!(
-            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} latency[{}]",
+            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}]",
             self.ops,
             self.batches,
             self.mean_batch(),
@@ -57,6 +80,11 @@ impl ServiceStats {
             self.deleted,
             self.grows,
             self.shrinks,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate(),
+            self.cache_invalidations,
+            self.cache_flushes,
             self.latency_ns.summary(),
         )
     }
@@ -81,5 +109,25 @@ mod tests {
         assert_eq!(a.batches, 3);
         assert_eq!(a.latency_ns.count(), 2);
         assert!(a.summary().contains("ops=15"));
+    }
+
+    #[test]
+    fn cache_counters_merge_and_rate() {
+        let mut a = ServiceStats::default();
+        assert_eq!(a.cache_hit_rate(), 0.0, "untouched cache reads as 0");
+        a.cache_hits = 30;
+        a.cache_misses = 10;
+        let mut b = ServiceStats::default();
+        b.cache_hits = 10;
+        b.cache_misses = 10;
+        b.cache_invalidations = 4;
+        b.cache_flushes = 1;
+        a.merge(&b);
+        assert_eq!(a.cache_hits, 40);
+        assert_eq!(a.cache_misses, 20);
+        assert_eq!(a.cache_invalidations, 4);
+        assert_eq!(a.cache_flushes, 1);
+        assert!((a.cache_hit_rate() - 40.0 / 60.0).abs() < 1e-12);
+        assert!(a.summary().contains("cache[hit=40"));
     }
 }

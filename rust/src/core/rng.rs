@@ -72,6 +72,26 @@ impl Xoshiro256 {
     }
 }
 
+/// `H(x) = ∫x^{-θ}` for the rejection-inversion sampler: `x^{1-θ}/(1-θ)`,
+/// degenerating to `ln x` at θ = 1. Single source for both the sampler
+/// loop and the precomputed constants in [`Zipf::new`].
+fn h_integral(x: f64, theta: f64) -> f64 {
+    if (theta - 1.0).abs() < 1e-12 {
+        x.ln()
+    } else {
+        x.powf(1.0 - theta) / (1.0 - theta)
+    }
+}
+
+/// Inverse of [`h_integral`] at the same θ.
+fn h_integral_inv(x: f64, theta: f64) -> f64 {
+    if (theta - 1.0).abs() < 1e-12 {
+        x.exp()
+    } else {
+        (x * (1.0 - theta)).powf(1.0 / (1.0 - theta))
+    }
+}
+
 /// Zipf(θ) sampler over `{0, .., n-1}` using the rejection-inversion method
 /// (Hörmann & Derflinger); θ = 0 degenerates to uniform.
 #[derive(Debug, Clone)]
@@ -87,36 +107,24 @@ impl Zipf {
     /// Build a sampler over `n` items with skew `theta ∈ [0, ~2]`.
     pub fn new(n: u64, theta: f64) -> Self {
         assert!(n > 0);
-        let h = |x: f64, t: f64| -> f64 {
-            if (t - 1.0).abs() < 1e-12 {
-                (x).ln()
-            } else {
-                (x).powf(1.0 - t) / (1.0 - t)
-            }
-        };
-        let h_x1 = h(1.5, theta) - 1.0f64.powf(-theta);
-        let h_n = h(n as f64 + 0.5, theta);
-        let s = 2.0 - {
-            // h^-1(h(2.5, t) - 2^-t) approximation seed
-            1.0
-        };
+        let h_x1 = h_integral(1.5, theta) - 1.0f64.powf(-theta);
+        let h_n = h_integral(n as f64 + 0.5, theta);
+        // Hörmann–Derflinger rejection-inversion threshold: a draw whose
+        // rounded rank k lies within `s` of the inverted point x is
+        // accepted without evaluating the exact acceptance bound.
+        // s = 2 - H⁻¹(H(2.5) - 2^{-θ}); see Hörmann & Derflinger,
+        // "Rejection-inversion to generate variates from monotone
+        // discrete distributions" (TOMACS 1996), eq. for x_m = 2.
+        let s = 2.0 - h_integral_inv(h_integral(2.5, theta) - 2.0f64.powf(-theta), theta);
         Zipf { n, theta, h_x1, h_n, s }
     }
 
     fn h(&self, x: f64) -> f64 {
-        if (self.theta - 1.0).abs() < 1e-12 {
-            x.ln()
-        } else {
-            x.powf(1.0 - self.theta) / (1.0 - self.theta)
-        }
+        h_integral(x, self.theta)
     }
 
     fn h_inv(&self, x: f64) -> f64 {
-        if (self.theta - 1.0).abs() < 1e-12 {
-            x.exp()
-        } else {
-            (x * (1.0 - self.theta)).powf(1.0 / (1.0 - self.theta))
-        }
+        h_integral_inv(x, self.theta)
     }
 
     /// Draw one sample (0-based rank; rank 0 is the hottest item).
@@ -128,7 +136,9 @@ impl Zipf {
             let u = self.h_n + rng.f64() * (self.h_x1 - self.h_n);
             let x = self.h_inv(u);
             let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
-            if (k - x).abs() <= self.s || u >= self.h(k + 0.5) - (k).powf(-self.theta) {
+            // One-sided HD acceptance: k ≥ x - s short-circuits; otherwise
+            // fall back to the exact bound H(k + ½) - k^{-θ}.
+            if k - x <= self.s || u >= self.h(k + 0.5) - (k).powf(-self.theta) {
                 return k as u64 - 1;
             }
         }
@@ -198,6 +208,57 @@ mod tests {
         // hottest rank dominates the tail by a wide margin
         assert!(counts[0] > 10 * counts[500].max(1));
         assert!(counts[0] > counts[1]);
+    }
+
+    #[test]
+    fn zipf_rank_frequency_monotone_at_high_skew() {
+        // θ = 0.99, geometric rank buckets [1], [2,3], [4,7], ..: the mean
+        // per-rank frequency must fall strictly bucket over bucket. The
+        // dead `s = 1.0` placeholder skewed acceptance enough to flatten
+        // the head; the real HD threshold restores the power law.
+        let n = 1024u64;
+        let z = Zipf::new(n, 0.99);
+        let mut rng = Xoshiro256::seeded(0xF00D);
+        let mut counts = vec![0u64; n as usize];
+        let samples = 400_000;
+        for _ in 0..samples {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let mut lo = 0usize;
+        let mut width = 1usize;
+        let mut prev = f64::INFINITY;
+        while lo < n as usize {
+            let hi = (lo + width).min(n as usize);
+            let mean = counts[lo..hi].iter().sum::<u64>() as f64 / (hi - lo) as f64;
+            assert!(
+                mean < prev,
+                "rank bucket [{lo}, {hi}) mean {mean} not below previous {prev}"
+            );
+            prev = mean;
+            lo = hi;
+            width *= 2;
+        }
+        // the head really dominates: rank 0 takes >~ 1/H_n of the mass
+        assert!(counts[0] as f64 > 0.10 * samples as f64, "head too light: {}", counts[0]);
+    }
+
+    #[test]
+    fn zipf_theta_zero_uniform_across_deciles() {
+        // θ = 0 must be statistically uniform: every decile of the rank
+        // space within 5% of the expected tenth of the mass.
+        let n = 1000u64;
+        let z = Zipf::new(n, 0.0);
+        let mut rng = Xoshiro256::seeded(0xBEEF);
+        let samples = 500_000usize;
+        let mut deciles = [0u64; 10];
+        for _ in 0..samples {
+            deciles[(z.sample(&mut rng) / 100) as usize] += 1;
+        }
+        let expect = samples as f64 / 10.0;
+        for (d, &c) in deciles.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "decile {d} off by {:.1}% ({c} vs {expect})", dev * 100.0);
+        }
     }
 
     #[test]

@@ -324,6 +324,21 @@ impl HiveTable {
         self.stats.snapshot()
     }
 
+    /// Coherence stamp for read-through caches layered above the table
+    /// (the coordinator's hot-key cache). The stamp moves whenever table
+    /// state can change outside the caller's own operation stream: a
+    /// physical reallocation phase (the epoch word, odd while in flight)
+    /// or a stash drain republishing words (the drain epoch, odd while
+    /// draining). K-bucket migration between those events relocates
+    /// entries but never changes a key's logical value, so it
+    /// deliberately does not move the stamp. Both halves are monotonic,
+    /// and a stamp sampled mid-phase is odd in that half — it can never
+    /// equal a quiescent stamp, so a cache validated against it flushes
+    /// again once the phase completes.
+    pub fn coherence_stamp(&self) -> u64 {
+        (self.epoch.current() << 32) | (self.drain_epoch.load(Ordering::SeqCst) & 0xFFFF_FFFF)
+    }
+
     /// Words parked past the stash (pending the next resize epoch).
     pub fn pending_full(&self) -> usize {
         self.pending_len.load(Ordering::Relaxed)

@@ -47,6 +47,8 @@ impl Mix {
     pub const INSERT_ONLY: Mix = Mix { insert: 1.0, lookup: 0.0, delete: 0.0 };
     /// Lookup-only (bulk query).
     pub const LOOKUP_ONLY: Mix = Mix { insert: 0.0, lookup: 1.0, delete: 0.0 };
+    /// Read-heavy serving mix (fig10's skewed-cache scenario).
+    pub const READ_HEAVY: Mix = Mix { insert: 0.10, lookup: 0.85, delete: 0.05 };
 }
 
 /// `n` unique uniformly distributed keys (no EMPTY sentinel, no dups),
@@ -58,12 +60,29 @@ pub fn unique_uniform_keys(n: usize, seed: u64) -> Vec<u32> {
     // over the u32 ring guarantees uniqueness.
     let stride = (rng.next_u32() | 1).max(3);
     let start = rng.next_u32();
-    let mut keys: Vec<u32> = (0..n as u64)
-        .map(|i| start.wrapping_add((i as u32).wrapping_mul(stride)))
-        .map(|k| if k == EMPTY_KEY { 0x7FFF_FFFF } else { k })
-        .collect();
+    let mut keys = keys_from_stride(n, start, stride);
     rng.shuffle(&mut keys);
     keys
+}
+
+/// The odd-stride progression `start + i·stride (mod 2³²)` for `i < n`,
+/// with the (at most one) `EMPTY_KEY` occurrence remapped to the
+/// progression's element at index `n`. That substitute is the one choice
+/// that provably preserves the no-duplicates guarantee: an odd stride
+/// makes `i ↦ start + i·stride` injective over any window of `< 2³²`
+/// indices, and index `n` lies outside `0..n`. (A fixed remap constant —
+/// the old `0x7FFF_FFFF` — breaks the guarantee whenever the window also
+/// produces that constant as a genuine element.) If the index-`n` element
+/// were itself `EMPTY_KEY`, injectivity puts `EMPTY_KEY` outside the
+/// window, so the substitute is never used in that case.
+fn keys_from_stride(n: usize, start: u32, stride: u32) -> Vec<u32> {
+    debug_assert_eq!(stride & 1, 1, "stride must be odd for uniqueness");
+    debug_assert!(n < u32::MAX as usize, "window wider than the u32 ring");
+    let substitute = start.wrapping_add((n as u32).wrapping_mul(stride));
+    (0..n as u64)
+        .map(|i| start.wrapping_add((i as u32).wrapping_mul(stride)))
+        .map(|k| if k == EMPTY_KEY { substitute } else { k })
+        .collect()
 }
 
 /// Bulk insert workload: `n` unique `(key, value)` pairs.
@@ -110,6 +129,56 @@ pub fn zipf_lookups(n: usize, universe: &[u32], theta: f64, seed: u64) -> Vec<Op
     let z = Zipf::new(universe.len() as u64, theta);
     let mut rng = Xoshiro256::seeded(seed);
     (0..n).map(|_| Op::Lookup { key: universe[z.sample(&mut rng) as usize] }).collect()
+}
+
+/// Universe size backing a [`zipf_mixed`] stream of `n` ops — exposed so
+/// drivers can pre-populate exactly the keys the stream will touch.
+pub fn zipf_mixed_universe(n: usize, seed: u64) -> Vec<u32> {
+    unique_uniform_keys((n / 8).max(64), seed ^ 0x5EED_CAFE)
+}
+
+/// Zipf-skewed *mixed* stream: op types drawn from `mix`, keys drawn by
+/// Zipf(θ) rank over the [`zipf_mixed_universe`] churn set (rank 0
+/// hottest; θ = 0 degenerates to a uniform mixed stream). Unlike
+/// [`mixed`], lookups and deletes may target currently-absent keys — hot
+/// keys are inserted, read, deleted and re-inserted repeatedly, the
+/// serving-cache churn pattern the paper's §V streams never produce.
+/// Every insert of a key carries a fresh op-index-derived value, so a
+/// stale read surfaces as a value mismatch rather than a silent pass.
+/// Deterministic in `seed`.
+pub fn zipf_mixed(n: usize, mix: Mix, theta: f64, seed: u64) -> Vec<Op> {
+    zipf_mixed_shift(n, mix, theta, 1, seed)
+}
+
+/// Phased hot-set-shift variant of [`zipf_mixed`]: the stream splits into
+/// `phases` equal segments and the Zipf rank→key mapping rotates by
+/// `universe/phases` ranks each segment, so the hot set *moves* — the
+/// adversarial pattern for any cache whose eviction lags a popularity
+/// shift.
+pub fn zipf_mixed_shift(n: usize, mix: Mix, theta: f64, phases: usize, seed: u64) -> Vec<Op> {
+    assert!((mix.insert + mix.lookup + mix.delete - 1.0).abs() < 1e-9);
+    assert!(phases >= 1, "at least one phase");
+    let universe = zipf_mixed_universe(n, seed);
+    let m = universe.len();
+    let rotation = (m / phases).max(1);
+    let per_phase = n.div_ceil(phases);
+    let z = Zipf::new(m as u64, theta);
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|i| {
+            let phase = i / per_phase.max(1);
+            let rank = z.sample(&mut rng) as usize;
+            let key = universe[(rank + phase * rotation) % m];
+            let r = rng.f64();
+            if r < mix.insert {
+                Op::Insert { key, value: key ^ (i as u32).rotate_left(13) ^ 0x9E37 }
+            } else if r < mix.insert + mix.lookup {
+                Op::Lookup { key }
+            } else {
+                Op::Delete { key }
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -162,6 +231,132 @@ mod tests {
                 Op::Delete { key } => assert!(live.remove(&key), "delete of dead key"),
             }
         }
+    }
+
+    /// Inverse of an odd `a` modulo 2³² (Newton's iteration: correct to
+    /// 3 bits at `x = a`, doubling per step).
+    fn odd_inverse(a: u32) -> u32 {
+        let mut x = a;
+        for _ in 0..4 {
+            x = x.wrapping_mul(2u32.wrapping_sub(a.wrapping_mul(x)));
+        }
+        x
+    }
+
+    #[test]
+    fn empty_key_in_window_remaps_without_collision() {
+        // Drive the progression helper through a window that contains
+        // EMPTY_KEY directly: stride 5, EMPTY_KEY at index 7.
+        let stride = 5u32;
+        let start = EMPTY_KEY.wrapping_sub(7 * stride);
+        let n = 100usize;
+        let keys = keys_from_stride(n, start, stride);
+        assert_eq!(keys.len(), n);
+        assert!(!keys.contains(&EMPTY_KEY));
+        // the substitute is the progression's index-n element, not a
+        // constant that another window element could collide with
+        assert_eq!(keys[7], start.wrapping_add(n as u32 * stride));
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n, "remap produced a duplicate");
+    }
+
+    #[test]
+    fn seeded_empty_key_window_regression() {
+        // Regression for the old fixed `EMPTY_KEY → 0x7FFF_FFFF` remap:
+        // search (deterministically, via the stride's modular inverse)
+        // for a seed whose derived (start, stride) place EMPTY_KEY inside
+        // the window, then assert the public generator's guarantees hold
+        // on exactly that seed.
+        let n = 1usize << 16;
+        let mut found = None;
+        // hit probability is n/2³² ≈ 1/65536 per seed; 2M seeds make a
+        // miss astronomically unlikely, and the scan is a few ms of
+        // integer arithmetic
+        for seed in 0..2_000_000u64 {
+            let mut rng = Xoshiro256::seeded(seed);
+            let stride = (rng.next_u32() | 1).max(3);
+            let start = rng.next_u32();
+            // index of EMPTY_KEY in the progression: (EMPTY_KEY - start) / stride
+            let i0 = EMPTY_KEY.wrapping_sub(start).wrapping_mul(odd_inverse(stride));
+            if (i0 as usize) < n {
+                found = Some((seed, i0));
+                break;
+            }
+        }
+        let (seed, i0) = found.expect("no seed maps EMPTY_KEY into a 2^16 window");
+        assert!((i0 as usize) < n, "search invariant");
+        let keys = unique_uniform_keys(n, seed);
+        assert_eq!(keys.len(), n);
+        assert!(!keys.contains(&EMPTY_KEY), "sentinel leaked through the remap");
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n, "EMPTY_KEY remap collided with a window element");
+    }
+
+    #[test]
+    fn zipf_mixed_is_deterministic_and_in_universe() {
+        let ops = zipf_mixed(10_000, Mix::READ_HEAVY, 0.99, 42);
+        assert_eq!(ops, zipf_mixed(10_000, Mix::READ_HEAVY, 0.99, 42));
+        assert_ne!(ops, zipf_mixed(10_000, Mix::READ_HEAVY, 0.99, 43));
+        let universe: std::collections::HashSet<u32> =
+            zipf_mixed_universe(10_000, 42).into_iter().collect();
+        for op in &ops {
+            assert!(universe.contains(&op.key()), "key outside the churn universe");
+        }
+        // ratios approximate the mix
+        let n = ops.len() as f64;
+        let luk = ops.iter().filter(|o| matches!(o, Op::Lookup { .. })).count() as f64;
+        assert!((luk / n - 0.85).abs() < 0.02, "lookup ratio {}", luk / n);
+    }
+
+    #[test]
+    fn zipf_mixed_skew_concentrates_on_hot_keys() {
+        use std::collections::HashMap;
+        let ops = zipf_mixed(50_000, Mix::READ_HEAVY, 0.99, 7);
+        let mut freq: HashMap<u32, usize> = HashMap::new();
+        for op in &ops {
+            *freq.entry(op.key()).or_default() += 1;
+        }
+        let mut counts: Vec<usize> = freq.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts.iter().take(10).sum();
+        // θ=0.99 over a universe of n/8 keys puts ≈30% of the mass on the
+        // top-10 ranks (Σ₁..₁₀ k^-0.99 / H_m); assert a safe 25% floor
+        assert!(
+            top10 * 4 > ops.len(),
+            "θ=0.99: top-10 keys should carry > a quarter of the stream, got {top10}/{}",
+            ops.len()
+        );
+        // θ = 0 spreads: the hottest key stays far below the skewed head
+        let uni = zipf_mixed(50_000, Mix::READ_HEAVY, 0.0, 7);
+        let mut f0: HashMap<u32, usize> = HashMap::new();
+        for op in &uni {
+            *f0.entry(op.key()).or_default() += 1;
+        }
+        let hottest_uniform = f0.values().copied().max().unwrap();
+        assert!(hottest_uniform * 20 < top10, "θ=0 stream unexpectedly skewed");
+    }
+
+    #[test]
+    fn hot_set_shift_moves_the_head() {
+        use std::collections::HashMap;
+        let phases = 4usize;
+        let n = 40_000usize;
+        let ops = zipf_mixed_shift(n, Mix::READ_HEAVY, 1.2, phases, 11);
+        let per = n / phases;
+        let hottest = |seg: &[Op]| -> u32 {
+            let mut f: HashMap<u32, usize> = HashMap::new();
+            for op in seg {
+                *f.entry(op.key()).or_default() += 1;
+            }
+            f.into_iter().max_by_key(|&(_, c)| c).unwrap().0
+        };
+        let h0 = hottest(&ops[..per]);
+        let h1 = hottest(&ops[per..2 * per]);
+        assert_ne!(h0, h1, "hot set did not shift between phases");
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Hot-key cache coherence (ISSUE 3 tentpole tests).
+//!
+//! Two batteries:
+//!
+//! * **Stale-read stress** — cached lookups race deletes, re-inserts,
+//!   live K-bucket migration and capacity-class pointer swaps on a
+//!   *shared* table; a client must always observe exactly the last state
+//!   it was acked for each of its keys.
+//! * **Cross-path differential** — one `zipf_mixed` stream drives the
+//!   coordinator with the cache on, the cache off, and the `ShardedStd`
+//!   baseline; every per-op result and the final table contents must be
+//!   identical across the three paths.
+//!
+//! Interleaving-sensitive tests derive their schedules from
+//! `HIVE_TEST_SEED` (CI runs a small seed matrix) so they cannot
+//! fossilize on one lucky interleaving.
+
+use hivehash::backend::{Backend, NativeBackend};
+use hivehash::baselines::{ConcurrentMap, ShardedStd};
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Handle};
+use hivehash::core::rng::splitmix64;
+use hivehash::workload::{self, Mix, Op};
+use hivehash::{HiveConfig, HiveTable};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn test_seed() -> u64 {
+    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+fn cached_cfg(workers: usize, max_batch: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch, deadline: Duration::from_micros(100) },
+        resize_check_every: 2,
+        cache_capacity: 1024,
+    }
+}
+
+/// Coordinator over one *shared* native table so a test can drive
+/// migration from outside the worker while the cache serves lookups.
+fn start_shared(cfg: CoordinatorConfig, table: Arc<HiveTable>) -> (Coordinator, Handle) {
+    Coordinator::start(cfg, move |_w| {
+        Ok(Box::new(NativeBackend::shared(Arc::clone(&table))) as Box<dyn Backend>)
+    })
+    .unwrap()
+}
+
+/// Cached lookups race deletes, re-inserts, live K-bucket migration and
+/// capacity-class pointer swaps. Each client owns a disjoint key range
+/// and drives the synchronous single-op path, so after every ack the
+/// table (and therefore any subsequent lookup, cached or not) must
+/// reflect exactly that client's last write — a stale cached value is a
+/// hard assertion failure, not a flake.
+#[test]
+fn cached_lookups_never_observe_retracted_values() {
+    let seed = test_seed();
+    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    let (coord, h) = start_shared(cached_cfg(1, 64), Arc::clone(&table));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let resizer = {
+        let t = Arc::clone(&table);
+        let stop = Arc::clone(&stop);
+        let churn = 4 + (seed % 3) as usize * 4;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                // track load (drains the stash, may swap the state
+                // pointer) and force split/merge churn so probes race
+                // MIGRATING buckets the whole run
+                t.maybe_resize();
+                t.grow_buckets(churn);
+                t.shrink_buckets(churn);
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|tid| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                // The stash drain documents a transient window where a
+                // probe can briefly see the drain's stale table copy
+                // (native::resize docs; same pattern as
+                // tests/test_migration.rs). The cache may capture that
+                // transient but the drain-epoch stamp flushes it at the
+                // next window, so the acked state must be *re-served*
+                // within a bounded number of round trips — a real stale
+                // pin would never converge and fails the assert.
+                let eventually = |k: u32, want: Option<u32>| -> bool {
+                    for _ in 0..2000 {
+                        if h.lookup(k).unwrap() == want {
+                            return true;
+                        }
+                        std::thread::yield_now();
+                    }
+                    false
+                };
+                let base = (tid as u32 + 1) * 100_000;
+                let per = 250u32;
+                for i in 0..per {
+                    let k = base + i;
+                    let mut s = seed ^ (tid << 32) ^ i as u64;
+                    let v1 = splitmix64(&mut s) as u32;
+                    let v2 = splitmix64(&mut s) as u32;
+                    h.insert(k, v1).unwrap();
+                    // double lookup: the second is a cache hit when the
+                    // stamp held — both must converge on the acked insert
+                    assert!(eventually(k, Some(v1)), "lost insert of {k}");
+                    assert!(eventually(k, Some(v1)), "stale hit on {k}");
+                    match (i as u64 + seed) % 3 {
+                        0 => {
+                            assert!(h.delete(k).unwrap(), "delete of {k} missed");
+                            assert!(eventually(k, None), "deleted key {k} resurrected");
+                            assert!(eventually(k, None), "stale hit after delete of {k}");
+                        }
+                        1 => {
+                            h.insert(k, v2).unwrap();
+                            assert!(eventually(k, Some(v2)), "replace of {k} served stale");
+                            assert!(eventually(k, Some(v2)), "stale hit on {k} (v2)");
+                        }
+                        _ => {}
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    resizer.join().unwrap();
+
+    let stats = h.stats().unwrap();
+    assert!(stats.cache_hits > 0, "stress never exercised the hit path: {}", stats.summary());
+    assert!(
+        stats.cache_invalidations > 0,
+        "stress never exercised invalidation: {}",
+        stats.summary()
+    );
+
+    // settle: every key reflects the per-key script's final state
+    for tid in 0..4u64 {
+        let base = (tid as u32 + 1) * 100_000;
+        for i in 0..250u32 {
+            let k = base + i;
+            let mut s = seed ^ (tid << 32) ^ i as u64;
+            let v1 = splitmix64(&mut s) as u32;
+            let v2 = splitmix64(&mut s) as u32;
+            let want = match (i as u64 + seed) % 3 {
+                0 => None,
+                1 => Some(v2),
+                _ => Some(v1),
+            };
+            assert_eq!(h.lookup(k).unwrap(), want, "key {k} wrong after the races");
+        }
+    }
+    coord.shutdown();
+}
+
+/// Replay one op on a sequential reference map, returning what a
+/// sequential lookup/delete observes.
+enum RefReply {
+    Value(Option<u32>),
+    Deleted(bool),
+    Inserted,
+}
+
+fn apply_ref(map: &mut std::collections::HashMap<u32, u32>, op: &Op) -> RefReply {
+    match *op {
+        Op::Insert { key, value } => {
+            map.insert(key, value);
+            RefReply::Inserted
+        }
+        Op::Lookup { key } => RefReply::Value(map.get(&key).copied()),
+        Op::Delete { key } => RefReply::Deleted(map.remove(&key).is_some()),
+    }
+}
+
+/// Sequential differential: the same Zipf-skewed mixed stream, op by op
+/// (`max_batch = 1` dispatches each op in its own window, and the
+/// synchronous client serializes them), through the coordinator with the
+/// cache on, with it off, and against `ShardedStd` plus a HashMap
+/// reference. Every lookup value and delete flag must be identical.
+#[test]
+fn differential_zipf_stream_cache_on_off_stdshard() {
+    let seed = test_seed();
+    let n = 6_000;
+    let ops = workload::zipf_mixed(n, Mix::READ_HEAVY, 0.99, seed);
+    let universe = workload::zipf_mixed_universe(n, seed);
+
+    // (per-op lookups, per-op delete flags, final universe contents, cache hits)
+    type RunOut = (Vec<Option<u32>>, Vec<bool>, Vec<Option<u32>>, u64);
+    let run_coordinator = |cache_capacity: usize| -> RunOut {
+        // max_batch 1: strict sequential windows
+        let cfg = CoordinatorConfig { cache_capacity, ..cached_cfg(2, 1) };
+        let (coord, h) = Coordinator::start(cfg, |_w| {
+            Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(64))?) as _)
+        })
+        .unwrap();
+        let mut lookups = Vec::new();
+        let mut deletes = Vec::new();
+        for op in &ops {
+            match *op {
+                Op::Insert { key, value } => {
+                    h.insert(key, value).unwrap();
+                }
+                Op::Lookup { key } => lookups.push(h.lookup(key).unwrap()),
+                Op::Delete { key } => deletes.push(h.delete(key).unwrap()),
+            }
+        }
+        let finals = h.lookup_batch(&universe).unwrap();
+        let hits = h.stats().unwrap().cache_hits;
+        coord.shutdown();
+        (lookups, deletes, finals, hits)
+    };
+
+    let (luk_on, del_on, fin_on, hits_on) = run_coordinator(1024);
+    let (luk_off, del_off, fin_off, hits_off) = run_coordinator(0);
+    assert!(hits_on > 0, "θ=0.99 stream must produce cache hits");
+    assert_eq!(hits_off, 0, "disabled cache must not serve");
+
+    // ShardedStd + HashMap references, sequentially
+    let std_shard = ShardedStd::for_capacity(n);
+    let mut reference = std::collections::HashMap::new();
+    let mut luk_std = Vec::new();
+    let mut del_std = Vec::new();
+    let mut luk_ref = Vec::new();
+    let mut del_ref = Vec::new();
+    for op in &ops {
+        match *op {
+            Op::Insert { key, value } => {
+                std_shard.insert(key, value).unwrap();
+            }
+            Op::Lookup { key } => luk_std.push(std_shard.lookup(key)),
+            Op::Delete { key } => del_std.push(std_shard.delete(key)),
+        }
+        match apply_ref(&mut reference, op) {
+            RefReply::Value(v) => luk_ref.push(v),
+            RefReply::Deleted(d) => del_ref.push(d),
+            RefReply::Inserted => {}
+        }
+    }
+
+    assert_eq!(luk_on, luk_off, "cache changed a lookup result");
+    assert_eq!(del_on, del_off, "cache changed a delete result");
+    assert_eq!(luk_on, luk_std, "coordinator diverged from ShardedStd");
+    assert_eq!(del_on, del_std, "coordinator deletes diverged from ShardedStd");
+    assert_eq!(luk_on, luk_ref, "coordinator diverged from the HashMap reference");
+    assert_eq!(del_on, del_ref, "coordinator deletes diverged from the reference");
+
+    // final contents: every universe key agrees across all four paths
+    assert_eq!(fin_on, fin_off, "cache changed the final table contents");
+    for (i, &k) in universe.iter().enumerate() {
+        assert_eq!(fin_on[i], reference.get(&k).copied(), "final contents diverged on {k}");
+        assert_eq!(std_shard.lookup(k), reference.get(&k).copied(), "ShardedStd diverged on {k}");
+    }
+}
+
+/// Bulk differential: the same skewed stream submitted in multi-op
+/// windows. The write-conflict bypass makes the cached path
+/// observationally identical to the uncached one even when a window
+/// writes and reads the same hot key, so per-op results must match a
+/// grouped-window (insert → delete → lookup) reference exactly — and a
+/// hot-set-shift stream must keep hitting after the head moves.
+#[test]
+fn differential_bulk_windows_and_hot_set_shift() {
+    let seed = test_seed() ^ 0xB017;
+    let n = 20_000;
+    for (label, ops) in [
+        ("zipf_mixed", workload::zipf_mixed(n, Mix::READ_HEAVY, 0.99, seed)),
+        ("hot_set_shift", workload::zipf_mixed_shift(n, Mix::READ_HEAVY, 0.99, 4, seed)),
+    ] {
+        let mut results: Vec<(Vec<Option<u32>>, Vec<bool>, u64)> = Vec::new();
+        for cache_capacity in [2048usize, 0] {
+            let cfg = CoordinatorConfig { cache_capacity, ..cached_cfg(2, 512) };
+            let (coord, h) = Coordinator::start(cfg, |_w| {
+                Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(64))?) as _)
+            })
+            .unwrap();
+            let mut lookups = Vec::new();
+            let mut deletes = Vec::new();
+            for window in ops.chunks(512) {
+                let res = h.submit(window).unwrap();
+                lookups.extend(res.lookups);
+                deletes.extend(res.deletes);
+            }
+            let hits = h.stats().unwrap().cache_hits;
+            coord.shutdown();
+            results.push((lookups, deletes, hits));
+        }
+        let (luk_on, del_on, hits_on) = &results[0];
+        let (luk_off, del_off, hits_off) = &results[1];
+        assert!(*hits_on > 0, "{label}: cached run produced no hits");
+        assert_eq!(*hits_off, 0, "{label}: uncached run served from a cache");
+        assert_eq!(luk_on, luk_off, "{label}: cache changed a windowed lookup");
+        assert_eq!(del_on, del_off, "{label}: cache changed a windowed delete");
+
+        // grouped-window reference (per window: inserts, deletes, lookups)
+        let mut reference = std::collections::HashMap::new();
+        let mut luk_ref = Vec::new();
+        let mut del_ref = Vec::new();
+        for window in ops.chunks(512) {
+            for op in window {
+                if let Op::Insert { key, value } = *op {
+                    reference.insert(key, value);
+                }
+            }
+            for op in window {
+                if let Op::Delete { key } = *op {
+                    del_ref.push(reference.remove(&key).is_some());
+                }
+            }
+            for op in window {
+                if let Op::Lookup { key } = *op {
+                    luk_ref.push(reference.get(&key).copied());
+                }
+            }
+        }
+        assert_eq!(luk_on, &luk_ref, "{label}: diverged from grouped reference");
+        assert_eq!(del_on, &del_ref, "{label}: deletes diverged from grouped reference");
+    }
+}

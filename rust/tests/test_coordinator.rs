@@ -13,6 +13,7 @@ fn cfg(workers: usize) -> CoordinatorConfig {
         workers,
         batch: BatchPolicy { max_batch: 512, deadline: Duration::from_micros(200) },
         resize_check_every: 2,
+        cache_capacity: 512,
     }
 }
 
@@ -127,6 +128,7 @@ fn deadline_batching_flushes_lone_requests() {
         workers: 1,
         batch: BatchPolicy { max_batch: 1_000_000, deadline: Duration::from_millis(2) },
         resize_check_every: 8,
+        cache_capacity: 512,
     };
     let (coord, h) = Coordinator::start(cfgd, |_w| {
         Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(16))?) as _)

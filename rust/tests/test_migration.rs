@@ -14,6 +14,13 @@ fn table(buckets: usize) -> Arc<HiveTable> {
     Arc::new(HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap())
 }
 
+/// Schedule seed for the interleaving-sensitive stress tests. CI runs a
+/// small `HIVE_TEST_SEED` matrix so these races don't fossilize on the
+/// one interleaving a fixed schedule happens to produce.
+fn test_seed() -> u64 {
+    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
 /// Readers must never miss a present key while splits and merges migrate
 /// entries under them — including across capacity-class reallocations.
 #[test]
@@ -71,19 +78,23 @@ fn lookups_never_miss_during_growth_and_shrink() {
 /// exactly once with its final value.
 #[test]
 fn writers_race_migration_without_loss_or_duplication() {
+    let seed = test_seed();
     let t = table(16);
     let stop = Arc::new(AtomicBool::new(false));
     let resizer = {
         let t = Arc::clone(&t);
         let stop = Arc::clone(&stop);
+        // seed varies the churn stride so the migration front races the
+        // writers at a different cadence per schedule
+        let churn = 4 + (seed % 3) as usize * 4;
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 // load-aware controller keeps capacity tracking the writers
                 // (grows a full resize batch when past the threshold)...
                 t.maybe_resize();
                 // ...while a constant split/merge churn exercises migration
-                t.grow_buckets(8);
-                t.shrink_buckets(8);
+                t.grow_buckets(churn);
+                t.shrink_buckets(churn);
                 std::thread::yield_now();
             }
         })
@@ -109,11 +120,12 @@ fn writers_race_migration_without_loss_or_duplication() {
                     false
                 };
                 let base = tid * 100_000 + 1;
+                let off = (seed % 3) as u32;
                 for i in 0..per {
                     let k = base + i;
                     t.insert(k, k).unwrap();
                     assert!(eventually(&t, k, Some(k)), "key {k} vanished after insert");
-                    match i % 3 {
+                    match (i + off) % 3 {
                         0 => {
                             assert!(t.delete(k), "delete {k} missed");
                             assert!(eventually(&t, k, None), "key {k} survived delete");
@@ -134,14 +146,16 @@ fn writers_race_migration_without_loss_or_duplication() {
     stop.store(true, Ordering::Relaxed);
     resizer.join().unwrap();
 
-    // Survivors: i % 3 == 1 (value k+1) and i % 3 == 2 (value k).
+    // Survivors: (i+off) % 3 == 1 (value k+1) and == 2 (value k); `per`
+    // is divisible by 3, so the class sizes are offset-independent.
+    let off = (seed % 3) as u32;
     let expected_per = per as usize - (per as usize + 2) / 3;
     assert_eq!(t.len(), 4 * expected_per, "live-entry count drifted");
     for tid in 0..4u32 {
         let base = tid * 100_000 + 1;
         for i in 0..per {
             let k = base + i;
-            let want = match i % 3 {
+            let want = match (i + off) % 3 {
                 0 => None,
                 1 => Some(k + 1),
                 _ => Some(k),
@@ -182,6 +196,9 @@ fn batches_survive_capacity_class_reallocations() {
     };
 
     let per = 4000u32;
+    // seed varies the batch-window size: the number of ops sharing one
+    // epoch pin changes how long pins overlap the resizer's grace periods
+    let window = [128usize, 256, 512][(test_seed() % 3) as usize];
     let writers: Vec<_> = (0..4u32)
         .map(|tid| {
             let t = Arc::clone(&t);
@@ -189,11 +206,11 @@ fn batches_survive_capacity_class_reallocations() {
                 let base = tid * 50_000 + 1;
                 let pairs: Vec<(u32, u32)> =
                     (0..per).map(|i| (base + i, base + i + 9)).collect();
-                for chunk in pairs.chunks(256) {
+                for chunk in pairs.chunks(window) {
                     t.insert_batch(chunk).unwrap();
                 }
                 let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
-                for chunk in keys.chunks(256) {
+                for chunk in keys.chunks(window) {
                     for (k, v) in chunk.iter().zip(t.lookup_batch(chunk)) {
                         assert_eq!(v, Some(k + 9), "key {k} lost across a pointer swap");
                     }

@@ -54,6 +54,7 @@ fn run_coordinator(
         batch: BatchPolicy { max_batch: window, deadline: Duration::from_micros(200) },
         resize_check_every: 8,
         cache_capacity,
+        ring_capacity: 4096,
     };
     let (coord, h) = Coordinator::start(cfg, move |_w| {
         let backend = NativeBackend::new(HiveConfig::for_capacity(shard_cap, 0.8))?;

@@ -21,6 +21,16 @@ impl NativeBackend {
     }
 
     /// Backend over an existing shared table.
+    ///
+    /// Coherence caveat: the stamp this backend vouches with
+    /// ([`Backend::coherence_stamp`]) moves on reallocation and stash
+    /// drains, not on individual key writes. A coordinator layering its
+    /// hot-key cache over a *shared* table therefore stays coherent
+    /// only if every key write for the shard flows through the
+    /// coordinator itself; external sharers must confine themselves to
+    /// migration-type operations (`maybe_resize`, `grow_buckets`,
+    /// `shrink_buckets` — the shape `tests/test_cache.rs` exercises) or
+    /// the cache must be disabled (`cache_capacity: 0`).
     pub fn shared(table: Arc<HiveTable>) -> Self {
         NativeBackend { table }
     }

@@ -39,8 +39,19 @@ impl Batcher {
 
     /// Add one op. Returns `true` if the window is now full (dispatch!).
     pub fn push(&mut self, op: Op) -> bool {
+        self.push_at(op, Instant::now())
+    }
+
+    /// Add one op that was *enqueued* at `enqueued` (possibly before the
+    /// worker picked it up). Returns `true` if the window is now full.
+    ///
+    /// The pipelined plane queues requests in a submission ring before
+    /// the worker drains them, so a window's deadline runs from the
+    /// first op's submission time — ring backlog counts against the
+    /// dispatch deadline instead of silently extending it.
+    pub fn push_at(&mut self, op: Op, enqueued: Instant) -> bool {
         if self.pending.is_empty() {
-            self.window_open = Some(Instant::now());
+            self.window_open = Some(enqueued);
         }
         self.pending.push(op);
         self.pending.len() >= self.policy.max_batch
@@ -102,6 +113,20 @@ mod tests {
         assert!(b.deadline_expired());
         assert_eq!(b.take().len(), 1);
         assert!(!b.deadline_expired(), "empty batcher has no deadline");
+    }
+
+    #[test]
+    fn push_at_backdates_the_window_deadline() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1000,
+            deadline: Duration::from_millis(5),
+        });
+        // an op that already sat in the submission ring past the
+        // deadline makes the window immediately dispatchable
+        b.push_at(Op::Lookup { key: 1 }, Instant::now() - Duration::from_millis(8));
+        assert!(b.deadline_expired(), "ring backlog must count against the deadline");
+        assert_eq!(b.time_to_deadline(), Some(Duration::ZERO));
+        assert_eq!(b.take().len(), 1);
     }
 
     #[test]

@@ -1,44 +1,67 @@
 //! The L3 coordinator: a batching key-value service over pluggable
 //! backends — the serving-layer packaging of the Hive table.
 //!
-//! Architecture (vLLM-router-style, thread-based):
+//! Architecture (pipelined request plane, thread-based):
 //!
 //! ```text
-//!             Handle (clone-able, thread-safe)
-//!                │  route(key) = murmur(key) % workers
-//!     ┌──────────┼──────────────┐
+//!   client threads            Handle (clone-able, thread-safe)
+//!   ──────────────            route(key) = murmur(key) % workers
+//!   Pipeline: window of N     │
+//!   completion tickets        │   blocking insert/lookup/delete =
+//!   (submit ⇢ poll/wait)      │   a window-of-1 pipeline
+//!              └──────────────┤
+//!     ┌──────────┬────────────┴─┐
 //!     ▼          ▼              ▼
-//!  worker 0   worker 1  ...  worker W-1       (std::thread + mpsc)
-//!  [batcher]  [batcher]      [batcher]        size+deadline windows
-//!     │          │              │
+//!  [sub ring] [sub ring]    [sub ring]        bounded MPSC submission
+//!     │          │              │             rings (backpressure)
+//!     ▼          ▼              ▼
+//!  worker 0   worker 1  ...  worker W-1       (std::thread, drains its
+//!  [batcher]  [batcher]      [batcher]        ring into size+deadline
+//!     │          │              │             dispatch windows)
 //!  [hot-key]  [hot-key]      [hot-key]        read-through CLOCK cache:
 //!  [ cache ]  [ cache ]      [ cache ]        lookup hits skip the backend
 //!     │          │              │
 //!  Backend    Backend        Backend          native | xla | simt
 //!     │          │              │
 //!  resize-ctl per worker (load-factor watcher between batches)
+//!     │          │              │
+//!     └──────────┴──────────────┘
+//!   completions published per dispatch window
+//!   (one wakeup per client window, not one per op)
 //! ```
 //!
 //! Each worker owns one table shard; requests are routed by key hash, so
-//! shards are disjoint and workers never contend. Within a dispatch
-//! window the batcher groups by op type (legal for concurrent requests —
-//! see `backend`). Between the batcher and the backend sits a per-worker
-//! hot-key cache ([`cache::HotKeyCache`]): under skewed traffic the hot
-//! head of the key distribution is served without an epoch pin or bucket
-//! probe, and coherence is kept by per-key invalidation on every write
-//! plus wholesale validation against the backend's coherence stamp
+//! shards are disjoint and workers never contend. Requests enter through
+//! a bounded MPSC submission ring per worker ([`pipeline`]): a client
+//! thread keeps up to N ops in flight via [`Pipeline`] completion
+//! tickets instead of paying a blocking round-trip per op, and bulk
+//! `Handle::submit` windows scatter to all shards up front and gather in
+//! arrival order. Within a dispatch window the batcher groups by op type
+//! (legal for concurrent requests — see `backend`). Between the batcher
+//! and the backend sits a per-worker hot-key cache
+//! ([`cache::HotKeyCache`]): under skewed traffic the hot head of the
+//! key distribution is served without an epoch pin or bucket probe, and
+//! coherence is kept by per-key invalidation on every write plus
+//! wholesale validation against the backend's coherence stamp
 //! (reallocation epoch + stash-drain epoch — see `cache` module docs).
 //! The resize controller runs the §IV-C policy between batches,
 //! amortized across the service's lifetime — no global pauses.
+//!
+//! Shutdown (or a worker death) can never strand a caller: queued
+//! requests are drained with [`crate::core::error::HiveError::Shutdown`]
+//! and in-flight tickets complete with the same error (see
+//! `tests/test_service.rs`).
 
 pub mod batcher;
 pub mod cache;
+pub mod pipeline;
 pub mod service;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use cache::HotKeyCache;
-pub use service::{Coordinator, CoordinatorConfig, Handle};
+pub use pipeline::{Pipeline, Ticket};
+pub use service::{start_native, Coordinator, CoordinatorConfig, Handle, SingleReply};
 pub use stats::ServiceStats;
 
 /// Alias re-exported for the resize controller's event type.

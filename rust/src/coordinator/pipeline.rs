@@ -1,0 +1,640 @@
+//! The pipelined request plane: completion tickets, bounded per-client
+//! in-flight windows, and the bounded MPSC submission ring the workers
+//! drain.
+//!
+//! The pre-pipeline coordinator was a closed loop: every single-key
+//! operation allocated a `sync_channel`, sent a request, and blocked on
+//! the reply — one op in flight per client thread, one channel wakeup
+//! per op. This module replaces that with three pieces:
+//!
+//! * **Completion slots** — a client-owned window of pre-allocated
+//!   slots. Submitting an op reserves a slot and yields a [`Ticket`]
+//!   (client side) plus a [`CompletionSlot`] (worker side). The ticket
+//!   offers poll ([`Ticket::is_done`], [`Ticket::try_wait`]) and block
+//!   ([`Ticket::wait`]) APIs; the slot is published exactly once by the
+//!   worker — or by its `Drop` impl with [`HiveError::Shutdown`] if the
+//!   worker dies or shuts down with the op in flight, so a blocked
+//!   caller can never hang.
+//! * **[`Pipeline`]** — a clone of the service handle plus a window of
+//!   `depth` slots: one client thread keeps up to `depth` ops in flight
+//!   across all shards. The old blocking `Handle` API is a window-of-1
+//!   pipeline over the same machinery.
+//! * **Submission ring** — a bounded MPSC queue ([`ring`]) replacing
+//!   the per-worker unbounded channel. Workers drain it directly into
+//!   the batcher; when the receiver dies, queued requests are dropped
+//!   (firing their completion slots with `Shutdown`) and blocked
+//!   senders are released.
+//!
+//! Completions are *batched*: the worker publishes a whole dispatch
+//! window's results with [`publish_batch`] — one condvar wakeup per
+//! client window per dispatch, not one channel wakeup per op.
+//!
+//! Ordering: ops a client keeps in flight simultaneously are
+//! *concurrent* (same contract as ops sharing a dispatch window — see
+//! `backend`). A caller that needs read-your-write ordering between two
+//! ops must wait the first ticket before submitting the second.
+
+use crate::coordinator::service::{Handle, SingleReply};
+use crate::core::error::{HiveError, Result};
+use crate::workload::Op;
+use std::collections::{HashSet, VecDeque};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Completion windows: slots, tickets, worker-side publication.
+// ---------------------------------------------------------------------------
+
+/// One slot's lifecycle. `seq` (stored beside it) guards against a
+/// stale ticket or completion handle touching a recycled slot.
+enum SlotState {
+    /// No op in flight.
+    Free,
+    /// Reserved and submitted; `abandoned` is set when the ticket was
+    /// dropped without waiting, so the completion frees the slot
+    /// directly instead of parking a result nobody will claim.
+    Pending {
+        /// Ticket dropped before the result arrived.
+        abandoned: bool,
+    },
+    /// Result published, waiting for the ticket to claim it.
+    Done(Result<SingleReply>),
+}
+
+struct Slot {
+    seq: u64,
+    state: SlotState,
+}
+
+struct WindowState {
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    inflight: usize,
+}
+
+/// Shared core of one client window: slot table + the two wakeup edges
+/// (a completion arrived / a slot was vacated).
+struct Window {
+    state: Mutex<WindowState>,
+    completed: Condvar,
+    vacated: Condvar,
+}
+
+impl Window {
+    fn with_depth(depth: usize) -> Arc<Window> {
+        let depth = depth.max(1);
+        let slots = (0..depth).map(|_| Slot { seq: 0, state: SlotState::Free }).collect();
+        Arc::new(Window {
+            state: Mutex::new(WindowState {
+                slots,
+                free: (0..depth).rev().collect(),
+                inflight: 0,
+            }),
+            completed: Condvar::new(),
+            vacated: Condvar::new(),
+        })
+    }
+
+    /// Reserve one slot, blocking while the window is at full depth —
+    /// this is the client-side flow control of the pipelined plane.
+    fn reserve(this: &Arc<Window>) -> (Ticket, CompletionSlot) {
+        let mut st = this.state.lock().unwrap();
+        loop {
+            if let Some(idx) = st.free.pop() {
+                let slot = &mut st.slots[idx];
+                slot.seq += 1;
+                slot.state = SlotState::Pending { abandoned: false };
+                let seq = slot.seq;
+                st.inflight += 1;
+                let ticket =
+                    Ticket { window: Arc::clone(this), idx, seq, claimed: false };
+                let done =
+                    CompletionSlot { window: Arc::clone(this), idx, seq, fired: false };
+                return (ticket, done);
+            }
+            st = this.vacated.wait(st).unwrap();
+        }
+    }
+}
+
+/// A standalone one-op window: the blocking `Handle` API is exactly
+/// this — a window-of-1 pipeline.
+pub(crate) fn one_shot() -> (Ticket, CompletionSlot) {
+    Window::reserve(&Window::with_depth(1))
+}
+
+/// Client-side claim on one in-flight operation's result.
+///
+/// Obtained from [`Pipeline::submit`]. Poll with [`Ticket::is_done`] /
+/// [`Ticket::try_wait`], or block with [`Ticket::wait`]. Dropping a
+/// ticket abandons the op (the slot recycles once the worker
+/// completes); the op itself still executes.
+pub struct Ticket {
+    window: Arc<Window>,
+    idx: usize,
+    seq: u64,
+    claimed: bool,
+}
+
+impl Ticket {
+    /// `true` once the worker has published this op's result (a
+    /// subsequent [`Ticket::wait`] will not block).
+    pub fn is_done(&self) -> bool {
+        let st = self.window.state.lock().unwrap();
+        let slot = &st.slots[self.idx];
+        slot.seq == self.seq && matches!(slot.state, SlotState::Done(_))
+    }
+
+    /// Claim the result if it is ready; otherwise hand the ticket back.
+    pub fn try_wait(self) -> std::result::Result<Result<SingleReply>, Ticket> {
+        if self.is_done() {
+            Ok(self.wait())
+        } else {
+            Err(self)
+        }
+    }
+
+    /// Block until the result is published, claim it, and vacate the
+    /// slot. Returns `Err(HiveError::Shutdown)` — never hangs — when
+    /// the service shut down or the owning worker died with this op in
+    /// flight.
+    pub fn wait(mut self) -> Result<SingleReply> {
+        let mut st = self.window.state.lock().unwrap();
+        loop {
+            if st.slots[self.idx].seq != self.seq {
+                // Slot recycled out from under us — only reachable via
+                // API misuse, but fail closed rather than claim a
+                // stranger's result.
+                self.claimed = true;
+                return Err(HiveError::Shutdown);
+            }
+            let taken = std::mem::replace(&mut st.slots[self.idx].state, SlotState::Free);
+            match taken {
+                SlotState::Done(res) => {
+                    st.free.push(self.idx);
+                    st.inflight -= 1;
+                    self.claimed = true;
+                    drop(st);
+                    self.window.vacated.notify_one();
+                    return res;
+                }
+                other => st.slots[self.idx].state = other,
+            }
+            st = self.window.completed.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if self.claimed {
+            return;
+        }
+        let mut st = self.window.state.lock().unwrap();
+        if st.slots[self.idx].seq != self.seq {
+            return;
+        }
+        let taken = std::mem::replace(&mut st.slots[self.idx].state, SlotState::Free);
+        match taken {
+            SlotState::Pending { .. } => {
+                st.slots[self.idx].state = SlotState::Pending { abandoned: true };
+            }
+            SlotState::Done(_) => {
+                st.free.push(self.idx);
+                st.inflight -= 1;
+                drop(st);
+                self.window.vacated.notify_one();
+            }
+            SlotState::Free => {}
+        }
+    }
+}
+
+/// Worker-side obligation to publish one op's result.
+///
+/// Exactly-once: either the worker calls [`CompletionSlot::complete`]
+/// (or the batched [`publish_batch`]), or the `Drop` impl publishes
+/// `Err(HiveError::Shutdown)` — which is how callers blocked on tickets
+/// are released when a request is dropped in a dying ring, a worker's
+/// pending window is discarded, or a worker thread panics mid-dispatch.
+pub(crate) struct CompletionSlot {
+    window: Arc<Window>,
+    idx: usize,
+    seq: u64,
+    fired: bool,
+}
+
+impl CompletionSlot {
+    /// Publish and wake the window's waiters immediately.
+    #[cfg(test)]
+    pub(crate) fn complete(mut self, result: Result<SingleReply>) {
+        self.publish(result);
+        self.window.completed.notify_all();
+    }
+
+    /// Publish without waking waiters; callers batch one notify per
+    /// window via [`publish_batch`].
+    fn publish(&mut self, result: Result<SingleReply>) {
+        if self.fired {
+            return;
+        }
+        self.fired = true;
+        let mut st = self.window.state.lock().unwrap();
+        if st.slots[self.idx].seq != self.seq {
+            return;
+        }
+        let taken = std::mem::replace(&mut st.slots[self.idx].state, SlotState::Free);
+        match taken {
+            SlotState::Pending { abandoned: false } => {
+                st.slots[self.idx].state = SlotState::Done(result);
+            }
+            SlotState::Pending { abandoned: true } => {
+                st.free.push(self.idx);
+                st.inflight -= 1;
+                drop(st);
+                self.window.vacated.notify_one();
+            }
+            other => st.slots[self.idx].state = other,
+        }
+    }
+}
+
+impl Drop for CompletionSlot {
+    fn drop(&mut self) {
+        if self.fired {
+            return;
+        }
+        self.publish(Err(HiveError::Shutdown));
+        self.window.completed.notify_all();
+    }
+}
+
+/// Publish a whole dispatch window's results with one wakeup per
+/// distinct client window — the batched reply path that replaces one
+/// channel wakeup per op.
+pub(crate) fn publish_batch(entries: Vec<(CompletionSlot, Result<SingleReply>)>) {
+    // Dedup by window identity in O(n): blocking-API waiters each own a
+    // one-shot window, so a dispatch full of singles has as many
+    // windows as ops. The clone held in `windows` keeps every inserted
+    // pointer alive, so addresses cannot be recycled mid-loop.
+    let mut windows: Vec<Arc<Window>> = Vec::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    for (mut slot, result) in entries {
+        slot.publish(result);
+        if seen.insert(Arc::as_ptr(&slot.window) as usize) {
+            windows.push(Arc::clone(&slot.window));
+        }
+    }
+    for w in windows {
+        w.completed.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline: the client-facing windowed submission API.
+// ---------------------------------------------------------------------------
+
+/// A pipelined client session: up to `depth` single-key ops in flight
+/// at once through one [`Handle`], completing out of band via
+/// [`Ticket`]s.
+///
+/// ```no_run
+/// # use hivehash::coordinator::{start_native, CoordinatorConfig};
+/// # use hivehash::HiveConfig;
+/// # let (coord, h) = start_native(CoordinatorConfig::default(), HiveConfig::default()).unwrap();
+/// let pipe = h.pipeline(256);
+/// let mut tickets = std::collections::VecDeque::new();
+/// for k in 1..=10_000u32 {
+///     if tickets.len() == 256 {
+///         tickets.pop_front().unwrap().wait().unwrap();
+///     }
+///     tickets.push_back(pipe.insert(k, k * 2).unwrap());
+/// }
+/// for t in tickets {
+///     t.wait().unwrap();
+/// }
+/// ```
+///
+/// Submission blocks once `depth` tickets are outstanding and resumes
+/// as the caller retires them (wait / try_wait / drop), so a pipeline
+/// can never queue unboundedly ahead of its consumer. Ops in flight
+/// together are concurrent — wait a ticket before submitting a
+/// dependent op.
+pub struct Pipeline {
+    handle: Handle,
+    window: Arc<Window>,
+    depth: usize,
+}
+
+impl Pipeline {
+    pub(crate) fn new(handle: Handle, depth: usize) -> Pipeline {
+        let depth = depth.max(1);
+        Pipeline { handle, window: Window::with_depth(depth), depth }
+    }
+
+    /// The bounded in-flight window size.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Ops currently in flight (submitted, ticket not yet retired).
+    pub fn in_flight(&self) -> usize {
+        self.window.state.lock().unwrap().inflight
+    }
+
+    /// Submit one op, blocking while `depth` tickets are outstanding.
+    /// The returned ticket completes when the op's dispatch window
+    /// executes on its shard.
+    pub fn submit(&self, op: Op) -> Result<Ticket> {
+        let (ticket, done) = Window::reserve(&self.window);
+        self.handle.send_single(op, done)?;
+        Ok(ticket)
+    }
+
+    /// Pipelined insert/replace; resolve via the ticket.
+    pub fn insert(&self, key: u32, value: u32) -> Result<Ticket> {
+        self.submit(Op::Insert { key, value })
+    }
+
+    /// Pipelined point lookup; resolve via the ticket.
+    pub fn lookup(&self, key: u32) -> Result<Ticket> {
+        self.submit(Op::Lookup { key })
+    }
+
+    /// Pipelined delete; resolve via the ticket.
+    pub fn delete(&self, key: u32) -> Result<Ticket> {
+        self.submit(Op::Delete { key })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded MPSC submission ring.
+// ---------------------------------------------------------------------------
+
+struct RingState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct RingShared<T> {
+    q: Mutex<RingState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Create a bounded MPSC submission ring of capacity `cap`.
+pub(crate) fn ring<T>(cap: usize) -> (RingTx<T>, RingRx<T>) {
+    let shared = Arc::new(RingShared {
+        q: Mutex::new(RingState {
+            buf: VecDeque::with_capacity(cap),
+            cap: cap.max(1),
+            senders: 1,
+            rx_alive: true,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (RingTx { shared: Arc::clone(&shared) }, RingRx { shared })
+}
+
+/// Producer half: clients and the coordinator push requests; `send`
+/// blocks while the ring is full (backpressure toward the clients).
+pub(crate) struct RingTx<T> {
+    shared: Arc<RingShared<T>>,
+}
+
+impl<T> Clone for RingTx<T> {
+    fn clone(&self) -> Self {
+        self.shared.q.lock().unwrap().senders += 1;
+        RingTx { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Drop for RingTx<T> {
+    fn drop(&mut self) {
+        let mut q = self.shared.q.lock().unwrap();
+        q.senders -= 1;
+        let last = q.senders == 0;
+        drop(q);
+        if last {
+            // wake the worker so it can observe disconnection
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> RingTx<T> {
+    /// Push one request, blocking while the ring is full. Returns the
+    /// request back when the receiving worker is gone — dropping it
+    /// then fires any completion slot it carries with `Shutdown`.
+    pub(crate) fn send(&self, value: T) -> std::result::Result<(), T> {
+        let mut q = self.shared.q.lock().unwrap();
+        loop {
+            if !q.rx_alive {
+                return Err(value);
+            }
+            if q.buf.len() < q.cap {
+                q.buf.push_back(value);
+                drop(q);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+    }
+}
+
+/// Consumer half, owned by exactly one worker thread. Dropping it
+/// (worker exit *or panic*) drains queued requests — firing their
+/// completion slots with `Shutdown` — and releases blocked senders.
+pub(crate) struct RingRx<T> {
+    shared: Arc<RingShared<T>>,
+}
+
+impl<T> RingRx<T> {
+    /// Non-blocking pop — the worker's drain-into-the-batcher path.
+    pub(crate) fn try_recv(&self) -> Option<T> {
+        let mut q = self.shared.q.lock().unwrap();
+        let v = q.buf.pop_front();
+        if v.is_some() {
+            drop(q);
+            self.shared.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Blocking pop with a deadline (the batcher's dispatch deadline).
+    pub(crate) fn recv_timeout(&self, dur: Duration) -> std::result::Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + dur;
+        let mut q = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.buf.pop_front() {
+                drop(q);
+                self.shared.not_full.notify_one();
+                return Ok(v);
+            }
+            if q.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _timed_out) =
+                self.shared.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Requests queued right now (the worker samples this into the
+    /// in-flight-depth stat at each dispatch).
+    pub(crate) fn backlog(&self) -> usize {
+        self.shared.q.lock().unwrap().buf.len()
+    }
+}
+
+impl<T> Drop for RingRx<T> {
+    fn drop(&mut self) {
+        let mut q = self.shared.q.lock().unwrap();
+        q.rx_alive = false;
+        // Dropping queued requests fires their completion slots /
+        // reply channels with Shutdown — nobody blocks on a dead ring.
+        q.buf.clear();
+        drop(q);
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shot_completes_and_unblocks_wait() {
+        let (ticket, done) = one_shot();
+        assert!(!ticket.is_done());
+        let t = std::thread::spawn(move || done.complete(Ok(SingleReply::Value(Some(7)))));
+        assert_eq!(ticket.wait().unwrap(), SingleReply::Value(Some(7)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn dropping_completion_slot_fires_shutdown() {
+        let (ticket, done) = one_shot();
+        drop(done); // worker died with the op in flight
+        assert_eq!(ticket.wait(), Err(HiveError::Shutdown));
+    }
+
+    #[test]
+    fn try_wait_returns_ticket_until_done() {
+        let (ticket, done) = one_shot();
+        let ticket = match ticket.try_wait() {
+            Err(t) => t,
+            Ok(_) => panic!("result claimed before completion"),
+        };
+        done.complete(Ok(SingleReply::Deleted(true)));
+        assert!(ticket.is_done());
+        match ticket.try_wait() {
+            Ok(res) => assert_eq!(res.unwrap(), SingleReply::Deleted(true)),
+            Err(_) => panic!("done ticket not claimable"),
+        }
+    }
+
+    #[test]
+    fn window_recycles_slots_at_bounded_depth() {
+        let window = Window::with_depth(2);
+        let (t1, d1) = Window::reserve(&window);
+        let (t2, d2) = Window::reserve(&window);
+        assert_eq!(window.state.lock().unwrap().inflight, 2);
+        // a third reservation must block until a slot vacates
+        let w2 = Arc::clone(&window);
+        let reserver = std::thread::spawn(move || {
+            let (t3, d3) = Window::reserve(&w2);
+            d3.complete(Ok(SingleReply::Inserted(true)));
+            t3.wait().unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!reserver.is_finished(), "reserve must block at full depth");
+        d1.complete(Ok(SingleReply::Inserted(true)));
+        t1.wait().unwrap(); // vacates a slot → reserver proceeds
+        assert_eq!(reserver.join().unwrap(), SingleReply::Inserted(true));
+        d2.complete(Ok(SingleReply::Inserted(true)));
+        t2.wait().unwrap();
+        assert_eq!(window.state.lock().unwrap().inflight, 0);
+    }
+
+    #[test]
+    fn abandoned_ticket_recycles_on_completion() {
+        let window = Window::with_depth(1);
+        let (t1, d1) = Window::reserve(&window);
+        drop(t1); // caller walked away
+        d1.complete(Ok(SingleReply::Value(None))); // completion frees the slot
+        let (t2, d2) = Window::reserve(&window); // would deadlock if the slot leaked
+        d2.complete(Ok(SingleReply::Value(Some(1))));
+        assert_eq!(t2.wait().unwrap(), SingleReply::Value(Some(1)));
+    }
+
+    #[test]
+    fn publish_batch_wakes_every_window_once() {
+        let wa = Window::with_depth(4);
+        let wb = Window::with_depth(4);
+        let (ta1, da1) = Window::reserve(&wa);
+        let (ta2, da2) = Window::reserve(&wa);
+        let (tb1, db1) = Window::reserve(&wb);
+        publish_batch(vec![
+            (da1, Ok(SingleReply::Value(Some(1)))),
+            (da2, Ok(SingleReply::Value(Some(2)))),
+            (db1, Ok(SingleReply::Value(Some(3)))),
+        ]);
+        assert_eq!(ta1.wait().unwrap(), SingleReply::Value(Some(1)));
+        assert_eq!(ta2.wait().unwrap(), SingleReply::Value(Some(2)));
+        assert_eq!(tb1.wait().unwrap(), SingleReply::Value(Some(3)));
+    }
+
+    #[test]
+    fn ring_is_fifo_and_bounded() {
+        let (tx, rx) = ring::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        // third send blocks until the worker pops
+        let tx2 = tx.clone();
+        let sender = std::thread::spawn(move || tx2.send(3).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!sender.is_finished(), "send must block on a full ring");
+        assert_eq!(rx.try_recv(), Some(1));
+        assert!(sender.join().unwrap());
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 2);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 3);
+        assert_eq!(rx.backlog(), 0);
+        assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn ring_reports_timeout_then_disconnect() {
+        let (tx, rx) = ring::<u32>(4);
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Err(RecvTimeoutError::Timeout) => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        drop(tx);
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Err(RecvTimeoutError::Disconnected) => {}
+            other => panic!("expected disconnect, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dead_ring_releases_blocked_sender_and_returns_value() {
+        let (tx, rx) = ring::<u32>(1);
+        tx.send(1).unwrap();
+        let tx2 = tx.clone();
+        let blocked = std::thread::spawn(move || tx2.send(2));
+        std::thread::sleep(Duration::from_millis(20));
+        drop(rx); // worker died: queued 1 is dropped, sender released
+        assert_eq!(blocked.join().unwrap(), Err(2));
+        assert_eq!(tx.send(9), Err(9), "sends after rx death fail fast");
+    }
+}

@@ -1,16 +1,24 @@
 //! The coordinator service: worker pool, request router, and the
 //! per-worker dispatch loop (batcher + backend + resize controller).
+//!
+//! Requests enter through the pipelined plane (`coordinator::pipeline`):
+//! every worker owns a bounded MPSC submission ring which it drains
+//! directly into its batcher, and single-op requests complete through
+//! ticket/completion slots — one condvar publish per dispatch window
+//! instead of one channel wakeup per op. The blocking `Handle` API is a
+//! window-of-1 pipeline over the same plane.
 
 use crate::backend::{Backend, BatchResult};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::cache::HotKeyCache;
+use crate::coordinator::pipeline::{self, CompletionSlot, Pipeline, RingRx, RingTx};
 use crate::coordinator::stats::ServiceStats;
 use crate::core::error::{HiveError, Result};
 use crate::hash::HashKind;
 use crate::native::resize::ResizeEvent;
 use crate::workload::Op;
 use std::collections::HashSet;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -31,6 +39,11 @@ pub struct CoordinatorConfig {
     /// same window bypass the cache, so every window linearizes exactly
     /// as the backend's grouped execution does.
     pub cache_capacity: usize,
+    /// Per-worker submission ring capacity: the maximum number of
+    /// requests queued ahead of a worker before senders block
+    /// (backpressure toward the clients). Bounds memory and queue delay
+    /// under overload.
+    pub ring_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -40,6 +53,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             resize_check_every: 8,
             cache_capacity: 4096,
+            ring_capacity: 4096,
         }
     }
 }
@@ -58,8 +72,12 @@ pub enum SingleReply {
 }
 
 enum Request {
-    Single { op: Op, enqueued: Instant, reply: SyncSender<SingleReply> },
-    Bulk { ops: Vec<Op>, reply: SyncSender<Result<BatchResult>> },
+    /// One single-key op; completes through its ticket's slot when the
+    /// dispatch window it joins executes.
+    Single { op: Op, enqueued: Instant, done: CompletionSlot },
+    /// One pre-sharded bulk window; the reply is tagged with the worker
+    /// index so the submitter can gather shards in arrival order.
+    Bulk { ops: Vec<Op>, enqueued: Instant, reply: Sender<(usize, Result<BatchResult>)> },
     Stats { reply: SyncSender<ServiceStats> },
     Flush { reply: SyncSender<()> },
     Shutdown,
@@ -68,14 +86,14 @@ enum Request {
 /// The running service. Dropping it (or calling [`Coordinator::shutdown`])
 /// joins all workers.
 pub struct Coordinator {
-    senders: Vec<Sender<Request>>,
+    senders: Vec<RingTx<Request>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 /// Clone-able client handle.
 #[derive(Clone)]
 pub struct Handle {
-    senders: Arc<Vec<Sender<Request>>>,
+    senders: Arc<Vec<RingTx<Request>>>,
 }
 
 impl Coordinator {
@@ -92,7 +110,7 @@ impl Coordinator {
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
-            let (tx, rx) = mpsc::channel::<Request>();
+            let (tx, rx) = pipeline::ring::<Request>(cfg.ring_capacity.max(1));
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let cfg_w = cfg.clone();
             let factory = Arc::clone(&factory);
@@ -102,7 +120,7 @@ impl Coordinator {
                     .spawn(move || match factory(w) {
                         Ok(backend) => {
                             let _ = ready_tx.send(Ok(()));
-                            worker_loop(rx, backend, cfg_w);
+                            worker_loop(w, rx, backend, cfg_w);
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));
@@ -117,7 +135,9 @@ impl Coordinator {
         Ok((Coordinator { senders, handles }, handle))
     }
 
-    /// Stop all workers and join them.
+    /// Stop all workers and join them. Requests still queued behind the
+    /// shutdown marker (and ops in flight on a dead worker) complete
+    /// with [`HiveError::Shutdown`] — blocked callers never hang.
     pub fn shutdown(mut self) {
         for tx in &self.senders {
             let _ = tx.send(Request::Shutdown);
@@ -148,12 +168,29 @@ impl Handle {
         (HashKind::Murmur3.hash(key ^ 0x9E3779B9) as usize) % self.senders.len()
     }
 
+    /// Open a pipelined session over this handle: up to `depth`
+    /// single-key ops in flight at once, completing out of band via
+    /// [`crate::coordinator::pipeline::Ticket`]s.
+    pub fn pipeline(&self, depth: usize) -> Pipeline {
+        Pipeline::new(self.clone(), depth)
+    }
+
+    /// Route and submit one pipelined single op (the `Pipeline`
+    /// submission path).
+    pub(crate) fn send_single(&self, op: Op, done: CompletionSlot) -> Result<()> {
+        self.senders[self.route(op.key())]
+            .send(Request::Single { op, enqueued: Instant::now(), done })
+            .map_err(|_| HiveError::Shutdown)
+    }
+
+    /// Blocking single op — a window-of-1 pipeline: reserve one
+    /// completion slot, submit, wait the ticket.
     fn single(&self, worker: usize, op: Op) -> Result<SingleReply> {
-        let (tx, rx) = sync_channel(1);
+        let (ticket, done) = pipeline::one_shot();
         self.senders[worker]
-            .send(Request::Single { op, enqueued: Instant::now(), reply: tx })
+            .send(Request::Single { op, enqueued: Instant::now(), done })
             .map_err(|_| HiveError::Shutdown)?;
-        rx.recv().map_err(|_| HiveError::Shutdown)
+        ticket.wait()
     }
 
     /// Insert or replace `key → value`.
@@ -207,6 +244,10 @@ impl Handle {
     /// Submit a pre-batched workload: ops are sharded by key, executed on
     /// all workers, and the per-class results are reassembled in
     /// submission order.
+    ///
+    /// Shards are scattered up front and gathered in *arrival order*
+    /// over one shared reply channel — a slow shard no longer blocks
+    /// collection of the fast ones.
     pub fn submit(&self, ops: &[Op]) -> Result<BatchResult> {
         let w = self.senders.len();
         let mut shards: Vec<Vec<Op>> = vec![Vec::new(); w];
@@ -216,24 +257,23 @@ impl Handle {
             shards[r].push(*op);
             route_of.push(r);
         }
-        let mut rxs = Vec::with_capacity(w);
+        let (tx, rx) = mpsc::channel::<(usize, Result<BatchResult>)>();
+        let enqueued = Instant::now();
+        let mut expected = 0usize;
         for (i, shard) in shards.into_iter().enumerate() {
             if shard.is_empty() {
-                rxs.push(None);
                 continue;
             }
-            let (tx, rx) = sync_channel(1);
             self.senders[i]
-                .send(Request::Bulk { ops: shard, reply: tx })
+                .send(Request::Bulk { ops: shard, enqueued, reply: tx.clone() })
                 .map_err(|_| HiveError::Shutdown)?;
-            rxs.push(Some(rx));
+            expected += 1;
         }
-        let mut partials: Vec<Option<BatchResult>> = Vec::with_capacity(w);
-        for rx in rxs {
-            match rx {
-                None => partials.push(None),
-                Some(rx) => partials.push(Some(rx.recv().map_err(|_| HiveError::Shutdown)??)),
-            }
+        drop(tx);
+        let mut partials: Vec<Option<BatchResult>> = vec![None; w];
+        for _ in 0..expected {
+            let (i, res) = rx.recv().map_err(|_| HiveError::Shutdown)?;
+            partials[i] = Some(res?);
         }
         // Reassemble lookups/deletes in original submission order.
         let mut luk_cursor = vec![0usize; w];
@@ -262,22 +302,33 @@ impl Handle {
         Ok(merged)
     }
 
-    /// Aggregate service stats across workers.
+    /// Aggregate service stats across workers: scatter the request to
+    /// every worker first, then gather, so one slow worker doesn't
+    /// serialize the round-trips of the rest.
     pub fn stats(&self) -> Result<ServiceStats> {
-        let mut agg = ServiceStats::default();
+        let mut rxs = Vec::with_capacity(self.senders.len());
         for tx in self.senders.iter() {
             let (rtx, rrx) = sync_channel(1);
             tx.send(Request::Stats { reply: rtx }).map_err(|_| HiveError::Shutdown)?;
+            rxs.push(rrx);
+        }
+        let mut agg = ServiceStats::default();
+        for rrx in rxs {
             agg.merge(&rrx.recv().map_err(|_| HiveError::Shutdown)?);
         }
         Ok(agg)
     }
 
     /// Flush all pending windows (barrier; used by tests/benches).
+    /// Scatter-then-gather like [`Handle::stats`].
     pub fn flush(&self) -> Result<()> {
+        let mut rxs = Vec::with_capacity(self.senders.len());
         for tx in self.senders.iter() {
             let (rtx, rrx) = sync_channel(1);
             tx.send(Request::Flush { reply: rtx }).map_err(|_| HiveError::Shutdown)?;
+            rxs.push(rrx);
+        }
+        for rrx in rxs {
             rrx.recv().map_err(|_| HiveError::Shutdown)?;
         }
         Ok(())
@@ -290,7 +341,7 @@ impl Handle {
 struct Worker {
     backend: Box<dyn Backend>,
     batcher: Batcher,
-    waiting: Vec<(Instant, SyncSender<SingleReply>, Op)>,
+    waiting: Vec<(Instant, CompletionSlot, Op)>,
     stats: ServiceStats,
     /// Read-through hot-key cache; `None` when disabled by config or
     /// when the backend cannot produce a coherence stamp.
@@ -411,32 +462,46 @@ impl Worker {
         Ok(res)
     }
 
-    /// Flush the pending single-op window, reply to each waiter.
-    fn dispatch(&mut self) {
+    /// Flush the pending single-op window and publish every waiter's
+    /// result in one batch — one wakeup per client window, not one per
+    /// op. `backlog` is the submission-ring depth at dispatch time,
+    /// folded into the in-flight depth stat.
+    fn dispatch(&mut self, backlog: usize) {
         if self.batcher.is_empty() {
             return;
         }
         let ops = self.batcher.take();
+        let started = Instant::now();
+        self.stats.inflight_depth.record((self.waiting.len() + backlog) as u64);
+        for (enq, _, _) in &self.waiting {
+            self.stats
+                .queue_delay_ns
+                .record(started.saturating_duration_since(*enq).as_nanos() as u64);
+        }
         match self.execute_window(&ops) {
             Ok(res) => {
                 self.record_result(&res);
-                // replies in class order
+                // completions in class order, published as one batch
                 let mut luk = res.lookups.into_iter();
                 let mut del = res.deletes.into_iter();
-                for (enq, reply, op) in self.waiting.drain(..) {
+                let mut completions = Vec::with_capacity(self.waiting.len());
+                for (enq, done, op) in self.waiting.drain(..) {
                     self.stats.latency_ns.record(enq.elapsed().as_nanos() as u64);
                     let msg = match op {
                         Op::Insert { .. } => SingleReply::Inserted(true),
                         Op::Lookup { .. } => SingleReply::Value(luk.next().flatten()),
                         Op::Delete { .. } => SingleReply::Deleted(del.next().unwrap_or(false)),
                     };
-                    let _ = reply.send(msg);
+                    completions.push((done, Ok(msg)));
                 }
+                pipeline::publish_batch(completions);
             }
             Err(e) => {
-                for (_, reply, _) in self.waiting.drain(..) {
-                    let _ = reply.send(SingleReply::Failed(e.to_string()));
+                let mut completions = Vec::with_capacity(self.waiting.len());
+                for (_, done, _) in self.waiting.drain(..) {
+                    completions.push((done, Ok(SingleReply::Failed(e.to_string()))));
                 }
+                pipeline::publish_batch(completions);
             }
         }
         self.check_resize();
@@ -468,7 +533,12 @@ impl Worker {
     }
 }
 
-fn worker_loop(rx: Receiver<Request>, backend: Box<dyn Backend>, cfg: CoordinatorConfig) {
+fn worker_loop(
+    index: usize,
+    rx: RingRx<Request>,
+    backend: Box<dyn Backend>,
+    cfg: CoordinatorConfig,
+) {
     let cache = if cfg.cache_capacity > 0 {
         backend.coherence_stamp().map(|s| HotKeyCache::new(cfg.cache_capacity, s))
     } else {
@@ -483,43 +553,80 @@ fn worker_loop(rx: Receiver<Request>, backend: Box<dyn Backend>, cfg: Coordinato
         cfg,
     };
     loop {
-        let timeout = w.batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Request::Single { op, enqueued, reply }) => {
-                w.waiting.push((enqueued, reply, op));
-                if w.batcher.push(op) {
-                    w.dispatch();
+        // Drain the ring straight into the batcher: only sleep on the
+        // dispatch deadline when no request is immediately available.
+        let req = match rx.try_recv() {
+            Some(r) => r,
+            None => {
+                if w.batcher.deadline_expired() {
+                    w.dispatch(rx.backlog());
+                    continue;
+                }
+                let timeout = w.batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => r,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if w.batcher.deadline_expired() {
+                            w.dispatch(rx.backlog());
+                        }
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            Ok(Request::Bulk { ops, reply }) => {
+        };
+        match req {
+            Request::Single { op, enqueued, done } => {
+                w.waiting.push((enqueued, done, op));
+                // The window's deadline runs from the op's submission,
+                // so ring backlog counts against it. An expired window
+                // is NOT dispatched mid-drain: it ships at the next
+                // instant the ring is momentarily empty (the try_recv
+                // None path above) or at max_batch, whichever is first.
+                // That bounds deadline overshoot to the in-hand backlog
+                // while keeping the batch amortization the plane exists
+                // for — dispatching per-op on an aged backlog would
+                // collapse every window to size 1 exactly under
+                // overload.
+                if w.batcher.push_at(op, enqueued) {
+                    w.dispatch(rx.backlog());
+                }
+            }
+            Request::Bulk { ops, enqueued, reply } => {
                 // flush pending singles first to preserve window ordering
-                w.dispatch();
+                w.dispatch(rx.backlog());
+                let started = Instant::now();
+                w.stats.queue_delay_ns.record_n(
+                    started.saturating_duration_since(enqueued).as_nanos() as u64,
+                    ops.len() as u64,
+                );
+                w.stats.inflight_depth.record((ops.len() + rx.backlog()) as u64);
                 let res = w.execute_window(&ops);
                 if let Ok(res) = &res {
                     w.record_result(res);
+                    w.stats
+                        .latency_ns
+                        .record_n(enqueued.elapsed().as_nanos() as u64, ops.len() as u64);
                 }
-                let _ = reply.send(res);
+                let _ = reply.send((index, res));
                 w.check_resize();
             }
-            Ok(Request::Stats { reply }) => {
+            Request::Stats { reply } => {
                 let _ = reply.send(w.stats.clone());
             }
-            Ok(Request::Flush { reply }) => {
-                w.dispatch();
+            Request::Flush { reply } => {
+                w.dispatch(rx.backlog());
                 let _ = reply.send(());
             }
-            Ok(Request::Shutdown) => {
-                w.dispatch();
+            Request::Shutdown => {
+                w.dispatch(rx.backlog());
                 break;
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if w.batcher.deadline_expired() {
-                    w.dispatch();
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    // `rx` drops here: any request still queued behind the shutdown
+    // marker is drained and its completion slot / reply channel fires
+    // with `Shutdown` — same for `w.waiting` if the thread unwinds.
 }
 
 /// Shared-state convenience: a coordinator whose workers all use native
@@ -546,6 +653,7 @@ mod tests {
             batch: BatchPolicy { max_batch: 64, deadline: Duration::from_micros(100) },
             resize_check_every: 2,
             cache_capacity: 256,
+            ring_capacity: 256,
         }
     }
 
@@ -643,6 +751,68 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_window_keeps_ops_in_flight_and_completes() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(256)).unwrap();
+        let pipe = h.pipeline(16);
+        assert_eq!(pipe.depth(), 16);
+        let mut tickets = std::collections::VecDeque::new();
+        for k in 1..=400u32 {
+            if tickets.len() == 16 {
+                let t: crate::coordinator::pipeline::Ticket = tickets.pop_front().unwrap();
+                match t.wait().unwrap() {
+                    SingleReply::Inserted(_) => {}
+                    other => panic!("unexpected reply {other:?}"),
+                }
+            }
+            tickets.push_back(pipe.insert(k, k.wrapping_mul(3)).unwrap());
+        }
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert_eq!(pipe.in_flight(), 0);
+        // everything the pipeline acked is visible to the blocking API
+        for k in (1..=400u32).step_by(37) {
+            assert_eq!(h.lookup(k).unwrap(), Some(k.wrapping_mul(3)));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dropped_tickets_recycle_slots_and_ops_still_execute() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(256)).unwrap();
+        let pipe = h.pipeline(4);
+        // 64 fire-and-forget inserts through a depth-4 window: reserve
+        // must recycle abandoned slots as completions land, or this
+        // loop deadlocks (covered by the harness timeout)
+        for k in 1..=64u32 {
+            let _ = pipe.insert(k, k).unwrap();
+        }
+        h.flush().unwrap();
+        for k in 1..=64u32 {
+            assert_eq!(h.lookup(k).unwrap(), Some(k));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn queue_delay_and_latency_recorded_for_both_paths() {
+        use crate::workload::Op;
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        h.insert(1, 1).unwrap(); // single path
+        let ops: Vec<Op> = (10..100u32).map(|k| Op::Insert { key: k, value: k }).collect();
+        h.submit(&ops).unwrap(); // bulk path
+        h.flush().unwrap();
+        let s = h.stats().unwrap();
+        assert_eq!(s.latency_ns.count(), 91, "1 single + 90 bulk ops must record latency");
+        assert_eq!(s.queue_delay_ns.count(), 91, "queue delay must cover both paths");
+        assert!(s.inflight_depth.count() >= 2, "both dispatch paths sample depth");
+        coord.shutdown();
+    }
+
+    #[test]
     fn cache_serves_repeat_lookups_and_stays_coherent() {
         let (coord, h) =
             start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
@@ -704,6 +874,7 @@ mod tests {
             batch: BatchPolicy { max_batch: 128, deadline: Duration::from_micros(50) },
             resize_check_every: 1,
             cache_capacity: 256,
+            ring_capacity: 256,
         };
         let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(4)).unwrap();
         use crate::workload::Op;

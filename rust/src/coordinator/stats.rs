@@ -26,8 +26,17 @@ pub struct ServiceStats {
     pub cache_misses: u64,
     pub cache_invalidations: u64,
     pub cache_flushes: u64,
-    /// Per-op latency in nanoseconds (request → reply, single-op path).
+    /// Per-op latency in nanoseconds (request → completion: queue delay
+    /// plus service time), recorded for the single-op *and* bulk paths.
     pub latency_ns: Histogram,
+    /// Queue delay in nanoseconds (request enqueue → dispatch start),
+    /// recorded for both paths; the pipelined plane's ring backlog
+    /// shows up here rather than in service time.
+    pub queue_delay_ns: Histogram,
+    /// Requests standing in the plane when a window dispatched (waiting
+    /// singles or bulk ops, plus the submission-ring backlog) — the
+    /// pipelining depth the workers actually see.
+    pub inflight_depth: Histogram,
     /// Batch size distribution.
     pub batch_sizes: Histogram,
 }
@@ -48,6 +57,8 @@ impl ServiceStats {
         self.cache_invalidations += other.cache_invalidations;
         self.cache_flushes += other.cache_flushes;
         self.latency_ns.merge(&other.latency_ns);
+        self.queue_delay_ns.merge(&other.queue_delay_ns);
+        self.inflight_depth.merge(&other.inflight_depth);
         self.batch_sizes.merge(&other.batch_sizes);
     }
 
@@ -70,7 +81,7 @@ impl ServiceStats {
     /// Human summary line.
     pub fn summary(&self) -> String {
         format!(
-            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}]",
+            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
             self.ops,
             self.batches,
             self.mean_batch(),
@@ -86,6 +97,9 @@ impl ServiceStats {
             self.cache_invalidations,
             self.cache_flushes,
             self.latency_ns.summary(),
+            self.queue_delay_ns.summary(),
+            self.inflight_depth.mean(),
+            self.inflight_depth.max(),
         )
     }
 }
@@ -104,11 +118,16 @@ mod tests {
         b.ops = 5;
         b.batches = 1;
         b.latency_ns.record(300);
+        b.queue_delay_ns.record(40);
+        b.inflight_depth.record(7);
         a.merge(&b);
         assert_eq!(a.ops, 15);
         assert_eq!(a.batches, 3);
         assert_eq!(a.latency_ns.count(), 2);
+        assert_eq!(a.queue_delay_ns.count(), 1);
+        assert_eq!(a.inflight_depth.max(), 7);
         assert!(a.summary().contains("ops=15"));
+        assert!(a.summary().contains("queue["), "summary must surface queue delay");
     }
 
     #[test]

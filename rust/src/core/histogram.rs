@@ -43,9 +43,19 @@ impl Histogram {
     /// Record one observation.
     #[inline]
     pub fn record(&mut self, value: u64) {
-        self.counts[Self::index(value)] += 1;
-        self.total += 1;
-        self.sum += value as u128;
+        self.record_n(value, 1);
+    }
+
+    /// Record `n` observations of `value` in O(1) — the bulk-window
+    /// path records one latency sample per op without n array walks.
+    #[inline]
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::index(value)] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
         self.min = self.min.min(value);
         self.max = self.max.max(value);
     }
@@ -165,6 +175,25 @@ mod tests {
         // within ~7% of the true quantile
         assert!((p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.07, "p50={p50}");
         assert!((p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.07, "p99={p99}");
+    }
+
+    #[test]
+    fn record_n_equals_repeated_record() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for _ in 0..1000 {
+            a.record(77);
+        }
+        a.record(5);
+        b.record_n(77, 1000);
+        b.record_n(5, 1);
+        b.record_n(123, 0); // no-op
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        assert_eq!(a.quantile(0.5), b.quantile(0.5));
+        assert_eq!(a.quantile(0.999), b.quantile(0.999));
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! Resizable Hash Table for GPUs"* (Polak, Troendle, Jang — CS.DC 2025) as a
 //! three-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the coordinator: a batching/routing service,
-//!   resize controller, overflow-stash management, plus three execution
-//!   substrates (native lock-free CPU, SIMT warp simulator, XLA/PJRT bulk
-//!   backend) and the baseline hash tables the paper compares against.
+//! * **Layer 3 (this crate)** — the coordinator: a batching/routing service
+//!   with a pipelined request plane (bounded per-worker submission rings +
+//!   completion tickets, so one client thread keeps hundreds of ops in
+//!   flight — [`coordinator::pipeline`]), resize controller, overflow-stash
+//!   management, plus three execution substrates (native lock-free CPU,
+//!   SIMT warp simulator, XLA/PJRT bulk backend) and the baseline hash
+//!   tables the paper compares against.
 //! * **Layer 2 (python/compile/model.py)** — JAX bulk formulations of the
 //!   table operations, AOT-lowered to HLO artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the probe /

@@ -114,6 +114,7 @@ fn cmd_serve(flags: &std::collections::HashMap<String, String>) -> i32 {
         batch: BatchPolicy { max_batch: 4096, deadline: Duration::from_micros(200) },
         resize_check_every: 4,
         cache_capacity: 4096,
+        ring_capacity: 4096,
     };
     let (coord, h) = match Coordinator::start(cfg, make_factory(backend)) {
         Ok(x) => x,

@@ -45,6 +45,13 @@ impl From<u32> for JsonVal {
         JsonVal::Int(v as i64)
     }
 }
+impl From<u64> for JsonVal {
+    fn from(v: u64) -> Self {
+        // latency quantiles are u64 nanoseconds; the i64 range covers
+        // ~292 years of them
+        JsonVal::Int(v as i64)
+    }
+}
 impl From<f64> for JsonVal {
     fn from(v: f64) -> Self {
         JsonVal::Num(v)
@@ -85,6 +92,21 @@ pub fn bench_row(size_field: &str, n: usize, system: &str, driver: &str, mops: f
         ("system", system.into()),
         ("driver", driver.into()),
         ("mops", mops.into()),
+    ])
+}
+
+/// Latency quantiles of a histogram as a JSON object:
+/// `{p50_ns, p99_ns, p999_ns, mean_ns, max_ns, count}` — the standard
+/// latency fields the service figures (fig11) and the `kv_service`
+/// example publish.
+pub fn latency_obj(h: &crate::core::histogram::Histogram) -> JsonVal {
+    obj(vec![
+        ("p50_ns", h.quantile(0.50).into()),
+        ("p99_ns", h.quantile(0.99).into()),
+        ("p999_ns", h.quantile(0.999).into()),
+        ("mean_ns", h.mean().into()),
+        ("max_ns", h.max().into()),
+        ("count", h.count().into()),
     ])
 }
 
@@ -214,5 +236,18 @@ mod tests {
     fn integers_have_no_decimal_point() {
         assert_eq!(JsonVal::Int(3).render(), "3");
         assert_eq!(JsonVal::Num(3.0).render(), "3");
+    }
+
+    #[test]
+    fn latency_obj_surfaces_quantiles() {
+        let mut h = crate::core::histogram::Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = latency_obj(&h).render();
+        assert!(s.contains("\"p50_ns\":"), "{s}");
+        assert!(s.contains("\"p99_ns\":"), "{s}");
+        assert!(s.contains("\"p999_ns\":"), "{s}");
+        assert!(s.contains("\"count\":1000"), "{s}");
     }
 }

@@ -187,6 +187,89 @@ pub fn drive_parallel_batched(
     start.elapsed()
 }
 
+/// Closed-loop service driver: `clients` threads each issue their
+/// round-robin shard of `ops` one at a time through the blocking
+/// [`Handle`](crate::coordinator::Handle) API — exactly one op in
+/// flight per client, the pre-pipeline serving model (and fig11's
+/// baseline mode).
+pub fn drive_service_closed(
+    handle: &crate::coordinator::Handle,
+    ops: &[crate::workload::Op],
+    clients: usize,
+) -> Duration {
+    use crate::workload::Op;
+    assert!(clients > 0, "need at least one client");
+    let shards: Vec<Vec<Op>> = (0..clients)
+        .map(|c| ops.iter().skip(c).step_by(clients).copied().collect())
+        .collect();
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for shard in &shards {
+            let h = handle.clone();
+            s.spawn(move || {
+                for op in shard {
+                    match *op {
+                        Op::Insert { key, value } => {
+                            let _ = h.insert(key, value);
+                        }
+                        Op::Lookup { key } => {
+                            let _ = h.lookup(key);
+                        }
+                        Op::Delete { key } => {
+                            let _ = h.delete(key);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    start.elapsed()
+}
+
+/// Pipelined service driver: `clients` threads each keep up to `window`
+/// ops in flight through a [`Pipeline`](crate::coordinator::Pipeline),
+/// retiring the oldest ticket once the window is full (fig11's
+/// pipelined mode). With `window == 1` this degenerates to the
+/// closed-loop model.
+pub fn drive_service_pipelined(
+    handle: &crate::coordinator::Handle,
+    ops: &[crate::workload::Op],
+    clients: usize,
+    window: usize,
+) -> Duration {
+    use crate::workload::Op;
+    assert!(clients > 0, "need at least one client");
+    let window = window.max(1);
+    let shards: Vec<Vec<Op>> = (0..clients)
+        .map(|c| ops.iter().skip(c).step_by(clients).copied().collect())
+        .collect();
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for shard in &shards {
+            let h = handle.clone();
+            s.spawn(move || {
+                let pipe = h.pipeline(window);
+                let mut inflight = std::collections::VecDeque::with_capacity(window);
+                for op in shard {
+                    if inflight.len() == window {
+                        let ticket: crate::coordinator::Ticket =
+                            inflight.pop_front().expect("window non-empty");
+                        let _ = ticket.wait();
+                    }
+                    match pipe.submit(*op) {
+                        Ok(t) => inflight.push_back(t),
+                        Err(_) => break, // service shut down underneath us
+                    }
+                }
+                for t in inflight {
+                    let _ = t.wait();
+                }
+            });
+        }
+    });
+    start.elapsed()
+}
+
 /// Per-thread batch window for the batched driver: `HIVE_BENCH_BATCH`,
 /// default 4096 ops (big enough to amortize the phase guard, small enough
 /// to keep the candidate table cache-resident).

@@ -35,6 +35,7 @@ fn cached_cfg(workers: usize, max_batch: usize) -> CoordinatorConfig {
         batch: BatchPolicy { max_batch, deadline: Duration::from_micros(100) },
         resize_check_every: 2,
         cache_capacity: 1024,
+        ring_capacity: 1024,
     }
 }
 

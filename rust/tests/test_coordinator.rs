@@ -14,6 +14,7 @@ fn cfg(workers: usize) -> CoordinatorConfig {
         batch: BatchPolicy { max_batch: 512, deadline: Duration::from_micros(200) },
         resize_check_every: 2,
         cache_capacity: 512,
+        ring_capacity: 1024,
     }
 }
 
@@ -129,6 +130,7 @@ fn deadline_batching_flushes_lone_requests() {
         batch: BatchPolicy { max_batch: 1_000_000, deadline: Duration::from_millis(2) },
         resize_check_every: 8,
         cache_capacity: 512,
+        ring_capacity: 1024,
     };
     let (coord, h) = Coordinator::start(cfgd, |_w| {
         Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(16))?) as _)

@@ -1,0 +1,401 @@
+//! Shutdown-while-in-flight battery (ISSUE 4 satellite).
+//!
+//! The pipelined request plane promises that a caller blocked on a
+//! ticket, a blocking single op, or a bulk reply when
+//! `Coordinator::shutdown` (or a worker panic) lands gets
+//! `HiveError::Shutdown` — it never hangs. These tests race submitters
+//! of every kind against shutdown and against an injected worker
+//! fault; every blocked call must resolve before a watchdog deadline.
+//!
+//! Interleaving-sensitive schedules derive from `HIVE_TEST_SEED` (CI
+//! runs a small seed matrix) so the races don't fossilize on one lucky
+//! interleaving.
+
+use hivehash::backend::{Backend, BatchResult, NativeBackend};
+use hivehash::coordinator::resize_ctl::ResizeEvent;
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Handle, SingleReply};
+use hivehash::core::error::{HiveError, Result};
+use hivehash::core::rng::splitmix64;
+use hivehash::workload::Op;
+use hivehash::HiveConfig;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn test_seed() -> u64 {
+    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+}
+
+/// Tight configuration: small batches, small submission rings — the
+/// shutdown races exercise full-ring senders and half-filled windows.
+fn tight_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch: 32, deadline: Duration::from_micros(100) },
+        resize_check_every: 4,
+        cache_capacity: 256,
+        ring_capacity: 8,
+    }
+}
+
+fn start(workers: usize, buckets: usize) -> (Coordinator, Handle) {
+    Coordinator::start(tight_cfg(workers), move |_w| {
+        Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(buckets))?) as _)
+    })
+    .unwrap()
+}
+
+/// Run `f` on a helper thread and panic if it neither finishes nor
+/// panics within `secs` — a hung request plane fails fast instead of
+/// eating the whole CI job timeout.
+fn with_deadline<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(), // propagate panic
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded {secs}s deadline — a caller hung across shutdown")
+        }
+    }
+}
+
+/// A blocking-path error observed racing shutdown must be `Shutdown` —
+/// `Runtime`/`Failed` here would mean a half-executed window leaked an
+/// error it should not produce on a lookup-only stream.
+fn assert_shutdown(e: HiveError) {
+    assert_eq!(e, HiveError::Shutdown, "expected Shutdown, got: {e}");
+}
+
+#[test]
+fn blocking_singles_resolve_across_shutdown() {
+    with_deadline(60, || {
+        let mut rng = test_seed();
+        let (coord, h) = start(2, 256);
+        let completed = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                let completed = Arc::clone(&completed);
+                std::thread::spawn(move || {
+                    for i in 0..50_000u32 {
+                        let k = (t as u32) * 1_000_000 + i + 1;
+                        let res = if i % 3 == 0 {
+                            h.insert(k, k).map(|_| ())
+                        } else {
+                            h.lookup(k).map(|_| ())
+                        };
+                        match res {
+                            Ok(()) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                assert_shutdown(e);
+                                return;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        // let the submitters build up in-flight state, then pull the rug
+        std::thread::sleep(Duration::from_micros(500 + splitmix64(&mut rng) % 5_000));
+        coord.shutdown();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // sends after shutdown fail fast with Shutdown, not a hang
+        assert_shutdown(h.insert(1, 1).unwrap_err());
+        assert_shutdown(h.lookup(1).unwrap_err());
+    });
+}
+
+#[test]
+fn pipelined_tickets_resolve_across_shutdown() {
+    with_deadline(60, || {
+        let mut rng = test_seed().wrapping_add(1);
+        let (coord, h) = start(2, 256);
+        let threads: Vec<_> = (0..3u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let pipe = h.pipeline(32);
+                    let mut inflight: VecDeque<hivehash::coordinator::Ticket> = VecDeque::new();
+                    for i in 0..50_000u32 {
+                        let k = (t as u32) * 1_000_000 + i + 1;
+                        if inflight.len() == 32 {
+                            let ticket = inflight.pop_front().unwrap();
+                            match ticket.wait() {
+                                Ok(_) => {}
+                                Err(e) => {
+                                    assert_shutdown(e);
+                                    break;
+                                }
+                            }
+                        }
+                        match pipe.lookup(k) {
+                            Ok(ticket) => inflight.push_back(ticket),
+                            Err(e) => {
+                                assert_shutdown(e);
+                                break;
+                            }
+                        }
+                    }
+                    // every outstanding ticket must resolve — Ok for
+                    // windows that dispatched before the shutdown
+                    // marker, Shutdown for the rest — never hang
+                    for ticket in inflight {
+                        if let Err(e) = ticket.wait() {
+                            assert_shutdown(e);
+                        }
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(500 + splitmix64(&mut rng) % 5_000));
+        coord.shutdown();
+        for t in threads {
+            t.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn bulk_submits_resolve_across_shutdown() {
+    with_deadline(60, || {
+        let mut rng = test_seed().wrapping_add(2);
+        let (coord, h) = start(3, 256);
+        let threads: Vec<_> = (0..3u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for round in 0..20_000u32 {
+                        let base = (t as u32) * 1_000_000 + round * 128 + 1;
+                        let ops: Vec<Op> =
+                            (base..base + 128).map(|key| Op::Lookup { key }).collect();
+                        match h.submit(&ops) {
+                            Ok(res) => assert_eq!(res.lookups.len(), 128),
+                            Err(e) => {
+                                assert_shutdown(e);
+                                return;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(500 + splitmix64(&mut rng) % 5_000));
+        coord.shutdown();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_shutdown(h.submit(&[Op::Lookup { key: 1 }]).unwrap_err());
+    });
+}
+
+#[test]
+fn stats_and_flush_resolve_across_shutdown() {
+    with_deadline(60, || {
+        let mut rng = test_seed().wrapping_add(3);
+        let (coord, h) = start(4, 256);
+        let threads: Vec<_> = (0..2)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || loop {
+                    // scatter-gather control ops racing shutdown: each
+                    // round-trip either completes or errors, never hangs
+                    if let Err(e) = h.flush() {
+                        assert_shutdown(e);
+                        break;
+                    }
+                    if let Err(e) = h.stats().map(|_| ()) {
+                        assert_shutdown(e);
+                        break;
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(500 + splitmix64(&mut rng) % 5_000));
+        coord.shutdown();
+        for t in threads {
+            t.join().unwrap();
+        }
+    });
+}
+
+/// Native backend that panics when a window touches the trigger key —
+/// the injected "worker died mid-dispatch" fault.
+struct PanicBackend {
+    inner: NativeBackend,
+}
+
+const TRIGGER_KEY: u32 = 0x0DEA_DBEE;
+
+impl Backend for PanicBackend {
+    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
+        if ops.iter().any(|op| op.key() == TRIGGER_KEY) {
+            panic!("injected worker fault (test_service)");
+        }
+        self.inner.execute(ops)
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn load_factor(&self) -> f64 {
+        self.inner.load_factor()
+    }
+    fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>> {
+        self.inner.maybe_resize()
+    }
+    fn name(&self) -> &'static str {
+        "panic-native"
+    }
+}
+
+#[test]
+fn worker_panic_surfaces_shutdown_instead_of_hanging() {
+    with_deadline(60, || {
+        let mut rng = test_seed().wrapping_add(4);
+        // one worker: the fault takes down the whole shard set
+        let (coord, h) = Coordinator::start(tight_cfg(1), |_w| {
+            Ok(Box::new(PanicBackend {
+                inner: NativeBackend::new(HiveConfig::default().with_buckets(256))?,
+            }) as _)
+        })
+        .unwrap();
+        let errors = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..3u64)
+            .map(|t| {
+                let h = h.clone();
+                let errors = Arc::clone(&errors);
+                std::thread::spawn(move || {
+                    for i in 0..200_000u32 {
+                        let k = (t as u32) * 1_000_000 + i + 1;
+                        match h.lookup(k) {
+                            Ok(_) => {}
+                            Err(e) => {
+                                assert_shutdown(e);
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                return;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(200 + splitmix64(&mut rng) % 2_000));
+        // the trigger op shares a dispatch window with innocent lookups;
+        // the panic must fail them over to Shutdown, not strand them.
+        // (The ticket itself resolves with Shutdown when the worker's
+        // pending window is dropped during unwind.)
+        match h.lookup(TRIGGER_KEY) {
+            Ok(v) => panic!("trigger lookup returned {v:?} from a panicking worker"),
+            Err(e) => assert_shutdown(e),
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(
+            errors.load(Ordering::Relaxed),
+            3,
+            "every client blocked on the dead worker must observe Shutdown"
+        );
+        // the dead worker fails every later call fast
+        assert_shutdown(h.insert(7, 7).unwrap_err());
+        assert_shutdown(h.submit(&[Op::Lookup { key: 9 }]).unwrap_err());
+        assert_shutdown(h.stats().unwrap_err());
+        // shutdown of a service with a dead worker still returns
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn mixed_plane_race_under_seed_matrix() {
+    with_deadline(90, || {
+        let mut rng = test_seed().wrapping_add(5);
+        let (coord, h) = start(2, 1024);
+        // all four request kinds live at once while shutdown lands at a
+        // seed-jittered point: blocking singles, a pipelined window,
+        // bulk submits, and stats/flush control traffic
+        let singles = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 1..=100_000u32 {
+                    if let Err(e) = h.insert(i, i) {
+                        assert_shutdown(e);
+                        return;
+                    }
+                }
+            })
+        };
+        let pipelined = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let pipe = h.pipeline(64);
+                let mut inflight = VecDeque::new();
+                for i in 1..=100_000u32 {
+                    if inflight.len() == 64 {
+                        let t: hivehash::coordinator::Ticket = inflight.pop_front().unwrap();
+                        match t.wait() {
+                            Ok(SingleReply::Value(_)) | Ok(SingleReply::Failed(_)) => {}
+                            Ok(other) => panic!("lookup got {other:?}"),
+                            Err(e) => {
+                                assert_shutdown(e);
+                                break;
+                            }
+                        }
+                    }
+                    match pipe.lookup(2_000_000 + i) {
+                        Ok(t) => inflight.push_back(t),
+                        Err(e) => {
+                            assert_shutdown(e);
+                            break;
+                        }
+                    }
+                }
+                for t in inflight {
+                    if let Err(e) = t.wait() {
+                        assert_shutdown(e);
+                    }
+                }
+            })
+        };
+        let bulk = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for round in 0..10_000u32 {
+                    let base = 4_000_000 + round * 64;
+                    let ops: Vec<Op> = (base..base + 64)
+                        .map(|key| {
+                            if key % 2 == 0 {
+                                Op::Insert { key, value: key }
+                            } else {
+                                Op::Lookup { key }
+                            }
+                        })
+                        .collect();
+                    if let Err(e) = h.submit(&ops) {
+                        match e {
+                            HiveError::Shutdown => {}
+                            // a half-shut worker may legitimately surface
+                            // per-op failures as BatchErrors; a hang is
+                            // the only unacceptable outcome
+                            HiveError::BatchErrors { .. } => {}
+                            other => panic!("unexpected bulk error: {other}"),
+                        }
+                        return;
+                    }
+                }
+            })
+        };
+        std::thread::sleep(Duration::from_micros(1_000 + splitmix64(&mut rng) % 10_000));
+        coord.shutdown();
+        for t in [singles, pipelined, bulk] {
+            t.join().unwrap();
+        }
+    });
+}

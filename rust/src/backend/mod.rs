@@ -10,30 +10,30 @@
 //! * [`SimtBackend`] — the warp simulator (`simgpu::SimHive`), the
 //!   microarchitectural-metrics substrate.
 //!
-//! Within one dispatch window the batcher groups operations by type
-//! (insert → delete → lookup). Requests in one window are concurrent —
-//! they carry no cross-ordering guarantee — so the grouped execution is a
-//! legal linearization (standard batched-serving semantics; see
-//! `coordinator::batcher`).
+//! ## Grouped execution of the typed operation plane
+//!
+//! [`Backend::execute`] takes a window of [`Op`]s and returns one typed
+//! [`OpResult`] **per op, in submission order** — found values, previous
+//! values, CAS verdicts and placement outcomes all ride the same vector,
+//! so callers never re-correlate type-segregated result arrays (the old
+//! `BatchResult` shape this replaced). Within one dispatch window the
+//! backends group operations by class and execute the classes in a fixed
+//! order:
+//!
+//! ```text
+//!   upserts (Insert|Upsert) → insert-if-absents → updates → CAS →
+//!   fetch-adds → deletes → lookups
+//! ```
+//!
+//! Requests in one window are concurrent — they carry no cross-ordering
+//! guarantee — so the grouped execution is a legal linearization
+//! (standard batched-serving semantics; see `coordinator::batcher`).
+//! Callers needing read-your-write order between two ops put them in
+//! different windows (or wait the first ticket).
 
 use crate::core::error::Result;
 use crate::native::resize::ResizeEvent;
 use crate::workload::Op;
-
-/// Result of one executed batch.
-#[derive(Debug, Default, Clone)]
-pub struct BatchResult {
-    /// One entry per lookup op, in submission order.
-    pub lookups: Vec<Option<u32>>,
-    /// One entry per delete op: did it remove a key?
-    pub deletes: Vec<bool>,
-    /// Inserted (new) key count.
-    pub inserted: usize,
-    /// Replaced key count.
-    pub replaced: usize,
-    /// Overflowed-to-stash count.
-    pub stashed: usize,
-}
 
 /// A pluggable table substrate driven by the coordinator.
 ///
@@ -42,8 +42,12 @@ pub struct BatchResult {
 /// *constructs* its backend inside its own thread (see
 /// `coordinator::service::Coordinator::start`).
 pub trait Backend {
-    /// Execute one batch of operations (grouped-by-type semantics).
-    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult>;
+    /// Execute one window of operations (grouped-by-class semantics —
+    /// module docs), returning one typed [`OpResult`] per op in
+    /// submission order. Inserting classes (`Insert`/`Upsert`/
+    /// `InsertIfAbsent`/`FetchAdd`) validate keys up front: a sentinel
+    /// key fails the window before any mutation.
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>>;
     /// Live entries.
     fn len(&self) -> usize;
     /// Current load factor.
@@ -72,22 +76,72 @@ pub use native::NativeBackend;
 pub use simt::SimtBackend;
 pub use xla::XlaBackend;
 
-/// Split a window of ops into (inserts, deletes, lookups) preserving
-/// intra-class order; returns the ops plus their original indices.
-pub(crate) fn group_ops(
-    ops: &[Op],
-) -> (Vec<(usize, u32, u32)>, Vec<(usize, u32)>, Vec<(usize, u32)>) {
-    let mut ins = Vec::new();
-    let mut del = Vec::new();
-    let mut luk = Vec::new();
-    for (i, op) in ops.iter().enumerate() {
+// Re-exported beside the trait that consumes it: `Backend::execute` is
+// the plane's chokepoint, so backend-facing code can import the result
+// type from here.
+pub use crate::workload::OpResult;
+
+/// A window of ops split by class, each entry tagged with its original
+/// submission index so per-class results scatter back into submission
+/// order. Class vectors preserve intra-class order.
+#[derive(Debug, Default)]
+pub(crate) struct OpClasses {
+    /// `Insert` | `Upsert`: `(index, key, value)`.
+    pub upserts: Vec<(usize, u32, u32)>,
+    /// `InsertIfAbsent`: `(index, key, value)`.
+    pub if_absents: Vec<(usize, u32, u32)>,
+    /// `Update`: `(index, key, value)`.
+    pub updates: Vec<(usize, u32, u32)>,
+    /// `Cas`: `(index, key, expected, new)`.
+    pub cas: Vec<(usize, u32, u32, u32)>,
+    /// `FetchAdd`: `(index, key, delta)`.
+    pub fetch_adds: Vec<(usize, u32, u32)>,
+    /// `Delete`: `(index, key)`.
+    pub deletes: Vec<(usize, u32)>,
+    /// `Lookup`: `(index, key)`.
+    pub lookups: Vec<(usize, u32)>,
+}
+
+/// Pre-mutation key validation shared by every `Backend::execute` and
+/// `HiveTable::execute_ops`: the inserting classes (`Insert`/`Upsert`/
+/// `InsertIfAbsent`/`FetchAdd`) reject the reserved EMPTY sentinel for
+/// the whole window before anything executes. Non-inserting classes
+/// handle the sentinel inline as a miss.
+pub(crate) fn validate_insert_keys(ops: &[Op]) -> Result<()> {
+    for op in ops {
         match *op {
-            Op::Insert { key, value } => ins.push((i, key, value)),
-            Op::Delete { key } => del.push((i, key)),
-            Op::Lookup { key } => luk.push((i, key)),
+            Op::Insert { key, .. }
+            | Op::Upsert { key, .. }
+            | Op::InsertIfAbsent { key, .. }
+            | Op::FetchAdd { key, .. }
+                if key == crate::core::packed::EMPTY_KEY =>
+            {
+                return Err(crate::core::error::HiveError::InvalidKey(key));
+            }
+            _ => {}
         }
     }
-    (ins, del, luk)
+    Ok(())
+}
+
+/// Split a window of ops into per-class vectors (class execution order:
+/// module docs), preserving intra-class order and original indices.
+pub(crate) fn group_ops(ops: &[Op]) -> OpClasses {
+    let mut g = OpClasses::default();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Insert { key, value } | Op::Upsert { key, value } => {
+                g.upserts.push((i, key, value));
+            }
+            Op::InsertIfAbsent { key, value } => g.if_absents.push((i, key, value)),
+            Op::Update { key, value } => g.updates.push((i, key, value)),
+            Op::Cas { key, expected, new } => g.cas.push((i, key, expected, new)),
+            Op::FetchAdd { key, delta } => g.fetch_adds.push((i, key, delta)),
+            Op::Delete { key } => g.deletes.push((i, key)),
+            Op::Lookup { key } => g.lookups.push((i, key)),
+        }
+    }
+    g
 }
 
 #[cfg(test)]
@@ -100,12 +154,20 @@ mod tests {
             Op::Lookup { key: 1 },
             Op::Insert { key: 2, value: 20 },
             Op::Delete { key: 3 },
-            Op::Insert { key: 4, value: 40 },
+            Op::Upsert { key: 4, value: 40 },
             Op::Lookup { key: 5 },
+            Op::Cas { key: 6, expected: 1, new: 2 },
+            Op::FetchAdd { key: 7, delta: 3 },
+            Op::Update { key: 8, value: 80 },
+            Op::InsertIfAbsent { key: 9, value: 90 },
         ];
-        let (ins, del, luk) = group_ops(&ops);
-        assert_eq!(ins, vec![(1, 2, 20), (3, 4, 40)]);
-        assert_eq!(del, vec![(2, 3)]);
-        assert_eq!(luk, vec![(0, 1), (4, 5)]);
+        let g = group_ops(&ops);
+        assert_eq!(g.upserts, vec![(1, 2, 20), (3, 4, 40)], "Insert and Upsert share a class");
+        assert_eq!(g.deletes, vec![(2, 3)]);
+        assert_eq!(g.lookups, vec![(0, 1), (4, 5)]);
+        assert_eq!(g.cas, vec![(5, 6, 1, 2)]);
+        assert_eq!(g.fetch_adds, vec![(6, 7, 3)]);
+        assert_eq!(g.updates, vec![(7, 8, 80)]);
+        assert_eq!(g.if_absents, vec![(8, 9, 90)]);
     }
 }

@@ -1,11 +1,11 @@
 //! Native backend — the lock-free `HiveTable` behind the `Backend` trait.
 
-use crate::backend::{group_ops, Backend, BatchResult};
+use crate::backend::Backend;
 use crate::core::config::HiveConfig;
 use crate::core::error::Result;
 use crate::native::resize::ResizeEvent;
 use crate::native::table::HiveTable;
-use crate::workload::Op;
+use crate::workload::{Op, OpResult};
 use std::sync::Arc;
 
 /// Backend over the native concurrent table. Holding an `Arc` lets other
@@ -42,40 +42,17 @@ impl NativeBackend {
 }
 
 impl Backend for NativeBackend {
-    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
-        use crate::native::table::InsertOutcome;
-        let (ins, del, luk) = group_ops(ops);
-        let mut res = BatchResult::default();
-        // Forward each op class to the table's bulk fast path: one epoch
-        // pin per class instead of one per op. Incremental migration runs
-        // concurrently with these windows; only a physical reallocation
-        // (capacity-class crossing) waits for the pin to drain.
-        if !ins.is_empty() {
-            let pairs: Vec<(u32, u32)> = ins.iter().map(|&(_, k, v)| (k, v)).collect();
-            // `insert_batch` validates keys up front and never fails
-            // mid-batch: a window that outgrows capacity parks words
-            // pending the next resize epoch (§IV-A step 4) instead of
-            // erroring, and the between-batch resize controller grows the
-            // table. Errors here are therefore pre-mutation and safe to
-            // propagate without retry logic.
-            let outcomes = self.table.insert_batch(&pairs)?;
-            for outcome in outcomes {
-                match outcome {
-                    InsertOutcome::Replaced => res.replaced += 1,
-                    InsertOutcome::Stashed => res.stashed += 1,
-                    _ => res.inserted += 1,
-                }
-            }
-        }
-        if !del.is_empty() {
-            let keys: Vec<u32> = del.iter().map(|&(_, k)| k).collect();
-            res.deletes = self.table.delete_batch(&keys);
-        }
-        if !luk.is_empty() {
-            let keys: Vec<u32> = luk.iter().map(|&(_, k)| k).collect();
-            res.lookups = self.table.lookup_batch(&keys);
-        }
-        Ok(res)
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        // Forward the window to the table's grouped bulk fast path: one
+        // epoch pin per op class instead of one per op. Incremental
+        // migration runs concurrently with these windows; only a
+        // physical reallocation (capacity-class crossing) waits for the
+        // pin to drain. The inserting classes validate keys up front and
+        // never fail mid-batch — a window that outgrows capacity parks
+        // words pending the next resize epoch (§IV-A step 4) instead of
+        // erroring, so errors here are pre-mutation and safe to
+        // propagate without retry logic.
+        self.table.execute_ops(ops)
     }
 
     fn len(&self) -> usize {
@@ -112,12 +89,12 @@ mod tests {
         assert_eq!(b.len(), 1000);
         let keys: Vec<u32> = inserts.iter().map(|o| o.key()).collect();
         let res = b.execute(&bulk_lookup(&keys)).unwrap();
-        assert_eq!(res.lookups.len(), 1000);
-        assert!(res.lookups.iter().all(Option::is_some));
+        assert_eq!(res.len(), 1000);
+        assert!(res.iter().all(|r| matches!(r, OpResult::Value(Some(_)))));
         // delete half
         let dels: Vec<Op> = keys[..500].iter().map(|&key| Op::Delete { key }).collect();
         let res = b.execute(&dels).unwrap();
-        assert!(res.deletes.iter().all(|&d| d));
+        assert!(res.iter().all(|r| *r == OpResult::Deleted(true)));
         assert_eq!(b.len(), 500);
     }
 

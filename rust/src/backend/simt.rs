@@ -1,12 +1,23 @@
 //! SIMT backend — the warp simulator behind the `Backend` trait. Used by
 //! the metrics benches (Fig. 9, lock-rate, transaction counts) through the
 //! same coordinator machinery as the other substrates.
+//!
+//! Typed-plane note: the simulator's insert reports its completion step
+//! but not the displaced value, so the upsert/conditional classes here
+//! are composed as lookup-then-write per op. That charges one extra
+//! modeled probe per RMW-class op — the metrics substrate prioritizes
+//! per-step cost fidelity, and a conditional op *does* pay a probe
+//! before its write on real hardware. Fig. 9 drives `SimHive` directly
+//! and is unaffected.
 
-use crate::backend::{group_ops, Backend, BatchResult};
+use crate::backend::{group_ops, Backend};
 use crate::core::error::Result;
+use crate::core::packed::EMPTY_KEY;
 use crate::native::resize::ResizeEvent;
+use crate::native::stats::Step;
+use crate::native::table::InsertOutcome;
 use crate::simgpu::{SimHive, SimHiveConfig, StepBreakdown};
-use crate::workload::Op;
+use crate::workload::{Op, OpResult};
 
 /// Backend over the simulated warp-cooperative table.
 pub struct SimtBackend {
@@ -35,26 +46,71 @@ impl SimtBackend {
     }
 }
 
+/// Map the simulator's completion step onto the plane's outcome. `None`
+/// (both table and stash full, word parked pending) is reported as
+/// `Stashed` — it is stash-class traffic.
+fn outcome_of(step: Option<Step>) -> InsertOutcome {
+    match step {
+        Some(Step::Replace) => InsertOutcome::Replaced,
+        Some(Step::Claim) => InsertOutcome::Inserted,
+        Some(Step::Evict) => InsertOutcome::Evicted,
+        Some(Step::Stash) | None => InsertOutcome::Stashed,
+    }
+}
+
 impl Backend for SimtBackend {
-    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
-        let (ins, del, luk) = group_ops(ops);
-        let mut res = BatchResult::default();
-        for (_, key, value) in ins {
-            use crate::native::stats::Step;
-            match self.table.insert(key, value) {
-                Some(Step::Replace) => res.replaced += 1,
-                Some(Step::Stash) => res.stashed += 1,
-                Some(_) => res.inserted += 1,
-                None => res.stashed += 1, // pending; counted as stash traffic
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        crate::backend::validate_insert_keys(ops)?;
+        let g = group_ops(ops);
+        let mut out: Vec<Option<OpResult>> = vec![None; ops.len()];
+        for &(i, key, value) in &g.upserts {
+            let old = self.table.lookup(key);
+            let outcome = outcome_of(self.table.insert(key, value));
+            out[i] = Some(OpResult::Upserted { outcome, old });
+        }
+        for &(i, key, value) in &g.if_absents {
+            out[i] = Some(match self.table.lookup(key) {
+                Some(v) => OpResult::InsertedIfAbsent { outcome: None, existing: Some(v) },
+                None => OpResult::InsertedIfAbsent {
+                    outcome: Some(outcome_of(self.table.insert(key, value))),
+                    existing: None,
+                },
+            });
+        }
+        for &(i, key, value) in &g.updates {
+            // sentinel guard: the sim's probe matches EMPTY_KEY against
+            // vacant slots, so never let the sentinel reach it — report
+            // the miss the other substrates report
+            let old = if key == EMPTY_KEY { None } else { self.table.lookup(key) };
+            if old.is_some() {
+                self.table.insert(key, value);
             }
+            out[i] = Some(OpResult::Updated { old });
         }
-        for (_, key) in del {
-            res.deletes.push(self.table.delete(key));
+        for &(i, key, expected, new) in &g.cas {
+            let actual = if key == EMPTY_KEY { None } else { self.table.lookup(key) };
+            let ok = actual == Some(expected);
+            if ok {
+                self.table.insert(key, new);
+            }
+            out[i] = Some(OpResult::Cas { ok, actual });
         }
-        for (_, key) in luk {
-            res.lookups.push(self.table.lookup(key));
+        for &(i, key, delta) in &g.fetch_adds {
+            let old = self.table.lookup(key);
+            let new = old.unwrap_or(0).wrapping_add(delta);
+            let step = self.table.insert(key, new);
+            let outcome = if old.is_none() { Some(outcome_of(step)) } else { None };
+            out[i] = Some(OpResult::FetchAdded { outcome, old });
         }
-        Ok(res)
+        for &(i, key) in &g.deletes {
+            let hit = key != EMPTY_KEY && self.table.delete(key);
+            out[i] = Some(OpResult::Deleted(hit));
+        }
+        for &(i, key) in &g.lookups {
+            let v = if key == EMPTY_KEY { None } else { self.table.lookup(key) };
+            out[i] = Some(OpResult::Value(v));
+        }
+        Ok(out.into_iter().map(|r| r.expect("every op yields exactly one result")).collect())
     }
 
     fn len(&self) -> usize {
@@ -87,7 +143,51 @@ mod tests {
         assert_eq!(b.len(), 800);
         let keys: Vec<u32> = ops.iter().map(|o| o.key()).collect();
         let res = b.execute(&bulk_lookup(&keys)).unwrap();
-        assert!(res.lookups.iter().all(Option::is_some));
+        assert!(res.iter().all(|r| matches!(r, OpResult::Value(Some(_)))));
         assert!(b.breakdown().inserts == 800);
+    }
+
+    #[test]
+    fn sim_backend_sentinel_keys_miss_all_classes() {
+        // the sim's probe matches EMPTY_KEY against vacant slots, so the
+        // backend must short-circuit sentinels like the other substrates
+        let mut b = SimtBackend::new(SimHiveConfig { n_buckets: 16, ..Default::default() });
+        let res = b
+            .execute(&[
+                Op::Update { key: EMPTY_KEY, value: 1 },
+                Op::Cas { key: EMPTY_KEY, expected: 0, new: 1 },
+                Op::Lookup { key: EMPTY_KEY },
+                Op::Delete { key: EMPTY_KEY },
+            ])
+            .unwrap();
+        assert_eq!(res[0], OpResult::Updated { old: None });
+        assert_eq!(res[1], OpResult::Cas { ok: false, actual: None });
+        assert_eq!(res[2], OpResult::Value(None));
+        assert_eq!(res[3], OpResult::Deleted(false));
+        assert_eq!(b.len(), 0, "a sentinel op mutated the simulated table");
+        assert!(b.execute(&[Op::FetchAdd { key: EMPTY_KEY, delta: 1 }]).is_err());
+    }
+
+    #[test]
+    fn sim_backend_rmw_classes_compose() {
+        let mut b = SimtBackend::new(SimHiveConfig { n_buckets: 64, ..Default::default() });
+        let res = b
+            .execute(&[
+                Op::Upsert { key: 1, value: 10 },
+                Op::FetchAdd { key: 1, delta: 5 },
+                Op::Cas { key: 1, expected: 15, new: 20 },
+                Op::Update { key: 2, value: 9 },
+                Op::InsertIfAbsent { key: 1, value: 99 },
+                Op::Lookup { key: 1 },
+            ])
+            .unwrap();
+        // class order: upsert(1→10) → if_absent(sees 10) → update(2 absent)
+        // → cas(sees 10, misses 15) → fetch_add(10+5) → lookup(15)
+        assert!(matches!(res[0], OpResult::Upserted { old: None, .. }));
+        assert_eq!(res[1], OpResult::FetchAdded { outcome: None, old: Some(10) });
+        assert_eq!(res[2], OpResult::Cas { ok: false, actual: Some(10) });
+        assert_eq!(res[3], OpResult::Updated { old: None });
+        assert_eq!(res[4], OpResult::InsertedIfAbsent { outcome: None, existing: Some(10) });
+        assert_eq!(res[5], OpResult::Value(Some(15)));
     }
 }

@@ -1,11 +1,25 @@
 //! XLA backend — bulk operations through the AOT artifacts (the paper's
 //! L1/L2 path, PJRT-executed, Python-free).
+//!
+//! The HLO programs expose the three bulk primitives (insert / lookup /
+//! delete); the typed plane's conditional and RMW classes are *composed*
+//! from them here: each class does one bulk lookup for the current
+//! values, folds the class's ops sequentially in host code (so
+//! duplicate keys inside one window chain correctly), and ships the
+//! per-key final values as one bulk insert. The worker owns its shard
+//! exclusively, so the composition is exact window-level linearization.
+//! Placement outcomes are coarse on this substrate — `Replaced` when the
+//! key existed, `Inserted` otherwise (the HLO report has no per-op step
+//! attribution).
 
-use crate::backend::{group_ops, Backend, BatchResult};
-use crate::core::error::Result;
+use crate::backend::{group_ops, Backend};
+use crate::core::error::{HiveError, Result};
+use crate::core::packed::EMPTY_KEY;
 use crate::native::resize::ResizeEvent;
+use crate::native::table::InsertOutcome;
 use crate::runtime::{Runtime, XlaTable};
-use crate::workload::Op;
+use crate::workload::{Op, OpResult};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Backend over an [`XlaTable`].
@@ -33,43 +47,156 @@ impl XlaBackend {
     pub fn table_mut(&mut self) -> &mut XlaTable {
         &mut self.table
     }
+
+    /// Bulk insert with the grow-and-retry loop: a window can outgrow
+    /// capacity + stash between resize checks, so grow a full round and
+    /// retry (re-running a partially applied chunk is safe — replays
+    /// become replaces).
+    fn insert_with_grow(&mut self, keys: &[u32], vals: &[u32]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
+        loop {
+            match self.table.insert_batch(keys, vals) {
+                Ok(_) => return Ok(()),
+                Err(HiveError::TableFull) => {
+                    let logical = self.table.logical_buckets();
+                    if self.table.grow_buckets(logical)? == 0 {
+                        return Err(HiveError::TableFull);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Current values of the non-sentinel keys among `keys`, re-aligned
+    /// to `keys` (sentinel positions read as absent without touching the
+    /// HLO path).
+    fn current_values(&mut self, keys: &[u32]) -> Result<Vec<Option<u32>>> {
+        let real: Vec<u32> = keys.iter().copied().filter(|&k| k != EMPTY_KEY).collect();
+        let found =
+            if real.is_empty() { Vec::new() } else { self.table.lookup_batch(&real)? };
+        let mut found = found.into_iter();
+        Ok(keys
+            .iter()
+            .map(|&k| if k == EMPTY_KEY { None } else { found.next().flatten() })
+            .collect())
+    }
+}
+
+/// Coarse outcome attribution for a substrate without per-op steps.
+fn coarse_outcome(old: Option<u32>) -> InsertOutcome {
+    if old.is_some() {
+        InsertOutcome::Replaced
+    } else {
+        InsertOutcome::Inserted
+    }
 }
 
 impl Backend for XlaBackend {
-    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
-        let (ins, del, luk) = group_ops(ops);
-        let mut res = BatchResult::default();
-        if !ins.is_empty() {
-            let keys: Vec<u32> = ins.iter().map(|&(_, k, _)| k).collect();
-            let vals: Vec<u32> = ins.iter().map(|&(_, _, v)| v).collect();
-            // A window can outgrow capacity + stash between resize checks:
-            // grow a full round and retry (re-running a partially applied
-            // chunk is safe — replays become replaces).
-            let report = loop {
-                match self.table.insert_batch(&keys, &vals) {
-                    Ok(r) => break r,
-                    Err(crate::core::error::HiveError::TableFull) => {
-                        let logical = self.table.logical_buckets();
-                        if self.table.grow_buckets(logical)? == 0 {
-                            return Err(crate::core::error::HiveError::TableFull);
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        crate::backend::validate_insert_keys(ops)?;
+        let g = group_ops(ops);
+        let mut out: Vec<Option<OpResult>> = vec![None; ops.len()];
+
+        if !g.upserts.is_empty() {
+            let keys: Vec<u32> = g.upserts.iter().map(|&(_, k, _)| k).collect();
+            let olds = self.current_values(&keys)?;
+            let mut overlay: HashMap<u32, u32> = HashMap::new();
+            for (&(i, key, value), old0) in g.upserts.iter().zip(&olds) {
+                let old = overlay.get(&key).copied().or(*old0);
+                out[i] = Some(OpResult::Upserted { outcome: coarse_outcome(old), old });
+                overlay.insert(key, value);
+            }
+            let ks: Vec<u32> = overlay.keys().copied().collect();
+            let vs: Vec<u32> = ks.iter().map(|k| overlay[k]).collect();
+            self.insert_with_grow(&ks, &vs)?;
+        }
+
+        if !g.if_absents.is_empty() {
+            let keys: Vec<u32> = g.if_absents.iter().map(|&(_, k, _)| k).collect();
+            let olds = self.current_values(&keys)?;
+            let mut overlay: HashMap<u32, u32> = HashMap::new();
+            for (&(i, key, value), old0) in g.if_absents.iter().zip(&olds) {
+                let existing = overlay.get(&key).copied().or(*old0);
+                out[i] = Some(match existing {
+                    Some(_) => OpResult::InsertedIfAbsent { outcome: None, existing },
+                    None => {
+                        overlay.insert(key, value);
+                        OpResult::InsertedIfAbsent {
+                            outcome: Some(InsertOutcome::Inserted),
+                            existing: None,
                         }
                     }
-                    Err(e) => return Err(e),
+                });
+            }
+            let ks: Vec<u32> = overlay.keys().copied().collect();
+            let vs: Vec<u32> = ks.iter().map(|k| overlay[k]).collect();
+            self.insert_with_grow(&ks, &vs)?;
+        }
+
+        if !g.updates.is_empty() {
+            let keys: Vec<u32> = g.updates.iter().map(|&(_, k, _)| k).collect();
+            let olds = self.current_values(&keys)?;
+            let mut overlay: HashMap<u32, u32> = HashMap::new();
+            for (&(i, key, value), old0) in g.updates.iter().zip(&olds) {
+                let old = overlay.get(&key).copied().or(*old0);
+                if old.is_some() {
+                    overlay.insert(key, value);
                 }
-            };
-            res.inserted = report.inserted;
-            res.replaced = report.replaced;
-            res.stashed = report.stashed;
+                out[i] = Some(OpResult::Updated { old });
+            }
+            let ks: Vec<u32> = overlay.keys().copied().collect();
+            let vs: Vec<u32> = ks.iter().map(|k| overlay[k]).collect();
+            self.insert_with_grow(&ks, &vs)?;
         }
-        if !del.is_empty() {
-            let keys: Vec<u32> = del.iter().map(|&(_, k)| k).collect();
-            res.deletes = self.table.delete_batch(&keys)?;
+
+        if !g.cas.is_empty() {
+            let keys: Vec<u32> = g.cas.iter().map(|&(_, k, _, _)| k).collect();
+            let olds = self.current_values(&keys)?;
+            let mut overlay: HashMap<u32, u32> = HashMap::new();
+            for (&(i, key, expected, new), old0) in g.cas.iter().zip(&olds) {
+                let actual = overlay.get(&key).copied().or(*old0);
+                let ok = actual == Some(expected);
+                if ok {
+                    overlay.insert(key, new);
+                }
+                out[i] = Some(OpResult::Cas { ok, actual });
+            }
+            let ks: Vec<u32> = overlay.keys().copied().collect();
+            let vs: Vec<u32> = ks.iter().map(|k| overlay[k]).collect();
+            self.insert_with_grow(&ks, &vs)?;
         }
-        if !luk.is_empty() {
-            let keys: Vec<u32> = luk.iter().map(|&(_, k)| k).collect();
-            res.lookups = self.table.lookup_batch(&keys)?;
+
+        if !g.fetch_adds.is_empty() {
+            let keys: Vec<u32> = g.fetch_adds.iter().map(|&(_, k, _)| k).collect();
+            let olds = self.current_values(&keys)?;
+            let mut overlay: HashMap<u32, u32> = HashMap::new();
+            for (&(i, key, delta), old0) in g.fetch_adds.iter().zip(&olds) {
+                let old = overlay.get(&key).copied().or(*old0);
+                overlay.insert(key, old.unwrap_or(0).wrapping_add(delta));
+                let outcome = if old.is_none() { Some(InsertOutcome::Inserted) } else { None };
+                out[i] = Some(OpResult::FetchAdded { outcome, old });
+            }
+            let ks: Vec<u32> = overlay.keys().copied().collect();
+            let vs: Vec<u32> = ks.iter().map(|k| overlay[k]).collect();
+            self.insert_with_grow(&ks, &vs)?;
         }
-        Ok(res)
+
+        if !g.deletes.is_empty() {
+            let keys: Vec<u32> = g.deletes.iter().map(|&(_, k)| k).collect();
+            for (&(i, _), hit) in g.deletes.iter().zip(self.table.delete_batch(&keys)?) {
+                out[i] = Some(OpResult::Deleted(hit));
+            }
+        }
+        if !g.lookups.is_empty() {
+            let keys: Vec<u32> = g.lookups.iter().map(|&(_, k)| k).collect();
+            for (&(i, _), v) in g.lookups.iter().zip(self.table.lookup_batch(&keys)?) {
+                out[i] = Some(OpResult::Value(v));
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every op yields exactly one result")).collect())
     }
 
     fn len(&self) -> usize {

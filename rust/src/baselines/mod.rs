@@ -15,6 +15,7 @@ pub mod stdshard;
 
 use crate::core::error::{HiveError, Result};
 use crate::native::table::HiveTable;
+use crate::workload::{Op, OpResult};
 
 pub use dycuckoo::DyCuckooLike;
 pub use slab::SlabHashLike;
@@ -88,6 +89,120 @@ pub trait ConcurrentMap: Send + Sync {
     fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
         keys.iter().map(|&key| self.delete(key)).collect()
     }
+
+    // ---- Typed conditional / RMW operations ---------------------------
+    //
+    // The operation classes the typed plane adds (WarpSpeed's "limited
+    // operation functionality" critique). The default impls compose
+    // lookup + insert, which is linearizable only when same-key writers
+    // are externally serialized (sequential differential tests, disjoint
+    // key ranges); tables with real atomicity override them (HiveTable's
+    // single-CAS cores, ShardedStd under its shard lock) so the fig12
+    // comparisons measure atomic RMW against atomic RMW.
+
+    /// Insert or replace, returning the previous value (`None` ⇒ fresh).
+    fn upsert(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        let old = self.lookup(key);
+        self.insert(key, value)?;
+        Ok(old)
+    }
+
+    /// Insert only if absent; returns the existing value when present
+    /// (`None` ⇒ this call inserted).
+    fn insert_if_absent(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        match self.lookup(key) {
+            Some(v) => Ok(Some(v)),
+            None => {
+                self.insert(key, value)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Replace only if present; returns the previous value (`None` ⇒
+    /// absent, nothing written).
+    fn update(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        match self.lookup(key) {
+            Some(old) => {
+                self.insert(key, value)?;
+                Ok(Some(old))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Compare-and-swap: write `new` iff the current value equals
+    /// `expected`. Returns `(ok, actual)`.
+    fn cas(&self, key: u32, expected: u32, new: u32) -> Result<(bool, Option<u32>)> {
+        match self.lookup(key) {
+            Some(actual) if actual == expected => {
+                self.insert(key, new)?;
+                Ok((true, Some(actual)))
+            }
+            actual => Ok((false, actual)),
+        }
+    }
+
+    /// Add `delta` (wrapping) to the value, creating the key at `delta`
+    /// when absent. Returns the pre-add value (`None` ⇒ created).
+    fn fetch_add(&self, key: u32, delta: u32) -> Result<Option<u32>> {
+        match self.lookup(key) {
+            Some(old) => {
+                self.insert(key, old.wrapping_add(delta))?;
+                Ok(Some(old))
+            }
+            None => {
+                self.insert(key, delta)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Execute a heterogeneous window of [`Op`]s, one typed [`OpResult`]
+    /// per op in submission order. The default loops the single-op
+    /// methods (strictly sequential — no grouping), so every baseline is
+    /// drivable through the one batch interface; tables with a bulk fast
+    /// path override it (HiveTable → `native::batch::execute_ops`, which
+    /// groups by class).
+    fn execute_ops(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        use crate::native::table::InsertOutcome;
+        ops.iter()
+            .map(|op| {
+                Ok(match *op {
+                    Op::Insert { key, value } | Op::Upsert { key, value } => {
+                        let old = self.upsert(key, value)?;
+                        let outcome = if old.is_some() {
+                            InsertOutcome::Replaced
+                        } else {
+                            InsertOutcome::Inserted
+                        };
+                        OpResult::Upserted { outcome, old }
+                    }
+                    Op::InsertIfAbsent { key, value } => {
+                        let existing = self.insert_if_absent(key, value)?;
+                        let outcome =
+                            if existing.is_none() { Some(InsertOutcome::Inserted) } else { None };
+                        OpResult::InsertedIfAbsent { outcome, existing }
+                    }
+                    Op::Update { key, value } => {
+                        OpResult::Updated { old: self.update(key, value)? }
+                    }
+                    Op::Cas { key, expected, new } => {
+                        let (ok, actual) = self.cas(key, expected, new)?;
+                        OpResult::Cas { ok, actual }
+                    }
+                    Op::FetchAdd { key, delta } => {
+                        let old = self.fetch_add(key, delta)?;
+                        let outcome =
+                            if old.is_none() { Some(InsertOutcome::Inserted) } else { None };
+                        OpResult::FetchAdded { outcome, old }
+                    }
+                    Op::Lookup { key } => OpResult::Value(self.lookup(key)),
+                    Op::Delete { key } => OpResult::Deleted(self.delete(key)),
+                })
+            })
+            .collect()
+    }
 }
 
 impl ConcurrentMap for HiveTable {
@@ -119,6 +234,26 @@ impl ConcurrentMap for HiveTable {
     }
     fn delete_batch(&self, keys: &[u32]) -> Vec<bool> {
         HiveTable::delete_batch(self, keys)
+    }
+    // Typed plane: forward to the lock-free single-CAS cores (exact
+    // under concurrency, unlike the trait's composed defaults).
+    fn upsert(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        HiveTable::upsert(self, key, value).map(|(_, old)| old)
+    }
+    fn insert_if_absent(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        HiveTable::insert_if_absent(self, key, value).map(|(_, existing)| existing)
+    }
+    fn update(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        Ok(HiveTable::update(self, key, value))
+    }
+    fn cas(&self, key: u32, expected: u32, new: u32) -> Result<(bool, Option<u32>)> {
+        Ok(HiveTable::cas(self, key, expected, new))
+    }
+    fn fetch_add(&self, key: u32, delta: u32) -> Result<Option<u32>> {
+        HiveTable::fetch_add(self, key, delta).map(|(_, old)| old)
+    }
+    fn execute_ops(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        HiveTable::execute_ops(self, ops)
     }
 }
 
@@ -180,6 +315,42 @@ pub(crate) mod suite {
             assert_eq!(map.len(), 0);
             assert!(map.lookup_batch(&keys).iter().all(Option::is_none));
         }
+    }
+
+    /// Exercise the typed conditional/RMW methods (defaults or
+    /// overrides) sequentially on a fresh key range — every map must
+    /// agree with these exact semantics.
+    pub(crate) fn typed_suite(map: &dyn ConcurrentMap) {
+        let k = 2_000_000u32;
+        assert_eq!(map.upsert(k, 1).unwrap(), None, "{} fresh upsert", map.name());
+        assert_eq!(map.upsert(k, 2).unwrap(), Some(1), "{} upsert old", map.name());
+        assert_eq!(map.insert_if_absent(k, 9).unwrap(), Some(2), "{} if-absent hit", map.name());
+        assert_eq!(map.lookup(k), Some(2), "{} if-absent overwrote", map.name());
+        assert_eq!(map.insert_if_absent(k + 1, 9).unwrap(), None, "{} if-absent", map.name());
+        assert_eq!(map.update(k + 2, 5).unwrap(), None, "{} update absent", map.name());
+        assert_eq!(map.lookup(k + 2), None, "{} update created a key", map.name());
+        assert_eq!(map.update(k, 5).unwrap(), Some(2), "{} update old", map.name());
+        assert_eq!(map.cas(k, 4, 6).unwrap(), (false, Some(5)), "{} cas miss", map.name());
+        assert_eq!(map.cas(k, 5, 6).unwrap(), (true, Some(5)), "{} cas hit", map.name());
+        assert_eq!(map.cas(k + 2, 0, 1).unwrap(), (false, None), "{} cas absent", map.name());
+        assert_eq!(map.fetch_add(k, 4).unwrap(), Some(6), "{} fetch_add old", map.name());
+        assert_eq!(map.lookup(k), Some(10), "{} fetch_add sum", map.name());
+        assert_eq!(map.fetch_add(k + 3, 7).unwrap(), None, "{} fetch_add create", map.name());
+        assert_eq!(map.lookup(k + 3), Some(7), "{} fetch_add seed", map.name());
+        // the typed batch plane agrees with the singles
+        let res = map
+            .execute_ops(&[
+                Op::Lookup { key: k },
+                Op::Cas { key: k, expected: 10, new: 11 },
+                Op::Delete { key: k + 3 },
+            ])
+            .unwrap();
+        assert_eq!(res[1], OpResult::Cas { ok: true, actual: Some(10) }, "{}", map.name());
+        assert_eq!(res[2], OpResult::Deleted(true), "{}", map.name());
+        assert_eq!(map.lookup(k), Some(11), "{} batch cas not applied", map.name());
+        // cleanup so callers can reason about len
+        map.delete(k);
+        map.delete(k + 1);
     }
 
     /// A map whose insert rejects odd keys — exercises the default batch
@@ -252,5 +423,45 @@ pub(crate) mod suite {
         use crate::core::config::HiveConfig;
         let t = HiveTable::new(HiveConfig::default().with_buckets(64)).unwrap();
         batch_suite(&t, 1000);
+    }
+
+    #[test]
+    fn hive_satisfies_typed_suite() {
+        use crate::core::config::HiveConfig;
+        let t = HiveTable::new(HiveConfig::default().with_buckets(64)).unwrap();
+        typed_suite(&t);
+    }
+
+    #[test]
+    fn default_typed_impls_satisfy_typed_suite() {
+        // RejectsOdd only implements the core five methods, so this
+        // drives the trait's composed defaults (even keys only).
+        struct PlainStd(std::sync::Mutex<std::collections::HashMap<u32, u32>>);
+        impl ConcurrentMap for PlainStd {
+            fn insert(&self, key: u32, value: u32) -> Result<()> {
+                if key == crate::core::packed::EMPTY_KEY {
+                    return Err(HiveError::InvalidKey(key));
+                }
+                self.0.lock().unwrap().insert(key, value);
+                Ok(())
+            }
+            fn lookup(&self, key: u32) -> Option<u32> {
+                self.0.lock().unwrap().get(&key).copied()
+            }
+            fn delete(&self, key: u32) -> bool {
+                self.0.lock().unwrap().remove(&key).is_some()
+            }
+            fn len(&self) -> usize {
+                self.0.lock().unwrap().len()
+            }
+            fn name(&self) -> &'static str {
+                "PlainStd"
+            }
+            fn max_load_factor(&self) -> f64 {
+                1.0
+            }
+        }
+        let m = PlainStd(std::sync::Mutex::new(std::collections::HashMap::new()));
+        typed_suite(&m);
     }
 }

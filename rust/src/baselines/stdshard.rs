@@ -74,6 +74,74 @@ impl super::ConcurrentMap for ShardedStd {
     fn max_load_factor(&self) -> f64 {
         1.0 // HashMap manages its own load factor
     }
+
+    // Typed plane: the trait's composed defaults (lookup then insert)
+    // lose updates under same-key races; one shard-lock hold makes each
+    // op atomic, so fig12 compares atomic RMW against atomic RMW.
+    fn upsert(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let old = self.shard(key).lock().unwrap().insert(key, value);
+        if old.is_none() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(old)
+    }
+
+    fn insert_if_absent(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get(&key) {
+            Some(&v) => Ok(Some(v)),
+            None => {
+                shard.insert(key, value);
+                self.count.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    fn update(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get_mut(&key) {
+            Some(v) => Ok(Some(std::mem::replace(v, value))),
+            None => Ok(None),
+        }
+    }
+
+    fn cas(&self, key: u32, expected: u32, new: u32) -> Result<(bool, Option<u32>)> {
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get_mut(&key) {
+            Some(v) if *v == expected => {
+                let actual = std::mem::replace(v, new);
+                Ok((true, Some(actual)))
+            }
+            Some(v) => Ok((false, Some(*v))),
+            None => Ok((false, None)),
+        }
+    }
+
+    fn fetch_add(&self, key: u32, delta: u32) -> Result<Option<u32>> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get_mut(&key) {
+            Some(v) => {
+                let old = *v;
+                *v = old.wrapping_add(delta);
+                Ok(Some(old))
+            }
+            None => {
+                shard.insert(key, delta);
+                self.count.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +162,33 @@ mod tests {
         // batched benches apples-to-apples across all baselines
         let t = ShardedStd::for_capacity(4000);
         batch_suite(&t, 2000);
+    }
+
+    #[test]
+    fn satisfies_typed_suite() {
+        let t = ShardedStd::for_capacity(64);
+        crate::baselines::suite::typed_suite(&t);
+    }
+
+    #[test]
+    fn concurrent_fetch_add_is_exact() {
+        use std::sync::Arc;
+        let t = Arc::new(ShardedStd::new(16));
+        t.insert(1, 0).unwrap();
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        crate::baselines::ConcurrentMap::fetch_add(&*t, 1, 1).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.lookup(1), Some(40_000), "shard-lock fetch_add lost updates");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!   client threads            Handle (clone-able, thread-safe)
 //!   ──────────────            route(key) = murmur(key) % workers
 //!   Pipeline: window of N     │
-//!   completion tickets        │   blocking insert/lookup/delete =
-//!   (submit ⇢ poll/wait)      │   a window-of-1 pipeline
+//!   completion tickets        │   blocking typed ops (insert/lookup/
+//!   (submit ⇢ poll/wait,      │   delete/upsert/update/cas/fetch_add)
+//!   Op in ⇒ OpResult out)     │   = a window-of-1 pipeline
 //!              └──────────────┤
 //!     ┌──────────┬────────────┴─┐
 //!     ▼          ▼              ▼
@@ -36,13 +37,19 @@
 //! thread keeps up to N ops in flight via [`Pipeline`] completion
 //! tickets instead of paying a blocking round-trip per op, and bulk
 //! `Handle::submit` windows scatter to all shards up front and gather in
-//! arrival order. Within a dispatch window the batcher groups by op type
-//! (legal for concurrent requests — see `backend`). Between the batcher
+//! arrival order. Every request plane is *typed* end-to-end: a
+//! [`crate::workload::Op`] goes in, its [`crate::workload::OpResult`]
+//! comes back — previous values, CAS verdicts, and the four-step
+//! `InsertOutcome` attribution included, in submission order. Within a
+//! dispatch window the backend groups by op class (write classes before
+//! lookups — legal for concurrent requests; see `backend`). Between the batcher
 //! and the backend sits a per-worker hot-key cache
 //! ([`cache::HotKeyCache`]): under skewed traffic the hot head of the
 //! key distribution is served without an epoch pin or bucket probe, and
-//! coherence is kept by per-key invalidation on every write plus
-//! wholesale validation against the backend's coherence stamp
+//! coherence is kept by per-key invalidation on every write class
+//! (including `Update`/`Cas`/`FetchAdd` — applied CAS/Update results
+//! repopulate the cache when they are the window's only write to the
+//! key) plus wholesale validation against the backend's coherence stamp
 //! (reallocation epoch + stash-drain epoch — see `cache` module docs).
 //! The resize controller runs the §IV-C policy between batches,
 //! amortized across the service's lifetime — no global pauses.
@@ -61,7 +68,7 @@ pub mod stats;
 pub use batcher::{BatchPolicy, Batcher};
 pub use cache::HotKeyCache;
 pub use pipeline::{Pipeline, Ticket};
-pub use service::{start_native, Coordinator, CoordinatorConfig, Handle, SingleReply};
+pub use service::{start_native, Coordinator, CoordinatorConfig, Handle};
 pub use stats::ServiceStats;
 
 /// Alias re-exported for the resize controller's event type.

@@ -34,9 +34,9 @@
 //! `backend`). A caller that needs read-your-write ordering between two
 //! ops must wait the first ticket before submitting the second.
 
-use crate::coordinator::service::{Handle, SingleReply};
+use crate::coordinator::service::Handle;
 use crate::core::error::{HiveError, Result};
-use crate::workload::Op;
+use crate::workload::{Op, OpResult};
 use std::collections::{HashSet, VecDeque};
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::{Arc, Condvar, Mutex};
@@ -59,7 +59,7 @@ enum SlotState {
         abandoned: bool,
     },
     /// Result published, waiting for the ticket to claim it.
-    Done(Result<SingleReply>),
+    Done(Result<OpResult>),
 }
 
 struct Slot {
@@ -147,7 +147,7 @@ impl Ticket {
     }
 
     /// Claim the result if it is ready; otherwise hand the ticket back.
-    pub fn try_wait(self) -> std::result::Result<Result<SingleReply>, Ticket> {
+    pub fn try_wait(self) -> std::result::Result<Result<OpResult>, Ticket> {
         if self.is_done() {
             Ok(self.wait())
         } else {
@@ -159,7 +159,7 @@ impl Ticket {
     /// slot. Returns `Err(HiveError::Shutdown)` — never hangs — when
     /// the service shut down or the owning worker died with this op in
     /// flight.
-    pub fn wait(mut self) -> Result<SingleReply> {
+    pub fn wait(mut self) -> Result<OpResult> {
         let mut st = self.window.state.lock().unwrap();
         loop {
             if st.slots[self.idx].seq != self.seq {
@@ -228,14 +228,14 @@ pub(crate) struct CompletionSlot {
 impl CompletionSlot {
     /// Publish and wake the window's waiters immediately.
     #[cfg(test)]
-    pub(crate) fn complete(mut self, result: Result<SingleReply>) {
+    pub(crate) fn complete(mut self, result: Result<OpResult>) {
         self.publish(result);
         self.window.completed.notify_all();
     }
 
     /// Publish without waking waiters; callers batch one notify per
     /// window via [`publish_batch`].
-    fn publish(&mut self, result: Result<SingleReply>) {
+    fn publish(&mut self, result: Result<OpResult>) {
         if self.fired {
             return;
         }
@@ -273,7 +273,7 @@ impl Drop for CompletionSlot {
 /// Publish a whole dispatch window's results with one wakeup per
 /// distinct client window — the batched reply path that replaces one
 /// channel wakeup per op.
-pub(crate) fn publish_batch(entries: Vec<(CompletionSlot, Result<SingleReply>)>) {
+pub(crate) fn publish_batch(entries: Vec<(CompletionSlot, Result<OpResult>)>) {
     // Dedup by window identity in O(n): blocking-API waiters each own a
     // one-shot window, so a dispatch full of singles has as many
     // windows as ops. The clone held in `windows` keeps every inserted
@@ -352,7 +352,8 @@ impl Pipeline {
         Ok(ticket)
     }
 
-    /// Pipelined insert/replace; resolve via the ticket.
+    /// Pipelined insert/replace; resolve via the ticket
+    /// ([`OpResult::Upserted`]).
     pub fn insert(&self, key: u32, value: u32) -> Result<Ticket> {
         self.submit(Op::Insert { key, value })
     }
@@ -365,6 +366,33 @@ impl Pipeline {
     /// Pipelined delete; resolve via the ticket.
     pub fn delete(&self, key: u32) -> Result<Ticket> {
         self.submit(Op::Delete { key })
+    }
+
+    /// Pipelined upsert; the ticket's [`OpResult::Upserted`] carries the
+    /// previous value.
+    pub fn upsert(&self, key: u32, value: u32) -> Result<Ticket> {
+        self.submit(Op::Upsert { key, value })
+    }
+
+    /// Pipelined insert-if-absent; resolves to
+    /// [`OpResult::InsertedIfAbsent`].
+    pub fn insert_if_absent(&self, key: u32, value: u32) -> Result<Ticket> {
+        self.submit(Op::InsertIfAbsent { key, value })
+    }
+
+    /// Pipelined write-if-present; resolves to [`OpResult::Updated`].
+    pub fn update(&self, key: u32, value: u32) -> Result<Ticket> {
+        self.submit(Op::Update { key, value })
+    }
+
+    /// Pipelined compare-and-swap; resolves to [`OpResult::Cas`].
+    pub fn cas(&self, key: u32, expected: u32, new: u32) -> Result<Ticket> {
+        self.submit(Op::Cas { key, expected, new })
+    }
+
+    /// Pipelined fetch-add; resolves to [`OpResult::FetchAdded`].
+    pub fn fetch_add(&self, key: u32, delta: u32) -> Result<Ticket> {
+        self.submit(Op::FetchAdd { key, delta })
     }
 }
 
@@ -516,8 +544,8 @@ mod tests {
     fn one_shot_completes_and_unblocks_wait() {
         let (ticket, done) = one_shot();
         assert!(!ticket.is_done());
-        let t = std::thread::spawn(move || done.complete(Ok(SingleReply::Value(Some(7)))));
-        assert_eq!(ticket.wait().unwrap(), SingleReply::Value(Some(7)));
+        let t = std::thread::spawn(move || done.complete(Ok(OpResult::Value(Some(7)))));
+        assert_eq!(ticket.wait().unwrap(), OpResult::Value(Some(7)));
         t.join().unwrap();
     }
 
@@ -535,10 +563,10 @@ mod tests {
             Err(t) => t,
             Ok(_) => panic!("result claimed before completion"),
         };
-        done.complete(Ok(SingleReply::Deleted(true)));
+        done.complete(Ok(OpResult::Deleted(true)));
         assert!(ticket.is_done());
         match ticket.try_wait() {
-            Ok(res) => assert_eq!(res.unwrap(), SingleReply::Deleted(true)),
+            Ok(res) => assert_eq!(res.unwrap(), OpResult::Deleted(true)),
             Err(_) => panic!("done ticket not claimable"),
         }
     }
@@ -553,15 +581,15 @@ mod tests {
         let w2 = Arc::clone(&window);
         let reserver = std::thread::spawn(move || {
             let (t3, d3) = Window::reserve(&w2);
-            d3.complete(Ok(SingleReply::Inserted(true)));
+            d3.complete(Ok(OpResult::Deleted(true)));
             t3.wait().unwrap()
         });
         std::thread::sleep(Duration::from_millis(20));
         assert!(!reserver.is_finished(), "reserve must block at full depth");
-        d1.complete(Ok(SingleReply::Inserted(true)));
+        d1.complete(Ok(OpResult::Deleted(true)));
         t1.wait().unwrap(); // vacates a slot → reserver proceeds
-        assert_eq!(reserver.join().unwrap(), SingleReply::Inserted(true));
-        d2.complete(Ok(SingleReply::Inserted(true)));
+        assert_eq!(reserver.join().unwrap(), OpResult::Deleted(true));
+        d2.complete(Ok(OpResult::Deleted(true)));
         t2.wait().unwrap();
         assert_eq!(window.state.lock().unwrap().inflight, 0);
     }
@@ -571,10 +599,10 @@ mod tests {
         let window = Window::with_depth(1);
         let (t1, d1) = Window::reserve(&window);
         drop(t1); // caller walked away
-        d1.complete(Ok(SingleReply::Value(None))); // completion frees the slot
+        d1.complete(Ok(OpResult::Value(None))); // completion frees the slot
         let (t2, d2) = Window::reserve(&window); // would deadlock if the slot leaked
-        d2.complete(Ok(SingleReply::Value(Some(1))));
-        assert_eq!(t2.wait().unwrap(), SingleReply::Value(Some(1)));
+        d2.complete(Ok(OpResult::Value(Some(1))));
+        assert_eq!(t2.wait().unwrap(), OpResult::Value(Some(1)));
     }
 
     #[test]
@@ -585,13 +613,13 @@ mod tests {
         let (ta2, da2) = Window::reserve(&wa);
         let (tb1, db1) = Window::reserve(&wb);
         publish_batch(vec![
-            (da1, Ok(SingleReply::Value(Some(1)))),
-            (da2, Ok(SingleReply::Value(Some(2)))),
-            (db1, Ok(SingleReply::Value(Some(3)))),
+            (da1, Ok(OpResult::Value(Some(1)))),
+            (da2, Ok(OpResult::Value(Some(2)))),
+            (db1, Ok(OpResult::Value(Some(3)))),
         ]);
-        assert_eq!(ta1.wait().unwrap(), SingleReply::Value(Some(1)));
-        assert_eq!(ta2.wait().unwrap(), SingleReply::Value(Some(2)));
-        assert_eq!(tb1.wait().unwrap(), SingleReply::Value(Some(3)));
+        assert_eq!(ta1.wait().unwrap(), OpResult::Value(Some(1)));
+        assert_eq!(ta2.wait().unwrap(), OpResult::Value(Some(2)));
+        assert_eq!(tb1.wait().unwrap(), OpResult::Value(Some(3)));
     }
 
     #[test]

@@ -7,8 +7,16 @@
 //! ticket/completion slots — one condvar publish per dispatch window
 //! instead of one channel wakeup per op. The blocking `Handle` API is a
 //! window-of-1 pipeline over the same plane.
+//!
+//! Replies are typed end-to-end: every request — blocking single,
+//! pipelined ticket, or bulk shard — resolves to the [`OpResult`] its
+//! [`Op`] produced, in submission order. The old reply enum collapsed
+//! insert outcomes to a `bool` and segregated results by type; the typed
+//! plane carries previous values, CAS verdicts and the full four-step
+//! [`InsertOutcome`] attribution all the way to the client (and into
+//! [`ServiceStats`]).
 
-use crate::backend::{Backend, BatchResult};
+use crate::backend::Backend;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::cache::HotKeyCache;
 use crate::coordinator::pipeline::{self, CompletionSlot, Pipeline, RingRx, RingTx};
@@ -16,8 +24,9 @@ use crate::coordinator::stats::ServiceStats;
 use crate::core::error::{HiveError, Result};
 use crate::hash::HashKind;
 use crate::native::resize::ResizeEvent;
-use crate::workload::Op;
-use std::collections::HashSet;
+use crate::native::table::InsertOutcome;
+use crate::workload::{Op, OpResult};
+use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -58,26 +67,14 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// A reply to one single-key operation.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum SingleReply {
-    /// Insert outcome: true ⇒ newly inserted, false ⇒ replaced.
-    Inserted(bool),
-    /// Lookup result.
-    Value(Option<u32>),
-    /// Delete hit flag.
-    Deleted(bool),
-    /// Operation failed (e.g. table + stash full).
-    Failed(String),
-}
-
 enum Request {
-    /// One single-key op; completes through its ticket's slot when the
-    /// dispatch window it joins executes.
+    /// One single-key op; completes through its ticket's slot (with the
+    /// op's typed [`OpResult`]) when the dispatch window it joins
+    /// executes.
     Single { op: Op, enqueued: Instant, done: CompletionSlot },
     /// One pre-sharded bulk window; the reply is tagged with the worker
     /// index so the submitter can gather shards in arrival order.
-    Bulk { ops: Vec<Op>, enqueued: Instant, reply: Sender<(usize, Result<BatchResult>)> },
+    Bulk { ops: Vec<Op>, enqueued: Instant, reply: Sender<(usize, Result<Vec<OpResult>>)> },
     Stats { reply: SyncSender<ServiceStats> },
     Flush { reply: SyncSender<()> },
     Shutdown,
@@ -184,46 +181,93 @@ impl Handle {
     }
 
     /// Blocking single op — a window-of-1 pipeline: reserve one
-    /// completion slot, submit, wait the ticket.
-    fn single(&self, worker: usize, op: Op) -> Result<SingleReply> {
+    /// completion slot, submit, wait the ticket for the typed result.
+    fn single(&self, op: Op) -> Result<OpResult> {
         let (ticket, done) = pipeline::one_shot();
-        self.senders[worker]
+        self.senders[self.route(op.key())]
             .send(Request::Single { op, enqueued: Instant::now(), done })
             .map_err(|_| HiveError::Shutdown)?;
         ticket.wait()
     }
 
-    /// Insert or replace `key → value`.
-    pub fn insert(&self, key: u32, value: u32) -> Result<bool> {
-        match self.single(self.route(key), Op::Insert { key, value })? {
-            SingleReply::Inserted(new) => Ok(new),
-            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
-            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+    fn unexpected(op: &str, got: OpResult) -> HiveError {
+        HiveError::Runtime(format!("unexpected reply to {op}: {got:?}"))
+    }
+
+    /// Insert or replace `key → value`, reporting which four-step path
+    /// placed it (the lossy `bool` of the pre-typed plane is gone).
+    pub fn insert(&self, key: u32, value: u32) -> Result<InsertOutcome> {
+        match self.single(Op::Insert { key, value })? {
+            OpResult::Upserted { outcome, .. } => Ok(outcome),
+            other => Err(Self::unexpected("insert", other)),
+        }
+    }
+
+    /// Insert or replace, returning the placement outcome and previous
+    /// value.
+    pub fn upsert(&self, key: u32, value: u32) -> Result<(InsertOutcome, Option<u32>)> {
+        match self.single(Op::Upsert { key, value })? {
+            OpResult::Upserted { outcome, old } => Ok((outcome, old)),
+            other => Err(Self::unexpected("upsert", other)),
+        }
+    }
+
+    /// Insert only if absent; returns the existing value when present
+    /// (`None` ⇒ this call inserted).
+    pub fn insert_if_absent(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        match self.single(Op::InsertIfAbsent { key, value })? {
+            OpResult::InsertedIfAbsent { existing, .. } => Ok(existing),
+            other => Err(Self::unexpected("insert_if_absent", other)),
+        }
+    }
+
+    /// Replace only if present; returns the previous value (`None` ⇒
+    /// absent, nothing written).
+    pub fn update(&self, key: u32, value: u32) -> Result<Option<u32>> {
+        match self.single(Op::Update { key, value })? {
+            OpResult::Updated { old } => Ok(old),
+            other => Err(Self::unexpected("update", other)),
+        }
+    }
+
+    /// Compare-and-swap: write `new` iff the current value equals
+    /// `expected`. Returns `(ok, actual)`.
+    pub fn cas(&self, key: u32, expected: u32, new: u32) -> Result<(bool, Option<u32>)> {
+        match self.single(Op::Cas { key, expected, new })? {
+            OpResult::Cas { ok, actual } => Ok((ok, actual)),
+            other => Err(Self::unexpected("cas", other)),
+        }
+    }
+
+    /// Add `delta` (wrapping) to the value of `key`, creating it at
+    /// `delta` when absent. Returns the pre-add value (`None` ⇒ created).
+    pub fn fetch_add(&self, key: u32, delta: u32) -> Result<Option<u32>> {
+        match self.single(Op::FetchAdd { key, delta })? {
+            OpResult::FetchAdded { old, .. } => Ok(old),
+            other => Err(Self::unexpected("fetch_add", other)),
         }
     }
 
     /// Point lookup.
     pub fn lookup(&self, key: u32) -> Result<Option<u32>> {
-        match self.single(self.route(key), Op::Lookup { key })? {
-            SingleReply::Value(v) => Ok(v),
-            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
-            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+        match self.single(Op::Lookup { key })? {
+            OpResult::Value(v) => Ok(v),
+            other => Err(Self::unexpected("lookup", other)),
         }
     }
 
     /// Delete `key`.
     pub fn delete(&self, key: u32) -> Result<bool> {
-        match self.single(self.route(key), Op::Delete { key })? {
-            SingleReply::Deleted(hit) => Ok(hit),
-            SingleReply::Failed(msg) => Err(HiveError::Runtime(msg)),
-            other => Err(HiveError::Runtime(format!("unexpected reply {other:?}"))),
+        match self.single(Op::Delete { key })? {
+            OpResult::Deleted(hit) => Ok(hit),
+            other => Err(Self::unexpected("delete", other)),
         }
     }
 
     /// Bulk insert/replace: shards by key and rides the workers' batched
     /// backend path (one epoch pin per shard window instead of one per
-    /// op). Returns the merged batch counters.
-    pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<BatchResult> {
+    /// op). One [`OpResult::Upserted`] per pair, in submission order.
+    pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<OpResult>> {
         let ops: Vec<Op> =
             pairs.iter().map(|&(key, value)| Op::Insert { key, value }).collect();
         self.submit(&ops)
@@ -232,23 +276,32 @@ impl Handle {
     /// Bulk lookup in submission order, via the batched backend path.
     pub fn lookup_batch(&self, keys: &[u32]) -> Result<Vec<Option<u32>>> {
         let ops: Vec<Op> = keys.iter().map(|&key| Op::Lookup { key }).collect();
-        Ok(self.submit(&ops)?.lookups)
+        Ok(self
+            .submit(&ops)?
+            .into_iter()
+            .map(|r| r.as_value().expect("lookup op yields Value"))
+            .collect())
     }
 
     /// Bulk delete in submission order, via the batched backend path.
     pub fn delete_batch(&self, keys: &[u32]) -> Result<Vec<bool>> {
         let ops: Vec<Op> = keys.iter().map(|&key| Op::Delete { key }).collect();
-        Ok(self.submit(&ops)?.deletes)
+        Ok(self
+            .submit(&ops)?
+            .into_iter()
+            .map(|r| r.as_deleted().expect("delete op yields Deleted"))
+            .collect())
     }
 
     /// Submit a pre-batched workload: ops are sharded by key, executed on
-    /// all workers, and the per-class results are reassembled in
-    /// submission order.
+    /// all workers, and the typed results are reassembled **in
+    /// submission order** — one [`OpResult`] per op, whatever mix of
+    /// classes the window carries.
     ///
     /// Shards are scattered up front and gathered in *arrival order*
     /// over one shared reply channel — a slow shard no longer blocks
     /// collection of the fast ones.
-    pub fn submit(&self, ops: &[Op]) -> Result<BatchResult> {
+    pub fn submit(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
         let w = self.senders.len();
         let mut shards: Vec<Vec<Op>> = vec![Vec::new(); w];
         let mut route_of: Vec<usize> = Vec::with_capacity(ops.len());
@@ -257,7 +310,7 @@ impl Handle {
             shards[r].push(*op);
             route_of.push(r);
         }
-        let (tx, rx) = mpsc::channel::<(usize, Result<BatchResult>)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<OpResult>>)>();
         let enqueued = Instant::now();
         let mut expected = 0usize;
         for (i, shard) in shards.into_iter().enumerate() {
@@ -270,34 +323,20 @@ impl Handle {
             expected += 1;
         }
         drop(tx);
-        let mut partials: Vec<Option<BatchResult>> = vec![None; w];
+        let mut partials: Vec<Option<Vec<OpResult>>> = vec![None; w];
         for _ in 0..expected {
             let (i, res) = rx.recv().map_err(|_| HiveError::Shutdown)?;
             partials[i] = Some(res?);
         }
-        // Reassemble lookups/deletes in original submission order.
-        let mut luk_cursor = vec![0usize; w];
-        let mut del_cursor = vec![0usize; w];
-        let mut merged = BatchResult::default();
-        for p in partials.iter().flatten() {
-            merged.inserted += p.inserted;
-            merged.replaced += p.replaced;
-            merged.stashed += p.stashed;
-        }
-        for (op, &r) in ops.iter().zip(&route_of) {
-            match op {
-                Op::Lookup { .. } => {
-                    let p = partials[r].as_ref().expect("shard result");
-                    merged.lookups.push(p.lookups[luk_cursor[r]]);
-                    luk_cursor[r] += 1;
-                }
-                Op::Delete { .. } => {
-                    let p = partials[r].as_ref().expect("shard result");
-                    merged.deletes.push(p.deletes[del_cursor[r]]);
-                    del_cursor[r] += 1;
-                }
-                Op::Insert { .. } => {}
-            }
+        // Reassemble in original submission order: each shard executed
+        // its sub-window in shard-submission order, so one cursor per
+        // shard walks every result exactly once.
+        let mut cursor = vec![0usize; w];
+        let mut merged = Vec::with_capacity(ops.len());
+        for &r in &route_of {
+            let p = partials[r].as_ref().expect("shard result");
+            merged.push(p[cursor[r]]);
+            cursor[r] += 1;
         }
         Ok(merged)
     }
@@ -341,7 +380,9 @@ impl Handle {
 struct Worker {
     backend: Box<dyn Backend>,
     batcher: Batcher,
-    waiting: Vec<(Instant, CompletionSlot, Op)>,
+    /// Waiting singles, 1:1 (and in order) with the batcher's pending
+    /// window — the typed results zip straight back onto the slots.
+    waiting: Vec<(Instant, CompletionSlot)>,
     stats: ServiceStats,
     /// Read-through hot-key cache; `None` when disabled by config or
     /// when the backend cannot produce a coherence stamp.
@@ -354,16 +395,24 @@ impl Worker {
     /// wholesale-validate the cache against the backend's coherence
     /// stamp, serve lookup hits without touching the backend, execute
     /// the remainder, retire the window's written keys from the cache,
-    /// then read-through-fill from the backend's lookup results.
+    /// then refill from results whose post-window value is knowable.
     ///
     /// Lookups whose key is *written in the same window* never consult
-    /// the cache: the backend groups windows as insert → delete →
-    /// lookup, so serving such a lookup from the cache would observe the
-    /// pre-window value where the uncached path observes the post-write
-    /// one. Bypassing them keeps the cached path observationally
-    /// identical to the uncached one for every window — which the
-    /// cross-path differential test (`tests/test_cache.rs`) pins down.
-    fn execute_window(&mut self, ops: &[Op]) -> Result<BatchResult> {
+    /// the cache: the backend groups write classes before lookups, so
+    /// serving such a lookup from the cache would observe the pre-window
+    /// value where the uncached path observes the post-write one. Every
+    /// op class except `Lookup` counts as a write here — `Cas` and
+    /// `Update` may decline, but conservative bypass is always
+    /// observationally identical to the uncached path (which the
+    /// cross-path differential in `tests/test_cache.rs` pins down).
+    ///
+    /// Refill policy: backend lookup results always refill (they are
+    /// post-window values). Of the write classes, an applied `Cas`
+    /// (known new value) and an applied `Update` refill — but only when
+    /// theirs is the window's *only* write to that key, otherwise a
+    /// later class (e.g. a fetch-add grouped after the CAS) already
+    /// moved the value past what the result shows.
+    fn execute_window(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
         self.stats.batches += 1;
         self.stats.ops += ops.len() as u64;
         self.stats.batch_sizes.record(ops.len() as u64);
@@ -374,97 +423,91 @@ impl Worker {
         if !cache.validate(stamp) {
             self.stats.cache_flushes += 1;
         }
-        // Write-only window: nothing to serve or fill — skip the
-        // conflict-set and splice bookkeeping, but still retire the
-        // written keys' cached copies.
+        // Write-only window: nothing to serve, and refill would need the
+        // written-once bookkeeping below for no benefit — execute and
+        // retire the written keys' cached copies directly.
         if !ops.iter().any(|op| matches!(op, Op::Lookup { .. })) {
             let res = self.backend.execute(ops)?;
             for op in ops {
-                if let Op::Insert { key, .. } | Op::Delete { key } = *op {
-                    if cache.invalidate(key) {
-                        self.stats.cache_invalidations += 1;
-                    }
+                if cache.invalidate(op.key()) {
+                    self.stats.cache_invalidations += 1;
                 }
             }
             return Ok(res);
         }
-        let written: HashSet<u32> = ops
-            .iter()
-            .filter_map(|op| match *op {
-                Op::Insert { key, .. } | Op::Delete { key } => Some(key),
-                Op::Lookup { .. } => None,
-            })
-            .collect();
+        // Writes per key: conflict bypass for same-window lookups and
+        // the written-once guard for the refill pass.
+        let mut writes: HashMap<u32, u32> = HashMap::new();
+        for op in ops {
+            if op.is_write() {
+                *writes.entry(op.key()).or_default() += 1;
+            }
+        }
         // Serve lookup hits out of the cache; everything else (writes,
         // misses, write-conflicting lookups) goes to the backend.
-        // `served[i]` is the i-th lookup's cache answer, if any.
-        let mut served: Vec<Option<u32>> = Vec::new();
+        let mut slots: Vec<Option<OpResult>> = vec![None; ops.len()];
         let mut backend_ops: Vec<Op> = Vec::with_capacity(ops.len());
-        for op in ops {
+        let mut backend_idx: Vec<usize> = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
             if let Op::Lookup { key } = *op {
                 // write-conflicted lookups bypass the cache without
                 // touching the hit/miss counters: they never consult it,
                 // and counting them as misses would understate the hit
                 // rate fig10 publishes
-                if !written.contains(&key) {
+                if !writes.contains_key(&key) {
                     match cache.get(key) {
                         Some(v) => {
                             self.stats.cache_hits += 1;
-                            served.push(Some(v));
+                            slots[i] = Some(OpResult::Value(Some(v)));
                             continue;
                         }
                         None => self.stats.cache_misses += 1,
                     }
                 }
-                served.push(None);
             }
+            backend_idx.push(i);
             backend_ops.push(*op);
         }
-        let mut res = if backend_ops.is_empty() {
-            BatchResult::default()
+        let backend_res = if backend_ops.is_empty() {
+            Vec::new()
         } else {
             self.backend.execute(&backend_ops)?
         };
         // Per-key invalidation: the window's writes retire cached copies
         // before any result is published.
-        for op in ops {
-            if let Op::Insert { key, .. } | Op::Delete { key } = *op {
-                if cache.invalidate(key) {
-                    self.stats.cache_invalidations += 1;
-                }
+        for key in writes.keys() {
+            if cache.invalidate(*key) {
+                self.stats.cache_invalidations += 1;
             }
         }
-        // Splice cached hits back in lookup submission order and fill
-        // the cache from backend results. The backend values are
-        // post-window (grouped execution runs writes first), so filling
-        // after the invalidation pass leaves the cache coherent with the
-        // window's own writes. Misses are never cached: absent keys
-        // churn fastest under skewed delete/re-insert traffic.
-        let from_backend = std::mem::take(&mut res.lookups);
-        let mut backend_iter = from_backend.into_iter();
-        let mut lookups = Vec::with_capacity(served.len());
-        let mut served_iter = served.into_iter();
-        for op in ops {
-            if let Op::Lookup { key } = *op {
-                match served_iter.next().expect("one served slot per lookup") {
-                    Some(hit) => lookups.push(Some(hit)),
-                    None => {
-                        let v = backend_iter.next().flatten();
-                        if let Some(val) = v {
-                            cache.put(key, val);
-                        }
-                        lookups.push(v);
-                    }
+        // Scatter backend results into submission order and refill the
+        // cache. Lookup values are post-window (write classes group
+        // first); write-class refills obey the written-once guard.
+        // Misses are never cached: absent keys churn fastest under
+        // skewed delete/re-insert traffic.
+        for (&i, res) in backend_idx.iter().zip(backend_res) {
+            match (ops[i], res) {
+                (Op::Lookup { key }, OpResult::Value(Some(v))) => cache.put(key, v),
+                (Op::Cas { key, new, .. }, OpResult::Cas { ok: true, .. })
+                    if writes.get(&key) == Some(&1) =>
+                {
+                    cache.put(key, new);
                 }
+                (Op::Update { key, value }, OpResult::Updated { old: Some(_) })
+                    if writes.get(&key) == Some(&1) =>
+                {
+                    cache.put(key, value);
+                }
+                _ => {}
             }
+            slots[i] = Some(res);
         }
-        res.lookups = lookups;
-        Ok(res)
+        Ok(slots.into_iter().map(|r| r.expect("one result per op")).collect())
     }
 
     /// Flush the pending single-op window and publish every waiter's
-    /// result in one batch — one wakeup per client window, not one per
-    /// op. `backlog` is the submission-ring depth at dispatch time,
+    /// typed result in one batch — one wakeup per client window, not one
+    /// per op. `backlog` is the submission-ring depth at dispatch time,
     /// folded into the in-flight depth stat.
     fn dispatch(&mut self, backlog: usize) {
         if self.batcher.is_empty() {
@@ -473,45 +516,32 @@ impl Worker {
         let ops = self.batcher.take();
         let started = Instant::now();
         self.stats.inflight_depth.record((self.waiting.len() + backlog) as u64);
-        for (enq, _, _) in &self.waiting {
+        for (enq, _) in &self.waiting {
             self.stats
                 .queue_delay_ns
                 .record(started.saturating_duration_since(*enq).as_nanos() as u64);
         }
         match self.execute_window(&ops) {
-            Ok(res) => {
-                self.record_result(&res);
-                // completions in class order, published as one batch
-                let mut luk = res.lookups.into_iter();
-                let mut del = res.deletes.into_iter();
+            Ok(results) => {
+                debug_assert_eq!(results.len(), self.waiting.len(), "one result per waiter");
+                self.stats.record_results(&results);
+                // completions in submission order, published as one batch
                 let mut completions = Vec::with_capacity(self.waiting.len());
-                for (enq, done, op) in self.waiting.drain(..) {
+                for ((enq, done), res) in self.waiting.drain(..).zip(results) {
                     self.stats.latency_ns.record(enq.elapsed().as_nanos() as u64);
-                    let msg = match op {
-                        Op::Insert { .. } => SingleReply::Inserted(true),
-                        Op::Lookup { .. } => SingleReply::Value(luk.next().flatten()),
-                        Op::Delete { .. } => SingleReply::Deleted(del.next().unwrap_or(false)),
-                    };
-                    completions.push((done, Ok(msg)));
+                    completions.push((done, Ok(res)));
                 }
                 pipeline::publish_batch(completions);
             }
             Err(e) => {
                 let mut completions = Vec::with_capacity(self.waiting.len());
-                for (_, done, _) in self.waiting.drain(..) {
-                    completions.push((done, Ok(SingleReply::Failed(e.to_string()))));
+                for (_, done) in self.waiting.drain(..) {
+                    completions.push((done, Err(e.clone())));
                 }
                 pipeline::publish_batch(completions);
             }
         }
         self.check_resize();
-    }
-
-    fn record_result(&mut self, res: &BatchResult) {
-        self.stats.inserted += res.inserted as u64;
-        self.stats.replaced += res.replaced as u64;
-        self.stats.stashed += res.stashed as u64;
-        self.stats.deleted += res.deletes.iter().filter(|&&d| d).count() as u64;
     }
 
     /// Resize controller between windows. The call still runs a full
@@ -577,7 +607,7 @@ fn worker_loop(
         };
         match req {
             Request::Single { op, enqueued, done } => {
-                w.waiting.push((enqueued, done, op));
+                w.waiting.push((enqueued, done));
                 // The window's deadline runs from the op's submission,
                 // so ring backlog counts against it. An expired window
                 // is NOT dispatched mid-drain: it ships at the next
@@ -603,7 +633,7 @@ fn worker_loop(
                 w.stats.inflight_depth.record((ops.len() + rx.backlog()) as u64);
                 let res = w.execute_window(&ops);
                 if let Ok(res) = &res {
-                    w.record_result(res);
+                    w.stats.record_results(res);
                     w.stats
                         .latency_ns
                         .record_n(enqueued.elapsed().as_nanos() as u64, ops.len() as u64);
@@ -661,11 +691,39 @@ mod tests {
     fn single_op_roundtrip() {
         let (coord, h) =
             start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
-        assert!(h.insert(1, 100).unwrap());
-        assert_eq!(h.lookup(1).unwrap(), Some(100));
+        assert_eq!(h.insert(1, 100).unwrap(), InsertOutcome::Inserted);
+        assert_eq!(h.insert(1, 101).unwrap(), InsertOutcome::Replaced);
+        assert_eq!(h.lookup(1).unwrap(), Some(101));
         assert_eq!(h.lookup(2).unwrap(), None);
         assert!(h.delete(1).unwrap());
         assert!(!h.delete(1).unwrap());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn typed_rmw_roundtrip_through_service() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        assert_eq!(h.upsert(5, 50).unwrap(), (InsertOutcome::Inserted, None));
+        assert_eq!(h.upsert(5, 51).unwrap(), (InsertOutcome::Replaced, Some(50)));
+        assert_eq!(h.insert_if_absent(5, 99).unwrap(), Some(51));
+        assert_eq!(h.lookup(5).unwrap(), Some(51), "if-absent overwrote a present key");
+        assert_eq!(h.update(6, 60).unwrap(), None);
+        assert_eq!(h.lookup(6).unwrap(), None, "update created a key");
+        assert_eq!(h.update(5, 52).unwrap(), Some(51));
+        assert_eq!(h.cas(5, 99, 0).unwrap(), (false, Some(52)));
+        assert_eq!(h.cas(5, 52, 53).unwrap(), (true, Some(52)));
+        assert_eq!(h.fetch_add(5, 7).unwrap(), Some(53));
+        assert_eq!(h.lookup(5).unwrap(), Some(60));
+        assert_eq!(h.fetch_add(7, 3).unwrap(), None, "fetch_add must create absent keys");
+        assert_eq!(h.lookup(7).unwrap(), Some(3));
+        h.flush().unwrap();
+        let s = h.stats().unwrap();
+        assert_eq!(s.updates, 1, "{}", s.summary());
+        assert_eq!(s.cas_succeeded, 1, "{}", s.summary());
+        assert_eq!(s.cas_failed, 1, "{}", s.summary());
+        assert_eq!(s.fetch_adds, 2, "{}", s.summary());
+        assert!(s.replaced >= 1, "{}", s.summary());
         coord.shutdown();
     }
 
@@ -677,16 +735,44 @@ mod tests {
         let inserts: Vec<Op> =
             (1..=500u32).map(|k| Op::Insert { key: k, value: k * 2 }).collect();
         let r = h.submit(&inserts).unwrap();
-        assert_eq!(r.inserted, 500);
+        assert_eq!(r.len(), 500);
+        assert!(r.iter().all(|x| matches!(x, OpResult::Upserted { old: None, .. })));
         let lookups: Vec<Op> = (1..=500u32).map(|k| Op::Lookup { key: k }).collect();
         let r = h.submit(&lookups).unwrap();
-        assert_eq!(r.lookups.len(), 500);
-        for (i, v) in r.lookups.iter().enumerate() {
-            assert_eq!(*v, Some((i as u32 + 1) * 2), "lookup {i} out of order");
+        assert_eq!(r.len(), 500);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(
+                v.as_value().unwrap(),
+                Some((i as u32 + 1) * 2),
+                "lookup {i} out of order"
+            );
         }
         let deletes: Vec<Op> = (1..=250u32).map(|k| Op::Delete { key: k }).collect();
         let r = h.submit(&deletes).unwrap();
-        assert!(r.deletes.iter().all(|&d| d));
+        assert!(r.iter().all(|x| *x == OpResult::Deleted(true)));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_class_window_keeps_submission_order() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        let ops = vec![
+            Op::FetchAdd { key: 1, delta: 5 },
+            Op::Upsert { key: 2, value: 20 },
+            Op::Lookup { key: 1 },
+            Op::Cas { key: 2, expected: 20, new: 21 },
+            Op::Delete { key: 3 },
+            Op::Lookup { key: 2 },
+        ];
+        let r = h.submit(&ops).unwrap();
+        assert_eq!(r.len(), ops.len());
+        assert!(matches!(r[0], OpResult::FetchAdded { old: None, .. }));
+        assert!(matches!(r[1], OpResult::Upserted { old: None, .. }));
+        assert_eq!(r[2], OpResult::Value(Some(5)), "lookup groups after the fetch-add");
+        assert_eq!(r[3], OpResult::Cas { ok: true, actual: Some(20) });
+        assert_eq!(r[4], OpResult::Deleted(false));
+        assert_eq!(r[5], OpResult::Value(Some(21)), "lookup groups after the cas");
         coord.shutdown();
     }
 
@@ -696,7 +782,8 @@ mod tests {
             start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
         let pairs: Vec<(u32, u32)> = (1..=300u32).map(|k| (k, k * 5)).collect();
         let r = h.insert_batch(&pairs).unwrap();
-        assert_eq!(r.inserted, 300);
+        assert_eq!(r.len(), 300);
+        assert!(r.iter().all(|x| matches!(x, OpResult::Upserted { old: None, .. })));
         let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
         let vals = h.lookup_batch(&keys).unwrap();
         for (i, v) in vals.iter().enumerate() {
@@ -724,7 +811,7 @@ mod tests {
         let s = h.stats().unwrap();
         assert_eq!(s.ops, 200);
         assert!(s.batches >= 1);
-        assert_eq!(s.inserted, 200);
+        assert_eq!(s.inserted + s.evicted + s.stashed, 200);
         coord.shutdown();
     }
 
@@ -761,7 +848,7 @@ mod tests {
             if tickets.len() == 16 {
                 let t: crate::coordinator::pipeline::Ticket = tickets.pop_front().unwrap();
                 match t.wait().unwrap() {
-                    SingleReply::Inserted(_) => {}
+                    OpResult::Upserted { .. } => {}
                     other => panic!("unexpected reply {other:?}"),
                 }
             }
@@ -775,6 +862,27 @@ mod tests {
         for k in (1..=400u32).step_by(37) {
             assert_eq!(h.lookup(k).unwrap(), Some(k.wrapping_mul(3)));
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pipelined_rmw_tickets_resolve_typed() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        let pipe = h.pipeline(8);
+        let t1 = pipe.fetch_add(1, 5).unwrap();
+        let created = OpResult::FetchAdded { outcome: Some(InsertOutcome::Inserted), old: None };
+        assert_eq!(t1.wait().unwrap(), created);
+        let t2 = pipe.cas(1, 5, 6).unwrap();
+        assert_eq!(t2.wait().unwrap(), OpResult::Cas { ok: true, actual: Some(5) });
+        let t3 = pipe.update(1, 9).unwrap();
+        assert_eq!(t3.wait().unwrap(), OpResult::Updated { old: Some(6) });
+        let t4 = pipe.insert_if_absent(1, 0).unwrap();
+        let present = OpResult::InsertedIfAbsent { outcome: None, existing: Some(9) };
+        assert_eq!(t4.wait().unwrap(), present);
+        let t5 = pipe.upsert(1, 11).unwrap();
+        let replaced = OpResult::Upserted { outcome: InsertOutcome::Replaced, old: Some(9) };
+        assert_eq!(t5.wait().unwrap(), replaced);
         coord.shutdown();
     }
 
@@ -816,7 +924,7 @@ mod tests {
     fn cache_serves_repeat_lookups_and_stays_coherent() {
         let (coord, h) =
             start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
-        assert!(h.insert(1, 100).unwrap());
+        assert_eq!(h.insert(1, 100).unwrap(), InsertOutcome::Inserted);
         // first lookup fills, repeats hit
         for _ in 0..5 {
             assert_eq!(h.lookup(1).unwrap(), Some(100));
@@ -856,14 +964,18 @@ mod tests {
         let (coord, h) = start_native(cfg, HiveConfig::default().with_buckets(64)).unwrap();
         h.insert(5, 50).unwrap();
         assert_eq!(h.lookup(5).unwrap(), Some(50)); // now cached
-        // window deletes 5 and looks it up: grouped execution (insert →
-        // delete → lookup) must observe the delete, not the cached copy
+        // window deletes 5 and looks it up: grouped execution (writes
+        // before lookups) must observe the delete, not the cached copy
         let r = h.submit(&[Op::Delete { key: 5 }, Op::Lookup { key: 5 }]).unwrap();
-        assert_eq!(r.deletes, vec![true]);
-        assert_eq!(r.lookups, vec![None], "cache leaked a pre-window value");
-        // and a window that writes-then-reads sees the fresh value
+        assert_eq!(r[0], OpResult::Deleted(true));
+        assert_eq!(r[1], OpResult::Value(None), "cache leaked a pre-window value");
+        // and a window that writes-then-reads sees the fresh value,
+        // for the RMW classes too
         let r = h.submit(&[Op::Insert { key: 5, value: 55 }, Op::Lookup { key: 5 }]).unwrap();
-        assert_eq!(r.lookups, vec![Some(55)]);
+        assert_eq!(r[1], OpResult::Value(Some(55)));
+        let r = h.submit(&[Op::FetchAdd { key: 5, delta: 5 }, Op::Lookup { key: 5 }]).unwrap();
+        assert_eq!(r[0], OpResult::FetchAdded { outcome: None, old: Some(55) });
+        assert_eq!(r[1], OpResult::Value(Some(60)), "cache leaked across a fetch-add");
         coord.shutdown();
     }
 
@@ -887,7 +999,7 @@ mod tests {
         // all keys still present
         let lookups: Vec<Op> = (1..=1000u32).map(|k| Op::Lookup { key: k }).collect();
         let r = h.submit(&lookups).unwrap();
-        assert!(r.lookups.iter().all(Option::is_some));
+        assert!(r.iter().all(|v| matches!(v, OpResult::Value(Some(_)))));
         coord.shutdown();
     }
 }

@@ -2,6 +2,8 @@
 //! activity — aggregated across workers.
 
 use crate::core::histogram::Histogram;
+use crate::native::table::InsertOutcome;
+use crate::workload::OpResult;
 
 /// Per-worker counters merged into a service view.
 #[derive(Debug, Default, Clone)]
@@ -10,11 +12,20 @@ pub struct ServiceStats {
     pub ops: u64,
     /// Dispatch windows executed.
     pub batches: u64,
-    /// Entries inserted / replaced / stashed / deleted.
+    /// Insert-class placements by [`InsertOutcome`]: fresh WABC claims,
+    /// in-place replaces, cuckoo-evicted placements, stash redirects —
+    /// the full four-step attribution the old boolean reply discarded.
     pub inserted: u64,
     pub replaced: u64,
+    pub evicted: u64,
     pub stashed: u64,
     pub deleted: u64,
+    /// Typed RMW traffic: applied updates (write-if-present hits),
+    /// CAS verdicts, and fetch-add completions.
+    pub updates: u64,
+    pub cas_succeeded: u64,
+    pub cas_failed: u64,
+    pub fetch_adds: u64,
     /// Resize events (grow, shrink).
     pub grows: u64,
     pub shrinks: u64,
@@ -42,14 +53,53 @@ pub struct ServiceStats {
 }
 
 impl ServiceStats {
+    /// Fold one dispatch window's typed results into the counters —
+    /// the per-outcome accounting the old lossy `bool` replies made
+    /// impossible (ISSUE 5 satellite).
+    pub fn record_results(&mut self, results: &[OpResult]) {
+        for r in results {
+            match *r {
+                OpResult::Upserted { outcome, .. } => self.record_outcome(outcome),
+                OpResult::InsertedIfAbsent { outcome: Some(o), .. } => self.record_outcome(o),
+                OpResult::InsertedIfAbsent { outcome: None, .. } => {}
+                OpResult::Updated { old: Some(_) } => self.updates += 1,
+                OpResult::Updated { old: None } => {}
+                OpResult::Cas { ok: true, .. } => self.cas_succeeded += 1,
+                OpResult::Cas { ok: false, .. } => self.cas_failed += 1,
+                OpResult::FetchAdded { outcome, .. } => {
+                    self.fetch_adds += 1;
+                    if let Some(o) = outcome {
+                        self.record_outcome(o);
+                    }
+                }
+                OpResult::Deleted(true) => self.deleted += 1,
+                OpResult::Deleted(false) | OpResult::Value(_) => {}
+            }
+        }
+    }
+
+    fn record_outcome(&mut self, outcome: InsertOutcome) {
+        match outcome {
+            InsertOutcome::Inserted => self.inserted += 1,
+            InsertOutcome::Replaced => self.replaced += 1,
+            InsertOutcome::Evicted => self.evicted += 1,
+            InsertOutcome::Stashed => self.stashed += 1,
+        }
+    }
+
     /// Merge another worker's stats into this aggregate.
     pub fn merge(&mut self, other: &ServiceStats) {
         self.ops += other.ops;
         self.batches += other.batches;
         self.inserted += other.inserted;
         self.replaced += other.replaced;
+        self.evicted += other.evicted;
         self.stashed += other.stashed;
         self.deleted += other.deleted;
+        self.updates += other.updates;
+        self.cas_succeeded += other.cas_succeeded;
+        self.cas_failed += other.cas_failed;
+        self.fetch_adds += other.fetch_adds;
         self.grows += other.grows;
         self.shrinks += other.shrinks;
         self.cache_hits += other.cache_hits;
@@ -81,14 +131,19 @@ impl ServiceStats {
     /// Human summary line.
     pub fn summary(&self) -> String {
         format!(
-            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} stashed={} deleted={} grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
+            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} evicted={} stashed={} deleted={} rmw[upd={} cas={}/{} fadd={}] grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
             self.ops,
             self.batches,
             self.mean_batch(),
             self.inserted,
             self.replaced,
+            self.evicted,
             self.stashed,
             self.deleted,
+            self.updates,
+            self.cas_succeeded,
+            self.cas_failed,
+            self.fetch_adds,
             self.grows,
             self.shrinks,
             self.cache_hits,
@@ -128,6 +183,49 @@ mod tests {
         assert_eq!(a.inflight_depth.max(), 7);
         assert!(a.summary().contains("ops=15"));
         assert!(a.summary().contains("queue["), "summary must surface queue delay");
+    }
+
+    #[test]
+    fn record_results_attributes_outcomes() {
+        use crate::native::table::InsertOutcome;
+        let mut s = ServiceStats::default();
+        s.record_results(&[
+            OpResult::Upserted { outcome: InsertOutcome::Inserted, old: None },
+            OpResult::Upserted { outcome: InsertOutcome::Replaced, old: Some(1) },
+            OpResult::Upserted { outcome: InsertOutcome::Evicted, old: None },
+            OpResult::Upserted { outcome: InsertOutcome::Stashed, old: None },
+            OpResult::InsertedIfAbsent { outcome: Some(InsertOutcome::Inserted), existing: None },
+            OpResult::InsertedIfAbsent { outcome: None, existing: Some(7) },
+            OpResult::Updated { old: Some(3) },
+            OpResult::Updated { old: None },
+            OpResult::Cas { ok: true, actual: Some(3) },
+            OpResult::Cas { ok: false, actual: None },
+            OpResult::FetchAdded { outcome: None, old: Some(4) },
+            OpResult::FetchAdded { outcome: Some(InsertOutcome::Inserted), old: None },
+            OpResult::Deleted(true),
+            OpResult::Deleted(false),
+            OpResult::Value(Some(9)),
+        ]);
+        assert_eq!(s.inserted, 3, "claim + if-absent + fetch-add-create");
+        assert_eq!(s.replaced, 1);
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.stashed, 1);
+        assert_eq!(s.updates, 1);
+        assert_eq!(s.cas_succeeded, 1);
+        assert_eq!(s.cas_failed, 1);
+        assert_eq!(s.fetch_adds, 2);
+        assert_eq!(s.deleted, 1);
+        let line = s.summary();
+        assert!(line.contains("evicted=1"), "{line}");
+        assert!(line.contains("rmw[upd=1 cas=1/1 fadd=2]"), "{line}");
+        // merged aggregates keep the new counters
+        let mut agg = ServiceStats::default();
+        agg.merge(&s);
+        agg.merge(&s);
+        assert_eq!(agg.evicted, 2);
+        assert_eq!(agg.cas_succeeded, 2);
+        assert_eq!(agg.fetch_adds, 4);
+        assert_eq!(agg.updates, 2);
     }
 
     #[test]

@@ -10,7 +10,13 @@
 //!   flight — [`coordinator::pipeline`]), resize controller, overflow-stash
 //!   management, plus three execution substrates (native lock-free CPU,
 //!   SIMT warp simulator, XLA/PJRT bulk backend) and the baseline hash
-//!   tables the paper compares against.
+//!   tables the paper compares against. Operations ride one typed plane
+//!   end-to-end: a [`workload::Op`] — including the conditional and
+//!   read-modify-write classes `InsertIfAbsent` / `Update` / `Upsert` /
+//!   `Cas` / `FetchAdd`, each a single CAS on the packed 64-bit word —
+//!   yields exactly one [`workload::OpResult`] in submission order
+//!   through direct table calls, `ConcurrentMap` batches,
+//!   `Backend::execute`, and the coordinator's `Handle`/`Pipeline`.
 //! * **Layer 2 (python/compile/model.py)** — JAX bulk formulations of the
 //!   table operations, AOT-lowered to HLO artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the probe /
@@ -49,4 +55,5 @@ pub mod report;
 
 pub use crate::core::config::HiveConfig;
 pub use crate::core::packed::{pack, unpack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
-pub use crate::native::table::HiveTable;
+pub use crate::native::table::{HiveTable, InsertOutcome};
+pub use crate::workload::{Op, OpResult};

@@ -150,6 +150,7 @@ fn cmd_bench(args: &[String]) -> i32 {
         ("fig7", "fig7_bulk_query", "bulk query vs baselines (Fig. 7)"),
         ("fig8", "fig8_mixed", "mixed workload vs baselines (Fig. 8)"),
         ("fig9", "fig9_step_breakdown", "insert step breakdown (Fig. 9)"),
+        ("fig12", "fig12_rmw", "typed RMW mixes vs ShardedStd (Fig. 12)"),
         ("resize", "resize_throughput", "resize throughput (§V-A)"),
     ];
     for (short, target, desc) in benches {

@@ -26,12 +26,21 @@
 //! [`crate::native::table`], so their observable behaviour is identical;
 //! a batch interleaved with concurrent single ops is a legal
 //! linearization of both.
+//!
+//! Every class of the typed operation plane has a hash-ahead bulk entry
+//! point here (`upsert_batch`, `insert_if_absent_batch`, `update_batch`,
+//! `cas_batch`, `fetch_add_batch`), and [`HiveTable::execute_ops`] runs
+//! a heterogeneous [`Op`] window through them, returning typed
+//! [`OpResult`]s in submission order — the engine behind
+//! `NativeBackend::execute` and the `ConcurrentMap` batch plane.
 
+use crate::backend::group_ops;
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::EMPTY_KEY;
 use crate::core::SLOTS_PER_BUCKET;
 use crate::hash::HashFamily;
-use crate::native::table::{HiveTable, InsertOutcome, State};
+use crate::native::table::{HiveTable, InsertOutcome, RmwInsert, State};
+use crate::workload::{Op, OpResult};
 use std::sync::atomic::Ordering;
 
 /// Prefetch-style touch of `bucket`'s metadata + first slot word. A plain
@@ -53,12 +62,19 @@ fn touch_next(state: &State, raw0: u32) {
 impl HiveTable {
     /// Bulk Insert/Replace: one epoch pin, hash-ahead, and pipelined
     /// probes for the whole batch (module docs). Returns one
-    /// [`InsertOutcome`] per pair, in submission order.
+    /// [`InsertOutcome`] per pair, in submission order. Alias of
+    /// [`HiveTable::upsert_batch`] that discards the previous values.
     ///
     /// Errors (without mutating the table) if any key is the reserved
     /// EMPTY sentinel — the batch analogue of the single-op
     /// `InvalidKey` check.
     pub fn insert_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<InsertOutcome>> {
+        Ok(self.upsert_batch(pairs)?.into_iter().map(|(outcome, _)| outcome).collect())
+    }
+
+    /// Bulk Upsert: like [`HiveTable::insert_batch`] but each entry also
+    /// carries the value it replaced (`None` ⇒ fresh key).
+    pub fn upsert_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<(InsertOutcome, Option<u32>)>> {
         if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
             return Err(HiveError::InvalidKey(bad));
         }
@@ -70,11 +86,153 @@ impl HiveTable {
             if i + 1 < pairs.len() {
                 touch_next(state, raws[i + 1][0]);
             }
-            let outcome = self.insert_core(state, key, value, &raws[i])?;
+            let (outcome, old) = self.upsert_core(state, key, value, &raws[i])?;
             self.record_insert_outcome(outcome);
-            out.push(outcome);
+            out.push((outcome, old));
         }
         Ok(out)
+    }
+
+    /// Bulk insert-if-absent (hash-ahead, one pin). One [`RmwInsert`]
+    /// per pair, in submission order. Sentinel keys error pre-mutation
+    /// like `insert_batch`.
+    pub fn insert_if_absent_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<RmwInsert>> {
+        if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
+            return Err(HiveError::InvalidKey(bad));
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
+        let mut out = Vec::with_capacity(pairs.len());
+        for (i, &(key, value)) in pairs.iter().enumerate() {
+            if i + 1 < pairs.len() {
+                touch_next(state, raws[i + 1][0]);
+            }
+            out.push(self.insert_if_absent_core(state, key, value, &raws[i])?);
+        }
+        Ok(out)
+    }
+
+    /// Bulk update (write-if-present): one previous value per pair, in
+    /// submission order. Sentinel keys yield `None` like the single-op
+    /// path.
+    pub fn update_batch(&self, pairs: &[(u32, u32)]) -> Vec<Option<u32>> {
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
+        let mut out = Vec::with_capacity(pairs.len());
+        for (i, &(key, value)) in pairs.iter().enumerate() {
+            if i + 1 < pairs.len() {
+                touch_next(state, raws[i + 1][0]);
+            }
+            out.push(if key == EMPTY_KEY {
+                None
+            } else {
+                self.update_core(state, key, value, &raws[i])
+            });
+        }
+        out
+    }
+
+    /// Bulk compare-and-swap over `(key, expected, new)` triples: one
+    /// `(ok, actual)` per triple, in submission order. Sentinel keys
+    /// yield `(false, None)`.
+    pub fn cas_batch(&self, items: &[(u32, u32, u32)]) -> Vec<(bool, Option<u32>)> {
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = items.iter().map(|&(k, _, _)| self.raw_hashes(k)).collect();
+        let mut out = Vec::with_capacity(items.len());
+        for (i, &(key, expected, new)) in items.iter().enumerate() {
+            if i + 1 < items.len() {
+                touch_next(state, raws[i + 1][0]);
+            }
+            out.push(if key == EMPTY_KEY {
+                (false, None)
+            } else {
+                self.cas_core(state, key, expected, new, &raws[i])
+            });
+        }
+        out
+    }
+
+    /// Bulk fetch-add over `(key, delta)` pairs: one [`RmwInsert`] per
+    /// pair, in submission order. Sentinel keys error pre-mutation.
+    pub fn fetch_add_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<RmwInsert>> {
+        if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
+            return Err(HiveError::InvalidKey(bad));
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
+        let mut out = Vec::with_capacity(pairs.len());
+        for (i, &(key, delta)) in pairs.iter().enumerate() {
+            if i + 1 < pairs.len() {
+                touch_next(state, raws[i + 1][0]);
+            }
+            out.push(self.fetch_add_core(state, key, delta, &raws[i])?);
+        }
+        Ok(out)
+    }
+
+    /// Execute a heterogeneous window of [`Op`]s through the per-class
+    /// bulk paths, returning one typed [`OpResult`] per op **in
+    /// submission order**. Classes execute grouped (upserts →
+    /// insert-if-absents → updates → CAS → fetch-adds → deletes →
+    /// lookups — see `backend::group_ops`); ops in one window are
+    /// concurrent, so the grouping is a legal linearization. Inserting
+    /// classes (`Insert`/`Upsert`/`InsertIfAbsent`/`FetchAdd`) validate
+    /// their keys up front — a sentinel key errors the whole window
+    /// before any mutation.
+    pub fn execute_ops(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        crate::backend::validate_insert_keys(ops)?;
+        let g = group_ops(ops);
+        let mut out: Vec<Option<OpResult>> = vec![None; ops.len()];
+        if !g.upserts.is_empty() {
+            let pairs: Vec<(u32, u32)> = g.upserts.iter().map(|&(_, k, v)| (k, v)).collect();
+            for (&(i, _, _), (outcome, old)) in g.upserts.iter().zip(self.upsert_batch(&pairs)?) {
+                out[i] = Some(OpResult::Upserted { outcome, old });
+            }
+        }
+        if !g.if_absents.is_empty() {
+            let pairs: Vec<(u32, u32)> = g.if_absents.iter().map(|&(_, k, v)| (k, v)).collect();
+            let res = self.insert_if_absent_batch(&pairs)?;
+            for (&(i, _, _), (outcome, existing)) in g.if_absents.iter().zip(res) {
+                out[i] = Some(OpResult::InsertedIfAbsent { outcome, existing });
+            }
+        }
+        if !g.updates.is_empty() {
+            let pairs: Vec<(u32, u32)> = g.updates.iter().map(|&(_, k, v)| (k, v)).collect();
+            for (&(i, _, _), old) in g.updates.iter().zip(self.update_batch(&pairs)) {
+                out[i] = Some(OpResult::Updated { old });
+            }
+        }
+        if !g.cas.is_empty() {
+            let items: Vec<(u32, u32, u32)> =
+                g.cas.iter().map(|&(_, k, e, n)| (k, e, n)).collect();
+            for (&(i, _, _, _), (ok, actual)) in g.cas.iter().zip(self.cas_batch(&items)) {
+                out[i] = Some(OpResult::Cas { ok, actual });
+            }
+        }
+        if !g.fetch_adds.is_empty() {
+            let pairs: Vec<(u32, u32)> = g.fetch_adds.iter().map(|&(_, k, d)| (k, d)).collect();
+            let res = self.fetch_add_batch(&pairs)?;
+            for (&(i, _, _), (outcome, old)) in g.fetch_adds.iter().zip(res) {
+                out[i] = Some(OpResult::FetchAdded { outcome, old });
+            }
+        }
+        if !g.deletes.is_empty() {
+            let keys: Vec<u32> = g.deletes.iter().map(|&(_, k)| k).collect();
+            for (&(i, _), hit) in g.deletes.iter().zip(self.delete_batch(&keys)) {
+                out[i] = Some(OpResult::Deleted(hit));
+            }
+        }
+        if !g.lookups.is_empty() {
+            let keys: Vec<u32> = g.lookups.iter().map(|&(_, k)| k).collect();
+            for (&(i, _), v) in g.lookups.iter().zip(self.lookup_batch(&keys)) {
+                out[i] = Some(OpResult::Value(v));
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every op yields exactly one result")).collect())
     }
 
     /// Bulk Search: one `Option<u32>` per key, in submission order. Keys
@@ -169,9 +327,76 @@ mod tests {
     fn sentinel_key_handling() {
         let t = table(4);
         assert!(t.insert_batch(&[(1, 1), (EMPTY_KEY, 2)]).is_err());
-        // the failed batch must not have mutated the table
+        assert!(t.insert_if_absent_batch(&[(1, 1), (EMPTY_KEY, 2)]).is_err());
+        assert!(t.fetch_add_batch(&[(1, 1), (EMPTY_KEY, 2)]).is_err());
+        // the failed batches must not have mutated the table
         assert_eq!(t.len(), 0);
         assert_eq!(t.lookup_batch(&[EMPTY_KEY, 1]), vec![None, None]);
         assert_eq!(t.delete_batch(&[EMPTY_KEY]), vec![false]);
+        assert_eq!(t.update_batch(&[(EMPTY_KEY, 9)]), vec![None]);
+        assert_eq!(t.cas_batch(&[(EMPTY_KEY, 0, 9)]), vec![(false, None)]);
+    }
+
+    #[test]
+    fn rmw_batches_match_single_op_semantics() {
+        use crate::native::table::RmwInsert;
+        let t = table(64);
+        t.insert_batch(&[(1, 10), (2, 20)]).unwrap();
+        let ups = t.upsert_batch(&[(1, 11), (3, 30)]).unwrap();
+        assert_eq!(ups[0], (InsertOutcome::Replaced, Some(10)));
+        assert_eq!(ups[1].1, None, "fresh key must have no previous value");
+        let ifa: Vec<RmwInsert> = t.insert_if_absent_batch(&[(2, 99), (4, 40)]).unwrap();
+        assert_eq!(ifa[0], (None, Some(20)));
+        assert!(ifa[1].0.is_some() && ifa[1].1.is_none());
+        assert_eq!(t.update_batch(&[(2, 21), (5, 50)]), vec![Some(20), None]);
+        assert_eq!(t.lookup(5), None, "update_batch created a key");
+        assert_eq!(
+            t.cas_batch(&[(2, 21, 22), (2, 99, 0), (5, 0, 1)]),
+            vec![(true, Some(21)), (false, Some(22)), (false, None)]
+        );
+        let fa = t.fetch_add_batch(&[(2, 8), (6, 60)]).unwrap();
+        assert_eq!(fa[0], (None, Some(22)));
+        assert!(fa[1].0.is_some() && fa[1].1.is_none());
+        assert_eq!(t.lookup(2), Some(30));
+        assert_eq!(t.lookup(6), Some(60));
+        assert_eq!(t.len(), 5); // keys 1,2,3,4,6
+    }
+
+    #[test]
+    fn execute_ops_returns_typed_results_in_submission_order() {
+        use crate::workload::{Op, OpResult};
+        let t = table(64);
+        let ops = vec![
+            Op::Lookup { key: 1 },
+            Op::Upsert { key: 1, value: 10 },
+            Op::FetchAdd { key: 2, delta: 5 },
+            Op::Delete { key: 3 },
+            Op::Insert { key: 3, value: 30 },
+            Op::Cas { key: 2, expected: 5, new: 6 },
+            Op::Update { key: 9, value: 90 },
+            Op::InsertIfAbsent { key: 1, value: 99 },
+        ];
+        let res = t.execute_ops(&ops).unwrap();
+        assert_eq!(res.len(), ops.len());
+        // grouped linearization (upserts → if-absents → updates → cas →
+        // fetch-adds → deletes → lookups): writes land before the
+        // window's lookups, deletes after the window's inserts
+        assert_eq!(res[0], OpResult::Value(Some(10)));
+        assert!(matches!(res[1], OpResult::Upserted { old: None, .. }));
+        assert!(matches!(res[2], OpResult::FetchAdded { old: None, .. }));
+        assert_eq!(res[3], OpResult::Deleted(true), "delete groups after the insert of key 3");
+        assert!(matches!(res[4], OpResult::Upserted { old: None, .. }));
+        // CAS groups *before* fetch-add in the class order: key 2 absent
+        assert_eq!(res[5], OpResult::Cas { ok: false, actual: None });
+        assert_eq!(res[6], OpResult::Updated { old: None });
+        assert_eq!(res[7], OpResult::InsertedIfAbsent { outcome: None, existing: Some(10) });
+        assert_eq!(t.lookup(2), Some(5));
+        assert_eq!(t.lookup(3), None, "insert-then-delete window must end absent");
+        // sentinel in an inserting class fails the window pre-mutation
+        let t2 = table(4);
+        assert!(t2
+            .execute_ops(&[Op::Lookup { key: 1 }, Op::FetchAdd { key: EMPTY_KEY, delta: 1 }])
+            .is_err());
+        assert_eq!(t2.len(), 0);
     }
 }

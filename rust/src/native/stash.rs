@@ -87,17 +87,42 @@ impl OverflowStash {
     }
 
     /// Replace the value of `key` if present. Returns true on success.
+    /// Thin wrapper over [`OverflowStash::rmw`] so exactly one CAS-scan
+    /// mutation path exists.
     pub fn replace(&self, key: u32, new_word: u64) -> bool {
+        debug_assert_eq!(unpack_key(new_word), key, "replace word must carry its own key");
+        let value = unpack_value(new_word);
+        matches!(self.rmw(key, &|_| Some(value)), Some((_, true)))
+    }
+
+    /// Atomically read-modify-write the value of `key` if present:
+    /// `f(old)` returns the replacement value, or `None` to leave the
+    /// word untouched. Returns `Some((old, written))` when a slot
+    /// holding `key` was found. The per-slot CAS retries in place while
+    /// the slot still holds `key` (a concurrent replace just changes
+    /// the value), and falls through to the rest of the scan when the
+    /// word moves away (delete / drain retraction) — the caller's
+    /// table-level retry logic covers that window.
+    pub fn rmw(&self, key: u32, f: &dyn Fn(u32) -> Option<u32>) -> Option<(u32, bool)> {
         for slot in self.slots.iter() {
-            let w = slot.load(Ordering::Acquire);
-            if w != EMPTY_WORD
-                && unpack_key(w) == key
-                && slot.compare_exchange(w, new_word, Ordering::AcqRel, Ordering::Relaxed).is_ok()
-            {
-                return true;
+            let mut w = slot.load(Ordering::Acquire);
+            while w != EMPTY_WORD && unpack_key(w) == key {
+                let old = unpack_value(w);
+                let Some(new) = f(old) else {
+                    return Some((old, false));
+                };
+                match slot.compare_exchange(
+                    w,
+                    crate::core::packed::pack(key, new),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => return Some((old, true)),
+                    Err(cur) => w = cur,
+                }
             }
         }
-        false
+        None
     }
 
     /// Delete `key` from the stash; its slot is immediately reusable.
@@ -197,6 +222,20 @@ mod tests {
         assert!(s.push(pack(99, 99)), "freed slot must be claimable");
         assert_eq!(s.lookup(99), Some(99));
         assert_eq!(s.window_len(), 8);
+    }
+
+    #[test]
+    fn rmw_transforms_in_place() {
+        let s = OverflowStash::new(16);
+        assert!(s.rmw(5, &|_| Some(1)).is_none(), "absent key must miss");
+        s.push(pack(5, 10));
+        // decline: value untouched (the CAS-condition-failed shape)
+        assert_eq!(s.rmw(5, &|old| if old == 99 { Some(1) } else { None }), Some((10, false)));
+        assert_eq!(s.lookup(5), Some(10));
+        // apply: the fetch-add shape
+        assert_eq!(s.rmw(5, &|old| Some(old + 7)), Some((10, true)));
+        assert_eq!(s.lookup(5), Some(17));
+        assert_eq!(s.window_len(), 1, "rmw must not change occupancy");
     }
 
     #[test]

@@ -13,6 +13,21 @@
 //! * **Bounded cuckoo eviction** under a short per-bucket spin lock, at most
 //!   `max_evictions` rounds, then the overflow stash.
 //!
+//! ### Conditional / read-modify-write operations
+//! The packed 64-bit word makes every mutation of a *present* key a
+//! single CAS, which the typed operation plane exploits beyond replace:
+//! [`HiveTable::update`] (write-if-present), [`HiveTable::cas`]
+//! (write-if-value-matches) and [`HiveTable::fetch_add`] (CAS-retried
+//! add) all run through one shared probe body (`rmw_core`) that commits
+//! with exactly one CAS per applied write and validates misses exactly
+//! like `lookup`. [`HiveTable::upsert`] returns the value its replace
+//! CAS displaced, and [`HiveTable::insert_if_absent`] reuses the
+//! four-step placement fallback for the inserting case. Concurrent RMW
+//! ops on an *existing* key are exact (every committed CAS applies its
+//! transform to the then-current value once); two racing creators of
+//! the same *absent* key share plain insert's pre-existing duplication
+//! window.
+//!
 //! ### Epoch scheme (no phase lock)
 //! There is no reader-writer phase guard. An operation *pins an epoch*
 //! ([`crate::core::epoch::EpochDomain`]): one RMW on its own padded pin
@@ -112,6 +127,12 @@ pub enum InsertOutcome {
     /// Redirected to the overflow stash (step 4).
     Stashed,
 }
+
+/// Result shape of the inserting RMW classes ([`HiveTable::insert_if_absent`],
+/// [`HiveTable::fetch_add`]): the placement step when this call created
+/// the key, and the pre-existing/pre-add value when it did not. Exactly
+/// one side is `Some`.
+pub type RmwInsert = (Option<InsertOutcome>, Option<u32>);
 
 /// Bucket/metadata arrays. Swapped wholesale on physical reallocation via
 /// the table's `AtomicPtr` (inside the epoch's exclusive phase); all
@@ -359,18 +380,27 @@ impl HiveTable {
         guard.iter().rev().find(|&&w| unpack_key(w) == key).map(|&w| unpack_value(w))
     }
 
-    fn pending_replace(&self, key: u32, word: u64) -> bool {
+    /// Read-modify-write against the pending list (both table and stash
+    /// were full when the word was parked). Same contract as
+    /// [`OverflowStash::rmw`]; exact because the list is mutex-guarded.
+    fn pending_rmw(&self, key: u32, f: &dyn Fn(u32) -> Option<u32>) -> Option<(u32, bool)> {
         if self.pending_len.load(Ordering::Acquire) == 0 {
-            return false;
+            return None;
         }
         let mut guard = self.pending.lock().unwrap();
         for w in guard.iter_mut() {
             if unpack_key(*w) == key {
-                *w = word;
-                return true;
+                let old = unpack_value(*w);
+                return match f(old) {
+                    Some(new) => {
+                        *w = pack(key, new);
+                        Some((old, true))
+                    }
+                    None => Some((old, false)),
+                };
             }
         }
-        false
+        None
     }
 
     fn pending_delete(&self, key: u32) -> bool {
@@ -738,16 +768,26 @@ impl HiveTable {
     }
 
     /// Insert(⟨k,v⟩) / Replace(⟨k,v⟩) — the four-step strategy (§IV-A).
+    /// Alias of [`HiveTable::upsert`] that discards the previous value.
     pub fn insert(&self, key: u32, value: u32) -> Result<InsertOutcome> {
+        self.upsert(key, value).map(|(outcome, _)| outcome)
+    }
+
+    /// Insert or replace `key → value`, returning the placement step and
+    /// the previous value (`None` ⇒ the key was fresh). The packed
+    /// 64-bit word makes the replace a single CAS, so the old value
+    /// comes for free — the typed plane surfaces it instead of
+    /// discarding it.
+    pub fn upsert(&self, key: u32, value: u32) -> Result<(InsertOutcome, Option<u32>)> {
         if key == EMPTY_KEY {
             return Err(HiveError::InvalidKey(key));
         }
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws = self.raw_hashes(key);
-        let outcome = self.insert_core(state, key, value, &raws)?;
+        let (outcome, old) = self.upsert_core(state, key, value, &raws)?;
         self.record_insert_outcome(outcome);
-        Ok(outcome)
+        Ok((outcome, old))
     }
 
     /// Bump the per-step insert counters (shared with the batch layer).
@@ -761,15 +801,17 @@ impl HiveTable {
         }
     }
 
-    /// Insert body, called with an epoch pin held and the raw hashes
-    /// already computed (shared with the batch layer).
-    pub(crate) fn insert_core(
+    /// Upsert body, called with an epoch pin held and the raw hashes
+    /// already computed (shared with the batch layer). Step 1 (Replace,
+    /// Algorithm 1) runs here and reports the value it replaced; the
+    /// claim/evict/stash fallback is [`HiveTable::place_core`].
+    pub(crate) fn upsert_core(
         &self,
         state: &State,
         key: u32,
         value: u32,
         raws: &[u32; 4],
-    ) -> Result<InsertOutcome> {
+    ) -> Result<(InsertOutcome, Option<u32>)> {
         let d = self.family.d();
         let new_word = pack(key, value);
 
@@ -805,7 +847,7 @@ impl HiveTable {
                                 // clear-CAS failure, so the fresh value
                                 // always reaches the partner bucket.
                                 self.purge_shadow(key);
-                                return Ok(InsertOutcome::Replaced);
+                                return Ok((InsertOutcome::Replaced, Some(unpack_value(old))));
                             }
                             self.stats.record_cas_retry();
                         }
@@ -818,11 +860,13 @@ impl HiveTable {
             }
             // Key may be parked in the stash or pending list; replace it
             // there so the eventual drain does not resurrect a stale value.
-            if !self.stash.is_quiescent() && self.stash.replace(key, new_word) {
-                return Ok(InsertOutcome::Replaced);
+            if !self.stash.is_quiescent() {
+                if let Some((old, true)) = self.stash.rmw(key, &|_| Some(value)) {
+                    return Ok((InsertOutcome::Replaced, Some(old)));
+                }
             }
-            if self.pending_replace(key, new_word) {
-                return Ok(InsertOutcome::Replaced);
+            if let Some((old, true)) = self.pending_rmw(key, &|_| Some(value)) {
+                return Ok((InsertOutcome::Replaced, Some(old)));
             }
             if self.stash_stable(de) {
                 break;
@@ -834,7 +878,23 @@ impl HiveTable {
             self.wait_drain_quiesced();
         }
 
-        // ---- Steps 2–4: claim / evict / stash ----
+        self.place_core(state, key, new_word, raws).map(|outcome| (outcome, None))
+    }
+
+    /// Steps 2–4 of the four-step strategy (claim / evict / stash) for a
+    /// key the caller just established as absent: the shared placement
+    /// fallback of every inserting operation class (`upsert`,
+    /// `insert_if_absent`, `fetch_add` on a missing key). Increments the
+    /// live count on every path — stash overflow parks the word pending
+    /// the next resize epoch, never drops it.
+    pub(crate) fn place_core(
+        &self,
+        state: &State,
+        key: u32,
+        new_word: u64,
+        raws: &[u32; 4],
+    ) -> Result<InsertOutcome> {
+        let d = self.family.d();
         'place: loop {
             let (mask, sp) = state.round();
             let cands = Self::route(raws, d, mask, sp);
@@ -883,6 +943,226 @@ impl HiveTable {
                 }
             }
         }
+    }
+
+    /// Shared probe/CAS body of the conditional and read-modify-write
+    /// operations (`update`, `cas`, `fetch_add`, and the find phase of
+    /// `insert_if_absent`): locate `key`, feed its current value to `f`,
+    /// and commit `f`'s replacement (if any) with one 64-bit CAS on the
+    /// packed word — the paper's single-CAS mutation property extended
+    /// beyond replace. Returns `Some((old, written))` when the key was
+    /// found (`written == false` ⇔ `f` declined) and `None` on an
+    /// authoritative miss (validated against migration and stash drains
+    /// exactly like `lookup_core`).
+    ///
+    /// Unlike delete's bounded CAS retry, the per-slot loop here retries
+    /// while the slot still holds `key`: a hot fetch-add counter fails
+    /// its CAS routinely under contention, and falling through to the
+    /// miss path would fabricate an "absent" answer (and, for creating
+    /// callers, a duplicate). Each failed CAS re-reads the slot; the
+    /// loop exits to a full re-probe the moment the word moves away
+    /// (concurrent delete or migration), so every committed CAS applies
+    /// `f` to the then-current value exactly once — no lost updates.
+    ///
+    /// Stash-resident keys RMW in place through [`OverflowStash::rmw`],
+    /// which shares the replace path's drain protocol (and therefore its
+    /// documented transient corner — see the three-corner note in
+    /// `native::resize`: a write that wins on the stash copy can leave
+    /// the drain's just-published stale table copy readable for the
+    /// instants until the drain's `remove_exact` undo).
+    pub(crate) fn rmw_core(
+        &self,
+        state: &State,
+        key: u32,
+        raws: &[u32; 4],
+        f: &dyn Fn(u32) -> Option<u32>,
+    ) -> Option<(u32, bool)> {
+        let d = self.family.d();
+        'retry: loop {
+            // drain-overlap guard: see lookup_core
+            let de = self.drain_epoch.load(Ordering::SeqCst);
+            let (mask, sp) = state.round();
+            let cands = Self::route(raws, d, mask, sp);
+            let mut pre = [0u64; 4];
+            for (i, &b) in cands[..d].iter().enumerate() {
+                let mw = state.masks[b as usize].load(Ordering::SeqCst);
+                if mw & MIGRATING != 0 {
+                    Self::wait_unmarked(state, b);
+                    continue 'retry;
+                }
+                pre[i] = mw;
+                if let Some((lane, mut w)) = Self::wcme_match(state, b, key) {
+                    let slot = state.slot(b, lane);
+                    loop {
+                        let old = unpack_value(w);
+                        let Some(new) = f(old) else {
+                            return Some((old, false));
+                        };
+                        match state.buckets[slot].compare_exchange(
+                            w,
+                            pack(key, new),
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        ) {
+                            Ok(_) => {
+                                // A racing migrator's clear-CAS fails
+                                // against the fresh word and re-copies,
+                                // same as the replace path.
+                                self.purge_shadow(key);
+                                return Some((old, true));
+                            }
+                            Err(cur) => {
+                                self.stats.record_cas_retry();
+                                if cur & 0xFFFF_FFFF == key as u64 {
+                                    w = cur; // value churned: retry in place
+                                } else {
+                                    continue 'retry; // word moved: re-probe
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Miss: confirm no candidate migrated under the probe.
+            if !self.validate_miss(state, raws, &cands, &pre) {
+                continue 'retry;
+            }
+            // The key may live in the stash or the pending list; the RMW
+            // applies there with the same exactness (per-slot CAS /
+            // mutex).
+            if !self.stash.is_quiescent() {
+                if let Some(hit) = self.stash.rmw(key, f) {
+                    return Some(hit);
+                }
+            }
+            if let Some(hit) = self.pending_rmw(key, f) {
+                return Some(hit);
+            }
+            if self.stash_stable(de) {
+                return None;
+            }
+            // a drain overlapped the scan — wait it out, then re-probe
+            self.wait_drain_quiesced();
+        }
+    }
+
+    /// Insert `key → value` only if absent. Returns `(outcome, existing)`:
+    /// `existing == Some(v)` means the key was present with value `v`
+    /// and nothing was written (`outcome` is `None`); otherwise the
+    /// insert landed through the four-step placement path.
+    pub fn insert_if_absent(&self, key: u32, value: u32) -> Result<RmwInsert> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.insert_if_absent_core(state, key, value, &raws)
+    }
+
+    /// `insert_if_absent` body (shared with the batch layer).
+    pub(crate) fn insert_if_absent_core(
+        &self,
+        state: &State,
+        key: u32,
+        value: u32,
+        raws: &[u32; 4],
+    ) -> Result<RmwInsert> {
+        if let Some((existing, _)) = self.rmw_core(state, key, raws, &|_| None) {
+            return Ok((None, Some(existing)));
+        }
+        let outcome = self.place_core(state, key, pack(key, value), raws)?;
+        self.record_insert_outcome(outcome);
+        Ok((Some(outcome), None))
+    }
+
+    /// Replace the value of `key` only if present, returning the
+    /// previous value (`None` ⇒ absent, nothing written). One CAS on the
+    /// packed word.
+    pub fn update(&self, key: u32, value: u32) -> Option<u32> {
+        if key == EMPTY_KEY {
+            return None;
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.update_core(state, key, value, &raws)
+    }
+
+    /// `update` body (shared with the batch layer).
+    pub(crate) fn update_core(
+        &self,
+        state: &State,
+        key: u32,
+        value: u32,
+        raws: &[u32; 4],
+    ) -> Option<u32> {
+        self.rmw_core(state, key, raws, &|_| Some(value)).map(|(old, _)| old)
+    }
+
+    /// Compare-and-swap: store `new` iff the current value of `key`
+    /// equals `expected`. Returns `(ok, actual)` where `actual` is the
+    /// value observed before the op (`None` ⇒ key absent, never a
+    /// match). Lock-free single CAS on the packed word.
+    pub fn cas(&self, key: u32, expected: u32, new: u32) -> (bool, Option<u32>) {
+        if key == EMPTY_KEY {
+            return (false, None);
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.cas_core(state, key, expected, new, &raws)
+    }
+
+    /// `cas` body (shared with the batch layer).
+    pub(crate) fn cas_core(
+        &self,
+        state: &State,
+        key: u32,
+        expected: u32,
+        new: u32,
+        raws: &[u32; 4],
+    ) -> (bool, Option<u32>) {
+        match self.rmw_core(state, key, raws, &|old| (old == expected).then_some(new)) {
+            Some((old, written)) => (written, Some(old)),
+            None => (false, None),
+        }
+    }
+
+    /// Add `delta` (wrapping) to the value of `key`, creating the key at
+    /// value `delta` when absent. Returns `(outcome, old)`: `old` is the
+    /// pre-add value when the key existed (`outcome` `None`), and
+    /// `outcome` is the placement step when this call created the key
+    /// (`old` `None`). CAS-retried on the packed word — concurrent adds
+    /// to an existing key never lose updates.
+    pub fn fetch_add(&self, key: u32, delta: u32) -> Result<RmwInsert> {
+        if key == EMPTY_KEY {
+            return Err(HiveError::InvalidKey(key));
+        }
+        let guard = self.epoch.pin();
+        let state = self.state_ref(&guard);
+        let raws = self.raw_hashes(key);
+        self.fetch_add_core(state, key, delta, &raws)
+    }
+
+    /// `fetch_add` body (shared with the batch layer).
+    pub(crate) fn fetch_add_core(
+        &self,
+        state: &State,
+        key: u32,
+        delta: u32,
+        raws: &[u32; 4],
+    ) -> Result<RmwInsert> {
+        if let Some((old, _)) = self.rmw_core(state, key, raws, &|v| Some(v.wrapping_add(delta))) {
+            return Ok((None, Some(old)));
+        }
+        // Authoritative miss: create the counter at `delta` through the
+        // placement path. (Two racing creators of the same absent key
+        // can still both place — the same pre-existing window as two
+        // racing plain inserts; exactness claims assume the key exists.)
+        let outcome = self.place_core(state, key, pack(key, delta), raws)?;
+        self.record_insert_outcome(outcome);
+        Ok((Some(outcome), None))
     }
 
     /// WABC claim + commit (Algorithm 2) with migration awareness. The
@@ -1228,8 +1508,119 @@ mod tests {
     fn rejects_sentinel_key() {
         let t = small_table(4);
         assert!(matches!(t.insert(EMPTY_KEY, 1), Err(HiveError::InvalidKey(_))));
+        assert!(matches!(t.insert_if_absent(EMPTY_KEY, 1), Err(HiveError::InvalidKey(_))));
+        assert!(matches!(t.fetch_add(EMPTY_KEY, 1), Err(HiveError::InvalidKey(_))));
         assert_eq!(t.lookup(EMPTY_KEY), None);
         assert!(!t.delete(EMPTY_KEY));
+        assert_eq!(t.update(EMPTY_KEY, 1), None);
+        assert_eq!(t.cas(EMPTY_KEY, 0, 1), (false, None));
+    }
+
+    #[test]
+    fn upsert_reports_previous_value() {
+        let t = small_table(16);
+        assert_eq!(t.upsert(9, 90).unwrap(), (InsertOutcome::Inserted, None));
+        assert_eq!(t.upsert(9, 91).unwrap(), (InsertOutcome::Replaced, Some(90)));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.lookup(9), Some(91));
+    }
+
+    #[test]
+    fn insert_if_absent_never_overwrites() {
+        let t = small_table(16);
+        assert_eq!(t.insert_if_absent(3, 30).unwrap(), (Some(InsertOutcome::Inserted), None));
+        assert_eq!(t.insert_if_absent(3, 99).unwrap(), (None, Some(30)));
+        assert_eq!(t.lookup(3), Some(30), "present key overwritten");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn update_only_touches_present_keys() {
+        let t = small_table(16);
+        assert_eq!(t.update(5, 50), None);
+        assert_eq!(t.lookup(5), None, "update must not create keys");
+        assert_eq!(t.len(), 0);
+        t.insert(5, 1).unwrap();
+        assert_eq!(t.update(5, 50), Some(1));
+        assert_eq!(t.lookup(5), Some(50));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn cas_applies_iff_expected_matches() {
+        let t = small_table(16);
+        assert_eq!(t.cas(7, 0, 1), (false, None), "absent key can never match");
+        t.insert(7, 10).unwrap();
+        assert_eq!(t.cas(7, 11, 12), (false, Some(10)), "mismatch must report actual");
+        assert_eq!(t.lookup(7), Some(10));
+        assert_eq!(t.cas(7, 10, 12), (true, Some(10)));
+        assert_eq!(t.lookup(7), Some(12));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fetch_add_creates_then_accumulates() {
+        let t = small_table(16);
+        assert_eq!(t.fetch_add(4, 5).unwrap(), (Some(InsertOutcome::Inserted), None));
+        assert_eq!(t.fetch_add(4, 3).unwrap(), (None, Some(5)));
+        assert_eq!(t.lookup(4), Some(8));
+        // wrapping semantics
+        t.insert(6, u32::MAX).unwrap();
+        assert_eq!(t.fetch_add(6, 2).unwrap(), (None, Some(u32::MAX)));
+        assert_eq!(t.lookup(6), Some(1));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_fetch_add_is_exact_on_one_counter() {
+        let t = Arc::new(small_table(16));
+        t.insert(42, 0).unwrap();
+        let per = 20_000u32;
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for _ in 0..per {
+                        let (outcome, old) = t.fetch_add(42, 1).unwrap();
+                        assert!(outcome.is_none(), "seeded counter must never be re-created");
+                        assert!(old.is_some());
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(t.lookup(42), Some(8 * per), "lost fetch-add updates");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn rmw_reaches_stash_resident_keys() {
+        // Same two-bucket construction as eviction_path_executes: force
+        // keys into the stash, then drive every RMW class against them.
+        let t =
+            HiveTable::new(HiveConfig::default().with_buckets(4).with_max_evictions(8)).unwrap();
+        let fam = t.family().clone();
+        let keys: Vec<u32> = (1..200_000u32)
+            .filter(|&k| {
+                let b0 = fam.bucket(0, k, 3, 0);
+                let b1 = fam.bucket(1, k, 3, 0);
+                b0 <= 1 && b1 <= 1
+            })
+            .take(66)
+            .collect();
+        for &k in &keys {
+            t.insert(k, k).unwrap();
+        }
+        assert!(t.stats().stash_pushes > 0, "construction failed to stash anything");
+        for &k in &keys {
+            assert_eq!(t.update(k, k ^ 1), Some(k), "update lost key {k}");
+            assert_eq!(t.cas(k, k ^ 1, k ^ 2), (true, Some(k ^ 1)), "cas lost key {k}");
+            assert_eq!(t.fetch_add(k, 1).unwrap(), (None, Some(k ^ 2)), "fetch_add lost {k}");
+            assert_eq!(t.lookup(k), Some((k ^ 2).wrapping_add(1)));
+        }
+        assert_eq!(t.len(), keys.len());
     }
 
     #[test]

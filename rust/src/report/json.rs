@@ -95,6 +95,17 @@ pub fn bench_row(size_field: &str, n: usize, system: &str, driver: &str, mops: f
     ])
 }
 
+/// One per-mix bench row: `{mix, system, driver, mops}` — the schema of
+/// the RMW figure (`fig12_rmw`), keyed by mix name instead of size.
+pub fn mix_row(mix: &str, system: &str, driver: &str, mops: f64) -> JsonVal {
+    obj(vec![
+        ("mix", mix.into()),
+        ("system", system.into()),
+        ("driver", driver.into()),
+        ("mops", mops.into()),
+    ])
+}
+
 /// Latency quantiles of a histogram as a JSON object:
 /// `{p50_ns, p99_ns, p999_ns, mean_ns, max_ns, count}` — the standard
 /// latency fields the service figures (fig11) and the `kv_service`
@@ -236,6 +247,14 @@ mod tests {
     fn integers_have_no_decimal_point() {
         assert_eq!(JsonVal::Int(3).render(), "3");
         assert_eq!(JsonVal::Num(3.0).render(), "3");
+    }
+
+    #[test]
+    fn mix_row_has_the_fig12_schema() {
+        assert_eq!(
+            mix_row("rmw_heavy", "HiveHash", "batched", 12.5).render(),
+            r#"{"mix":"rmw_heavy","system":"HiveHash","driver":"batched","mops":12.5}"#
+        );
     }
 
     #[test]

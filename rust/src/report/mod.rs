@@ -126,6 +126,21 @@ pub fn drive_parallel(
                         Op::Delete { key } => {
                             let _ = map.delete(key);
                         }
+                        Op::Upsert { key, value } => {
+                            let _ = map.upsert(key, value);
+                        }
+                        Op::InsertIfAbsent { key, value } => {
+                            let _ = map.insert_if_absent(key, value);
+                        }
+                        Op::Update { key, value } => {
+                            let _ = map.update(key, value);
+                        }
+                        Op::Cas { key, expected, new } => {
+                            let _ = map.cas(key, expected, new);
+                        }
+                        Op::FetchAdd { key, delta } => {
+                            let _ = map.fetch_add(key, delta);
+                        }
                     }
                 }
             });
@@ -137,10 +152,12 @@ pub fn drive_parallel(
 /// Batched counterpart of [`drive_parallel`]: each thread splits its
 /// round-robin shard into `batch`-sized windows and drives every window
 /// through the [`ConcurrentMap`](crate::baselines::ConcurrentMap) batch
-/// methods (inserts, then deletes, then lookups — the same grouped-window
-/// linearization the coordinator's backend applies). Tables without a
-/// bulk fast path fall back to the trait's default loop, so the same
-/// driver compares all baselines fairly.
+/// methods (inserts, then RMW-class ops, then deletes, then lookups —
+/// the same grouped-window linearization shape the coordinator's
+/// backend applies). The conditional/RMW classes ride `execute_ops`, so
+/// tables with a typed bulk fast path (HiveTable) use it and the rest
+/// fall back to the trait's default loop — the same driver compares all
+/// baselines fairly.
 pub fn drive_parallel_batched(
     map: std::sync::Arc<dyn crate::baselines::ConcurrentMap>,
     ops: &[crate::workload::Op],
@@ -158,10 +175,12 @@ pub fn drive_parallel_batched(
             let map = std::sync::Arc::clone(&map);
             s.spawn(move || {
                 let mut ins: Vec<(u32, u32)> = Vec::with_capacity(batch);
+                let mut rmw: Vec<Op> = Vec::with_capacity(batch);
                 let mut del: Vec<u32> = Vec::with_capacity(batch);
                 let mut luk: Vec<u32> = Vec::with_capacity(batch);
                 for window in shard.chunks(batch) {
                     ins.clear();
+                    rmw.clear();
                     del.clear();
                     luk.clear();
                     for op in window {
@@ -169,10 +188,18 @@ pub fn drive_parallel_batched(
                             Op::Insert { key, value } => ins.push((key, value)),
                             Op::Delete { key } => del.push(key),
                             Op::Lookup { key } => luk.push(key),
+                            Op::Upsert { .. }
+                            | Op::InsertIfAbsent { .. }
+                            | Op::Update { .. }
+                            | Op::Cas { .. }
+                            | Op::FetchAdd { .. } => rmw.push(*op),
                         }
                     }
                     if !ins.is_empty() {
                         let _ = map.insert_batch(&ins);
+                    }
+                    if !rmw.is_empty() {
+                        let _ = map.execute_ops(&rmw);
                     }
                     if !del.is_empty() {
                         let _ = map.delete_batch(&del);
@@ -217,6 +244,21 @@ pub fn drive_service_closed(
                         }
                         Op::Delete { key } => {
                             let _ = h.delete(key);
+                        }
+                        Op::Upsert { key, value } => {
+                            let _ = h.upsert(key, value);
+                        }
+                        Op::InsertIfAbsent { key, value } => {
+                            let _ = h.insert_if_absent(key, value);
+                        }
+                        Op::Update { key, value } => {
+                            let _ = h.update(key, value);
+                        }
+                        Op::Cas { key, expected, new } => {
+                            let _ = h.cas(key, expected, new);
+                        }
+                        Op::FetchAdd { key, delta } => {
+                            let _ = h.fetch_add(key, delta);
                         }
                     }
                 }

@@ -8,28 +8,115 @@
 
 use crate::core::packed::EMPTY_KEY;
 use crate::core::rng::{Xoshiro256, Zipf};
+use crate::native::table::InsertOutcome;
 
-/// One table operation with its operands.
+/// One table operation with its operands — the submission side of the
+/// typed operation plane. Every variant yields exactly one [`OpResult`]
+/// in submission order, through every execution path (direct table
+/// calls, `ConcurrentMap` batches, `Backend::execute`, and the
+/// coordinator's `Handle`/`Pipeline`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Op {
-    /// Insert or replace `key → value`.
+    /// Insert or replace `key → value`. Alias of [`Op::Upsert`] — kept
+    /// as the historical name; both execute identically and yield
+    /// [`OpResult::Upserted`].
     Insert { key: u32, value: u32 },
     /// Point lookup.
     Lookup { key: u32 },
     /// Remove `key`.
     Delete { key: u32 },
+    /// Insert or replace `key → value`, reporting the previous value.
+    Upsert { key: u32, value: u32 },
+    /// Insert `key → value` only if the key is absent; never overwrites
+    /// an existing value.
+    InsertIfAbsent { key: u32, value: u32 },
+    /// Replace the value of `key` only if it is present; absent keys are
+    /// left absent.
+    Update { key: u32, value: u32 },
+    /// Conditional write: store `new` iff the current value of `key`
+    /// equals `expected` (absent keys never match).
+    Cas { key: u32, expected: u32, new: u32 },
+    /// Read-modify-write: add `delta` (wrapping) to the value of `key`,
+    /// creating the key with value `delta` when absent.
+    FetchAdd { key: u32, delta: u32 },
 }
 
 impl Op {
     /// The key this operation touches.
     pub fn key(&self) -> u32 {
         match *self {
-            Op::Insert { key, .. } | Op::Lookup { key } | Op::Delete { key } => key,
+            Op::Insert { key, .. }
+            | Op::Lookup { key }
+            | Op::Delete { key }
+            | Op::Upsert { key, .. }
+            | Op::InsertIfAbsent { key, .. }
+            | Op::Update { key, .. }
+            | Op::Cas { key, .. }
+            | Op::FetchAdd { key, .. } => key,
+        }
+    }
+
+    /// `true` for every operation class that can mutate the table
+    /// (everything except `Lookup`). Conditional writes count even when
+    /// their condition ends up failing — callers that need conflict
+    /// detection (the coordinator's cache) must be conservative.
+    pub fn is_write(&self) -> bool {
+        !matches!(self, Op::Lookup { .. })
+    }
+}
+
+/// Typed result of one executed [`Op`], carried end-to-end in
+/// submission order. This replaces the old type-segregated
+/// `backend::BatchResult` (separate `lookups`/`deletes` vectors plus
+/// aggregate insert counters) that callers had to re-correlate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpResult {
+    /// `Lookup`: the value, if the key was present.
+    Value(Option<u32>),
+    /// `Delete`: `true` if the key was present and removed.
+    Deleted(bool),
+    /// `Insert`/`Upsert`: which four-step path placed the write, and the
+    /// value it replaced (`None` ⇒ the key was fresh).
+    Upserted { outcome: InsertOutcome, old: Option<u32> },
+    /// `InsertIfAbsent`: when the key was already present, `existing`
+    /// holds its value and nothing was written (`outcome` is `None`);
+    /// otherwise the insert landed via `outcome`.
+    InsertedIfAbsent { outcome: Option<InsertOutcome>, existing: Option<u32> },
+    /// `Update`: the previous value when the key was present (the write
+    /// applied); `None` ⇒ absent, nothing written.
+    Updated { old: Option<u32> },
+    /// `Cas`: `ok` ⇔ `expected` matched and the swap applied; `actual`
+    /// is the value observed before the op (`None` ⇒ key absent).
+    Cas { ok: bool, actual: Option<u32> },
+    /// `FetchAdd`: `old` is the pre-add value when the key existed;
+    /// `None` ⇒ the key was created holding the delta (placed via
+    /// `outcome`).
+    FetchAdded { outcome: Option<InsertOutcome>, old: Option<u32> },
+}
+
+impl OpResult {
+    /// The lookup payload, if this is a `Value` result.
+    pub fn as_value(&self) -> Option<Option<u32>> {
+        match *self {
+            OpResult::Value(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The delete hit flag, if this is a `Deleted` result.
+    pub fn as_deleted(&self) -> Option<bool> {
+        match *self {
+            OpResult::Deleted(hit) => Some(hit),
+            _ => None,
         }
     }
 }
 
-/// Mixed-workload ratios (must sum to 1.0).
+/// Mixed-workload ratios (must sum to 1.0). The three paper classes
+/// (`insert`/`lookup`/`delete`) are joined by the typed-plane RMW
+/// classes (`upsert`/`cas`/`fetch_add`); generators that predate the
+/// RMW plane ([`mixed`], [`zipf_mixed`]) assert the RMW fractions are
+/// zero.
 #[derive(Debug, Clone, Copy)]
 pub struct Mix {
     /// Fraction of inserts.
@@ -38,17 +125,48 @@ pub struct Mix {
     pub lookup: f64,
     /// Fraction of deletes.
     pub delete: f64,
+    /// Fraction of upserts (insert-or-replace returning the old value).
+    pub upsert: f64,
+    /// Fraction of compare-and-swap ops.
+    pub cas: f64,
+    /// Fraction of fetch-add ops.
+    pub fetch_add: f64,
 }
 
 impl Mix {
+    /// Build a paper-style three-class mix (RMW fractions zero).
+    pub const fn classic(insert: f64, lookup: f64, delete: f64) -> Mix {
+        Mix { insert, lookup, delete, upsert: 0.0, cas: 0.0, fetch_add: 0.0 }
+    }
+
     /// The paper's Fig. 8 imbalanced mix 0.5 : 0.3 : 0.2.
-    pub const PAPER_IMBALANCED: Mix = Mix { insert: 0.5, lookup: 0.3, delete: 0.2 };
+    pub const PAPER_IMBALANCED: Mix = Mix::classic(0.5, 0.3, 0.2);
     /// Insert-only (bulk build).
-    pub const INSERT_ONLY: Mix = Mix { insert: 1.0, lookup: 0.0, delete: 0.0 };
+    pub const INSERT_ONLY: Mix = Mix::classic(1.0, 0.0, 0.0);
     /// Lookup-only (bulk query).
-    pub const LOOKUP_ONLY: Mix = Mix { insert: 0.0, lookup: 1.0, delete: 0.0 };
+    pub const LOOKUP_ONLY: Mix = Mix::classic(0.0, 1.0, 0.0);
     /// Read-heavy serving mix (fig10's skewed-cache scenario).
-    pub const READ_HEAVY: Mix = Mix { insert: 0.10, lookup: 0.85, delete: 0.05 };
+    pub const READ_HEAVY: Mix = Mix::classic(0.10, 0.85, 0.05);
+    /// RMW-heavy mix for the typed operation plane (fig12): counters,
+    /// dedup and optimistic-concurrency traffic dominate.
+    pub const RMW_HEAVY: Mix = Mix {
+        insert: 0.05,
+        lookup: 0.20,
+        delete: 0.05,
+        upsert: 0.20,
+        cas: 0.25,
+        fetch_add: 0.25,
+    };
+
+    /// Sum of every class fraction (validated to 1.0 by the generators).
+    pub fn total(&self) -> f64 {
+        self.insert + self.lookup + self.delete + self.upsert + self.cas + self.fetch_add
+    }
+
+    /// Sum of the RMW-class fractions.
+    pub fn rmw_total(&self) -> f64 {
+        self.upsert + self.cas + self.fetch_add
+    }
 }
 
 /// `n` unique uniformly distributed keys (no EMPTY sentinel, no dups),
@@ -102,7 +220,8 @@ pub fn bulk_lookup(keys: &[u32]) -> Vec<Op> {
 /// target previously inserted keys (uniformly chosen); inserts use fresh
 /// unique keys. Deterministic in `seed`.
 pub fn mixed(n: usize, mix: Mix, seed: u64) -> Vec<Op> {
-    assert!((mix.insert + mix.lookup + mix.delete - 1.0).abs() < 1e-9);
+    assert!((mix.total() - 1.0).abs() < 1e-9);
+    assert!(mix.rmw_total() < 1e-12, "mixed() is a three-class generator; use rmw_mixed()");
     let mut rng = Xoshiro256::seeded(seed);
     let fresh = unique_uniform_keys(n, seed ^ 0xDEAD_BEEF);
     let mut live: Vec<u32> = Vec::with_capacity(n);
@@ -156,7 +275,8 @@ pub fn zipf_mixed(n: usize, mix: Mix, theta: f64, seed: u64) -> Vec<Op> {
 /// adversarial pattern for any cache whose eviction lags a popularity
 /// shift.
 pub fn zipf_mixed_shift(n: usize, mix: Mix, theta: f64, phases: usize, seed: u64) -> Vec<Op> {
-    assert!((mix.insert + mix.lookup + mix.delete - 1.0).abs() < 1e-9);
+    assert!((mix.total() - 1.0).abs() < 1e-9);
+    assert!(mix.rmw_total() < 1e-12, "zipf_mixed is a three-class generator; use rmw_mixed()");
     assert!(phases >= 1, "at least one phase");
     let universe = zipf_mixed_universe(n, seed);
     let m = universe.len();
@@ -179,6 +299,75 @@ pub fn zipf_mixed_shift(n: usize, mix: Mix, theta: f64, phases: usize, seed: u64
             }
         })
         .collect()
+}
+
+/// Universe backing an [`rmw_mixed`] stream of `n` ops — exposed so
+/// drivers can pre-populate (or size tables for) exactly the keys the
+/// stream will touch.
+pub fn rmw_universe(n: usize, seed: u64) -> Vec<u32> {
+    unique_uniform_keys((n / 16).max(64), seed ^ 0x4D57_CAFE)
+}
+
+/// RMW-class mixed stream for the typed operation plane: op classes
+/// drawn from the full six-class `mix`, keys drawn uniformly over the
+/// [`rmw_universe`] churn set. The generator tracks a sequential model
+/// of the table so conditional ops are meaningful: a `Cas` carries the
+/// model's current value as `expected` ~80 % of the time (a hit when
+/// replayed sequentially) and a deliberately stale value otherwise, and
+/// the model applies exactly the plane's semantics (CAS writes iff
+/// `expected` matches, fetch-add creates absent keys at `delta`).
+/// Deterministic in `seed`; replaying against any correct sequential
+/// implementation reproduces the model's results op for op.
+pub fn rmw_mixed(n: usize, mix: Mix, seed: u64) -> Vec<Op> {
+    assert!((mix.total() - 1.0).abs() < 1e-9);
+    let universe = rmw_universe(n, seed);
+    let m = universe.len() as u64;
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut model: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut ops = Vec::with_capacity(n);
+    for i in 0..n {
+        let key = universe[rng.below(m) as usize];
+        let fresh = (i as u32).rotate_left(11) ^ key ^ 0x5EED;
+        let r = rng.f64();
+        let t1 = mix.insert;
+        let t2 = t1 + mix.upsert;
+        let t3 = t2 + mix.cas;
+        let t4 = t3 + mix.fetch_add;
+        let t5 = t4 + mix.lookup;
+        let op = if r < t1 {
+            model.insert(key, fresh);
+            Op::Insert { key, value: fresh }
+        } else if r < t2 {
+            model.insert(key, fresh);
+            Op::Upsert { key, value: fresh }
+        } else if r < t3 {
+            // ~80 % of CAS ops carry the model's current value (a hit on
+            // present keys); the rest race a stale expectation
+            let current = model.get(&key).copied();
+            let expected = match current {
+                Some(v) if rng.f64() < 0.8 => v,
+                _ => fresh ^ 0xA5A5,
+            };
+            if current == Some(expected) {
+                model.insert(key, fresh);
+            }
+            Op::Cas { key, expected, new: fresh }
+        } else if r < t4 {
+            let delta = (rng.next_u32() & 0xFF) + 1;
+            let e = model.entry(key).or_insert(0);
+            // the plane creates absent keys at `delta`; the entry starts
+            // at 0 here so the one wrapping_add below covers both cases
+            *e = e.wrapping_add(delta);
+            Op::FetchAdd { key, delta }
+        } else if r < t5 {
+            Op::Lookup { key }
+        } else {
+            model.remove(&key);
+            Op::Delete { key }
+        };
+        ops.push(op);
+    }
+    ops
 }
 
 #[cfg(test)]
@@ -367,5 +556,83 @@ mod tests {
         for op in ops {
             assert!(set.contains(&op.key()));
         }
+    }
+
+    #[test]
+    fn rmw_mixed_is_deterministic_and_in_universe() {
+        let ops = rmw_mixed(10_000, Mix::RMW_HEAVY, 77);
+        assert_eq!(ops, rmw_mixed(10_000, Mix::RMW_HEAVY, 77));
+        assert_ne!(ops, rmw_mixed(10_000, Mix::RMW_HEAVY, 78));
+        let universe: std::collections::HashSet<u32> =
+            rmw_universe(10_000, 77).into_iter().collect();
+        for op in &ops {
+            assert!(universe.contains(&op.key()), "key outside the RMW universe");
+        }
+    }
+
+    #[test]
+    fn rmw_mixed_ratios_approximate_target() {
+        let ops = rmw_mixed(100_000, Mix::RMW_HEAVY, 13);
+        let frac = |pred: &dyn Fn(&Op) -> bool| -> f64 {
+            ops.iter().filter(|o| pred(o)).count() as f64 / ops.len() as f64
+        };
+        assert!((frac(&|o| matches!(o, Op::Insert { .. })) - 0.05).abs() < 0.01);
+        assert!((frac(&|o| matches!(o, Op::Upsert { .. })) - 0.20).abs() < 0.01);
+        assert!((frac(&|o| matches!(o, Op::Cas { .. })) - 0.25).abs() < 0.01);
+        assert!((frac(&|o| matches!(o, Op::FetchAdd { .. })) - 0.25).abs() < 0.01);
+        assert!((frac(&|o| matches!(o, Op::Lookup { .. })) - 0.20).abs() < 0.01);
+        assert!((frac(&|o| matches!(o, Op::Delete { .. })) - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn rmw_mixed_cas_expectations_mostly_hit_sequentially() {
+        // Replaying the stream against a sequential model, a meaningful
+        // share of CAS ops must succeed (the generator aims ~80 % of CAS
+        // ops at the model's live value) and a meaningful share must
+        // fail — both arms of the conditional path get exercised.
+        let ops = rmw_mixed(50_000, Mix::RMW_HEAVY, 21);
+        let mut model: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        let (mut cas_ok, mut cas_fail) = (0usize, 0usize);
+        for op in &ops {
+            match *op {
+                Op::Insert { key, value } | Op::Upsert { key, value } => {
+                    model.insert(key, value);
+                }
+                Op::Update { key, value } => {
+                    if let Some(v) = model.get_mut(&key) {
+                        *v = value;
+                    }
+                }
+                Op::InsertIfAbsent { key, value } => {
+                    model.entry(key).or_insert(value);
+                }
+                Op::Cas { key, expected, new } => {
+                    if model.get(&key) == Some(&expected) {
+                        model.insert(key, new);
+                        cas_ok += 1;
+                    } else {
+                        cas_fail += 1;
+                    }
+                }
+                Op::FetchAdd { key, delta } => {
+                    let e = model.entry(key).or_insert(0);
+                    *e = e.wrapping_add(delta);
+                }
+                Op::Lookup { .. } => {}
+                Op::Delete { key } => {
+                    model.remove(&key);
+                }
+            }
+        }
+        let total = (cas_ok + cas_fail) as f64;
+        assert!(cas_ok as f64 / total > 0.5, "CAS hit rate {:.2}", cas_ok as f64 / total);
+        assert!(cas_fail as f64 / total > 0.05, "CAS miss rate {:.2}", cas_fail as f64 / total);
+    }
+
+    #[test]
+    fn classic_generators_reject_rmw_fractions() {
+        let bad = Mix { lookup: 0.8, ..Mix::RMW_HEAVY };
+        assert!(std::panic::catch_unwind(|| mixed(10, bad, 1)).is_err());
+        assert!(std::panic::catch_unwind(|| zipf_mixed(10, bad, 0.9, 1)).is_err());
     }
 }

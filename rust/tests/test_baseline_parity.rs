@@ -41,6 +41,7 @@ fn all_tables_agree_on_sequential_mixed_stream() {
                         table.name()
                     );
                 }
+                _ => unreachable!("mixed() emits only insert/lookup/delete"),
             }
         }
         assert_eq!(table.len(), spec.len(), "{} final count", table.name());

@@ -38,6 +38,7 @@ fn replay_batched(t: &HiveTable, ops: &[Op]) {
                 let keys: Vec<u32> = ops[i..j].iter().map(|o| o.key()).collect();
                 t.delete_batch(&keys);
             }
+            _ => unreachable!("mixed() emits only insert/lookup/delete"),
         }
         i = j;
     }

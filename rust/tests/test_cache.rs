@@ -177,6 +177,7 @@ fn apply_ref(map: &mut std::collections::HashMap<u32, u32>, op: &Op) -> RefReply
         }
         Op::Lookup { key } => RefReply::Value(map.get(&key).copied()),
         Op::Delete { key } => RefReply::Deleted(map.remove(&key).is_some()),
+        _ => unreachable!("zipf_mixed emits only insert/lookup/delete"),
     }
 }
 
@@ -285,8 +286,8 @@ fn differential_bulk_windows_and_hot_set_shift() {
             let mut deletes = Vec::new();
             for window in ops.chunks(512) {
                 let res = h.submit(window).unwrap();
-                lookups.extend(res.lookups);
-                deletes.extend(res.deletes);
+                lookups.extend(res.iter().filter_map(|r| r.as_value()));
+                deletes.extend(res.iter().filter_map(|r| r.as_deleted()));
             }
             let hits = h.stats().unwrap().cache_hits;
             coord.shutdown();
@@ -323,4 +324,86 @@ fn differential_bulk_windows_and_hot_set_shift() {
         assert_eq!(luk_on, &luk_ref, "{label}: diverged from grouped reference");
         assert_eq!(del_on, &del_ref, "{label}: deletes diverged from grouped reference");
     }
+}
+
+/// Stale-read coverage for the typed write classes (ISSUE 5 satellite):
+/// every RMW class must retire the cached copy of its key before the
+/// next lookup, and applied CAS/Update results may repopulate the cache
+/// — with exactly the post-write value.
+#[test]
+fn rmw_write_classes_invalidate_cached_reads() {
+    let (coord, h) = Coordinator::start(cached_cfg(1, 64), |_w| {
+        Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(64))?) as _)
+    })
+    .unwrap();
+    let k = 0xAB;
+    assert_eq!(h.insert(k, 1).unwrap(), hivehash::InsertOutcome::Inserted);
+    // double lookup: fill, then (typically) a cache hit
+    assert_eq!(h.lookup(k).unwrap(), Some(1));
+    assert_eq!(h.lookup(k).unwrap(), Some(1));
+    assert_eq!(h.update(k, 2).unwrap(), Some(1));
+    assert_eq!(h.lookup(k).unwrap(), Some(2), "update served stale");
+    assert_eq!(h.lookup(k).unwrap(), Some(2), "update repopulated a stale value");
+    assert_eq!(h.cas(k, 2, 3).unwrap(), (true, Some(2)));
+    assert_eq!(h.lookup(k).unwrap(), Some(3), "cas served stale");
+    assert_eq!(h.lookup(k).unwrap(), Some(3), "cas repopulated a stale value");
+    assert_eq!(h.cas(k, 99, 0).unwrap(), (false, Some(3)));
+    assert_eq!(h.lookup(k).unwrap(), Some(3), "failed cas must not disturb the value");
+    assert_eq!(h.fetch_add(k, 4).unwrap(), Some(3));
+    assert_eq!(h.lookup(k).unwrap(), Some(7), "fetch_add served stale");
+    assert_eq!(h.insert_if_absent(k, 99).unwrap(), Some(7));
+    assert_eq!(h.lookup(k).unwrap(), Some(7), "if-absent hit must not disturb the value");
+    assert_eq!(h.upsert(k, 9).unwrap().1, Some(7));
+    assert_eq!(h.lookup(k).unwrap(), Some(9), "upsert served stale");
+    assert!(h.delete(k).unwrap());
+    assert_eq!(h.insert_if_absent(k, 5).unwrap(), None);
+    assert_eq!(h.lookup(k).unwrap(), Some(5), "re-created key served a pre-delete value");
+    let s = h.stats().unwrap();
+    assert!(s.cache_hits > 0, "battery never exercised the hit path: {}", s.summary());
+    assert!(s.cache_invalidations > 0, "writes never invalidated: {}", s.summary());
+    coord.shutdown();
+}
+
+/// Bulk differential for the RMW classes: the same `rmw_mixed` stream
+/// submitted in multi-op windows with the cache on and off must produce
+/// identical typed results (normalized over placement outcomes, which
+/// are timing-dependent only in their evict/stash attribution).
+#[test]
+fn differential_rmw_windows_cache_on_off() {
+    use hivehash::OpResult;
+    let seed = test_seed() ^ 0x4D57;
+    let n = 20_000;
+    let ops = workload::rmw_mixed(n, Mix::RMW_HEAVY, seed);
+    let norm = |r: &OpResult| -> (u8, Option<u32>, bool) {
+        match *r {
+            OpResult::Value(v) => (0, v, false),
+            OpResult::Deleted(hit) => (1, None, hit),
+            OpResult::Upserted { old, .. } => (2, old, true),
+            OpResult::InsertedIfAbsent { existing, .. } => (3, existing, existing.is_none()),
+            OpResult::Updated { old } => (4, old, old.is_some()),
+            OpResult::Cas { ok, actual } => (5, actual, ok),
+            OpResult::FetchAdded { old, .. } => (6, old, old.is_none()),
+        }
+    };
+    let mut runs: Vec<(Vec<(u8, Option<u32>, bool)>, u64)> = Vec::new();
+    for cache_capacity in [2048usize, 0] {
+        let cfg = CoordinatorConfig { cache_capacity, ..cached_cfg(2, 512) };
+        let (coord, h) = Coordinator::start(cfg, |_w| {
+            Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(64))?) as _)
+        })
+        .unwrap();
+        let mut results = Vec::with_capacity(n);
+        for window in ops.chunks(512) {
+            let res = h.submit(window).unwrap();
+            results.extend(res.iter().map(&norm));
+        }
+        let hits = h.stats().unwrap().cache_hits;
+        coord.shutdown();
+        runs.push((results, hits));
+    }
+    let (res_on, hits_on) = &runs[0];
+    let (res_off, hits_off) = &runs[1];
+    assert!(*hits_on > 0, "cached RMW run produced no hits");
+    assert_eq!(*hits_off, 0, "uncached run served from a cache");
+    assert_eq!(res_on, res_off, "cache changed a typed RMW result");
 }

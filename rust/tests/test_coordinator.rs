@@ -31,6 +31,7 @@ where
 
     for window in ops.chunks(1000) {
         let res = h.submit(window).unwrap();
+        assert_eq!(res.len(), window.len(), "one typed result per op");
         // apply the same window semantics to the reference
         for op in window {
             if let Op::Insert { key, value } = *op {
@@ -42,21 +43,175 @@ where
                 reference.remove(&key);
             }
         }
-        let mut li = 0;
-        for op in window {
+        // typed results come back in submission order
+        for (op, r) in window.iter().zip(&res) {
             if let Op::Lookup { key } = *op {
                 assert_eq!(
-                    res.lookups[li],
+                    r.as_value().expect("lookup yields Value"),
                     reference.get(&key).copied(),
                     "lookup divergence on key {key}"
                 );
-                li += 1;
             }
         }
     }
     let stats = h.stats().unwrap();
     assert_eq!(stats.ops, 20_000);
     coord.shutdown();
+}
+
+/// Normalize a typed result for cross-backend comparison: placement
+/// outcomes are substrate-specific (native attributes evict/stash, the
+/// composed substrates only fresh/replace), but the semantic payload —
+/// found value, previous value, verdict — must be identical everywhere.
+fn norm(r: &hivehash::OpResult) -> (u8, Option<u32>, bool) {
+    use hivehash::OpResult;
+    match *r {
+        OpResult::Value(v) => (0, v, false),
+        OpResult::Deleted(hit) => (1, None, hit),
+        OpResult::Upserted { old, .. } => (2, old, true),
+        OpResult::InsertedIfAbsent { existing, .. } => (3, existing, existing.is_none()),
+        OpResult::Updated { old } => (4, old, old.is_some()),
+        OpResult::Cas { ok, actual } => (5, actual, ok),
+        OpResult::FetchAdded { old, .. } => (6, old, old.is_none()),
+    }
+}
+
+/// Apply one window to a reference map with the backends' grouped class
+/// order (upserts → if-absents → updates → cas → fetch-adds → deletes →
+/// lookups), returning normalized expected results in submission order.
+fn apply_grouped_window(
+    reference: &mut std::collections::HashMap<u32, u32>,
+    window: &[Op],
+) -> Vec<(u8, Option<u32>, bool)> {
+    let mut out: Vec<Option<(u8, Option<u32>, bool)>> = vec![None; window.len()];
+    for (i, op) in window.iter().enumerate() {
+        if let Op::Insert { key, value } | Op::Upsert { key, value } = *op {
+            let old = reference.insert(key, value);
+            out[i] = Some((2, old, true));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::InsertIfAbsent { key, value } = *op {
+            let existing = reference.get(&key).copied();
+            if existing.is_none() {
+                reference.insert(key, value);
+            }
+            out[i] = Some((3, existing, existing.is_none()));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::Update { key, value } = *op {
+            let old = reference.get(&key).copied();
+            if old.is_some() {
+                reference.insert(key, value);
+            }
+            out[i] = Some((4, old, old.is_some()));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::Cas { key, expected, new } = *op {
+            let actual = reference.get(&key).copied();
+            let ok = actual == Some(expected);
+            if ok {
+                reference.insert(key, new);
+            }
+            out[i] = Some((5, actual, ok));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::FetchAdd { key, delta } = *op {
+            let old = reference.get(&key).copied();
+            reference.insert(key, old.unwrap_or(0).wrapping_add(delta));
+            out[i] = Some((6, old, old.is_none()));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::Delete { key } = *op {
+            out[i] = Some((1, None, reference.remove(&key).is_some()));
+        }
+    }
+    for (i, op) in window.iter().enumerate() {
+        if let Op::Lookup { key } = *op {
+            out[i] = Some((0, reference.get(&key).copied(), false));
+        }
+    }
+    out.into_iter().map(|r| r.expect("one expected result per op")).collect()
+}
+
+/// Replay an RMW-heavy typed stream through a coordinator and
+/// cross-check every typed result against the grouped-window reference.
+/// Valid for sharded execution: same-key ops always co-shard, and
+/// different-key ops commute, so the full-window grouped reference
+/// equals the product of the per-shard grouped executions.
+fn verify_rmw_backend_through_service<F>(factory: F, workers: usize)
+where
+    F: Fn(usize) -> hivehash::core::error::Result<Box<dyn Backend>> + Send + Sync + 'static,
+{
+    let (coord, h) = Coordinator::start(cfg(workers), factory).unwrap();
+    // widen: rmw_mixed emits upsert/cas/fetch-add; remap a slice of the
+    // upserts onto Update and InsertIfAbsent so every class crosses
+    // every backend (the reference recomputes from the widened stream)
+    let ops: Vec<Op> = workload::rmw_mixed(20_000, Mix::RMW_HEAVY, 0x12D)
+        .into_iter()
+        .enumerate()
+        .map(|(i, op)| match op {
+            Op::Upsert { key, value } if i % 5 == 0 => Op::Update { key, value },
+            Op::Upsert { key, value } if i % 5 == 1 => Op::InsertIfAbsent { key, value },
+            other => other,
+        })
+        .collect();
+    let mut reference = std::collections::HashMap::new();
+    for window in ops.chunks(512) {
+        let res = h.submit(window).unwrap();
+        let expected = apply_grouped_window(&mut reference, window);
+        for ((op, r), want) in window.iter().zip(&res).zip(&expected) {
+            assert_eq!(&norm(r), want, "typed divergence on {op:?}");
+        }
+    }
+    // final state: every universe key agrees with the reference
+    let universe = workload::rmw_universe(20_000, 0x12D);
+    let finals = h.lookup_batch(&universe).unwrap();
+    for (k, got) in universe.iter().zip(finals) {
+        assert_eq!(got, reference.get(k).copied(), "final divergence on key {k}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn native_backend_rmw_service_consistency() {
+    verify_rmw_backend_through_service(
+        |_w| Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(256))?) as _),
+        4,
+    );
+}
+
+#[test]
+fn simt_backend_rmw_service_consistency() {
+    verify_rmw_backend_through_service(
+        |_w| {
+            Ok(Box::new(SimtBackend::new(SimHiveConfig {
+                n_buckets: 512,
+                ..Default::default()
+            })) as _)
+        },
+        2,
+    );
+}
+
+#[test]
+fn xla_backend_rmw_service_consistency() {
+    if hivehash::runtime::Runtime::open_default().is_err() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    verify_rmw_backend_through_service(
+        |_w| {
+            let rt = std::sync::Arc::new(hivehash::runtime::Runtime::open_default()?);
+            let class = rt.classes()[0];
+            Ok(Box::new(XlaBackend::new(rt, class)?) as _)
+        },
+        2,
+    );
 }
 
 #[test]
@@ -118,7 +273,7 @@ fn service_handles_interleaved_single_and_bulk() {
     t.join().unwrap();
     let lookups: Vec<Op> = (10_001..=10_500u32).map(|k| Op::Lookup { key: k }).collect();
     let r = h.submit(&lookups).unwrap();
-    assert!(r.lookups.iter().all(Option::is_some));
+    assert!(r.iter().all(|x| matches!(x.as_value(), Some(Some(_)))));
     coord.shutdown();
 }
 

@@ -1,0 +1,432 @@
+//! Typed operation plane (ISSUE 5 tentpole tests).
+//!
+//! Two batteries:
+//!
+//! * **Differential oracle** — one `rmw_mixed` stream replayed through
+//!   the native table's typed single-op methods, its grouped
+//!   `execute_ops` windows, `ShardedStd`'s shard-lock overrides, and a
+//!   plain `Mutex<HashMap>` wrapper that exercises the `ConcurrentMap`
+//!   trait's *default* composed impls — all cross-checked op-for-op
+//!   against a sequential reference (placement outcomes normalized:
+//!   they are substrate detail, the semantic payload is the contract).
+//! * **Concurrent exactness** — CAS and fetch-add hammering shared keys
+//!   while live K-bucket migration, shrink/grow churn and stash drains
+//!   run underneath: no lost updates, every returned `old` value
+//!   witnessed exactly once.
+//!
+//! Interleaving-sensitive schedules derive from `HIVE_TEST_SEED` (CI
+//! runs a small seed matrix).
+
+use hivehash::baselines::{ConcurrentMap, ShardedStd};
+use hivehash::core::error::Result;
+use hivehash::workload::{self, Mix, Op, OpResult};
+use hivehash::{HiveConfig, HiveTable};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn test_seed() -> u64 {
+    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x0905)
+}
+
+/// Normalized semantic payload of a typed result: class tag, the
+/// found/previous value, and the applied/hit verdict. Placement
+/// outcomes (claim vs evict vs stash) are load- and substrate-dependent
+/// and deliberately excluded.
+type Norm = (u8, Option<u32>, bool);
+
+fn norm(r: &OpResult) -> Norm {
+    match *r {
+        OpResult::Value(v) => (0, v, false),
+        OpResult::Deleted(hit) => (1, None, hit),
+        OpResult::Upserted { old, .. } => (2, old, true),
+        OpResult::InsertedIfAbsent { existing, .. } => (3, existing, existing.is_none()),
+        OpResult::Updated { old } => (4, old, old.is_some()),
+        OpResult::Cas { ok, actual } => (5, actual, ok),
+        OpResult::FetchAdded { old, .. } => (6, old, old.is_none()),
+    }
+}
+
+/// Sequential reference semantics of one op.
+fn apply_seq(map: &mut HashMap<u32, u32>, op: &Op) -> Norm {
+    match *op {
+        Op::Insert { key, value } | Op::Upsert { key, value } => {
+            (2, map.insert(key, value), true)
+        }
+        Op::InsertIfAbsent { key, value } => {
+            let existing = map.get(&key).copied();
+            if existing.is_none() {
+                map.insert(key, value);
+            }
+            (3, existing, existing.is_none())
+        }
+        Op::Update { key, value } => {
+            let old = map.get(&key).copied();
+            if old.is_some() {
+                map.insert(key, value);
+            }
+            (4, old, old.is_some())
+        }
+        Op::Cas { key, expected, new } => {
+            let actual = map.get(&key).copied();
+            let ok = actual == Some(expected);
+            if ok {
+                map.insert(key, new);
+            }
+            (5, actual, ok)
+        }
+        Op::FetchAdd { key, delta } => {
+            let old = map.get(&key).copied();
+            map.insert(key, old.unwrap_or(0).wrapping_add(delta));
+            (6, old, old.is_none())
+        }
+        Op::Lookup { key } => (0, map.get(&key).copied(), false),
+        Op::Delete { key } => (1, None, map.remove(&key).is_some()),
+    }
+}
+
+/// Grouped-window reference: the backends' class order (upserts →
+/// if-absents → updates → cas → fetch-adds → deletes → lookups),
+/// results in submission order.
+fn apply_grouped(map: &mut HashMap<u32, u32>, window: &[Op]) -> Vec<Norm> {
+    let mut out: Vec<Option<Norm>> = vec![None; window.len()];
+    let class_of = |op: &Op| -> u8 {
+        match op {
+            Op::Insert { .. } | Op::Upsert { .. } => 0,
+            Op::InsertIfAbsent { .. } => 1,
+            Op::Update { .. } => 2,
+            Op::Cas { .. } => 3,
+            Op::FetchAdd { .. } => 4,
+            Op::Delete { .. } => 5,
+            Op::Lookup { .. } => 6,
+        }
+    };
+    for class in 0..=6u8 {
+        for (i, op) in window.iter().enumerate() {
+            if class_of(op) == class {
+                out[i] = Some(apply_seq(map, op));
+            }
+        }
+    }
+    out.into_iter().map(|r| r.expect("one result per op")).collect()
+}
+
+/// Widen an `rmw_mixed` stream to the full typed vocabulary: the
+/// generator (per the fig12 spec) emits upsert/cas/fetch-add as its RMW
+/// classes, so remap a deterministic slice of the upserts onto `Update`
+/// and `InsertIfAbsent` — the differential and race batteries then
+/// exercise every class, with the oracles recomputing expectations from
+/// the widened stream.
+fn widen(ops: Vec<Op>) -> Vec<Op> {
+    ops.into_iter()
+        .enumerate()
+        .map(|(i, op)| match op {
+            Op::Upsert { key, value } if i % 5 == 0 => Op::Update { key, value },
+            Op::Upsert { key, value } if i % 5 == 1 => Op::InsertIfAbsent { key, value },
+            other => other,
+        })
+        .collect()
+}
+
+/// Drive the typed single-op methods one at a time (the strictly
+/// sequential path, as opposed to `execute_ops`, which tables may
+/// group).
+fn replay_typed(map: &dyn ConcurrentMap, ops: &[Op]) -> Vec<Norm> {
+    ops.iter()
+        .map(|op| match *op {
+            Op::Insert { key, value } | Op::Upsert { key, value } => {
+                (2, map.upsert(key, value).unwrap(), true)
+            }
+            Op::InsertIfAbsent { key, value } => {
+                let existing = map.insert_if_absent(key, value).unwrap();
+                (3, existing, existing.is_none())
+            }
+            Op::Update { key, value } => {
+                let old = map.update(key, value).unwrap();
+                (4, old, old.is_some())
+            }
+            Op::Cas { key, expected, new } => {
+                let (ok, actual) = map.cas(key, expected, new).unwrap();
+                (5, actual, ok)
+            }
+            Op::FetchAdd { key, delta } => {
+                let old = map.fetch_add(key, delta).unwrap();
+                (6, old, old.is_none())
+            }
+            Op::Lookup { key } => (0, map.lookup(key), false),
+            Op::Delete { key } => (1, None, map.delete(key)),
+        })
+        .collect()
+}
+
+/// Mutex<HashMap> map that implements ONLY the core five methods, so
+/// every typed op runs the `ConcurrentMap` trait's composed defaults.
+struct PlainStd(Mutex<HashMap<u32, u32>>);
+
+impl ConcurrentMap for PlainStd {
+    fn insert(&self, key: u32, value: u32) -> Result<()> {
+        self.0.lock().unwrap().insert(key, value);
+        Ok(())
+    }
+    fn lookup(&self, key: u32) -> Option<u32> {
+        self.0.lock().unwrap().get(&key).copied()
+    }
+    fn delete(&self, key: u32) -> bool {
+        self.0.lock().unwrap().remove(&key).is_some()
+    }
+    fn len(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+    fn name(&self) -> &'static str {
+        "PlainStd"
+    }
+    fn max_load_factor(&self) -> f64 {
+        1.0
+    }
+}
+
+#[test]
+fn typed_plane_differential_oracle() {
+    let seed = test_seed();
+    let n = 30_000;
+    let ops = widen(workload::rmw_mixed(n, Mix::RMW_HEAVY, seed));
+    let universe = workload::rmw_universe(n, seed);
+    assert!(ops.iter().any(|o| matches!(o, Op::Update { .. })), "widen lost Update coverage");
+    assert!(
+        ops.iter().any(|o| matches!(o, Op::InsertIfAbsent { .. })),
+        "widen lost InsertIfAbsent coverage"
+    );
+
+    // sequential oracle
+    let mut oracle_map: HashMap<u32, u32> = HashMap::new();
+    let oracle: Vec<Norm> = ops.iter().map(|op| apply_seq(&mut oracle_map, op)).collect();
+
+    // native table, typed single-op methods
+    let hive = HiveTable::new(HiveConfig::for_capacity(universe.len() * 2, 0.8)).unwrap();
+    let got = replay_typed(&hive, &ops);
+    for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
+        assert_eq!(g, w, "native single-op diverged at op {i}: {:?}", ops[i]);
+    }
+
+    // ShardedStd's shard-lock overrides
+    let std_map = ShardedStd::for_capacity(universe.len());
+    let got = replay_typed(&std_map, &ops);
+    for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
+        assert_eq!(g, w, "ShardedStd diverged at op {i}: {:?}", ops[i]);
+    }
+
+    // the trait's composed default impls over a plain mutexed map
+    let plain = PlainStd(Mutex::new(HashMap::new()));
+    let got = replay_typed(&plain, &ops);
+    for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
+        assert_eq!(g, w, "default impls diverged at op {i}: {:?}", ops[i]);
+    }
+
+    // native execute_ops in windows, vs the grouped-window reference
+    let hive_b = HiveTable::new(HiveConfig::for_capacity(universe.len() * 2, 0.8)).unwrap();
+    let mut grouped_map: HashMap<u32, u32> = HashMap::new();
+    for window in ops.chunks(256) {
+        let res = hive_b.execute_ops(window).unwrap();
+        let want = apply_grouped(&mut grouped_map, window);
+        for (i, (r, w)) in res.iter().zip(&want).enumerate() {
+            assert_eq!(&norm(r), w, "execute_ops diverged at window op {i}: {:?}", window[i]);
+        }
+    }
+
+    // final contents agree across every path
+    for &k in &universe {
+        let want = oracle_map.get(&k).copied();
+        assert_eq!(hive.lookup(k), want, "native final state diverged on {k}");
+        assert_eq!(std_map.lookup(k), want, "ShardedStd final state diverged on {k}");
+        assert_eq!(ConcurrentMap::lookup(&plain, k), want, "defaults final state on {k}");
+        assert_eq!(hive_b.lookup(k), grouped_map.get(&k).copied(), "grouped final on {k}");
+    }
+    assert_eq!(hive.len(), oracle_map.len(), "native live count diverged");
+    assert_eq!(hive_b.len(), grouped_map.len(), "grouped live count diverged");
+}
+
+/// Spawn a background thread that churns migration state (split/merge
+/// rounds, load-tracking resize with stash drains and pointer swaps)
+/// until `stop` is raised.
+fn spawn_resizer(
+    table: Arc<HiveTable>,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let churn = 4 + (seed % 3) as usize * 4;
+        while !stop.load(Ordering::Relaxed) {
+            table.maybe_resize();
+            table.grow_buckets(churn);
+            table.shrink_buckets(churn);
+            std::thread::yield_now();
+        }
+    })
+}
+
+#[test]
+fn concurrent_fetch_add_exact_across_live_migration() {
+    let seed = test_seed();
+    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    const COUNTERS: u32 = 8;
+    const THREADS: u32 = 4;
+    const PER_THREAD: u32 = 8_000; // per-thread adds, cycled over counters
+    for c in 0..COUNTERS {
+        table.insert(1000 + c, 0).unwrap();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let resizer = spawn_resizer(Arc::clone(&table), Arc::clone(&stop), seed);
+    let adders: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || {
+                // every returned `old` value, per counter — the witness
+                // set that proves no update was lost or double-applied
+                let mut olds: Vec<Vec<u32>> = vec![Vec::new(); COUNTERS as usize];
+                for i in 0..PER_THREAD {
+                    let c = (t + i) % COUNTERS;
+                    let (outcome, old) = table.fetch_add(1000 + c, 1).unwrap();
+                    assert!(outcome.is_none(), "seeded counter re-created under migration");
+                    olds[c as usize].push(old.expect("seeded counter present"));
+                }
+                olds
+            })
+        })
+        .collect();
+    let mut witnessed: Vec<Vec<u32>> = vec![Vec::new(); COUNTERS as usize];
+    for a in adders {
+        for (c, olds) in a.join().unwrap().into_iter().enumerate() {
+            witnessed[c].extend(olds);
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    resizer.join().unwrap();
+    let per_counter = (THREADS * PER_THREAD / COUNTERS) as usize;
+    for c in 0..COUNTERS as usize {
+        assert_eq!(
+            table.lookup(1000 + c as u32),
+            Some(per_counter as u32),
+            "counter {c} lost updates"
+        );
+        let mut olds = std::mem::take(&mut witnessed[c]);
+        olds.sort_unstable();
+        assert_eq!(olds.len(), per_counter, "counter {c} op count");
+        for (want, got) in olds.into_iter().enumerate() {
+            assert_eq!(got, want as u32, "counter {c}: old values must be a permutation of 0..T");
+        }
+    }
+}
+
+#[test]
+fn concurrent_cas_increment_exact_across_live_migration() {
+    let seed = test_seed().wrapping_add(1);
+    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    const THREADS: u32 = 4;
+    const SUCCESSES: u32 = 4_000; // optimistic increments each thread must land
+    table.insert(77, 0).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let resizer = spawn_resizer(Arc::clone(&table), Arc::clone(&stop), seed);
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || {
+                let mut landed = 0u32;
+                while landed < SUCCESSES {
+                    let v = table.lookup(77).expect("counter must stay present");
+                    let (ok, actual) = table.cas(77, v, v.wrapping_add(1));
+                    if ok {
+                        landed += 1;
+                    } else {
+                        // a failed CAS must report a real competing value
+                        assert!(actual.is_some(), "counter vanished under CAS");
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    resizer.join().unwrap();
+    assert_eq!(
+        table.lookup(77),
+        Some(THREADS * SUCCESSES),
+        "optimistic CAS increments lost updates"
+    );
+}
+
+#[test]
+fn concurrent_mixed_rmw_with_migration_settles_consistently() {
+    // Disjoint key ranges per thread, the full (widened) RMW
+    // vocabulary, migration churn underneath: each thread's view must
+    // be perfectly sequential, and the settled table must match a
+    // per-thread oracle.
+    let seed = test_seed().wrapping_add(2);
+    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let resizer = spawn_resizer(Arc::clone(&table), Arc::clone(&stop), seed);
+    let threads: Vec<_> = (0..4u64)
+        .map(|tid| {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || {
+                let base = (tid as u32 + 1) * 1_000_000;
+                let ops = widen(workload::rmw_mixed(4_000, Mix::RMW_HEAVY, seed ^ tid));
+                let mut model: HashMap<u32, u32> = HashMap::new();
+                for (i, op) in ops.iter().enumerate() {
+                    // shift the op's key into this thread's private range
+                    let shift = |k: u32| base + (k & 0xFFFF);
+                    let op = match *op {
+                        Op::Insert { key, value } => Op::Insert { key: shift(key), value },
+                        Op::Upsert { key, value } => Op::Upsert { key: shift(key), value },
+                        Op::InsertIfAbsent { key, value } => {
+                            Op::InsertIfAbsent { key: shift(key), value }
+                        }
+                        Op::Update { key, value } => Op::Update { key: shift(key), value },
+                        Op::Cas { key, expected, new } => {
+                            Op::Cas { key: shift(key), expected, new }
+                        }
+                        Op::FetchAdd { key, delta } => Op::FetchAdd { key: shift(key), delta },
+                        Op::Lookup { key } => Op::Lookup { key: shift(key) },
+                        Op::Delete { key } => Op::Delete { key: shift(key) },
+                    };
+                    let want = apply_seq(&mut model, &op);
+                    let got = match op {
+                        Op::Insert { key, value } | Op::Upsert { key, value } => {
+                            (2, table.upsert(key, value).unwrap().1, true)
+                        }
+                        Op::InsertIfAbsent { key, value } => {
+                            let (_, existing) = table.insert_if_absent(key, value).unwrap();
+                            (3, existing, existing.is_none())
+                        }
+                        Op::Update { key, value } => {
+                            let old = table.update(key, value);
+                            (4, old, old.is_some())
+                        }
+                        Op::Cas { key, expected, new } => {
+                            let (ok, actual) = table.cas(key, expected, new);
+                            (5, actual, ok)
+                        }
+                        Op::FetchAdd { key, delta } => {
+                            let (_, old) = table.fetch_add(key, delta).unwrap();
+                            (6, old, old.is_none())
+                        }
+                        Op::Lookup { key } => (0, table.lookup(key), false),
+                        Op::Delete { key } => (1, None, table.delete(key)),
+                    };
+                    assert_eq!(got, want, "thread {tid} diverged at op {i} ({op:?})");
+                }
+                (base, model)
+            })
+        })
+        .collect();
+    let settled: Vec<(u32, HashMap<u32, u32>)> =
+        threads.into_iter().map(|t| t.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    resizer.join().unwrap();
+    for (base, model) in settled {
+        for (k, v) in model {
+            assert_eq!(table.lookup(k), Some(v), "settled key {k} (base {base}) diverged");
+        }
+    }
+}

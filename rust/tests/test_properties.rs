@@ -203,6 +203,7 @@ fn prop_count_balance_under_mixed_stream() {
                 workload::Op::Lookup { .. } => {
                     let _ = table.lookup(op.key());
                 }
+                _ => unreachable!("mixed() emits only insert/lookup/delete"),
             }
         }
         assert_eq!(table.len() as i64, expected);

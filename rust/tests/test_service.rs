@@ -11,9 +11,10 @@
 //! runs a small seed matrix) so the races don't fossilize on one lucky
 //! interleaving.
 
-use hivehash::backend::{Backend, BatchResult, NativeBackend};
+use hivehash::backend::{Backend, NativeBackend};
 use hivehash::coordinator::resize_ctl::ResizeEvent;
-use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Handle, SingleReply};
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Handle};
+use hivehash::workload::OpResult;
 use hivehash::core::error::{HiveError, Result};
 use hivehash::core::rng::splitmix64;
 use hivehash::workload::Op;
@@ -178,7 +179,7 @@ fn bulk_submits_resolve_across_shutdown() {
                         let ops: Vec<Op> =
                             (base..base + 128).map(|key| Op::Lookup { key }).collect();
                         match h.submit(&ops) {
-                            Ok(res) => assert_eq!(res.lookups.len(), 128),
+                            Ok(res) => assert_eq!(res.len(), 128),
                             Err(e) => {
                                 assert_shutdown(e);
                                 return;
@@ -236,7 +237,7 @@ struct PanicBackend {
 const TRIGGER_KEY: u32 = 0x0DEA_DBEE;
 
 impl Backend for PanicBackend {
-    fn execute(&mut self, ops: &[Op]) -> Result<BatchResult> {
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
         if ops.iter().any(|op| op.key() == TRIGGER_KEY) {
             panic!("injected worker fault (test_service)");
         }
@@ -341,7 +342,7 @@ fn mixed_plane_race_under_seed_matrix() {
                     if inflight.len() == 64 {
                         let t: hivehash::coordinator::Ticket = inflight.pop_front().unwrap();
                         match t.wait() {
-                            Ok(SingleReply::Value(_)) | Ok(SingleReply::Failed(_)) => {}
+                            Ok(OpResult::Value(_)) => {}
                             Ok(other) => panic!("lookup got {other:?}"),
                             Err(e) => {
                                 assert_shutdown(e);

@@ -16,13 +16,36 @@ use std::path::Path;
 
 /// Which bucket memory layout the native table uses. `PackedAos` is the
 /// paper's contribution; `SplitSoa` is the two-phase-update ablation
-/// (DESIGN.md §6).
+/// (DESIGN.md §6); `CompactQuotient` trades stored key bits for cache-line
+/// density at high load factors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layout {
     /// 64-bit packed key-value words, single-CAS publish (paper §III-A).
+    /// 32 slots per bucket — one bucket row spans two 128-byte lines.
     PackedAos,
     /// Separate key / value arrays: CAS on key, relaxed store of value.
     SplitSoa,
+    /// Quotiented keys ([`crate::core::quotient`]): the bucket index is
+    /// the low bits of the key's hash, so the stored word keeps only the
+    /// hash *remainder* plus a 2-bit candidate tag in the key half. Words
+    /// stay 64-bit (the single-CAS publish, migration markers, and free
+    /// masks are untouched) but buckets shrink to 16 slots, fitting one
+    /// bucket row in a single 128-byte cache line — fewer lines per probe
+    /// and a higher sustainable load factor at 0.85–0.97. Requires an
+    /// invertible hash family of `d <= 3` (tags are 2 bits and the key
+    /// must be reconstructible), which config validation enforces.
+    CompactQuotient,
+}
+
+impl Layout {
+    /// Slots per bucket this layout packs into one bucket row.
+    #[inline]
+    pub fn slots_per_bucket(self) -> usize {
+        match self {
+            Layout::CompactQuotient => crate::core::COMPACT_SLOTS_PER_BUCKET,
+            Layout::PackedAos | Layout::SplitSoa => SLOTS_PER_BUCKET,
+        }
+    }
 }
 
 /// Top-level configuration for a Hive table instance.
@@ -123,6 +146,25 @@ impl HiveConfig {
         if !(0.0..=0.5).contains(&self.stash_fraction) {
             return Err(HiveError::Config("stash_fraction must be in [0, 0.5]".into()));
         }
+        if self.layout == Layout::CompactQuotient {
+            if self.hash_kinds.len() > 3 {
+                return Err(HiveError::Config(format!(
+                    "compact layout stores a 2-bit candidate tag, so d <= 3; got {}",
+                    self.hash_kinds.len()
+                )));
+            }
+            if let Some(k) = self.hash_kinds.iter().find(|k| !k.invertible()) {
+                return Err(HiveError::Config(format!(
+                    "compact layout must reconstruct keys from remainders; {} is not invertible",
+                    k.name()
+                )));
+            }
+            if self.initial_buckets < 4 {
+                return Err(HiveError::Config(
+                    "compact layout needs >= 4 buckets (remainders carry at most 30 bits)".into(),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -179,6 +221,7 @@ impl HiveConfig {
                     self.layout = match v.as_str() {
                         "packed_aos" | "aos" => Layout::PackedAos,
                         "split_soa" | "soa" => Layout::SplitSoa,
+                        "compact" | "compact_quotient" => Layout::CompactQuotient,
                         other => return Err(HiveError::Config(format!("bad layout: {other}"))),
                     }
                 }
@@ -233,6 +276,34 @@ mod tests {
         assert!(HiveConfig::from_kv_text("hashes = murmur3").is_err());
         assert!(HiveConfig::from_kv_text("nonsense = 1").is_err());
         assert!(HiveConfig::from_kv_text("initial_buckets = banana").is_err());
+    }
+
+    #[test]
+    fn compact_layout_rules() {
+        // `compact` parses, and the default BitHash pair satisfies its rules.
+        let cfg = HiveConfig::from_kv_text("layout = compact").unwrap();
+        assert_eq!(cfg.layout, Layout::CompactQuotient);
+        assert_eq!(cfg.layout.slots_per_bucket(), 16);
+        assert_eq!(Layout::PackedAos.slots_per_bucket(), 32);
+        // Non-invertible hashes are rejected for compact only.
+        let crc = HiveConfig::from_kv_text("layout = compact_quotient\nhashes = murmur3, crc32");
+        assert!(crc.is_err(), "crc32 cannot back a quotiented layout");
+        assert!(HiveConfig::from_kv_text("hashes = murmur3, crc32").is_ok());
+        // d = 4 overflows the 2-bit candidate tag.
+        let wide = HiveConfig::default()
+            .with_layout(Layout::CompactQuotient)
+            .with_hashes(vec![
+                HashKind::BitHash1,
+                HashKind::BitHash2,
+                HashKind::Murmur3,
+                HashKind::Murmur3,
+            ]);
+        assert!(wide.validate().is_err());
+        // d = 3 invertible family is fine.
+        let three = HiveConfig::default()
+            .with_layout(Layout::CompactQuotient)
+            .with_hashes(vec![HashKind::BitHash1, HashKind::BitHash2, HashKind::Murmur3]);
+        three.validate().unwrap();
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod config;
 pub mod counter;
 pub mod epoch;
 pub mod error;
+pub mod quotient;
 pub mod rng;
 pub mod histogram;
 
@@ -19,6 +20,14 @@ pub const SLOTS_PER_BUCKET: usize = 32;
 
 /// A free-mask word with every slot available (bit i == 1 ⇒ slot i free).
 pub const FULL_FREE_MASK: u32 = u32::MAX;
+
+/// Slots per bucket under [`config::Layout::CompactQuotient`]: quotienting
+/// shrinks nothing per-entry (words stay 64-bit for the single-CAS
+/// protocol) but halving the bucket to 16 slots makes one bucket row fit a
+/// single 128-byte cache line instead of two, and probe success at equal
+/// load factor is preserved by the reclaimed key bits' collision-free
+/// remainder match.
+pub const COMPACT_SLOTS_PER_BUCKET: usize = 16;
 
 /// Default bound on cuckoo displacement chains (paper `max_evictions`).
 pub const DEFAULT_MAX_EVICTIONS: u32 = 16;

@@ -1,0 +1,192 @@
+//! Quotiented-key codec for [`Layout::CompactQuotient`].
+//!
+//! Under linear hashing a bucket's index *is* the low `w` bits of the
+//! key's hash (`w = m` for unsplit buckets, `m + 1` for buckets already
+//! split this round, where `m = index_mask.count_ones()`). Those bits
+//! carry no information once the entry sits in the bucket, so the compact
+//! layout stores only the *remainder* `h >> w` plus a 2-bit *tag* naming
+//! which hash function of the family produced `h`:
+//!
+//! ```text
+//!  63            32 31  30 29                         0
+//! +----------------+------+----------------------------+
+//! |     value      | tag  |     rem = h_tag(key) >> w  |
+//! +----------------+------+----------------------------+
+//!                   `low half` (the CAS'd key field)
+//! ```
+//!
+//! Because every hash kind admitted by config validation is a bijection
+//! on `u32` ([`HashKind::invertible`]), the full key is reconstructed
+//! exactly: `h = (rem << w) | bucket`, `key = invert(kind[tag], h)`.
+//! Distinct keys in the same bucket under the same tag have distinct
+//! hashes, hence distinct remainders — half-word equality remains exact
+//! key equality, and the single-CAS publish protocol is untouched.
+//!
+//! The tag occupies the top two bits of the half and is at most 2 (the
+//! family is capped at `d = 3` for this layout), so a live half can never
+//! equal the `EMPTY_KEY` sentinel `0xFFFF_FFFF`.
+//!
+//! [`Layout::CompactQuotient`]: crate::core::config::Layout::CompactQuotient
+//! [`HashKind::invertible`]: crate::hash::HashKind::invertible
+
+use crate::hash::HashFamily;
+
+/// Bit position of the candidate-index tag inside the stored half.
+pub const TAG_SHIFT: u32 = 30;
+
+/// Mask selecting the tag bits of a stored half.
+pub const TAG_MASK: u32 = 0b11 << TAG_SHIFT;
+
+/// Mask selecting the remainder bits of a stored half.
+pub const REM_MASK: u32 = (1 << TAG_SHIFT) - 1;
+
+/// Number of hash-index bits a bucket implies: `m` for buckets still
+/// awaiting this round's split, `m + 1` for buckets already split
+/// (`bucket < split_ptr`) and for their images (`bucket > index_mask`).
+#[inline(always)]
+pub fn width_of(bucket: u32, index_mask: u32, split_ptr: u32) -> u32 {
+    let m = index_mask.count_ones();
+    m + (bucket < split_ptr || bucket > index_mask) as u32
+}
+
+/// Quotient raw hash `raw` (from family function `cand`) for storage in
+/// `bucket` under the given round state.
+#[inline(always)]
+pub fn encode_half(raw: u32, cand: usize, bucket: u32, index_mask: u32, split_ptr: u32) -> u32 {
+    debug_assert!(cand < 3, "compact layout caps the family at d = 3");
+    ((cand as u32) << TAG_SHIFT) | (raw >> width_of(bucket, index_mask, split_ptr))
+}
+
+/// Which hash function of the family produced a stored half.
+#[inline(always)]
+pub fn decode_tag(half: u32) -> usize {
+    (half >> TAG_SHIFT) as usize
+}
+
+/// Reconstruct the full raw hash from a stored half and its bucket.
+#[inline(always)]
+pub fn decode_hash(half: u32, bucket: u32, index_mask: u32, split_ptr: u32) -> u32 {
+    ((half & REM_MASK) << width_of(bucket, index_mask, split_ptr)) | bucket
+}
+
+/// Reconstruct the full key from a stored half and its bucket.
+#[inline(always)]
+pub fn decode_key(
+    family: &HashFamily,
+    half: u32,
+    bucket: u32,
+    index_mask: u32,
+    split_ptr: u32,
+) -> u32 {
+    family.kinds()[decode_tag(half)].invert(decode_hash(half, bucket, index_mask, split_ptr))
+}
+
+/// Re-encode a stored half across a *split* of its bucket (width `w` →
+/// `w + 1`): the remainder's low bit is the move decision (hash bit `m`)
+/// and leaves the remainder. Returns `(moves_to_image, new_half)`.
+#[inline(always)]
+pub fn split_half(half: u32) -> (bool, u32) {
+    let rem = half & REM_MASK;
+    ((rem & 1) == 1, (half & TAG_MASK) | (rem >> 1))
+}
+
+/// Re-encode a stored half across a *merge* (width `w + 1` → `w`): the
+/// decision bit — 1 if the entry lived in the split image, 0 in the base
+/// bucket — re-enters as the remainder's low bit.
+#[inline(always)]
+pub fn merge_half(half: u32, from_image: bool) -> u32 {
+    let rem = ((half & REM_MASK) << 1) | from_image as u32;
+    debug_assert_eq!(rem & TAG_MASK, 0, "remainder overflow: bucket width below 2 bits");
+    (half & TAG_MASK) | rem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::packed::EMPTY_KEY;
+    use crate::hash::HashKind;
+
+    fn family() -> HashFamily {
+        HashFamily::new(vec![HashKind::BitHash1, HashKind::BitHash2, HashKind::Murmur3])
+    }
+
+    #[test]
+    fn width_tracks_round_state() {
+        // m = 4 (mask 0xF), split_ptr = 3: buckets 0..3 and 16.. are split.
+        assert_eq!(width_of(0, 0xF, 3), 5);
+        assert_eq!(width_of(2, 0xF, 3), 5);
+        assert_eq!(width_of(3, 0xF, 3), 4);
+        assert_eq!(width_of(15, 0xF, 3), 4);
+        assert_eq!(width_of(16, 0xF, 3), 5);
+        assert_eq!(width_of(18, 0xF, 3), 5);
+    }
+
+    #[test]
+    fn roundtrip_all_candidates_all_round_states() {
+        let fam = family();
+        for (index_mask, split_ptr) in [(0x3u32, 0u32), (0x3, 2), (0xFF, 0), (0xFF, 97)] {
+            for key in (0..20_000u32).chain([u32::MAX, u32::MAX - 7]) {
+                for cand in 0..fam.d() {
+                    let raw = fam.raw(cand, key);
+                    let b = HashFamily::address(raw, index_mask, split_ptr);
+                    let half = encode_half(raw, cand, b, index_mask, split_ptr);
+                    assert_ne!(half, EMPTY_KEY, "live half hit the empty sentinel");
+                    assert_eq!(decode_tag(half), cand);
+                    assert_eq!(decode_hash(half, b, index_mask, split_ptr), raw);
+                    assert_eq!(decode_key(&fam, half, b, index_mask, split_ptr), key);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_then_merge_is_identity() {
+        let fam = family();
+        let (index_mask, split_ptr) = (0x3Fu32, 0u32); // m = 6, round start
+        for key in 0..20_000u32 {
+            for cand in 0..fam.d() {
+                let raw = fam.raw(cand, key);
+                let b = raw & index_mask;
+                let half = encode_half(raw, cand, b, index_mask, split_ptr);
+                let (moves, split) = split_half(half);
+                // The decision bit is hash bit m — exactly the linear-hashing
+                // stay-or-move rule.
+                assert_eq!(moves, (raw >> 6) & 1 == 1);
+                let b_after = if moves { b + index_mask + 1 } else { b };
+                // Width of b_after once this bucket's split completes is m+1
+                // (b < split_ptr' for stayers, b > mask for movers).
+                assert_eq!(
+                    decode_hash(split, b_after, index_mask, b + 1),
+                    raw,
+                    "split re-encode broke hash reconstruction"
+                );
+                assert_eq!(merge_half(split, moves), half, "merge must undo split");
+            }
+        }
+    }
+
+    #[test]
+    fn quotient_survives_capacity_doubling() {
+        // Pack→unpack identity for every candidate index across a full
+        // doubling: every (pre-split bucket, post-split bucket) pair agrees
+        // on the reconstructed key.
+        let fam = family();
+        let index_mask = 0x1Fu32; // m = 5
+        let next_mask = (index_mask << 1) | 1;
+        for key in 0..30_000u32 {
+            for cand in 0..fam.d() {
+                let raw = fam.raw(cand, key);
+                let before = raw & index_mask;
+                let after = raw & next_mask;
+                let h0 = encode_half(raw, cand, before, index_mask, 0);
+                assert_eq!(decode_key(&fam, h0, before, index_mask, 0), key);
+                // After the doubling completes the round state is (next_mask, 0).
+                let h1 = encode_half(raw, cand, after, next_mask, 0);
+                assert_eq!(decode_key(&fam, h1, after, next_mask, 0), key);
+                let (moves, split) = split_half(h0);
+                assert_eq!(split, h1);
+                assert_eq!(moves, after != before);
+            }
+        }
+    }
+}

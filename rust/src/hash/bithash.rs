@@ -32,6 +32,75 @@ pub const fn bithash2(mut key: u32) -> u32 {
     key
 }
 
+/// Multiplicative inverse of an odd constant modulo 2^32 (Newton's
+/// iteration doubles the number of correct low bits per step).
+pub const fn inv_odd(a: u32) -> u32 {
+    let mut x = a; // correct to 3 bits
+    let mut i = 0;
+    while i < 5 {
+        x = x.wrapping_mul(2u32.wrapping_sub(a.wrapping_mul(x)));
+        i += 1;
+    }
+    x
+}
+
+/// Invert `y = x ^ (x >> s)` for `1 <= s < 32`: iterating the forward map
+/// recovers one more `s`-bit chunk of `x` from the top down each pass.
+pub const fn unshift_xor_right(y: u32, s: u32) -> u32 {
+    let mut x = y;
+    let mut i = 0;
+    while i < 32 / s + 1 {
+        x = y ^ (x >> s);
+        i += 1;
+    }
+    x
+}
+
+/// Exact inverse of [`bithash1`] (every step is a bijection on u32: the
+/// first line is `32767*key - 1`, the rest are xor-shifts and odd
+/// multiplies).
+pub const fn bithash1_inv(h: u32) -> u32 {
+    let mut k = unshift_xor_right(h, 16);
+    k = k.wrapping_mul(inv_odd(2057));
+    k = unshift_xor_right(k, 4);
+    k = k.wrapping_mul(inv_odd(5)); // undo key += key << 2
+    k = unshift_xor_right(k, 12);
+    // undo key = ~key + (key << 15) == 32767*key - 1
+    k.wrapping_add(1).wrapping_mul(inv_odd(32767))
+}
+
+/// Undo `y = (x + c) ^ (x << 9)`: the low 9 bits of `x + c` equal the low
+/// 9 bits of `y` (the shifted term is zero there), and each recovered
+/// chunk of `x + c` exposes 9 more bits of `x << 9`, so `x + c` is
+/// rebuilt bottom-up in 9-bit strides (subtraction borrows only travel
+/// upward, keeping every partial `x` valid in its known low bits).
+const fn unshift_add_xor_left9(y: u32, c: u32) -> u32 {
+    let mut t = y & 0x1FF; // low 9 bits of x + c
+    let mut bits = 9;
+    while bits < 32 {
+        let x_low = t.wrapping_sub(c); // valid in the low `bits` bits
+        let upper = if bits + 9 >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << (bits + 9)) - 1
+        };
+        t |= (y ^ (x_low << 9)) & upper & !((1u32 << bits) - 1);
+        bits += 9;
+    }
+    t.wrapping_sub(c)
+}
+
+/// Exact inverse of [`bithash2`] (each of the six lines is a bijection:
+/// `(4097|33|9)*x + c`, xor-shift mixes, and one add-xor-shift-left).
+pub const fn bithash2_inv(h: u32) -> u32 {
+    let mut k = unshift_xor_right(h ^ 0xb55a_4f09, 16);
+    k = k.wrapping_sub(0xfd70_46c5).wrapping_mul(inv_odd(9));
+    k = unshift_add_xor_left9(k, 0xd3a2_646c);
+    k = k.wrapping_sub(0x1656_67b1).wrapping_mul(inv_odd(33));
+    k = unshift_xor_right(k ^ 0xc761_c23c, 19);
+    k.wrapping_sub(0x7ed5_5d16).wrapping_mul(inv_odd(4097))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +146,35 @@ mod tests {
             let mean = n / 64;
             for (i, &b) in bins.iter().enumerate() {
                 assert!(b > mean / 2 && b < mean * 2, "bin {i} count {b} vs mean {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverses_roundtrip() {
+        // The compact layout reconstructs keys from stored remainders, so
+        // both mixers must be exactly invertible over the full word.
+        let samples = (0..200_000u32)
+            .chain((0..64).map(|i| u32::MAX - i))
+            .chain((0..4096).map(|i| i.wrapping_mul(0x9e37_79b9)));
+        for key in samples {
+            assert_eq!(bithash1_inv(bithash1(key)), key, "bithash1 at {key:#x}");
+            assert_eq!(bithash2_inv(bithash2(key)), key, "bithash2 at {key:#x}");
+        }
+    }
+
+    #[test]
+    fn inv_odd_is_inverse() {
+        for a in [1u32, 5, 9, 33, 2057, 4097, 32767, 0x85eb_ca6b, 0xc2b2_ae35] {
+            assert_eq!(a.wrapping_mul(inv_odd(a)), 1, "inv_odd({a:#x})");
+        }
+    }
+
+    #[test]
+    fn unshift_xor_right_roundtrip() {
+        for s in [4u32, 9, 12, 13, 16, 19] {
+            for x in (0..50_000u32).map(|i| i.wrapping_mul(0x6c8e_9cf5)) {
+                assert_eq!(unshift_xor_right(x ^ (x >> s), s), x);
             }
         }
     }

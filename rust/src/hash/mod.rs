@@ -61,6 +61,31 @@ impl HashKind {
         }
     }
 
+    /// Whether [`HashKind::invert`] exists for this function. The bit
+    /// mixers and Murmur3 are compositions of bijections on u32; the
+    /// byte-folding CityHash and the CRC folds are not invertible, so the
+    /// quotiented compact layout (which must reconstruct keys from stored
+    /// remainders) rejects them at config validation.
+    #[inline]
+    pub fn invertible(self) -> bool {
+        matches!(self, HashKind::BitHash1 | HashKind::BitHash2 | HashKind::Murmur3)
+    }
+
+    /// Exact inverse of [`HashKind::hash`] for the invertible kinds.
+    ///
+    /// # Panics
+    /// Panics for the non-invertible kinds (`City32`, `Crc32`, `Crc64`);
+    /// config validation keeps those away from any caller.
+    #[inline]
+    pub fn invert(self, h: u32) -> u32 {
+        match self {
+            HashKind::BitHash1 => bithash::bithash1_inv(h),
+            HashKind::BitHash2 => bithash::bithash2_inv(h),
+            HashKind::Murmur3 => murmur::murmur3_32_inv(h),
+            _ => panic!("{self:?} is not invertible"),
+        }
+    }
+
     /// Parse a lowercase name (config files / CLI).
     pub fn parse(s: &str) -> Option<HashKind> {
         Some(match s {
@@ -179,6 +204,18 @@ mod tests {
             assert_eq!(HashKind::parse(&token), Some(kind));
         }
         assert_eq!(HashKind::parse("sha256"), None);
+    }
+
+    #[test]
+    fn invertible_kinds_roundtrip_via_dispatch() {
+        for kind in HashKind::ALL {
+            if !kind.invertible() {
+                continue;
+            }
+            for key in (0..100_000u32).chain([u32::MAX, u32::MAX - 1, 0x8000_0000]) {
+                assert_eq!(kind.invert(kind.hash(key)), key, "{kind:?} at {key:#x}");
+            }
+        }
     }
 
     #[test]

@@ -32,6 +32,32 @@ pub const fn fmix32(mut h: u32) -> u32 {
     h
 }
 
+/// Exact inverse of [`fmix32`] (xor-shifts and odd multiplies are all
+/// bijections on u32).
+pub const fn fmix32_inv(mut h: u32) -> u32 {
+    use super::bithash::{inv_odd, unshift_xor_right};
+    h = unshift_xor_right(h, 16);
+    h = h.wrapping_mul(inv_odd(0xc2b2_ae35));
+    h = unshift_xor_right(h, 13);
+    h = h.wrapping_mul(inv_odd(0x85eb_ca6b));
+    unshift_xor_right(h, 16)
+}
+
+/// Exact inverse of [`murmur3_32`]: for fixed 4-byte input every stage
+/// (block multiply, rotate, `5*h + c`, the finalizer) is a bijection.
+pub const fn murmur3_32_inv(h: u32) -> u32 {
+    use super::bithash::inv_odd;
+    const C1: u32 = 0xcc9e_2d51;
+    const C2: u32 = 0x1b87_3593;
+    let mut h1 = fmix32_inv(h);
+    h1 ^= 4;
+    h1 = h1.wrapping_sub(0xe654_6b64).wrapping_mul(inv_odd(5));
+    let mut k1 = h1.rotate_right(13); // h1 started as 0 ^ k1
+    k1 = k1.wrapping_mul(inv_odd(C2));
+    k1 = k1.rotate_right(15);
+    k1.wrapping_mul(inv_odd(C1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -51,6 +77,17 @@ mod tests {
         let mut seen = HashSet::new();
         for key in 0..100_000u32 {
             assert!(seen.insert(fmix32(key)), "fmix32 collision at {key}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let samples = (0..200_000u32)
+            .chain((0..64).map(|i| u32::MAX - i))
+            .chain((0..4096).map(|i| i.wrapping_mul(0x9e37_79b9)));
+        for key in samples {
+            assert_eq!(murmur3_32_inv(murmur3_32(key)), key, "murmur3 at {key:#x}");
+            assert_eq!(fmix32_inv(fmix32(key)), key, "fmix32 at {key:#x}");
         }
     }
 

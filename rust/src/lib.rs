@@ -38,6 +38,27 @@
 //!    flight carry migration markers, and physical reallocation swaps
 //!    the state pointer after a grace period.
 //!
+//! ## Bucket layouts
+//!
+//! The native table supports three bucket layouts, selected per table via
+//! [`core::config::Layout`]:
+//!
+//! * [`Layout::PackedAos`](core::config::Layout::PackedAos) — the paper's
+//!   layout: 32 slots per bucket, each slot one packed 64-bit
+//!   `(value << 32) | key` word mutated by a single CAS. Two 128-byte
+//!   cache lines per bucket row.
+//! * [`Layout::CompactQuotient`](core::config::Layout::CompactQuotient) —
+//!   the quotiented layout ([`core::quotient`]): slots store a 2-bit
+//!   candidate tag plus the hash *remainder* instead of the key, so a
+//!   bucket row is 16 slots — exactly one cache line. Keys are
+//!   reconstructed by inverting the tagged hash function
+//!   ([`hash::HashKind::invert`]); resize re-quotients remainders in
+//!   place as the bucket width changes. Fewer lines touched per probe at
+//!   high load factor (the `fig14_compact` bench quantifies it).
+//! * [`Layout::SplitSoa`](core::config::Layout::SplitSoa) — the split
+//!   key/value-array ablation ([`native::soa`]) the paper argues against:
+//!   two memory transactions per update and a consistency window.
+//!
 //! See `DESIGN.md` for the full system inventory and the CUDA→TPU hardware
 //! adaptation, and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -53,7 +74,7 @@ pub mod coordinator;
 pub mod workload;
 pub mod report;
 
-pub use crate::core::config::HiveConfig;
+pub use crate::core::config::{HiveConfig, Layout};
 pub use crate::core::packed::{pack, unpack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
 pub use crate::native::table::{HiveTable, InsertOutcome};
 pub use crate::workload::{Op, OpResult};

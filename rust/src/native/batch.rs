@@ -37,7 +37,6 @@
 use crate::backend::group_ops;
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::EMPTY_KEY;
-use crate::core::SLOTS_PER_BUCKET;
 use crate::hash::HashFamily;
 use crate::native::table::{HiveTable, InsertOutcome, RmwInsert, State};
 use crate::workload::{Op, OpResult};
@@ -49,7 +48,7 @@ use std::sync::atomic::Ordering;
 #[inline(always)]
 fn touch_bucket(state: &State, bucket: u32) {
     let _ = state.masks[bucket as usize].load(Ordering::Relaxed);
-    let _ = state.buckets[bucket as usize * SLOTS_PER_BUCKET].load(Ordering::Relaxed);
+    let _ = state.buckets[bucket as usize * state.spb].load(Ordering::Relaxed);
 }
 
 /// Touch the next op's first candidate bucket under the current round.

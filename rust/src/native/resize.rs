@@ -27,6 +27,21 @@
 //! 4. The new round word is published, *then* the markers clear; stale
 //!    operations waiting on a marker re-route through the fresh round.
 //!
+//! ### Re-quotienting (compact layout)
+//! Under [`Layout::CompactQuotient`] a stored key half is
+//! `tag | (hash >> w)` with `w` the bucket's index width, so migrating a
+//! bucket changes every resident half: a *split* (width `w → w + 1`)
+//! drops the remainder's low bit — which **is** the stay-or-move
+//! decision — so movers land in the partner with `rem >> 1` and stayers
+//! are rewritten in place the same way; a *merge* (width `w + 1 → w`)
+//! re-enters the decision bit (`rem << 1 | from_image`). Both rewrites
+//! happen under the buckets' markers + locks, CAS-guarded against racing
+//! replaces/deletes exactly like the copy-then-clear move, and the value
+//! forwarded on a clear-CAS failure is re-encoded for its destination
+//! bucket. The migration-sequence bump that already orders probes against
+//! migration doubles as the width-coherence signal probes validate
+//! against (`native::table` module docs).
+//!
 //! Physical bucket arrays are reallocated only at power-of-two *capacity
 //! class* boundaries (DESIGN.md §7). Reallocation is the one remaining
 //! exclusive step: the epoch domain flips odd, the grace period drains all
@@ -56,12 +71,17 @@
 //! the microseconds until the drain's own `remove_word` failure triggers
 //! `remove_exact`.
 
+use crate::core::config::Layout;
 use crate::core::packed::{is_empty, unpack_key, EMPTY_WORD};
-use crate::core::SLOTS_PER_BUCKET;
+use crate::core::quotient;
+use crate::hash::HashFamily;
 use crate::native::table::{
     pack_round, HiveTable, State, FREE_BITS, MIGRATING, MIGRATION_SEQ_SHIFT,
 };
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// The value half of a packed word (bits 63..32).
+const VALUE_BITS: u64 = 0xFFFF_FFFF_0000_0000;
 
 /// What a resize pass did (returned by [`HiveTable::maybe_resize`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,10 +110,10 @@ fn unlock_bucket(state: &State, bucket: u32) {
 /// deletes publish their free bit right after clearing the word — all
 /// wait-free, so this settles in bounded time.
 fn settle_bucket(state: &State, bucket: u32) {
-    let base = bucket as usize * SLOTS_PER_BUCKET;
+    let base = bucket as usize * state.spb;
     loop {
         let free = (state.masks[bucket as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
-        let mut occ = !free;
+        let mut occ = !free & state.full_free as u32;
         let mut pending = false;
         while occ != 0 {
             let lane = occ.trailing_zeros() as usize;
@@ -119,6 +139,11 @@ fn settle_bucket(state: &State, bucket: u32) {
 /// destination copy diverges under concurrent ops, ownership transfers to
 /// them and the source copy is discarded instead. All resulting free-mask
 /// bits are published here.
+///
+/// `dst_half` is the key half the destination bucket stores: the source
+/// word's own half for AoS, the re-quotiented half for compact. Racing
+/// replaces mutate only the value, so forwarding a refreshed source word
+/// re-attaches `dst_half` to the fresh value.
 fn migrate_word(
     state: &State,
     src_slot: usize,
@@ -127,13 +152,16 @@ fn migrate_word(
     dst_slot: usize,
     dst_mask: usize,
     dst_bit: u64,
-    word: u64,
+    src_word: u64,
+    dst_half: u32,
 ) {
-    state.buckets[dst_slot].store(word, Ordering::Release);
-    let mut expect = word;
+    let dst_word = (src_word & VALUE_BITS) | dst_half as u64;
+    state.buckets[dst_slot].store(dst_word, Ordering::Release);
+    let mut expect_src = src_word;
+    let mut expect_dst = dst_word;
     loop {
         match state.buckets[src_slot].compare_exchange(
-            expect,
+            expect_src,
             EMPTY_WORD,
             Ordering::AcqRel,
             Ordering::Acquire,
@@ -151,7 +179,7 @@ fn migrate_word(
                 // slot occupied) and the mask/slot state is already
                 // consistent without us.
                 if state.buckets[dst_slot]
-                    .compare_exchange(expect, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                    .compare_exchange(expect_dst, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
                 {
                     state.masks[dst_mask].fetch_or(dst_bit, Ordering::AcqRel);
@@ -160,12 +188,15 @@ fn migrate_word(
             }
             Err(cur) => {
                 // A racing replace refreshed the source copy: forward the
-                // fresh value to the destination copy, CAS-guarded...
+                // fresh value (re-encoded for the destination bucket) to
+                // the destination copy, CAS-guarded...
+                let fresh_dst = (cur & VALUE_BITS) | dst_half as u64;
                 if state.buckets[dst_slot]
-                    .compare_exchange(expect, cur, Ordering::AcqRel, Ordering::Relaxed)
+                    .compare_exchange(expect_dst, fresh_dst, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
                 {
-                    expect = cur; // ...and retry clearing the source
+                    expect_src = cur; // ...and retry clearing the source
+                    expect_dst = fresh_dst;
                 } else {
                     // ...but the destination copy diverged under racing
                     // ops — it is canonical now. Discard the source copy;
@@ -186,6 +217,24 @@ fn migrate_word(
                     }
                 }
             }
+        }
+    }
+}
+
+/// Re-quotient a surviving slot in place (compact layout): CAS-loop the
+/// half transform `f` onto the word, racing replaces (fresh value, same
+/// half — recompute and retry) and deletes (slot emptied — nothing to do).
+/// Runs only under the bucket's marker + lock.
+fn requotient_slot(state: &State, slot: usize, f: impl Fn(u32) -> u32) {
+    let mut cur = state.buckets[slot].load(Ordering::Acquire);
+    loop {
+        if is_empty(cur) {
+            return;
+        }
+        let new = (cur & VALUE_BITS) | f(unpack_key(cur)) as u64;
+        match state.buckets[slot].compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return,
+            Err(now) => cur = now,
         }
     }
 }
@@ -312,12 +361,13 @@ impl HiveTable {
         // the exclusive phase, so no other thread dereferences it.
         let old = unsafe { &*old_ptr };
         let copy_buckets = old.phys_buckets().min(new_phys);
+        let spb = old.spb;
 
-        let mut buckets: Vec<AtomicU64> = Vec::with_capacity(new_phys * SLOTS_PER_BUCKET);
-        for w in old.buckets.iter().take(copy_buckets * SLOTS_PER_BUCKET) {
+        let mut buckets: Vec<AtomicU64> = Vec::with_capacity(new_phys * spb);
+        for w in old.buckets.iter().take(copy_buckets * spb) {
             buckets.push(AtomicU64::new(w.load(Ordering::Relaxed)));
         }
-        buckets.resize_with(new_phys * SLOTS_PER_BUCKET, || AtomicU64::new(EMPTY_WORD));
+        buckets.resize_with(new_phys * spb, || AtomicU64::new(EMPTY_WORD));
 
         let mut masks: Vec<AtomicU64> = Vec::with_capacity(new_phys);
         for m in old.masks.iter().take(copy_buckets) {
@@ -328,7 +378,7 @@ impl HiveTable {
             // nothing and keeps the counters globally monotonic
             masks.push(AtomicU64::new(mw & !MIGRATING));
         }
-        masks.resize_with(new_phys, || AtomicU64::new(FREE_BITS));
+        masks.resize_with(new_phys, || AtomicU64::new(old.full_free));
 
         let mut locks: Vec<AtomicU32> = Vec::new();
         locks.resize_with(new_phys, || AtomicU32::new(0));
@@ -338,6 +388,9 @@ impl HiveTable {
             masks: masks.into_boxed_slice(),
             locks: locks.into_boxed_slice(),
             round: AtomicU64::new(old.round.load(Ordering::Relaxed)),
+            spb,
+            full_free: old.full_free,
+            layout: old.layout,
         });
         self.state.store(Box::into_raw(new_state), Ordering::Release);
         self.epoch.exit_exclusive();
@@ -374,30 +427,45 @@ impl HiveTable {
         settle_bucket(state, b_dst);
 
         // 3. Move entries whose next-round hash selects the partner;
-        //    movers are compacted into the (empty) partner bucket.
-        let src_base = b_src as usize * SLOTS_PER_BUCKET;
-        let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
+        //    movers are compacted into the (empty) partner bucket. Under
+        //    the compact layout the stored remainder's low bit *is* the
+        //    move decision (quotient::split_half), and both movers and
+        //    stayers are re-quotiented to the post-split width `m + 1`.
+        let compact = state.layout == Layout::CompactQuotient;
+        let spb = state.spb;
+        let src_base = b_src as usize * spb;
+        let dst_base = b_dst as usize * spb;
         let mut n_movers = 0usize;
-        for lane in 0..SLOTS_PER_BUCKET {
+        for lane in 0..spb {
             let w = state.buckets[src_base + lane].load(Ordering::Acquire);
             if is_empty(w) {
                 continue;
             }
-            let key = unpack_key(w);
-            // Which hash function addressed this entry here? Try each; the
-            // placement invariant guarantees one matches.
-            let mut should_move = false;
-            let mut found_home = false;
-            for i in 0..self.family.d() {
-                let h = self.family.raw(i, key);
-                if (h & index_mask) == b_src {
-                    found_home = true;
-                    should_move = (h & next_mask) == b_dst;
-                    break;
+            let (should_move, dst_half) = if compact {
+                quotient::split_half(unpack_key(w))
+            } else {
+                let key = unpack_key(w);
+                // Which hash function addressed this entry here? Try each;
+                // the placement invariant guarantees one matches.
+                let mut should_move = false;
+                let mut found_home = false;
+                for i in 0..self.family.d() {
+                    let h = self.family.raw(i, key);
+                    if (h & index_mask) == b_src {
+                        found_home = true;
+                        should_move = (h & next_mask) == b_dst;
+                        break;
+                    }
                 }
-            }
-            debug_assert!(found_home, "entry {key} not addressed to its bucket {b_src}");
+                debug_assert!(found_home, "entry {key} not addressed to its bucket {b_src}");
+                (should_move, key)
+            };
             if !should_move {
+                if compact {
+                    // Stayer: rewrite the half in place for width m + 1
+                    // (drop the decision bit — it is 0 for stayers).
+                    requotient_slot(state, src_base + lane, |h| quotient::split_half(h).1);
+                }
                 continue;
             }
             // Compacted placement: dst->kv[rank] = kv. Claim the rank's
@@ -424,6 +492,7 @@ impl HiveTable {
                 b_dst as usize,
                 dst_bit,
                 w,
+                dst_half,
             );
             n_movers += 1;
         }
@@ -475,7 +544,7 @@ impl HiveTable {
         // clear.
         let src_free = (state.masks[b_src as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
         let dst_free = (state.masks[b_dst as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
-        let n_move = SLOTS_PER_BUCKET as u32 - src_free.count_ones();
+        let n_move = state.spb as u32 - src_free.count_ones();
         if n_move > dst_free.count_ones() {
             // abort early (paper: merge aborts if it can't fit)
             state.masks[b_src as usize].fetch_and(!MIGRATING, Ordering::SeqCst);
@@ -485,13 +554,33 @@ impl HiveTable {
             return false;
         }
 
-        let src_base = b_src as usize * SLOTS_PER_BUCKET;
-        let dst_base = b_dst as usize * SLOTS_PER_BUCKET;
-        for lane in 0..SLOTS_PER_BUCKET {
+        let compact = state.layout == Layout::CompactQuotient;
+        let spb = state.spb;
+        let src_base = b_src as usize * spb;
+        let dst_base = b_dst as usize * spb;
+        if compact {
+            // Re-quotient the destination's surviving entries to the
+            // post-merge width first (decision bit 0 — they never left),
+            // before movers claim free destination slots: the sweep must
+            // not touch words that are already merge-encoded.
+            let occupied = !((state.masks[b_dst as usize].load(Ordering::SeqCst) & FREE_BITS)
+                as u32)
+                & state.full_free as u32;
+            let mut occ = occupied;
+            while occ != 0 {
+                let lane = occ.trailing_zeros() as usize;
+                occ &= occ - 1;
+                requotient_slot(state, dst_base + lane, |h| quotient::merge_half(h, false));
+            }
+        }
+        for lane in 0..spb {
             let w = state.buckets[src_base + lane].load(Ordering::Acquire);
             if is_empty(w) {
                 continue;
             }
+            // Movers come from the split image: decision bit 1.
+            let dst_half =
+                if compact { quotient::merge_half(unpack_key(w), true) } else { unpack_key(w) };
             // Claim the r-th free slot of dst (prefix-rank mapping). The
             // marker blocks *lasting* claims, but an insert that loaded the
             // mask just before the marker landed can transiently clear a
@@ -525,6 +614,7 @@ impl HiveTable {
                 b_dst as usize,
                 1u64 << pos,
                 w,
+                dst_half,
             );
         }
 
@@ -609,9 +699,14 @@ impl HiveTable {
     }
 
     /// Remove the exact `word` from `key`'s current candidate buckets, if
-    /// it is still there (drain-undo path). No count/stat updates — the
-    /// logical entry was accounted elsewhere.
+    /// it is still there (drain-undo path). `word` is the plain full-key
+    /// word the drain reinserted; under the compact layout the table copy
+    /// is its per-bucket re-encoding, so the needle is re-derived per
+    /// candidate (round read after the marker check, hit validated before
+    /// the CAS — the same width-coherence discipline as the probe cores).
+    /// No count/stat updates — the logical entry was accounted elsewhere.
     fn remove_exact(&self, state: &State, key: u32, word: u64) {
+        let compact = state.layout == Layout::CompactQuotient;
         let raws = self.raw_hashes(key);
         let d = self.family.d();
         'retry: loop {
@@ -625,15 +720,33 @@ impl HiveTable {
                     continue 'retry;
                 }
                 pre[i] = mw;
-                let base = b as usize * SLOTS_PER_BUCKET;
-                for lane in 0..SLOTS_PER_BUCKET {
-                    if state.buckets[base + lane].load(Ordering::Acquire) == word
-                        && state.buckets[base + lane]
-                            .compare_exchange(word, EMPTY_WORD, Ordering::AcqRel, Ordering::Relaxed)
+                let needle = if compact {
+                    let (rm, rs) = state.round();
+                    if HashFamily::address(raws[i], rm, rs) != b {
+                        continue 'retry;
+                    }
+                    (word & VALUE_BITS) | quotient::encode_half(raws[i], i, b, rm, rs) as u64
+                } else {
+                    word
+                };
+                let base = b as usize * state.spb;
+                for lane in 0..state.spb {
+                    if state.buckets[base + lane].load(Ordering::Acquire) == needle {
+                        if !self.hit_valid(state, b, mw) {
+                            continue 'retry;
+                        }
+                        if state.buckets[base + lane]
+                            .compare_exchange(
+                                needle,
+                                EMPTY_WORD,
+                                Ordering::AcqRel,
+                                Ordering::Relaxed,
+                            )
                             .is_ok()
-                    {
-                        state.masks[b as usize].fetch_or(1u64 << lane, Ordering::AcqRel);
-                        return;
+                        {
+                            state.masks[b as usize].fetch_or(1u64 << lane, Ordering::AcqRel);
+                            return;
+                        }
                     }
                 }
             }
@@ -853,6 +966,99 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         for r in readers {
             r.join().unwrap();
+        }
+    }
+
+    fn compact_table(buckets: usize) -> HiveTable {
+        let cfg =
+            HiveConfig::default().with_buckets(buckets).with_layout(Layout::CompactQuotient);
+        HiveTable::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn compact_split_requotients_and_preserves_entries() {
+        let t = compact_table(8);
+        for k in 1..=100u32 {
+            t.insert(k, k * 2).unwrap();
+        }
+        assert_eq!(t.grow_buckets(8), 8); // full round: 8 -> 16 buckets
+        for k in 1..=100u32 {
+            assert_eq!(t.lookup(k), Some(k * 2), "key {k} lost after compact split");
+        }
+        // Mid-round splits too (mixed widths across the table).
+        assert_eq!(t.grow_buckets(5), 5);
+        for k in 1..=100u32 {
+            assert_eq!(t.lookup(k), Some(k * 2), "key {k} lost mid-round");
+        }
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn compact_merge_restores_entries() {
+        let t = compact_table(8);
+        for k in 1..=60u32 {
+            t.insert(k, k + 9).unwrap();
+        }
+        t.grow_buckets(8);
+        assert_eq!(t.logical_buckets(), 16);
+        assert_eq!(t.shrink_buckets(8), 8);
+        assert_eq!(t.logical_buckets(), 8);
+        for k in 1..=60u32 {
+            assert_eq!(t.lookup(k), Some(k + 9), "key {k} lost after compact merge");
+        }
+        assert_eq!(t.len(), 60);
+    }
+
+    #[test]
+    fn compact_multi_round_growth() {
+        let t = compact_table(4);
+        for k in 1..=50u32 {
+            t.insert(k, k).unwrap();
+        }
+        assert_eq!(t.grow_buckets(4 + 8 + 16), 28); // 4 -> 32 buckets
+        assert_eq!(t.logical_buckets(), 32);
+        for k in 1..=50u32 {
+            assert_eq!(t.lookup(k), Some(k));
+        }
+        let mut got = t.entries();
+        got.sort_unstable();
+        assert_eq!(got, (1..=50u32).map(|k| (k, k)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compact_growth_preserves_under_concurrent_reads() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let t = Arc::new(compact_table(8));
+        for k in 1..=100u32 {
+            t.insert(k, k).unwrap();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        for k in 1..=100u32 {
+                            assert_eq!(t.lookup(k), Some(k));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..3 {
+            t.grow_buckets(8);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        t.shrink_buckets(12);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        for k in 1..=100u32 {
+            assert_eq!(t.lookup(k), Some(k));
         }
     }
 }

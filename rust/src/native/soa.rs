@@ -13,9 +13,9 @@
 use crate::core::config::HiveConfig;
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::EMPTY_KEY;
-use crate::core::SLOTS_PER_BUCKET;
+use crate::core::{StripedCounter, SLOTS_PER_BUCKET};
 use crate::hash::HashFamily;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// SoA bucket table: `keys[i]` and `values[i]` live in separate arrays.
 pub struct SoaTable {
@@ -23,7 +23,10 @@ pub struct SoaTable {
     values: Box<[AtomicU32]>,
     family: HashFamily,
     n_buckets: usize,
-    count: AtomicUsize,
+    /// Striped like the native table's occupancy count: the ablation
+    /// isolates the *layout* difference, so the baseline must not pay a
+    /// contended single-line counter the AoS table no longer has.
+    count: StripedCounter,
 }
 
 impl SoaTable {
@@ -39,13 +42,13 @@ impl SoaTable {
             values: (0..slots).map(|_| AtomicU32::new(0)).collect(),
             family: HashFamily::new(cfg.hash_kinds.clone()),
             n_buckets,
-            count: AtomicUsize::new(0),
+            count: StripedCounter::new(),
         })
     }
 
     /// Live entries.
     pub fn len(&self) -> usize {
-        self.count.load(Ordering::Relaxed)
+        self.count.sum()
     }
 
     /// `true` when empty.
@@ -86,7 +89,7 @@ impl SoaTable {
                     // Phase 2: the separate value store — the extra memory
                     // transaction (and inconsistency window) AoS removes.
                     self.values[base + lane].store(value, Ordering::Release);
-                    self.count.fetch_add(1, Ordering::Relaxed);
+                    self.count.incr();
                     return Ok(());
                 }
             }
@@ -118,7 +121,7 @@ impl SoaTable {
                     .compare_exchange(key, EMPTY_KEY, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
                 {
-                    self.count.fetch_sub(1, Ordering::Relaxed);
+                    self.count.decr();
                     return true;
                 }
             }

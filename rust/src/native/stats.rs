@@ -42,6 +42,9 @@ pub struct OpStats {
     deletes: Padded,
     delete_hits: Padded,
     cas_retries: Padded,
+    probes: Padded,
+    probe_buckets: Padded,
+    probe_lines: Padded,
 }
 
 impl OpStats {
@@ -101,6 +104,17 @@ impl OpStats {
         self.cas_retries.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one completed lookup probe: how many candidate buckets it
+    /// scanned and how many cache lines it touched (mask word + the slot
+    /// rows actually read). Backs the fig14 lines-per-probe comparison
+    /// between the AoS and compact layouts.
+    #[inline]
+    pub fn record_probe(&self, buckets: u64, lines: u64) {
+        self.probes.0.fetch_add(1, Ordering::Relaxed);
+        self.probe_buckets.0.fetch_add(buckets, Ordering::Relaxed);
+        self.probe_lines.0.fetch_add(lines, Ordering::Relaxed);
+    }
+
     /// Coherent-enough snapshot of all counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
@@ -117,6 +131,9 @@ impl OpStats {
             deletes: self.deletes.0.load(Ordering::Relaxed),
             delete_hits: self.delete_hits.0.load(Ordering::Relaxed),
             cas_retries: self.cas_retries.0.load(Ordering::Relaxed),
+            probes: self.probes.0.load(Ordering::Relaxed),
+            probe_buckets: self.probe_buckets.0.load(Ordering::Relaxed),
+            probe_lines: self.probe_lines.0.load(Ordering::Relaxed),
         }
     }
 }
@@ -137,6 +154,9 @@ pub struct StatsSnapshot {
     pub deletes: u64,
     pub delete_hits: u64,
     pub cas_retries: u64,
+    pub probes: u64,
+    pub probe_buckets: u64,
+    pub probe_lines: u64,
 }
 
 impl StatsSnapshot {
@@ -148,6 +168,25 @@ impl StatsSnapshot {
             0.0
         } else {
             self.lock_acquisitions as f64 / ops as f64
+        }
+    }
+
+    /// Mean cache lines touched per lookup probe — the fig14 layout
+    /// line-efficiency metric.
+    pub fn lines_per_probe(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.probe_lines as f64 / self.probes as f64
+        }
+    }
+
+    /// Mean candidate buckets scanned per lookup probe.
+    pub fn buckets_per_probe(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.probe_buckets as f64 / self.probes as f64
         }
     }
 
@@ -181,6 +220,8 @@ mod tests {
         s.record_lookup(true);
         s.record_lookup(false);
         s.record_delete(true);
+        s.record_probe(2, 5);
+        s.record_probe(1, 2);
         let snap = s.snapshot();
         assert_eq!(snap.inserts, 4);
         assert_eq!(snap.claims, 2);
@@ -191,6 +232,11 @@ mod tests {
         assert_eq!(snap.lookups, 2);
         assert_eq!(snap.lookup_hits, 1);
         assert_eq!(snap.deletes, 1);
+        assert_eq!(snap.probes, 2);
+        assert_eq!(snap.probe_buckets, 3);
+        assert_eq!(snap.probe_lines, 7);
+        assert!((snap.lines_per_probe() - 3.5).abs() < 1e-9);
+        assert!((snap.buckets_per_probe() - 1.5).abs() < 1e-9);
     }
 
     #[test]

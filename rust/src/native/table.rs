@@ -64,6 +64,49 @@
 //! cache-line-padded [`StripedCounter`] so concurrent batches do not
 //! serialize on one `count` cache line.
 //!
+//! ### Quotiented compact layout (`Layout::CompactQuotient`)
+//! The packed word stays 64-bit, but the key half stores a *quotient*
+//! ([`crate::core::quotient`]) instead of the key:
+//!
+//! ```text
+//!  63            32 31  30 29                          0
+//! +----------------+------+-----------------------------+
+//! |     value      | tag  |  rem = h_tag(key) >> w(b)   |
+//! +----------------+------+-----------------------------+
+//! ```
+//!
+//! `w(b)` is the number of hash bits the bucket index implies (`m`, or
+//! `m + 1` once the bucket has split this round) and `tag` names the
+//! family function that produced the hash. Buckets shrink to 16 slots, so
+//! a bucket row is one 128-byte cache line instead of two. **The
+//! single-CAS invariant survives** because nothing about the word's shape
+//! changed: replace/RMW/delete still CAS the one word, WABC still claims
+//! a mask bit and release-stores the word, migration markers still live
+//! in the mask word, and a live half can never equal the `EMPTY_KEY`
+//! sentinel (tag ≤ 2). What *does* change is that half-equality is key
+//! equality only while the bucket's stored width matches the width the
+//! probe encoded with, so compact probes add two checks around the
+//! existing marker/sequence machinery:
+//!
+//! * the probe half is encoded from a round word read *after* the
+//!   candidate's marker check, and a hit is validated against that same
+//!   mask word (marker clear, migration sequence unchanged) before it is
+//!   believed — a bucket migrated mid-probe re-quotients its entries, so
+//!   the probe re-routes instead;
+//! * WABC re-reads the round between the mask load and the claim and
+//!   re-validates the sequence returned by the claim `fetch_and` itself,
+//!   so a word encoded under a stale width is never published.
+//!
+//! Split re-quotients in place (`rem >>= 1`; the dropped bit is the move
+//! decision), merge restores it (`rem = rem << 1 | from_image`) — see
+//! `native::resize`. The stash and pending list always store plain
+//! full-key words: quotients are only meaningful relative to a bucket.
+//! Like every CAS protocol, the compact hit path assumes a 64-bit word is
+//! not recycled into a bit-identical word of different identity within
+//! one probe's instruction window (here: a full bucket migration *plus*
+//! an exact 64-bit refill); the AoS layout is immune because its key
+//! half is width-independent.
+//!
 //! ### Deviation from the paper
 //! Algorithm 2 line 15 restores a failed claim bit with `fetch_or`. With
 //! `fetch_and(!bit)`, a lost race means the bit was *already* zero, so the
@@ -78,7 +121,7 @@ use crate::core::counter::StripedCounter;
 use crate::core::epoch::{EpochDomain, EpochGuard};
 use crate::core::error::{HiveError, Result};
 use crate::core::packed::{is_empty, pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
-use crate::core::{FULL_FREE_MASK, SLOTS_PER_BUCKET};
+use crate::core::{quotient, FULL_FREE_MASK};
 use crate::hash::HashFamily;
 use crate::native::stash::OverflowStash;
 use crate::native::stats::{OpStats, StatsSnapshot, Step};
@@ -138,8 +181,9 @@ pub type RmwInsert = (Option<InsertOutcome>, Option<u32>);
 /// the table's `AtomicPtr` (inside the epoch's exclusive phase); all
 /// mutation in the stable phase is per-word atomic.
 pub(crate) struct State {
-    /// Packed KV words, `phys_buckets * 32` of them, bucket-major. A bucket
-    /// row is 256 B — the paper's two 128 B cache lines.
+    /// Packed KV words, `phys_buckets * spb` of them, bucket-major. A
+    /// bucket row is two 128 B cache lines for the 32-slot AoS layout,
+    /// one line for the 16-slot compact layout.
     pub(crate) buckets: Box<[AtomicU64]>,
     /// Per-bucket mask words: low 32 bits are the free mask (bit i set ⇒
     /// slot i free), bit 32 is the [`MIGRATING`] marker.
@@ -151,15 +195,32 @@ pub(crate) struct State {
     /// each bucket migration, loaded (once per routing decision) by every
     /// operation.
     pub(crate) round: AtomicU64,
+    /// Slots per bucket (32 AoS, 16 compact) — fixed per table.
+    pub(crate) spb: usize,
+    /// Free-mask word with every slot of this geometry available (low
+    /// `spb` bits set).
+    pub(crate) full_free: u64,
+    /// Word codec this table was built with.
+    pub(crate) layout: Layout,
 }
 
 impl State {
-    pub(crate) fn with_buckets(phys: usize, index_mask: u32, split_ptr: u32) -> Self {
+    pub(crate) fn with_buckets(
+        phys: usize,
+        index_mask: u32,
+        split_ptr: u32,
+        layout: Layout,
+    ) -> Self {
+        let spb = layout.slots_per_bucket();
+        let full_free = (1u64 << spb) - 1;
         State {
-            buckets: (0..phys * SLOTS_PER_BUCKET).map(|_| AtomicU64::new(EMPTY_WORD)).collect(),
-            masks: (0..phys).map(|_| AtomicU64::new(FREE_BITS)).collect(),
+            buckets: (0..phys * spb).map(|_| AtomicU64::new(EMPTY_WORD)).collect(),
+            masks: (0..phys).map(|_| AtomicU64::new(full_free)).collect(),
             locks: (0..phys).map(|_| AtomicU32::new(0)).collect(),
             round: AtomicU64::new(pack_round(index_mask, split_ptr)),
+            spb,
+            full_free,
+            layout,
         }
     }
 
@@ -184,7 +245,7 @@ impl State {
     /// Slot index of `(bucket, lane)` in the flat word array.
     #[inline(always)]
     pub(crate) fn slot(&self, bucket: u32, lane: usize) -> usize {
-        bucket as usize * SLOTS_PER_BUCKET + lane
+        bucket as usize * self.spb + lane
     }
 
     /// The 32-bit free mask of `bucket` (marker bit stripped).
@@ -219,7 +280,10 @@ enum EvictOutcome {
     Placed,
     Retry,
     Rerouted,
-    Evicted(u64),
+    /// A victim was displaced; carries its *logical* `(key, value)` —
+    /// decoded under the bucket lock so the compact layout's stored half
+    /// never travels across a width change.
+    Evicted(u32, u32),
 }
 
 /// The native concurrent Hive hash table (paper §III–§IV).
@@ -279,9 +343,9 @@ impl HiveTable {
         }
         let buckets = cfg.initial_buckets.next_power_of_two().max(4);
         let index_mask = (buckets - 1) as u32;
-        let stash_cap =
-            ((buckets * SLOTS_PER_BUCKET) as f64 * cfg.stash_fraction).ceil().max(8.0) as usize;
-        let state = Box::new(State::with_buckets(buckets, index_mask, 0));
+        let spb = cfg.layout.slots_per_bucket();
+        let stash_cap = ((buckets * spb) as f64 * cfg.stash_fraction).ceil().max(8.0) as usize;
+        let state = Box::new(State::with_buckets(buckets, index_mask, 0, cfg.layout));
         Ok(HiveTable {
             state: AtomicPtr::new(Box::into_raw(state)),
             epoch: EpochDomain::new(),
@@ -330,9 +394,10 @@ impl HiveTable {
         self.state_ref(&guard).logical_buckets()
     }
 
-    /// Slot capacity = logical buckets × 32.
+    /// Slot capacity = logical buckets × slots per bucket (32 AoS, 16
+    /// compact).
     pub fn capacity(&self) -> usize {
-        self.logical_buckets() * SLOTS_PER_BUCKET
+        self.logical_buckets() * self.cfg.layout.slots_per_bucket()
     }
 
     /// Load factor `len / capacity` (§IV-C's resize trigger input).
@@ -485,6 +550,55 @@ impl HiveTable {
         (0..self.family.d()).any(|i| self.family.bucket(i, key, mask, sp) == bucket)
     }
 
+    /// The key half a probe must match in candidate `i`'s bucket `b`: the
+    /// key itself for AoS, the quotiented tag+remainder for compact.
+    ///
+    /// For compact the encode width must be coherent with `b`'s stored
+    /// width, so the round word is (re-)read here — *after* the caller's
+    /// marker check on `b`'s mask word — and the subsequent
+    /// [`HiveTable::hit_valid`] seq check brackets it. `None` means the
+    /// current round no longer routes `h_i(key)` to `b` at all (a split
+    /// completed under the probe): the caller re-routes.
+    #[inline(always)]
+    fn probe_half(
+        &self,
+        state: &State,
+        raws: &[u32; 4],
+        i: usize,
+        b: u32,
+        key: u32,
+    ) -> Option<u32> {
+        if state.layout != Layout::CompactQuotient {
+            return Some(key);
+        }
+        let (rm, rs) = state.round();
+        if HashFamily::address(raws[i], rm, rs) != b {
+            return None;
+        }
+        Some(quotient::encode_half(raws[i], i, b, rm, rs))
+    }
+
+    /// Compact-layout hit validation: a half-word match is exact key
+    /// equality only while the bucket's stored halves use the width the
+    /// probe encoded with. `pre` is the bucket's mask word from the
+    /// pre-probe marker check; a marker or sequence change since then
+    /// means the bucket re-quotiented mid-probe — the match is void and
+    /// the caller must re-route (markers are waited out here). Always
+    /// true for AoS, whose key half is width-independent.
+    #[inline]
+    pub(crate) fn hit_valid(&self, state: &State, bucket: u32, pre: u64) -> bool {
+        if state.layout != Layout::CompactQuotient {
+            return true;
+        }
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let now = state.masks[bucket as usize].load(Ordering::SeqCst);
+        if now & MIGRATING != 0 || (now >> MIGRATION_SEQ_SHIFT) != (pre >> MIGRATION_SEQ_SHIFT) {
+            Self::wait_unmarked(state, bucket);
+            return false;
+        }
+        true
+    }
+
     /// `true` if no stash drain ran or is running since `since` was
     /// sampled from `drain_epoch` — i.e. a probe's table→stash scan order
     /// could not have raced a drain's stash→table move, so its miss is
@@ -569,9 +683,11 @@ impl HiveTable {
     // WCME probe helpers
     // ------------------------------------------------------------------
 
-    /// WCME match: scan the 32 slots of `bucket` for `key`; return the
-    /// matching lane and its cached word. The scan is the CPU analogue of
-    /// the warp's coalesced 32-lane load + ballot + ffs.
+    /// WCME match: scan the slots of `bucket` for the stored key half
+    /// `half` (the key itself for AoS, a [`quotient`] encoding for
+    /// compact); return the matching lane and its cached word. The scan is
+    /// the CPU analogue of the warp's coalesced per-lane load + ballot +
+    /// ffs.
     ///
     /// Perf (§Perf log): slots are scanned with `Relaxed` loads — one
     /// `Acquire` fence on a hit establishes the publish ordering — which
@@ -580,12 +696,12 @@ impl HiveTable {
     /// whose operating point is a well-filled table where a mask pre-load
     /// is pure overhead.
     #[inline]
-    pub(crate) fn wcme_match(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
-        let base = bucket as usize * SLOTS_PER_BUCKET;
-        let key64 = key as u64;
-        for lane in 0..SLOTS_PER_BUCKET {
+    pub(crate) fn wcme_match(state: &State, bucket: u32, half: u32) -> Option<(usize, u64)> {
+        let base = bucket as usize * state.spb;
+        let half64 = half as u64;
+        for lane in 0..state.spb {
             let w = state.buckets[base + lane].load(Ordering::Relaxed);
-            if w & 0xFFFF_FFFF == key64 {
+            if w & 0xFFFF_FFFF == half64 {
                 std::sync::atomic::fence(Ordering::Acquire);
                 return Some((lane, w));
             }
@@ -601,15 +717,15 @@ impl HiveTable {
     /// `fetch_and` happens-before any later mask load, so committed
     /// entries are always scanned.
     #[inline]
-    fn wcme_match_masked(state: &State, bucket: u32, key: u32) -> Option<(usize, u64)> {
-        let base = bucket as usize * SLOTS_PER_BUCKET;
-        let key64 = key as u64;
-        let mut occupied = !state.free_mask_of(bucket, Ordering::Acquire);
+    fn wcme_match_masked(state: &State, bucket: u32, half: u32) -> Option<(usize, u64)> {
+        let base = bucket as usize * state.spb;
+        let half64 = half as u64;
+        let mut occupied = !state.free_mask_of(bucket, Ordering::Acquire) & state.full_free as u32;
         while occupied != 0 {
             let lane = occupied.trailing_zeros() as usize;
             occupied &= occupied - 1;
             let w = state.buckets[base + lane].load(Ordering::Relaxed);
-            if w & 0xFFFF_FFFF == key64 {
+            if w & 0xFFFF_FFFF == half64 {
                 std::sync::atomic::fence(Ordering::Acquire);
                 return Some((lane, w));
             }
@@ -632,10 +748,21 @@ impl HiveTable {
         self.lookup_core(state, key, &raws)
     }
 
+    /// Cache lines one bucket probe touched: the mask-word line plus the
+    /// 64-bit-word row lines covering the `lanes` slots actually scanned.
+    #[inline(always)]
+    fn probe_lines(lanes: usize) -> u64 {
+        1 + (lanes as u64 * 8).div_ceil(128)
+    }
+
     /// Lookup body, called with an epoch pin held and the raw hashes
     /// already computed (shared with the batch layer).
     pub(crate) fn lookup_core(&self, state: &State, key: u32, raws: &[u32; 4]) -> Option<u32> {
         let d = self.family.d();
+        // Line-efficiency accounting (fig14): buckets and cache lines this
+        // one logical probe touched, across retries.
+        let mut pbuckets = 0u64;
+        let mut plines = 0u64;
         'retry: loop {
             // A concurrent stash drain moves entries stash→table, opposite
             // to this probe's table→stash order; a miss below is only
@@ -651,10 +778,20 @@ impl HiveTable {
                     continue 'retry;
                 }
                 pre[i] = mw;
-                if let Some((_, w)) = Self::wcme_match(state, b, key) {
+                let Some(half) = self.probe_half(state, raws, i, b, key) else {
+                    continue 'retry;
+                };
+                pbuckets += 1;
+                if let Some((lane, w)) = Self::wcme_match(state, b, half) {
+                    plines += Self::probe_lines(lane + 1);
+                    if !self.hit_valid(state, b, mw) {
+                        continue 'retry;
+                    }
+                    self.stats.record_probe(pbuckets, plines);
                     self.stats.record_lookup(true);
                     return Some(unpack_value(w));
                 }
+                plines += Self::probe_lines(state.spb);
             }
             // Miss: confirm no candidate migrated under the probe.
             if !self.validate_miss(state, raws, &cands, &pre) {
@@ -664,15 +801,18 @@ impl HiveTable {
             // (§IV-A).
             if !self.stash.is_quiescent() {
                 if let Some(v) = self.stash.lookup(key) {
+                    self.stats.record_probe(pbuckets, plines);
                     self.stats.record_lookup(true);
                     return Some(v);
                 }
             }
             if let Some(v) = self.pending_lookup(key) {
+                self.stats.record_probe(pbuckets, plines);
                 self.stats.record_lookup(true);
                 return Some(v);
             }
             if self.stash_stable(de) {
+                self.stats.record_probe(pbuckets, plines);
                 self.stats.record_lookup(false);
                 return None;
             }
@@ -710,12 +850,18 @@ impl HiveTable {
                     continue 'retry;
                 }
                 pre[i] = mw;
+                let Some(half) = self.probe_half(state, raws, i, b, key) else {
+                    continue 'retry;
+                };
                 // Retry the CAS a bounded number of times: a failed CAS
                 // means a concurrent replace updated the value — rescan.
                 for _attempt in 0..4 {
-                    match Self::wcme_match(state, b, key) {
+                    match Self::wcme_match(state, b, half) {
                         None => break,
                         Some((lane, w)) => {
+                            if !self.hit_valid(state, b, mw) {
+                                continue 'retry;
+                            }
                             let slot = state.slot(b, lane);
                             if state.buckets[slot]
                                 .compare_exchange(
@@ -813,7 +959,6 @@ impl HiveTable {
         raws: &[u32; 4],
     ) -> Result<(InsertOutcome, Option<u32>)> {
         let d = self.family.d();
-        let new_word = pack(key, value);
 
         // ---- Step 1: Replace (Algorithm 1) ----
         'probe: loop {
@@ -829,10 +974,19 @@ impl HiveTable {
                     continue 'probe;
                 }
                 pre[i] = mw;
+                let Some(half) = self.probe_half(state, raws, i, b, key) else {
+                    continue 'probe;
+                };
+                // The replacement word reuses the matched half: same key,
+                // same bucket, same width (hit_valid pins the width).
+                let new_word = pack(half, value);
                 for _attempt in 0..4 {
-                    match Self::wcme_match_masked(state, b, key) {
+                    match Self::wcme_match_masked(state, b, half) {
                         None => break,
                         Some((lane, old)) => {
+                            if !self.hit_valid(state, b, mw) {
+                                continue 'probe;
+                            }
                             let slot = state.slot(b, lane);
                             if state.buckets[slot]
                                 .compare_exchange(
@@ -878,20 +1032,23 @@ impl HiveTable {
             self.wait_drain_quiesced();
         }
 
-        self.place_core(state, key, new_word, raws).map(|outcome| (outcome, None))
+        self.place_core(state, key, value, raws).map(|outcome| (outcome, None))
     }
 
     /// Steps 2–4 of the four-step strategy (claim / evict / stash) for a
     /// key the caller just established as absent: the shared placement
     /// fallback of every inserting operation class (`upsert`,
-    /// `insert_if_absent`, `fetch_add` on a missing key). Increments the
-    /// live count on every path — stash overflow parks the word pending
-    /// the next resize epoch, never drops it.
+    /// `insert_if_absent`, `fetch_add` on a missing key). Takes the
+    /// logical `(key, value)` — the stored word is encoded per target
+    /// bucket inside the claim (quotients are bucket-relative), and the
+    /// stash always receives a plain full-key word. Increments the live
+    /// count on every path — stash overflow parks the word pending the
+    /// next resize epoch, never drops it.
     pub(crate) fn place_core(
         &self,
         state: &State,
         key: u32,
-        new_word: u64,
+        value: u32,
         raws: &[u32; 4],
     ) -> Result<InsertOutcome> {
         let d = self.family.d();
@@ -913,7 +1070,7 @@ impl HiveTable {
             }
             // ---- Step 2: Claim-then-commit (Algorithm 2 / WABC) ----
             for &i in &order[..d] {
-                match self.wabc_claim_commit(state, cands[i], key, new_word) {
+                match self.wabc_claim_commit(state, cands[i], key, value, raws) {
                     ClaimOutcome::Placed => {
                         self.count.incr();
                         return Ok(InsertOutcome::Inserted);
@@ -924,7 +1081,7 @@ impl HiveTable {
             }
 
             // ---- Step 3: bounded cuckoo eviction (Algorithm 3) ----
-            match self.cuckoo_evict_insert(state, cands[0], new_word) {
+            match self.cuckoo_evict_insert(state, cands[0], key, value, raws) {
                 EvictResult::Placed => {
                     self.count.incr();
                     return Ok(InsertOutcome::Evicted);
@@ -934,9 +1091,10 @@ impl HiveTable {
                     // ---- Step 4: overflow stash ----
                     // Stash full ⇒ the word is *flagged pending* for the
                     // next resize epoch (§IV-A) — never dropped, never an
-                    // error.
-                    if !self.stash.push(new_word) {
-                        self.park_pending(new_word);
+                    // error. Stash/pending words are always plain AoS.
+                    let word = pack(key, value);
+                    if !self.stash.push(word) {
+                        self.park_pending(word);
                     }
                     self.count.incr();
                     return Ok(InsertOutcome::Stashed);
@@ -991,7 +1149,13 @@ impl HiveTable {
                     continue 'retry;
                 }
                 pre[i] = mw;
-                if let Some((lane, mut w)) = Self::wcme_match(state, b, key) {
+                let Some(half) = self.probe_half(state, raws, i, b, key) else {
+                    continue 'retry;
+                };
+                if let Some((lane, mut w)) = Self::wcme_match(state, b, half) {
+                    if !self.hit_valid(state, b, mw) {
+                        continue 'retry;
+                    }
                     let slot = state.slot(b, lane);
                     loop {
                         let old = unpack_value(w);
@@ -1000,7 +1164,7 @@ impl HiveTable {
                         };
                         match state.buckets[slot].compare_exchange(
                             w,
-                            pack(key, new),
+                            pack(half, new),
                             Ordering::AcqRel,
                             Ordering::Acquire,
                         ) {
@@ -1013,7 +1177,14 @@ impl HiveTable {
                             }
                             Err(cur) => {
                                 self.stats.record_cas_retry();
-                                if cur & 0xFFFF_FFFF == key as u64 {
+                                // In-place value-churn retry is AoS-only:
+                                // a compact half re-matched here could be
+                                // a re-quotiented stranger — take the full
+                                // re-probe, whose hit validation re-pins
+                                // the width.
+                                if state.layout != Layout::CompactQuotient
+                                    && cur & 0xFFFF_FFFF == half as u64
+                                {
                                     w = cur; // value churned: retry in place
                                 } else {
                                     continue 'retry; // word moved: re-probe
@@ -1071,7 +1242,7 @@ impl HiveTable {
         if let Some((existing, _)) = self.rmw_core(state, key, raws, &|_| None) {
             return Ok((None, Some(existing)));
         }
-        let outcome = self.place_core(state, key, pack(key, value), raws)?;
+        let outcome = self.place_core(state, key, value, raws)?;
         self.record_insert_outcome(outcome);
         Ok((Some(outcome), None))
     }
@@ -1160,7 +1331,7 @@ impl HiveTable {
         // placement path. (Two racing creators of the same absent key
         // can still both place — the same pre-existing window as two
         // racing plain inserts; exactness claims assume the key exists.)
-        let outcome = self.place_core(state, key, pack(key, delta), raws)?;
+        let outcome = self.place_core(state, key, delta, raws)?;
         self.record_insert_outcome(outcome);
         Ok((Some(outcome), None))
     }
@@ -1174,14 +1345,24 @@ impl HiveTable {
     /// bit the claimer re-validates the routing — a split that completed
     /// between the round snapshot and the claim would otherwise strand the
     /// entry in a bucket lookups no longer probe.
+    ///
+    /// Takes the logical `(key, value)` and encodes the stored word here:
+    /// for compact the encode width must be coherent with this bucket's
+    /// stored width, so the round is read *after* the mask-word load, and
+    /// the claim `fetch_and`'s returned migration sequence — same word,
+    /// totally ordered — re-validates it. A sequence that moved between
+    /// encode and claim means the width may be stale: hand the bit back
+    /// and restart, never publish.
     #[inline]
     pub(crate) fn wabc_claim_commit(
         &self,
         state: &State,
         bucket: u32,
         key: u32,
-        word: u64,
+        value: u32,
+        raws: &[u32; 4],
     ) -> ClaimOutcome {
+        let compact = state.layout == Layout::CompactQuotient;
         let fm = &state.masks[bucket as usize];
         loop {
             // Lane 0's relaxed load + broadcast.
@@ -1194,6 +1375,21 @@ impl HiveTable {
             if mask == 0 {
                 return ClaimOutcome::Full; // bucket full — early warp exit
             }
+            // Encode the publish word (round read after the mask word —
+            // see the doc comment; the family function that routes to
+            // this bucket becomes the stored tag).
+            let word = if compact {
+                let (rm, rs) = state.round();
+                let d = self.family.d();
+                let Some(cand) =
+                    (0..d).find(|&i| HashFamily::address(raws[i], rm, rs) == bucket)
+                else {
+                    return ClaimOutcome::Restart; // bucket no longer ours
+                };
+                pack(quotient::encode_half(raws[cand], cand, bucket, rm, rs), value)
+            } else {
+                pack(key, value)
+            };
             // Winner = lowest free lane (ballot + ffs).
             let lane = mask.trailing_zeros() as usize;
             let bit = 1u64 << lane;
@@ -1207,6 +1403,14 @@ impl HiveTable {
                     fm.fetch_or(bit, Ordering::AcqRel);
                 }
                 Self::wait_unmarked(state, bucket);
+                return ClaimOutcome::Restart;
+            }
+            if compact && (old >> MIGRATION_SEQ_SHIFT) != (mw >> MIGRATION_SEQ_SHIFT) {
+                // The bucket migrated (and re-quotiented) between the
+                // encode and the claim: the word's width is stale.
+                if old & bit != 0 {
+                    fm.fetch_or(bit, Ordering::AcqRel);
+                }
                 return ClaimOutcome::Restart;
             }
             if old & bit == 0 {
@@ -1238,26 +1442,38 @@ impl HiveTable {
     /// Bounded cuckoo eviction (Algorithm 3). Returns [`EvictResult`]; a
     /// displaced victim is *never* dropped — if the bound runs out with a
     /// victim in hand it goes to the stash (or the pending list).
+    ///
+    /// Carries the *logical* `(key, value)` rather than a packed word:
+    /// under the compact layout the stored half is bucket- and
+    /// width-relative, so each hop re-encodes for its destination bucket
+    /// and decodes displaced victims while the per-bucket lock (which
+    /// excludes migration, hence width changes) is still held.
     fn cuckoo_evict_insert(
         &self,
         state: &State,
         start_bucket: u32,
-        start_word: u64,
+        key: u32,
+        value: u32,
+        raws: &[u32; 4],
     ) -> EvictResult {
-        let mut word = start_word;
+        let compact = state.layout == Layout::CompactQuotient;
+        let mut cur_key = key;
+        let mut cur_val = value;
+        let mut cur_raws = *raws;
+        let mut carrying = false; // true once a displaced victim is in hand
         let mut bucket = start_bucket;
         for _kick in 0..self.cfg.max_evictions {
             self.stats.record_evict_round();
             // Lock-free fast path: a slot may have freed up.
-            match self.wabc_claim_commit(state, bucket, unpack_key(word), word) {
+            match self.wabc_claim_commit(state, bucket, cur_key, cur_val, &cur_raws) {
                 ClaimOutcome::Placed => return EvictResult::Placed,
                 ClaimOutcome::Restart => {
-                    if word == start_word {
+                    if !carrying {
                         return EvictResult::Restart;
                     }
                     // Carrying a displaced victim: re-route it under the
                     // fresh round word and keep going.
-                    bucket = self.current_bucket_of(state, unpack_key(word));
+                    bucket = self.current_bucket_of(state, cur_key);
                     continue;
                 }
                 ClaimOutcome::Full => {}
@@ -1278,10 +1494,24 @@ impl HiveTable {
             let outcome = (|| {
                 // Re-validate routing under the lock: a split of this
                 // bucket that completed before we locked may have moved
-                // `word`'s home. The check stays true until unlock.
-                if !self.still_candidate(state, unpack_key(word), bucket) {
+                // the entry's home. The check stays true until unlock.
+                if !self.still_candidate(state, cur_key, bucket) {
                     return EvictOutcome::Rerouted;
                 }
+                // The lock excludes migration of this bucket, so this
+                // round read stays width-coherent until unlock.
+                let (rm, rs) = state.round();
+                let word = if compact {
+                    let d = self.family.d();
+                    let Some(cand) =
+                        (0..d).find(|&i| HashFamily::address(cur_raws[i], rm, rs) == bucket)
+                    else {
+                        return EvictOutcome::Rerouted;
+                    };
+                    pack(quotient::encode_half(cur_raws[cand], cand, bucket, rm, rs), cur_val)
+                } else {
+                    pack(cur_key, cur_val)
+                };
                 let fm = &state.masks[bucket as usize];
                 let mask = (fm.load(Ordering::Relaxed) & FREE_BITS) as u32;
                 if mask != 0 {
@@ -1296,7 +1526,7 @@ impl HiveTable {
                     return EvictOutcome::Retry;
                 }
                 // (ii) displace the first occupied slot.
-                let occ = !mask; // all occupied here
+                let occ = state.full_free as u32 & !mask; // all occupied here
                 let lane = occ.trailing_zeros() as usize;
                 let slot = state.slot(bucket, lane);
                 let victim = state.buckets[slot].load(Ordering::Acquire);
@@ -1311,7 +1541,15 @@ impl HiveTable {
                     .compare_exchange(victim, word, Ordering::AcqRel, Ordering::Relaxed)
                     .is_ok()
                 {
-                    EvictOutcome::Evicted(victim)
+                    // Decode the victim to logical form while the lock
+                    // still pins this bucket's quotient width.
+                    let vhalf = unpack_key(victim);
+                    let vkey = if compact {
+                        quotient::decode_key(&self.family, vhalf, bucket, rm, rs)
+                    } else {
+                        vhalf
+                    };
+                    EvictOutcome::Evicted(vkey, unpack_value(victim))
                 } else {
                     EvictOutcome::Retry
                 }
@@ -1323,24 +1561,28 @@ impl HiveTable {
                 EvictOutcome::Placed => return EvictResult::Placed,
                 EvictOutcome::Retry => continue,
                 EvictOutcome::Rerouted => {
-                    if word == start_word {
+                    if !carrying {
                         return EvictResult::Restart;
                     }
-                    bucket = self.current_bucket_of(state, unpack_key(word));
+                    bucket = self.current_bucket_of(state, cur_key);
                     continue;
                 }
-                EvictOutcome::Evicted(victim) => {
+                EvictOutcome::Evicted(vkey, vval) => {
                     // Re-route the victim to its alternate bucket.
-                    let vkey = unpack_key(victim);
                     bucket = self.alt_bucket(state, vkey, bucket);
-                    word = victim;
+                    cur_key = vkey;
+                    cur_val = vval;
+                    cur_raws = self.raw_hashes(vkey);
+                    carrying = true;
                 }
             }
         }
-        // Bound exceeded. If a victim is in hand (word != start_word) the
-        // newcomer was already placed and the *victim* needs the fallback;
-        // it must never be dropped — stash it, or park it pending.
-        if word != start_word {
+        // Bound exceeded. If a victim is in hand the newcomer was already
+        // placed and the *victim* needs the fallback; it must never be
+        // dropped — stash it, or park it pending. Stash and pending words
+        // are always plain AoS `(key, value)`: no bucket, no width.
+        if carrying {
+            let word = pack(cur_key, cur_val);
             if !self.stash.push(word) {
                 self.park_pending(word);
             }
@@ -1371,6 +1613,7 @@ impl HiveTable {
     /// caller keeps the stash copy alive until this returns `true` (so
     /// concurrent lookups never observe a hole). No stats, no count.
     pub(crate) fn reinsert_word(&self, state: &State, key: u32, word: u64) -> bool {
+        let value = unpack_value(word);
         let raws = self.raw_hashes(key);
         let d = self.family.d();
         loop {
@@ -1378,7 +1621,7 @@ impl HiveTable {
             let cands = Self::route(raws, d, mask, sp);
             let mut restart = false;
             for &b in &cands[..d] {
-                match self.wabc_claim_commit(state, b, key, word) {
+                match self.wabc_claim_commit(state, b, key, value, &raws) {
                     ClaimOutcome::Placed => return true,
                     ClaimOutcome::Restart => {
                         restart = true;
@@ -1390,7 +1633,7 @@ impl HiveTable {
             if restart {
                 continue;
             }
-            match self.cuckoo_evict_insert(state, cands[0], word) {
+            match self.cuckoo_evict_insert(state, cands[0], key, value, &raws) {
                 EvictResult::Placed => return true,
                 EvictResult::Restart => continue,
                 EvictResult::Bound => return false,
@@ -1403,17 +1646,29 @@ impl HiveTable {
     // ------------------------------------------------------------------
 
     /// Snapshot all live `(key, value)` pairs (table + stash). Pins an
-    /// epoch; concurrent mutations may or may not be observed.
+    /// epoch; concurrent mutations may or may not be observed. Holds the
+    /// resize mutex for the scan: under the compact layout a stored half
+    /// is only meaningful together with its bucket's current quotient
+    /// width, so migration must not run mid-decode.
     pub fn entries(&self) -> Vec<(u32, u32)> {
+        let _resize = self.resize_mutex.lock().unwrap();
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
+        let compact = state.layout == Layout::CompactQuotient;
+        let (rm, rs) = state.round();
         let logical = state.logical_buckets();
         let mut out = Vec::with_capacity(self.len());
         for b in 0..logical {
-            for lane in 0..SLOTS_PER_BUCKET {
-                let w = state.buckets[b * SLOTS_PER_BUCKET + lane].load(Ordering::Acquire);
+            for lane in 0..state.spb {
+                let w = state.buckets[b * state.spb + lane].load(Ordering::Acquire);
                 if !is_empty(w) {
-                    out.push((unpack_key(w), unpack_value(w)));
+                    let half = unpack_key(w);
+                    let key = if compact {
+                        quotient::decode_key(&self.family, half, b as u32, rm, rs)
+                    } else {
+                        half
+                    };
+                    out.push((key, unpack_value(w)));
                 }
             }
         }
@@ -1443,7 +1698,7 @@ impl HiveTable {
         (0..state.logical_buckets())
             .map(|b| {
                 let free = state.free_mask_of(b as u32, Ordering::Relaxed).count_ones();
-                SLOTS_PER_BUCKET as u32 - free
+                state.spb as u32 - free
             })
             .collect()
     }
@@ -1680,7 +1935,7 @@ mod tests {
         // §III-B: the eviction lock is used in <0.85% of cases below ~0.85
         // load factor.
         let t = small_table(64);
-        let n = (64 * SLOTS_PER_BUCKET) as u32 * 80 / 100;
+        let n = t.capacity() as u32 * 80 / 100;
         for k in 1..=n {
             t.insert(k, k).unwrap();
         }
@@ -1808,5 +2063,158 @@ mod tests {
         t.insert(1, 10).unwrap();
         assert_eq!(t.lookup(1), Some(10));
         assert!(t.delete(1));
+    }
+
+    fn compact_table(buckets: usize) -> HiveTable {
+        let cfg =
+            HiveConfig::default().with_buckets(buckets).with_layout(Layout::CompactQuotient);
+        HiveTable::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn compact_layout_geometry() {
+        let t = compact_table(16);
+        assert_eq!(t.capacity(), 16 * crate::core::COMPACT_SLOTS_PER_BUCKET);
+    }
+
+    #[test]
+    fn compact_insert_lookup_delete_roundtrip() {
+        let t = compact_table(32);
+        for k in 1..=400u32 {
+            t.insert(k, k.wrapping_mul(31)).unwrap();
+        }
+        assert_eq!(t.len(), 400);
+        for k in 1..=400u32 {
+            assert_eq!(t.lookup(k), Some(k.wrapping_mul(31)), "key {k}");
+        }
+        assert_eq!(t.lookup(100_000), None);
+        for k in 1..=200u32 {
+            assert!(t.delete(k), "delete {k}");
+        }
+        for k in 1..=200u32 {
+            assert_eq!(t.lookup(k), None);
+        }
+        for k in 201..=400u32 {
+            assert_eq!(t.lookup(k), Some(k.wrapping_mul(31)));
+        }
+    }
+
+    #[test]
+    fn compact_rmw_ops_work() {
+        let t = compact_table(16);
+        assert_eq!(t.upsert(9, 90).unwrap(), (InsertOutcome::Inserted, None));
+        assert_eq!(t.upsert(9, 91).unwrap(), (InsertOutcome::Replaced, Some(90)));
+        assert_eq!(t.update(9, 92), Some(91));
+        assert_eq!(t.cas(9, 92, 93), (true, Some(92)));
+        assert_eq!(t.fetch_add(9, 7).unwrap(), (None, Some(93)));
+        assert_eq!(t.lookup(9), Some(100));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn compact_entries_returns_logical_keys() {
+        let t = compact_table(16);
+        for k in 1..=100u32 {
+            t.insert(k, k + 5).unwrap();
+        }
+        let mut got = t.entries();
+        got.sort_unstable();
+        let want: Vec<(u32, u32)> = (1..=100u32).map(|k| (k, k + 5)).collect();
+        assert_eq!(got, want, "entries must decode quotiented halves back to keys");
+    }
+
+    #[test]
+    fn compact_matches_aos_differentially() {
+        // Same deterministic op stream against both layouts; every
+        // observable result must agree.
+        let aos = small_table(64);
+        let cq = compact_table(128); // equal slot capacity (16 vs 32 per bucket)
+        let mut x = 0x2545_F491u32;
+        for _ in 0..30_000 {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            let k = x % 1500 + 1;
+            match x % 5 {
+                0 => {
+                    // Placement detail (Inserted/Evicted/Stashed) may differ
+                    // across geometries; replaced-vs-new must not.
+                    let a = aos.insert(k, x).unwrap() == InsertOutcome::Replaced;
+                    let c = cq.insert(k, x).unwrap() == InsertOutcome::Replaced;
+                    assert_eq!(a, c, "insert {k}");
+                }
+                1 => assert_eq!(aos.lookup(k), cq.lookup(k), "lookup {k}"),
+                2 => assert_eq!(aos.delete(k), cq.delete(k), "delete {k}"),
+                3 => assert_eq!(aos.update(k, x), cq.update(k, x), "update {k}"),
+                _ => {
+                    let a = aos.fetch_add(k, 3).unwrap();
+                    let c = cq.fetch_add(k, 3).unwrap();
+                    assert_eq!(a.0.is_some(), c.0.is_some(), "fetch_add created {k}");
+                    assert_eq!(a.1, c.1, "fetch_add old value {k}");
+                }
+            }
+        }
+        assert_eq!(aos.len(), cq.len());
+        for k in 1..=1500u32 {
+            assert_eq!(aos.lookup(k), cq.lookup(k), "final state diverged at {k}");
+        }
+    }
+
+    #[test]
+    fn compact_fills_to_high_load_factor() {
+        // 32 buckets * 16 slots = 512 capacity; fill to 95%.
+        let t = compact_table(32);
+        let n = (512.0 * 0.95) as u32;
+        for k in 1..=n {
+            t.insert(k, k).unwrap();
+        }
+        assert_eq!(t.len(), n as usize);
+        for k in 1..=n {
+            assert_eq!(t.lookup(k), Some(k), "key {k} lost at high lf");
+        }
+    }
+
+    #[test]
+    fn compact_concurrent_inserts_then_lookups() {
+        let t = Arc::new(compact_table(1024));
+        let per = 2000u32;
+        let threads: Vec<_> = (0..8u32)
+            .map(|tid| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let k = tid * per + i + 1;
+                        t.insert(k, k ^ 0xABCD).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(t.len(), 8 * per as usize);
+        for k in 1..=8 * per {
+            assert_eq!(t.lookup(k), Some(k ^ 0xABCD), "key {k}");
+        }
+    }
+
+    #[test]
+    fn compact_rejects_invalid_configs() {
+        // Non-invertible hash kind in the family.
+        let cfg = HiveConfig::default()
+            .with_layout(Layout::CompactQuotient)
+            .with_hashes(vec![HashKind::BitHash1, HashKind::City32]);
+        assert!(HiveTable::new(cfg).is_err());
+        // Family wider than the 2-bit tag.
+        let cfg = HiveConfig::default().with_layout(Layout::CompactQuotient).with_hashes(vec![
+            HashKind::BitHash1,
+            HashKind::BitHash2,
+            HashKind::Murmur3,
+            HashKind::Murmur3,
+        ]);
+        assert!(HiveTable::new(cfg).is_err());
+        // Fewer than 4 initial buckets (remainder needs bucket bits spare).
+        let cfg = HiveConfig::default().with_layout(Layout::CompactQuotient).with_buckets(2);
+        assert!(HiveTable::new(cfg).is_err());
     }
 }

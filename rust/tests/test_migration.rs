@@ -6,12 +6,20 @@
 //! reallocation (epoch flip + pointer swap), and the per-bucket migration
 //! markers route racing probes to the old-or-new bucket correctly.
 
-use hivehash::{HiveConfig, HiveTable};
+use hivehash::{HiveConfig, HiveTable, Layout};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-fn table(buckets: usize) -> Arc<HiveTable> {
-    Arc::new(HiveTable::new(HiveConfig::default().with_buckets(buckets)).unwrap())
+fn table(buckets: usize, layout: Layout) -> Arc<HiveTable> {
+    let cfg = HiveConfig::default().with_buckets(buckets).with_layout(layout);
+    Arc::new(HiveTable::new(cfg).unwrap())
+}
+
+/// Layout matrix: migration must be loss-free under both the packed AoS
+/// layout and the compact quotiented layout (whose splits and merges
+/// additionally re-quotient every stored remainder).
+fn layouts() -> [Layout; 2] {
+    [Layout::PackedAos, Layout::CompactQuotient]
 }
 
 /// Schedule seed for the interleaving-sensitive stress tests. CI runs a
@@ -25,11 +33,19 @@ fn test_seed() -> u64 {
 /// entries under them — including across capacity-class reallocations.
 #[test]
 fn lookups_never_miss_during_growth_and_shrink() {
-    // ~30% load at 64 buckets: low enough that every merge on the way
-    // back down fits its destination bucket (cf. the abort-at-56% test in
-    // native::resize), so the full round trip must succeed.
-    let t = table(64);
-    let n = 600u32;
+    for layout in layouts() {
+        lookups_never_miss(layout);
+    }
+}
+
+fn lookups_never_miss(layout: Layout) {
+    // ~30% load at 64 buckets under either layout (the compact layout
+    // halves slot capacity, so the key count is derived, not fixed): low
+    // enough that every merge on the way back down fits its destination
+    // bucket (cf. the abort-at-56% test in native::resize), so the full
+    // round trip must succeed.
+    let t = table(64, layout);
+    let n = (t.capacity() * 3 / 10) as u32;
     for k in 1..=n {
         t.insert(k, k ^ 0x5A5A).unwrap();
     }
@@ -78,8 +94,14 @@ fn lookups_never_miss_during_growth_and_shrink() {
 /// exactly once with its final value.
 #[test]
 fn writers_race_migration_without_loss_or_duplication() {
+    for layout in layouts() {
+        writers_race_migration(layout);
+    }
+}
+
+fn writers_race_migration(layout: Layout) {
     let seed = test_seed();
-    let t = table(16);
+    let t = table(16, layout);
     let stop = Arc::new(AtomicBool::new(false));
     let resizer = {
         let t = Arc::clone(&t);
@@ -178,7 +200,13 @@ fn writers_race_migration_without_loss_or_duplication() {
 /// writes.
 #[test]
 fn batches_survive_capacity_class_reallocations() {
-    let t = table(4);
+    for layout in layouts() {
+        batches_survive_reallocations(layout);
+    }
+}
+
+fn batches_survive_reallocations(layout: Layout) {
+    let t = table(4, layout);
     let stop = Arc::new(AtomicBool::new(false));
     let resizer = {
         let t = Arc::clone(&t);

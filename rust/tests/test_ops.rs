@@ -15,18 +15,27 @@
 //!   witnessed exactly once.
 //!
 //! Interleaving-sensitive schedules derive from `HIVE_TEST_SEED` (CI
-//! runs a small seed matrix).
+//! runs a small seed matrix), and every native-table battery runs under
+//! both bucket layouts (packed AoS and compact quotiented) — the layout
+//! must be observationally invisible.
 
 use hivehash::baselines::{ConcurrentMap, ShardedStd};
 use hivehash::core::error::Result;
 use hivehash::workload::{self, Mix, Op, OpResult};
-use hivehash::{HiveConfig, HiveTable};
+use hivehash::{HiveConfig, HiveTable, Layout};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 fn test_seed() -> u64 {
     std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x0905)
+}
+
+/// Layout matrix: every native-table battery runs under both the packed
+/// AoS layout and the compact quotiented layout (the CI seed loop
+/// multiplies this by `HIVE_TEST_SEED`).
+fn layouts() -> [Layout; 2] {
+    [Layout::PackedAos, Layout::CompactQuotient]
 }
 
 /// Normalized semantic payload of a typed result: class tag, the
@@ -201,11 +210,16 @@ fn typed_plane_differential_oracle() {
     let mut oracle_map: HashMap<u32, u32> = HashMap::new();
     let oracle: Vec<Norm> = ops.iter().map(|op| apply_seq(&mut oracle_map, op)).collect();
 
-    // native table, typed single-op methods
-    let hive = HiveTable::new(HiveConfig::for_capacity(universe.len() * 2, 0.8)).unwrap();
-    let got = replay_typed(&hive, &ops);
-    for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
-        assert_eq!(g, w, "native single-op diverged at op {i}: {:?}", ops[i]);
+    // native table, typed single-op methods — once per bucket layout
+    let mut hives = Vec::new();
+    for layout in layouts() {
+        let cfg = HiveConfig::for_capacity(universe.len() * 2, 0.8).with_layout(layout);
+        let hive = HiveTable::new(cfg).unwrap();
+        let got = replay_typed(&hive, &ops);
+        for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
+            assert_eq!(g, w, "native single-op ({layout:?}) diverged at op {i}: {:?}", ops[i]);
+        }
+        hives.push((layout, hive));
     }
 
     // ShardedStd's shard-lock overrides
@@ -222,27 +236,50 @@ fn typed_plane_differential_oracle() {
         assert_eq!(g, w, "default impls diverged at op {i}: {:?}", ops[i]);
     }
 
-    // native execute_ops in windows, vs the grouped-window reference
-    let hive_b = HiveTable::new(HiveConfig::for_capacity(universe.len() * 2, 0.8)).unwrap();
-    let mut grouped_map: HashMap<u32, u32> = HashMap::new();
-    for window in ops.chunks(256) {
-        let res = hive_b.execute_ops(window).unwrap();
-        let want = apply_grouped(&mut grouped_map, window);
-        for (i, (r, w)) in res.iter().zip(&want).enumerate() {
-            assert_eq!(&norm(r), w, "execute_ops diverged at window op {i}: {:?}", window[i]);
+    // native execute_ops in windows, vs the grouped-window reference —
+    // once per bucket layout
+    let mut grouped_hives = Vec::new();
+    for layout in layouts() {
+        let cfg = HiveConfig::for_capacity(universe.len() * 2, 0.8).with_layout(layout);
+        let hive_b = HiveTable::new(cfg).unwrap();
+        let mut grouped_map: HashMap<u32, u32> = HashMap::new();
+        for window in ops.chunks(256) {
+            let res = hive_b.execute_ops(window).unwrap();
+            let want = apply_grouped(&mut grouped_map, window);
+            for (i, (r, w)) in res.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    &norm(r),
+                    w,
+                    "execute_ops ({layout:?}) diverged at window op {i}: {:?}",
+                    window[i]
+                );
+            }
         }
+        grouped_hives.push((layout, hive_b, grouped_map));
     }
 
     // final contents agree across every path
     for &k in &universe {
         let want = oracle_map.get(&k).copied();
-        assert_eq!(hive.lookup(k), want, "native final state diverged on {k}");
+        for (layout, hive) in &hives {
+            assert_eq!(hive.lookup(k), want, "native ({layout:?}) final state diverged on {k}");
+        }
         assert_eq!(std_map.lookup(k), want, "ShardedStd final state diverged on {k}");
         assert_eq!(ConcurrentMap::lookup(&plain, k), want, "defaults final state on {k}");
-        assert_eq!(hive_b.lookup(k), grouped_map.get(&k).copied(), "grouped final on {k}");
+        for (layout, hive_b, grouped_map) in &grouped_hives {
+            assert_eq!(
+                hive_b.lookup(k),
+                grouped_map.get(&k).copied(),
+                "grouped ({layout:?}) final on {k}"
+            );
+        }
     }
-    assert_eq!(hive.len(), oracle_map.len(), "native live count diverged");
-    assert_eq!(hive_b.len(), grouped_map.len(), "grouped live count diverged");
+    for (layout, hive) in &hives {
+        assert_eq!(hive.len(), oracle_map.len(), "native ({layout:?}) live count diverged");
+    }
+    for (layout, hive_b, grouped_map) in &grouped_hives {
+        assert_eq!(hive_b.len(), grouped_map.len(), "grouped ({layout:?}) live count diverged");
+    }
 }
 
 /// Spawn a background thread that churns migration state (split/merge
@@ -266,8 +303,15 @@ fn spawn_resizer(
 
 #[test]
 fn concurrent_fetch_add_exact_across_live_migration() {
+    for layout in layouts() {
+        concurrent_fetch_add_exact(layout);
+    }
+}
+
+fn concurrent_fetch_add_exact(layout: Layout) {
     let seed = test_seed();
-    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    let cfg = HiveConfig::default().with_buckets(16).with_layout(layout);
+    let table = Arc::new(HiveTable::new(cfg).unwrap());
     const COUNTERS: u32 = 8;
     const THREADS: u32 = 4;
     const PER_THREAD: u32 = 8_000; // per-thread adds, cycled over counters
@@ -319,8 +363,15 @@ fn concurrent_fetch_add_exact_across_live_migration() {
 
 #[test]
 fn concurrent_cas_increment_exact_across_live_migration() {
+    for layout in layouts() {
+        concurrent_cas_increment_exact(layout);
+    }
+}
+
+fn concurrent_cas_increment_exact(layout: Layout) {
     let seed = test_seed().wrapping_add(1);
-    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    let cfg = HiveConfig::default().with_buckets(16).with_layout(layout);
+    let table = Arc::new(HiveTable::new(cfg).unwrap());
     const THREADS: u32 = 4;
     const SUCCESSES: u32 = 4_000; // optimistic increments each thread must land
     table.insert(77, 0).unwrap();
@@ -358,12 +409,19 @@ fn concurrent_cas_increment_exact_across_live_migration() {
 
 #[test]
 fn concurrent_mixed_rmw_with_migration_settles_consistently() {
+    for layout in layouts() {
+        concurrent_mixed_rmw_settles(layout);
+    }
+}
+
+fn concurrent_mixed_rmw_settles(layout: Layout) {
     // Disjoint key ranges per thread, the full (widened) RMW
     // vocabulary, migration churn underneath: each thread's view must
     // be perfectly sequential, and the settled table must match a
     // per-thread oracle.
     let seed = test_seed().wrapping_add(2);
-    let table = Arc::new(HiveTable::new(HiveConfig::default().with_buckets(16)).unwrap());
+    let cfg = HiveConfig::default().with_buckets(16).with_layout(layout);
+    let table = Arc::new(HiveTable::new(cfg).unwrap());
     let stop = Arc::new(AtomicBool::new(false));
     let resizer = spawn_resizer(Arc::clone(&table), Arc::clone(&stop), seed);
     let threads: Vec<_> = (0..4u64)

@@ -1,6 +1,9 @@
 //! Execution backends: one table interface, three substrates.
 //!
-//! The coordinator's workers drive a [`Backend`]; which substrate executes
+//! The coordinator's workers drive a [`Backend`] — one per worker, and
+//! under the sharded plane one per *shard*, each wrapping its own
+//! independent table instance (own epoch domain, stash, coherence
+//! stamp, counters; see `coordinator::shard`). Which substrate executes
 //! the operations is a config choice:
 //!
 //! * [`NativeBackend`] — the lock-free CPU table (`native::HiveTable`),

@@ -24,6 +24,13 @@
 //!    ([`HotKeyCache::validate`]), so entries cached across a physical
 //!    reallocation or a stash drain — the windows where table state
 //!    moves outside the worker's own op stream — can never be served.
+//! 3. **Wholesale clear on partition move-in** — when this worker
+//!    becomes the executor of a partition mid-move (`Handle::reshard`),
+//!    keys of that partition briefly live in *another shard's* table,
+//!    which the stamp of this worker's own backend cannot vouch for.
+//!    The service clears the cache at move activation
+//!    ([`HotKeyCache::clear`]) and never caches mid-move results, so a
+//!    dual-table read can never be served stale from here.
 //!
 //! A backend that cannot produce a stamp (`None`) gets no cache at all.
 

@@ -1,74 +1,94 @@
 //! The L3 coordinator: a batching key-value service over pluggable
 //! backends — the serving-layer packaging of the Hive table.
 //!
-//! Architecture (pipelined request plane, thread-based):
+//! Architecture (sharded pipelined request plane, thread-based):
 //!
 //! ```text
 //!   client threads            Handle (clone-able, thread-safe)
-//!   ──────────────            route(key) = murmur(key) % workers
-//!   Pipeline: window of N     │
-//!   completion tickets        │   blocking typed ops (insert/lookup/
-//!   (submit ⇢ poll/wait,      │   delete/upsert/update/cas/fetch_add)
-//!   Op in ⇒ OpResult out)     │   = a window-of-1 pipeline
-//!              └──────────────┤
-//!     ┌──────────┬────────────┴─┐
+//!   ──────────────            route(key): partition_of(key) ──┐
+//!   Pipeline: window of N     │                               │
+//!   completion tickets        │   blocking typed ops          ▼
+//!   (submit ⇢ poll/wait,      │   = a window-of-1      [shard directory]
+//!   Op in ⇒ OpResult out)     │   pipeline             partition → shard,
+//!              └──────────────┤                        one seqlock word
+//!     ┌──────────┬────────────┴─┐                      per partition
 //!     ▼          ▼              ▼
 //!  [sub ring] [sub ring]    [sub ring]        bounded MPSC submission
-//!     │          │              │             rings (backpressure)
-//!     ▼          ▼              ▼
-//!  worker 0   worker 1  ...  worker W-1       (std::thread, drains its
-//!  [batcher]  [batcher]      [batcher]        ring into size+deadline
+//!     │          │              │             rings (backpressure);
+//!     ▼          ▼              ▼             workers forward misrouted
+//!  shard 0    shard 1   ...  shard W-1        requests ring-to-ring
+//!  [batcher]  [batcher]      [batcher]        (std::thread, optionally
+//!     │          │              │             CPU/NUMA-pinned via
+//!  [hot-key]  [hot-key]      [hot-key]        shard::Placement, drains
+//!  [ cache ]  [ cache ]      [ cache ]        its ring into size+deadline
 //!     │          │              │             dispatch windows)
-//!  [hot-key]  [hot-key]      [hot-key]        read-through CLOCK cache:
-//!  [ cache ]  [ cache ]      [ cache ]        lookup hits skip the backend
-//!     │          │              │
-//!  Backend    Backend        Backend          native | xla | simt
-//!     │          │              │
-//!  resize-ctl per worker (load-factor watcher between batches)
-//!     │          │              │
+//!  Backend    Backend        Backend          native | xla | simt —
+//!     │          │              │             one table per shard: own
+//!  resize-ctl per shard                       epoch domain, stash,
+//!     │          │              │             coherence stamp, counters
 //!     └──────────┴──────────────┘
 //!   completions published per dispatch window
 //!   (one wakeup per client window, not one per op)
 //! ```
 //!
-//! Each worker owns one table shard; requests are routed by key hash, so
-//! shards are disjoint and workers never contend. Requests enter through
-//! a bounded MPSC submission ring per worker ([`pipeline`]): a client
-//! thread keeps up to N ops in flight via [`Pipeline`] completion
-//! tickets instead of paying a blocking round-trip per op, and bulk
-//! `Handle::submit` windows scatter to all shards up front and gather in
-//! arrival order. Every request plane is *typed* end-to-end: a
-//! [`crate::workload::Op`] goes in, its [`crate::workload::OpResult`]
-//! comes back — previous values, CAS verdicts, and the four-step
-//! `InsertOutcome` attribution included, in submission order. Within a
-//! dispatch window the backend groups by op class (write classes before
-//! lookups — legal for concurrent requests; see `backend`). Between the batcher
-//! and the backend sits a per-worker hot-key cache
-//! ([`cache::HotKeyCache`]): under skewed traffic the hot head of the
-//! key distribution is served without an epoch pin or bucket probe, and
-//! coherence is kept by per-key invalidation on every write class
-//! (including `Update`/`Cas`/`FetchAdd` — applied CAS/Update results
-//! repopulate the cache when they are the window's only write to the
-//! key) plus wholesale validation against the backend's coherence stamp
-//! (reallocation epoch + stash-drain epoch — see `cache` module docs).
-//! The resize controller runs the §IV-C policy between batches,
-//! amortized across the service's lifetime — no global pauses.
+//! Each worker owns one **shard**: an independent backend whose table has
+//! its own epoch domain, overflow stash, coherence stamp and striped
+//! counters, so cross-shard operations never share a cache line. Keys
+//! hash into a fixed set of routing partitions and a directory of
+//! partition→shard entries ([`shard::ShardDirectory`]) is consulted on
+//! every routing decision — one seqlock-validated shared load, the same
+//! discipline the table's `drain_epoch` uses. [`Handle::reshard`] moves
+//! a partition between shards **online**: the destination worker flips
+//! the directory entry (new traffic lands on it immediately), fences the
+//! source worker's in-flight windows, serves the partition dual-table
+//! while a background chunk loop copies the keys over, then settles the
+//! entry — resharding under load never stops the world, mirroring how
+//! intra-table resize migrates concurrently with ops. Worker threads are
+//! placed by [`shard::Placement`]: unpinned, round-robin over CPUs, or
+//! NUMA-node-aware when `/sys` exposes a topology (pinning runs before
+//! the backend factory so allocations first-touch on the right node).
+//!
+//! Requests enter through a bounded MPSC submission ring per worker
+//! ([`pipeline`]): a client thread keeps up to N ops in flight via
+//! [`Pipeline`] completion tickets instead of paying a blocking
+//! round-trip per op, and bulk `Handle::submit` windows scatter
+//! per-shard sub-batches up front and gather replies in arrival order —
+//! each reply carries the submission positions it resolves, so workers
+//! may split or forward sub-windows mid-move and the gather still
+//! reassembles exact submission order. Every request plane is *typed*
+//! end-to-end: a [`crate::workload::Op`] goes in, its
+//! [`crate::workload::OpResult`] comes back — previous values, CAS
+//! verdicts, and the four-step `InsertOutcome` attribution included.
+//! Within a dispatch window the backend groups by op class (write
+//! classes before lookups — legal for concurrent requests; see
+//! `backend`). Between the batcher and the backend sits a per-worker
+//! hot-key cache ([`cache::HotKeyCache`]): under skewed traffic the hot
+//! head of the key distribution is served without an epoch pin or bucket
+//! probe, and coherence is kept by per-key invalidation on every write
+//! class plus wholesale validation against the backend's coherence stamp
+//! (see `cache` module docs); an inbound partition move clears the
+//! destination's cache wholesale, and mid-move keys are never cached.
+//! The resize controller runs the §IV-C policy between batches per
+//! shard, amortized across the service's lifetime — no global pauses.
 //!
 //! Shutdown (or a worker death) can never strand a caller: queued
-//! requests are drained with [`crate::core::error::HiveError::Shutdown`]
-//! and in-flight tickets complete with the same error (see
-//! `tests/test_service.rs`).
+//! requests are drained with [`crate::core::error::HiveError::Shutdown`],
+//! in-flight tickets complete with the same error, and so do pending
+//! reshards and forwarded requests whose target ring died (see
+//! `tests/test_service.rs` and `tests/test_migration.rs`).
 
 pub mod batcher;
 pub mod cache;
 pub mod pipeline;
 pub mod service;
+pub mod shard;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use cache::HotKeyCache;
 pub use pipeline::{Pipeline, Ticket};
-pub use service::{start_native, Coordinator, CoordinatorConfig, Handle};
+pub use service::{start_native, start_native_sharded, Coordinator, CoordinatorConfig, Handle};
+pub use shard::{Ownership, Placement, ShardDirectory, ShardPlan, Topology};
 pub use stats::ServiceStats;
 
 /// Alias re-exported for the resize controller's event type.

@@ -454,6 +454,18 @@ impl<T> Drop for RingTx<T> {
     }
 }
 
+/// Outcome of a non-blocking ring push ([`RingTx::try_send`]). The
+/// cross-shard forwarding path must never block: two workers
+/// blocking-sending into each other's full rings would deadlock the
+/// plane, so full rings hand the value back for a later retry.
+pub(crate) enum TrySend<T> {
+    Sent,
+    /// Ring full; retry later with the returned value.
+    Full(T),
+    /// Receiving worker gone; fail the returned request instead.
+    Disconnected(T),
+}
+
 impl<T> RingTx<T> {
     /// Push one request, blocking while the ring is full. Returns the
     /// request back when the receiving worker is gone — dropping it
@@ -472,6 +484,21 @@ impl<T> RingTx<T> {
             }
             q = self.shared.not_full.wait(q).unwrap();
         }
+    }
+
+    /// Non-blocking push — the workers' cross-shard forwarding path.
+    pub(crate) fn try_send(&self, value: T) -> TrySend<T> {
+        let mut q = self.shared.q.lock().unwrap();
+        if !q.rx_alive {
+            return TrySend::Disconnected(value);
+        }
+        if q.buf.len() < q.cap {
+            q.buf.push_back(value);
+            drop(q);
+            self.shared.not_empty.notify_one();
+            return TrySend::Sent;
+        }
+        TrySend::Full(value)
     }
 }
 
@@ -638,6 +665,23 @@ mod tests {
         assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 3);
         assert_eq!(rx.backlog(), 0);
         assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn try_send_never_blocks_and_reports_state() {
+        let (tx, rx) = ring::<u32>(1);
+        assert!(matches!(tx.try_send(1), TrySend::Sent));
+        match tx.try_send(2) {
+            TrySend::Full(v) => assert_eq!(v, 2, "full ring hands the value back"),
+            _ => panic!("second push into a 1-slot ring must report Full"),
+        }
+        assert_eq!(rx.try_recv(), Some(1));
+        assert!(matches!(tx.try_send(3), TrySend::Sent));
+        drop(rx);
+        match tx.try_send(4) {
+            TrySend::Disconnected(v) => assert_eq!(v, 4),
+            _ => panic!("push after rx death must report Disconnected"),
+        }
     }
 
     #[test]

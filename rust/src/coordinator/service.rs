@@ -1,5 +1,5 @@
-//! The coordinator service: worker pool, request router, and the
-//! per-worker dispatch loop (batcher + backend + resize controller).
+//! The coordinator service: sharded worker pool, request router, and
+//! the per-worker dispatch loop (batcher + backend + resize controller).
 //!
 //! Requests enter through the pipelined plane (`coordinator::pipeline`):
 //! every worker owns a bounded MPSC submission ring which it drains
@@ -7,6 +7,18 @@
 //! ticket/completion slots — one condvar publish per dispatch window
 //! instead of one channel wakeup per op. The blocking `Handle` API is a
 //! window-of-1 pipeline over the same plane.
+//!
+//! Workers are **shards**: each owns an independent backend (native: its
+//! own `HiveTable` with its own epoch domain, stash, coherence stamp and
+//! striped counters), so no cross-shard op ever shares a cache line.
+//! Keys hash into the shard directory (`coordinator::shard`) — one
+//! seqlock-validated shared load maps a key's partition to its owning
+//! shard — and [`Handle::reshard`] moves a partition between shards
+//! **online**: the destination worker fences the source, serves the
+//! partition's traffic dual-table while it copies the keys over, then
+//! settles the directory entry. Misrouted requests (a client raced a
+//! directory flip) are forwarded worker-to-worker, never executed on the
+//! wrong shard, so routing races cost a hop instead of correctness.
 //!
 //! Replies are typed end-to-end: every request — blocking single,
 //! pipelined ticket, or bulk shard — resolves to the [`OpResult`] its
@@ -19,16 +31,16 @@
 use crate::backend::Backend;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::cache::HotKeyCache;
-use crate::coordinator::pipeline::{self, CompletionSlot, Pipeline, RingRx, RingTx};
+use crate::coordinator::pipeline::{self, CompletionSlot, Pipeline, RingRx, RingTx, TrySend};
+use crate::coordinator::shard::{Ownership, Placement, ShardDirectory, ShardPlan, ShardPlane};
 use crate::coordinator::stats::ServiceStats;
 use crate::core::error::{HiveError, Result};
-use crate::hash::HashKind;
 use crate::native::resize::ResizeEvent;
-use crate::native::table::InsertOutcome;
+use crate::native::table::{HiveTable, InsertOutcome};
 use crate::workload::{Op, OpResult};
-use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -67,16 +79,26 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// A bulk sub-reply: the submission positions it resolves, and their
+/// results (in the same order). Workers may split one sub-batch into
+/// several replies while a partition move is in flight, so positions —
+/// not worker indices — are what the gather keys on.
+type BulkReply = (Vec<u32>, Result<Vec<OpResult>>);
+
 enum Request {
     /// One single-key op; completes through its ticket's slot (with the
     /// op's typed [`OpResult`]) when the dispatch window it joins
     /// executes.
     Single { op: Op, enqueued: Instant, done: CompletionSlot },
-    /// One pre-sharded bulk window; the reply is tagged with the worker
-    /// index so the submitter can gather shards in arrival order.
-    Bulk { ops: Vec<Op>, enqueued: Instant, reply: Sender<(usize, Result<Vec<OpResult>>)> },
+    /// One pre-sharded bulk window; `positions[i]` is the submission
+    /// index of `ops[i]`, carried along so forwarded or split sub-windows
+    /// still land their results in the right slots.
+    Bulk { ops: Vec<Op>, positions: Vec<u32>, enqueued: Instant, reply: Sender<BulkReply> },
     Stats { reply: SyncSender<ServiceStats> },
     Flush { reply: SyncSender<()> },
+    /// Move one routing partition onto the receiving worker's shard,
+    /// online. Queued behind any move already in flight there.
+    Reshard { partition: u32, reply: Sender<Result<()>> },
     Shutdown,
 }
 
@@ -91,6 +113,7 @@ pub struct Coordinator {
 #[derive(Clone)]
 pub struct Handle {
     senders: Arc<Vec<RingTx<Request>>>,
+    plane: Arc<ShardPlane>,
 }
 
 impl Coordinator {
@@ -98,38 +121,106 @@ impl Coordinator {
     /// backend (one table shard per worker). The factory runs *inside*
     /// each worker thread — required because the XLA backend's PJRT
     /// client is not `Send`.
+    ///
+    /// Factory-built coordinators predate the shard plane: no tables are
+    /// registered (the backends may not even be tables), so the
+    /// directory stays static, no placement pinning runs, and
+    /// [`Handle::reshard`] refuses. Behavior is identical to the
+    /// pre-shard coordinator, which `tests/test_service.rs` pins down.
     pub fn start<F>(cfg: CoordinatorConfig, factory: F) -> Result<(Coordinator, Handle)>
+    where
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        let plan = ShardPlan { placement: Placement::None, ..ShardPlan::default() };
+        Self::start_with_plan(cfg, plan, factory)
+    }
+
+    /// [`Coordinator::start`] with an explicit shard plan (placement
+    /// policy + directory granularity). The plane still carries no
+    /// tables — online resharding needs [`start_native_sharded`].
+    pub fn start_with_plan<F>(
+        cfg: CoordinatorConfig,
+        plan: ShardPlan,
+        factory: F,
+    ) -> Result<(Coordinator, Handle)>
+    where
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        let partitions = plan.partitions_per_shard.max(1) * cfg.workers;
+        let plane = Arc::new(ShardPlane {
+            directory: ShardDirectory::new(partitions, cfg.workers),
+            tables: Vec::new(),
+        });
+        Self::start_on_plane(cfg, plan, plane, factory)
+    }
+
+    /// Shared start path: spawn the workers over an existing shard
+    /// plane. All rings are created up front so every worker can hold
+    /// the full peer list for forwarding.
+    pub(crate) fn start_on_plane<F>(
+        cfg: CoordinatorConfig,
+        plan: ShardPlan,
+        plane: Arc<ShardPlane>,
+        factory: F,
+    ) -> Result<(Coordinator, Handle)>
     where
         F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         assert!(cfg.workers >= 1);
         let factory = Arc::new(factory);
-        let mut senders = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
+        let mut txs = Vec::with_capacity(cfg.workers);
+        let mut rxs = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
             let (tx, rx) = pipeline::ring::<Request>(cfg.ring_capacity.max(1));
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let peers = Arc::new(txs);
+        let cpu_sets = plan.placement.assign(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for (w, (rx, cpus)) in rxs.into_iter().zip(cpu_sets).enumerate() {
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let cfg_w = cfg.clone();
             let factory = Arc::clone(&factory);
+            let peers_w = Arc::clone(&peers);
+            let plane_w = Arc::clone(&plane);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("hive-worker-{w}"))
-                    .spawn(move || match factory(w) {
-                        Ok(backend) => {
-                            let _ = ready_tx.send(Ok(()));
-                            worker_loop(w, rx, backend, cfg_w);
+                    .spawn(move || {
+                        // Pin before the factory runs so the backend's
+                        // allocations first-touch on the worker's node.
+                        if let Some(cpus) = cpus {
+                            let _ = crate::coordinator::shard::pin_current_thread(&cpus);
                         }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
+                        match factory(w) {
+                            Ok(backend) => {
+                                let _ = ready_tx.send(Ok(()));
+                                worker_loop(w, rx, backend, cfg_w, peers_w, plane_w);
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                            }
                         }
                     })
                     .expect("spawn worker"),
             );
-            ready_rx.recv().map_err(|_| HiveError::Shutdown)??;
-            senders.push(tx);
+            let ready = ready_rx.recv().unwrap_or(Err(HiveError::Shutdown));
+            if let Err(e) = ready {
+                // Already-running workers hold the peer senders, so their
+                // rings never auto-disconnect — shut them down explicitly
+                // before reporting the factory failure.
+                for tx in peers.iter() {
+                    let _ = tx.send(Request::Shutdown);
+                }
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
         }
-        let handle = Handle { senders: Arc::new(senders.clone()) };
-        Ok((Coordinator { senders, handles }, handle))
+        let coord = Coordinator { senders: peers.as_ref().clone(), handles };
+        Ok((coord, Handle { senders: peers, plane }))
     }
 
     /// Stop all workers and join them. Requests still queued behind the
@@ -158,11 +249,64 @@ impl Drop for Coordinator {
 }
 
 impl Handle {
-    /// Worker shard for `key` (murmur routing — independent of the
-    /// table's own bucket hashes so shards stay balanced).
+    /// Worker shard for `key`: one seqlock-validated directory load maps
+    /// the key's partition to its owner. With a settled default
+    /// directory this reproduces the pre-shard murmur-modulo routing bit
+    /// for bit; mid-move partitions route to the move destination.
     #[inline]
     fn route(&self, key: u32) -> usize {
-        (HashKind::Murmur3.hash(key ^ 0x9E3779B9) as usize) % self.senders.len()
+        self.plane.directory.route(key)
+    }
+
+    /// Shard (worker) count.
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Routing-partition count of the shard directory.
+    pub fn partitions(&self) -> usize {
+        self.plane.directory.partitions()
+    }
+
+    /// The directory partition `key` hashes into.
+    pub fn partition_of(&self, key: u32) -> u32 {
+        self.plane.directory.partition_of(key)
+    }
+
+    /// The shard currently responsible for `partition` (the destination
+    /// while a move is in flight).
+    pub fn shard_of(&self, partition: u32) -> usize {
+        match self.plane.directory.ownership(partition) {
+            Ownership::Settled(s) => s,
+            Ownership::Moving { dst, .. } => dst,
+        }
+    }
+
+    /// Move `partition` onto shard `dst` **online**: ops keep flowing
+    /// while the destination worker fences the source, copies the
+    /// partition's keys and settles the directory entry. Blocks until
+    /// the move fully settles (or fails). Requires a native shard plane
+    /// ([`start_native`] / [`start_native_sharded`]); factory-built
+    /// coordinators have a static directory and report
+    /// [`HiveError::Config`].
+    pub fn reshard(&self, partition: u32, dst: usize) -> Result<()> {
+        if partition as usize >= self.plane.directory.partitions() {
+            return Err(HiveError::Config(format!(
+                "partition {partition} out of range (directory has {})",
+                self.plane.directory.partitions()
+            )));
+        }
+        if dst >= self.senders.len() {
+            return Err(HiveError::Config(format!(
+                "destination shard {dst} out of range ({} shards)",
+                self.senders.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.senders[dst]
+            .send(Request::Reshard { partition, reply: tx })
+            .map_err(|_| HiveError::Shutdown)?;
+        rx.recv().map_err(|_| HiveError::Shutdown)?
     }
 
     /// Open a pipelined session over this handle: up to `depth`
@@ -298,62 +442,69 @@ impl Handle {
     /// submission order** — one [`OpResult`] per op, whatever mix of
     /// classes the window carries.
     ///
-    /// Shards are scattered up front and gathered in *arrival order*
-    /// over one shared reply channel — a slow shard no longer blocks
-    /// collection of the fast ones.
+    /// Sub-batches are scattered up front and their replies gathered in
+    /// *arrival order* over one shared channel. A worker may split its
+    /// sub-batch further (forwarding mid-move ops to their owner), so
+    /// every reply carries the submission positions it resolves and the
+    /// gather runs until all positions are filled.
     pub fn submit(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
-        let w = self.senders.len();
-        let mut shards: Vec<Vec<Op>> = vec![Vec::new(); w];
-        let mut route_of: Vec<usize> = Vec::with_capacity(ops.len());
-        for op in ops {
-            let r = self.route(op.key());
-            shards[r].push(*op);
-            route_of.push(r);
+        if ops.is_empty() {
+            return Ok(Vec::new());
         }
-        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<OpResult>>)>();
+        let w = self.senders.len();
+        let mut shards: Vec<(Vec<Op>, Vec<u32>)> = vec![(Vec::new(), Vec::new()); w];
+        for (pos, op) in ops.iter().enumerate() {
+            let r = self.route(op.key());
+            shards[r].0.push(*op);
+            shards[r].1.push(pos as u32);
+        }
+        let (tx, rx) = mpsc::channel::<BulkReply>();
         let enqueued = Instant::now();
-        let mut expected = 0usize;
-        for (i, shard) in shards.into_iter().enumerate() {
+        for (i, (shard, positions)) in shards.into_iter().enumerate() {
             if shard.is_empty() {
                 continue;
             }
             self.senders[i]
-                .send(Request::Bulk { ops: shard, enqueued, reply: tx.clone() })
+                .send(Request::Bulk { ops: shard, positions, enqueued, reply: tx.clone() })
                 .map_err(|_| HiveError::Shutdown)?;
-            expected += 1;
         }
         drop(tx);
-        let mut partials: Vec<Option<Vec<OpResult>>> = vec![None; w];
-        for _ in 0..expected {
-            let (i, res) = rx.recv().map_err(|_| HiveError::Shutdown)?;
-            partials[i] = Some(res?);
+        let mut out: Vec<Option<OpResult>> = vec![None; ops.len()];
+        let mut filled = 0usize;
+        while filled < ops.len() {
+            let (positions, res) = rx.recv().map_err(|_| HiveError::Shutdown)?;
+            let results = res?;
+            debug_assert_eq!(positions.len(), results.len(), "one result per position");
+            for (pos, r) in positions.into_iter().zip(results) {
+                let slot = &mut out[pos as usize];
+                if slot.is_none() {
+                    filled += 1;
+                }
+                *slot = Some(r);
+            }
         }
-        // Reassemble in original submission order: each shard executed
-        // its sub-window in shard-submission order, so one cursor per
-        // shard walks every result exactly once.
-        let mut cursor = vec![0usize; w];
-        let mut merged = Vec::with_capacity(ops.len());
-        for &r in &route_of {
-            let p = partials[r].as_ref().expect("shard result");
-            merged.push(p[cursor[r]]);
-            cursor[r] += 1;
-        }
-        Ok(merged)
+        Ok(out.into_iter().map(|r| r.expect("every position filled")).collect())
     }
 
-    /// Aggregate service stats across workers: scatter the request to
-    /// every worker first, then gather, so one slow worker doesn't
+    /// Per-shard stats snapshots, indexed by shard. Scatter the request
+    /// to every worker first, then gather, so one slow worker doesn't
     /// serialize the round-trips of the rest.
-    pub fn stats(&self) -> Result<ServiceStats> {
+    pub fn stats_per_shard(&self) -> Result<Vec<ServiceStats>> {
         let mut rxs = Vec::with_capacity(self.senders.len());
         for tx in self.senders.iter() {
             let (rtx, rrx) = sync_channel(1);
             tx.send(Request::Stats { reply: rtx }).map_err(|_| HiveError::Shutdown)?;
             rxs.push(rrx);
         }
+        rxs.into_iter().map(|rrx| rrx.recv().map_err(|_| HiveError::Shutdown)).collect()
+    }
+
+    /// Aggregate service stats: every shard's snapshot merged (counters
+    /// add, histograms union) — not any single shard's view.
+    pub fn stats(&self) -> Result<ServiceStats> {
         let mut agg = ServiceStats::default();
-        for rrx in rxs {
-            agg.merge(&rrx.recv().map_err(|_| HiveError::Shutdown)?);
+        for s in self.stats_per_shard()? {
+            agg.merge(&s);
         }
         Ok(agg)
     }
@@ -374,10 +525,59 @@ impl Handle {
     }
 }
 
+/// An op's routing classification against the shard directory, as seen
+/// by the worker it arrived on.
+enum RouteClass {
+    /// This worker owns the key's partition — the normal fast path.
+    Local,
+    /// Another shard owns it (the sender raced a directory flip):
+    /// forward to the owner, never execute here.
+    Forward(usize),
+    /// The key's partition is moving *to* this worker and the source is
+    /// not fenced yet — park the op until the fence acks.
+    Hold,
+    /// The key's partition is moving to this worker and the source is
+    /// quiesced (or the move was abandoned): execute dual-table.
+    Dual { src: usize },
+}
+
+/// Requests parked while this worker fences the source of an inbound
+/// partition move.
+enum Held {
+    Single { op: Op, enqueued: Instant, done: CompletionSlot },
+    Bulk { ops: Vec<Op>, positions: Vec<u32>, enqueued: Instant, reply: Sender<BulkReply> },
+}
+
+/// Phase of the one inbound partition move a worker drives at a time.
+enum MovePhase {
+    /// Waiting for the source worker to execute a flush marker sent
+    /// down its ring *after* the directory flip: once it acks, every
+    /// window the source executed before the flip has retired, so the
+    /// partition snapshot taken next is complete.
+    Fencing { pending: Option<Request>, ack: Receiver<()> },
+    /// Copying the partition's keys out of the source table, a bounded
+    /// chunk per loop tick so inbound traffic keeps flowing in between.
+    Migrating { keys: Vec<(u32, u32)>, next: usize },
+}
+
+struct MoveState {
+    partition: u32,
+    src: usize,
+    reply: Sender<Result<()>>,
+    held: Vec<Held>,
+    phase: MovePhase,
+}
+
+/// Keys copied per migration tick — bounds how long a tick can starve
+/// the ring while keeping per-key overhead amortized.
+const MIGRATE_CHUNK: usize = 128;
+
 /// One worker: owns a backend shard and the hot-key cache in front of
 /// it, batches singles, executes bulks, runs the resize controller
-/// between windows.
+/// between windows, forwards misrouted requests, and drives at most one
+/// inbound partition move at a time.
 struct Worker {
+    index: usize,
     backend: Box<dyn Backend>,
     batcher: Batcher,
     /// Waiting singles, 1:1 (and in order) with the batcher's pending
@@ -388,6 +588,15 @@ struct Worker {
     /// when the backend cannot produce a coherence stamp.
     cache: Option<HotKeyCache>,
     cfg: CoordinatorConfig,
+    /// Every worker's ring sender, for forwarding misrouted requests.
+    peers: Arc<Vec<RingTx<Request>>>,
+    plane: Arc<ShardPlane>,
+    /// Forwards that hit a full peer ring, retried (non-blocking) once
+    /// per loop tick. Blocking here could deadlock two workers
+    /// forwarding into each other's full rings.
+    forward_backlog: VecDeque<(usize, Request)>,
+    active_move: Option<MoveState>,
+    pending_moves: VecDeque<(u32, Sender<Result<()>>)>,
 }
 
 impl Worker {
@@ -561,6 +770,592 @@ impl Worker {
             _ => {}
         }
     }
+
+    /// Classify one key against the shard directory (one shared load).
+    fn classify(&self, key: u32) -> RouteClass {
+        let p = self.plane.directory.partition_of(key);
+        match self.plane.directory.ownership(p) {
+            Ownership::Settled(s) if s == self.index => RouteClass::Local,
+            Ownership::Settled(s) => RouteClass::Forward(s),
+            Ownership::Moving { src, dst } if dst == self.index => {
+                // Before the source acks the fence it may still be
+                // executing pre-flip windows — running the op here too
+                // would break the single-executor discipline, so it
+                // parks. A moving entry with *no* matching active move
+                // is an abandoned move (the source died mid-fence):
+                // dual-table execution stays correct indefinitely.
+                let fencing = matches!(
+                    &self.active_move,
+                    Some(m) if m.partition == p && matches!(m.phase, MovePhase::Fencing { .. })
+                );
+                if fencing {
+                    RouteClass::Hold
+                } else {
+                    RouteClass::Dual { src }
+                }
+            }
+            Ownership::Moving { dst, .. } => RouteClass::Forward(dst),
+        }
+    }
+
+    fn handle_single(&mut self, op: Op, enqueued: Instant, done: CompletionSlot, backlog: usize) {
+        match self.classify(op.key()) {
+            RouteClass::Local => {
+                self.waiting.push((enqueued, done));
+                // The window's deadline runs from the op's submission,
+                // so ring backlog counts against it. An expired window
+                // is NOT dispatched mid-drain: it ships at the next
+                // instant the ring is momentarily empty (the try_recv
+                // None path in the loop) or at max_batch, whichever is
+                // first. That bounds deadline overshoot to the in-hand
+                // backlog while keeping the batch amortization the
+                // plane exists for — dispatching per-op on an aged
+                // backlog would collapse every window to size 1 exactly
+                // under overload.
+                if self.batcher.push_at(op, enqueued) {
+                    self.dispatch(backlog);
+                }
+            }
+            RouteClass::Forward(to) => {
+                self.stats.forwarded += 1;
+                self.push_forward(to, Request::Single { op, enqueued, done });
+            }
+            RouteClass::Hold => {
+                let m = self.active_move.as_mut().expect("hold implies an active move");
+                m.held.push(Held::Single { op, enqueued, done });
+            }
+            RouteClass::Dual { src } => self.moving_single(src, op, enqueued, done),
+        }
+    }
+
+    fn handle_bulk(
+        &mut self,
+        ops: Vec<Op>,
+        positions: Vec<u32>,
+        enqueued: Instant,
+        reply: Sender<BulkReply>,
+        backlog: usize,
+    ) {
+        // Fast path: with the directory untouched (or this worker owning
+        // every key) the whole sub-batch executes locally — exactly the
+        // pre-shard bulk path, no splitting allocation.
+        if ops.iter().all(|op| matches!(self.classify(op.key()), RouteClass::Local)) {
+            return self.execute_bulk_local(ops, positions, enqueued, reply, backlog);
+        }
+        let mut local_ops = Vec::new();
+        let mut local_pos = Vec::new();
+        let mut held_ops = Vec::new();
+        let mut held_pos = Vec::new();
+        let mut moving: Vec<(Op, u32, usize)> = Vec::new();
+        let mut fwd: HashMap<usize, (Vec<Op>, Vec<u32>)> = HashMap::new();
+        for (op, pos) in ops.into_iter().zip(positions) {
+            match self.classify(op.key()) {
+                RouteClass::Local => {
+                    local_ops.push(op);
+                    local_pos.push(pos);
+                }
+                RouteClass::Forward(to) => {
+                    let e = fwd.entry(to).or_default();
+                    e.0.push(op);
+                    e.1.push(pos);
+                }
+                RouteClass::Hold => {
+                    held_ops.push(op);
+                    held_pos.push(pos);
+                }
+                RouteClass::Dual { src } => moving.push((op, pos, src)),
+            }
+        }
+        for (to, (ops, positions)) in fwd {
+            self.stats.forwarded += ops.len() as u64;
+            self.push_forward(to, Request::Bulk { ops, positions, enqueued, reply: reply.clone() });
+        }
+        if !held_ops.is_empty() {
+            let m = self.active_move.as_mut().expect("hold implies an active move");
+            m.held.push(Held::Bulk {
+                ops: held_ops,
+                positions: held_pos,
+                enqueued,
+                reply: reply.clone(),
+            });
+        }
+        if !moving.is_empty() {
+            self.moving_bulk(moving, enqueued, reply.clone());
+        }
+        if !local_ops.is_empty() {
+            self.execute_bulk_local(local_ops, local_pos, enqueued, reply, backlog);
+        }
+    }
+
+    /// The pre-shard bulk path: flush pending singles (window ordering),
+    /// execute the sub-window, reply with its positions.
+    fn execute_bulk_local(
+        &mut self,
+        ops: Vec<Op>,
+        positions: Vec<u32>,
+        enqueued: Instant,
+        reply: Sender<BulkReply>,
+        backlog: usize,
+    ) {
+        // flush pending singles first to preserve window ordering
+        self.dispatch(backlog);
+        let started = Instant::now();
+        self.stats.queue_delay_ns.record_n(
+            started.saturating_duration_since(enqueued).as_nanos() as u64,
+            ops.len() as u64,
+        );
+        self.stats.inflight_depth.record((ops.len() + backlog) as u64);
+        let res = self.execute_window(&ops);
+        if let Ok(res) = &res {
+            self.stats.record_results(res);
+            self.stats
+                .latency_ns
+                .record_n(enqueued.elapsed().as_nanos() as u64, ops.len() as u64);
+        }
+        let _ = reply.send((positions, res));
+        self.check_resize();
+    }
+
+    /// Execute one op whose partition is mid-move, against both the
+    /// source and destination tables. Bypasses the batcher and the
+    /// cache entirely — mid-move keys are never cached.
+    fn execute_moving(&mut self, src: usize, op: &Op) -> Result<OpResult> {
+        self.stats.moving_ops += 1;
+        let s = Arc::clone(&self.plane.tables[src]);
+        let d = Arc::clone(&self.plane.tables[self.index]);
+        exec_dual(&s, &d, op)
+    }
+
+    fn moving_single(&mut self, src: usize, op: Op, enqueued: Instant, done: CompletionSlot) {
+        let started = Instant::now();
+        self.stats
+            .queue_delay_ns
+            .record(started.saturating_duration_since(enqueued).as_nanos() as u64);
+        let res = self.execute_moving(src, &op);
+        if let Ok(r) = &res {
+            self.stats.record_results(std::slice::from_ref(r));
+        }
+        // bypasses execute_window, so account the op here
+        self.stats.ops += 1;
+        self.stats.latency_ns.record(enqueued.elapsed().as_nanos() as u64);
+        pipeline::publish_batch(vec![(done, res)]);
+    }
+
+    fn moving_bulk(
+        &mut self,
+        items: Vec<(Op, u32, usize)>,
+        enqueued: Instant,
+        reply: Sender<BulkReply>,
+    ) {
+        let started = Instant::now();
+        self.stats.queue_delay_ns.record_n(
+            started.saturating_duration_since(enqueued).as_nanos() as u64,
+            items.len() as u64,
+        );
+        let mut positions = Vec::with_capacity(items.len());
+        let mut results = Vec::with_capacity(items.len());
+        let mut failure: Option<HiveError> = None;
+        for (op, pos, src) in items {
+            positions.push(pos);
+            if failure.is_none() {
+                match self.execute_moving(src, &op) {
+                    Ok(r) => results.push(r),
+                    Err(e) => failure = Some(e),
+                }
+            }
+        }
+        let res = match failure {
+            None => {
+                self.stats.record_results(&results);
+                self.stats.ops += results.len() as u64;
+                self.stats
+                    .latency_ns
+                    .record_n(enqueued.elapsed().as_nanos() as u64, results.len() as u64);
+                Ok(results)
+            }
+            Some(e) => Err(e),
+        };
+        let _ = reply.send((positions, res));
+    }
+
+    fn push_forward(&mut self, to: usize, req: Request) {
+        match self.peers[to].try_send(req) {
+            TrySend::Sent => {}
+            TrySend::Full(req) => self.forward_backlog.push_back((to, req)),
+            TrySend::Disconnected(req) => fail_request(req),
+        }
+    }
+
+    /// Retry backlogged forwards, once each, without blocking.
+    fn drain_forwards(&mut self) {
+        for _ in 0..self.forward_backlog.len() {
+            let (to, req) = self.forward_backlog.pop_front().expect("len-bounded");
+            match self.peers[to].try_send(req) {
+                TrySend::Sent => {}
+                TrySend::Full(req) => self.forward_backlog.push_back((to, req)),
+                TrySend::Disconnected(req) => fail_request(req),
+            }
+        }
+    }
+
+    /// Whether any shard-plane work needs loop ticks independent of ring
+    /// arrivals (fence acks come on a side channel; migration and
+    /// forward retries progress only here).
+    fn has_plane_work(&self) -> bool {
+        self.active_move.is_some()
+            || !self.pending_moves.is_empty()
+            || !self.forward_backlog.is_empty()
+    }
+
+    /// Drive the inbound move state machine one step: activate the next
+    /// queued move when idle, then advance the fence or copy one
+    /// bounded chunk. Every step is non-blocking, and the whole call is
+    /// a no-op for workers with no plane work — i.e. for every
+    /// never-resharded coordinator.
+    fn poll_move(&mut self) {
+        if self.active_move.is_none() {
+            if let Some((partition, reply)) = self.pending_moves.pop_front() {
+                self.activate_move(partition, reply);
+            }
+        }
+        // Destructure the state so the phase data can move into the
+        // phase handlers (which re-store the state when not done).
+        let Some(MoveState { partition, src, reply, held, phase }) = self.active_move.take()
+        else {
+            return;
+        };
+        match phase {
+            MovePhase::Fencing { pending, ack } => {
+                self.poll_fence(partition, src, reply, held, pending, ack)
+            }
+            MovePhase::Migrating { keys, next } => {
+                self.poll_migrate(partition, src, reply, held, keys, next)
+            }
+        }
+    }
+
+    fn activate_move(&mut self, partition: u32, reply: Sender<Result<()>>) {
+        if partition as usize >= self.plane.directory.partitions() {
+            let _ = reply
+                .send(Err(HiveError::Config(format!("partition {partition} out of range"))));
+            return;
+        }
+        let src = match self.plane.directory.ownership(partition) {
+            Ownership::Settled(s) if s == self.index => {
+                // already here — trivially done
+                let _ = reply.send(Ok(()));
+                return;
+            }
+            Ownership::Settled(s) => s,
+            Ownership::Moving { .. } => {
+                let _ = reply.send(Err(HiveError::Runtime(format!(
+                    "partition {partition} is already mid-move"
+                ))));
+                return;
+            }
+        };
+        if self.plane.tables.is_empty() {
+            let _ = reply.send(Err(HiveError::Config(
+                "online resharding requires a native shard plane (start_native / \
+                 start_native_sharded); factory-built coordinators have a static directory"
+                    .into(),
+            )));
+            return;
+        }
+        if !self.plane.directory.begin_move(partition, src, self.index) {
+            let _ = reply.send(Err(HiveError::Runtime(format!(
+                "partition {partition} changed hands mid-claim"
+            ))));
+            return;
+        }
+        self.stats.moves_started += 1;
+        // The cache may hold keys from this partition's previous tenancy
+        // on this shard; the move makes them live again through a table
+        // this cache never observed — clear wholesale.
+        if let Some(cache) = self.cache.as_mut() {
+            cache.clear();
+            self.stats.cache_flushes += 1;
+        }
+        let (ftx, frx) = sync_channel::<()>(1);
+        self.active_move = Some(MoveState {
+            partition,
+            src,
+            reply,
+            held: Vec::new(),
+            phase: MovePhase::Fencing {
+                pending: Some(Request::Flush { reply: ftx }),
+                ack: frx,
+            },
+        });
+    }
+
+    fn poll_fence(
+        &mut self,
+        partition: u32,
+        src: usize,
+        reply: Sender<Result<()>>,
+        held: Vec<Held>,
+        mut pending: Option<Request>,
+        ack: Receiver<()>,
+    ) {
+        if let Some(req) = pending.take() {
+            match self.peers[src].try_send(req) {
+                TrySend::Sent => {}
+                TrySend::Full(req) => pending = Some(req),
+                TrySend::Disconnected(_) => {
+                    // The source died before the fence landed. Leave the
+                    // directory entry moving: dual-table execution stays
+                    // correct indefinitely, the copy just never happens.
+                    let _ = reply.send(Err(HiveError::Shutdown));
+                    fail_held(held);
+                    return;
+                }
+            }
+        }
+        if pending.is_none() {
+            match ack.try_recv() {
+                Ok(()) => {
+                    // Fence acked: every window the source executed
+                    // before the directory flip has retired, so this
+                    // snapshot sees the partition completely.
+                    let keys = self.partition_snapshot(src, partition);
+                    self.active_move = Some(MoveState {
+                        partition,
+                        src,
+                        reply,
+                        held: Vec::new(),
+                        phase: MovePhase::Migrating { keys, next: 0 },
+                    });
+                    self.drain_held(src, held);
+                    return;
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    let _ = reply.send(Err(HiveError::Shutdown));
+                    fail_held(held);
+                    return;
+                }
+            }
+        }
+        self.active_move = Some(MoveState {
+            partition,
+            src,
+            reply,
+            held,
+            phase: MovePhase::Fencing { pending, ack },
+        });
+    }
+
+    fn poll_migrate(
+        &mut self,
+        partition: u32,
+        src: usize,
+        reply: Sender<Result<()>>,
+        held: Vec<Held>,
+        mut keys: Vec<(u32, u32)>,
+        mut next: usize,
+    ) {
+        let src_t = Arc::clone(&self.plane.tables[src]);
+        let dst_t = Arc::clone(&self.plane.tables[self.index]);
+        let end = (next + MIGRATE_CHUNK).min(keys.len());
+        while next < end {
+            let (k, _) = keys[next];
+            // Live re-check: a dual-table op may have deleted or
+            // rewritten the key since the snapshot — copying the
+            // snapshot value would resurrect it.
+            if let Some(cur) = src_t.lookup(k) {
+                if dst_t.insert_if_absent(k, cur).is_err() {
+                    // destination full: nudge its resizer and retry the
+                    // same key next tick
+                    let _ = dst_t.maybe_resize();
+                    break;
+                }
+                src_t.delete(k);
+                self.stats.keys_migrated += 1;
+            }
+            next += 1;
+        }
+        if next >= keys.len() {
+            // Re-snapshot before settling: a source-side lookup can
+            // transiently miss mid stash-drain, stranding a key this
+            // pass. The source set only shrinks post-fence (writes land
+            // dual-side in the destination), so repeated passes
+            // converge on empty.
+            let snap = self.partition_snapshot(src, partition);
+            if snap.is_empty() {
+                let settled = self.plane.directory.finish_move(partition);
+                debug_assert!(settled, "finish_move on an entry this worker claimed");
+                self.stats.moves_completed += 1;
+                let _ = reply.send(Ok(()));
+                debug_assert!(held.is_empty(), "held ops drain at fence ack");
+                fail_held(held); // defensive: never leak completion slots
+                return;
+            }
+            keys = snap;
+            next = 0;
+        }
+        self.active_move = Some(MoveState {
+            partition,
+            src,
+            reply,
+            held,
+            phase: MovePhase::Migrating { keys, next },
+        });
+    }
+
+    /// All keys of `partition` still living in shard `src`'s table.
+    fn partition_snapshot(&self, src: usize, partition: u32) -> Vec<(u32, u32)> {
+        self.plane.tables[src]
+            .entries()
+            .into_iter()
+            .filter(|&(k, _)| self.plane.directory.partition_of(k) == partition)
+            .collect()
+    }
+
+    /// Execute the ops parked behind the fence, dual-table, now that the
+    /// source is quiesced.
+    fn drain_held(&mut self, src: usize, held: Vec<Held>) {
+        for h in held {
+            match h {
+                Held::Single { op, enqueued, done } => self.moving_single(src, op, enqueued, done),
+                Held::Bulk { ops, positions, enqueued, reply } => {
+                    let items: Vec<(Op, u32, usize)> =
+                        ops.into_iter().zip(positions).map(|(op, pos)| (op, pos, src)).collect();
+                    self.moving_bulk(items, enqueued, reply);
+                }
+            }
+        }
+    }
+
+    /// Fail every outstanding plane obligation on shutdown: backlogged
+    /// forwards, the active move, and any queued ones.
+    fn abort_plane_work(&mut self) {
+        for (_, req) in self.forward_backlog.drain(..) {
+            fail_request(req);
+        }
+        if let Some(m) = self.active_move.take() {
+            let _ = m.reply.send(Err(HiveError::Shutdown));
+            fail_held(m.held);
+        }
+        for (_, reply) in self.pending_moves.drain(..) {
+            let _ = reply.send(Err(HiveError::Shutdown));
+        }
+    }
+}
+
+/// Fail a request that can no longer reach a worker. Bulk replies must
+/// be sent explicitly: the submitter holds other clones of the same
+/// reply channel, so merely dropping this one would leave its gather
+/// loop waiting on positions that never arrive.
+fn fail_request(req: Request) {
+    match req {
+        Request::Bulk { positions, reply, .. } => {
+            let _ = reply.send((positions, Err(HiveError::Shutdown)));
+        }
+        Request::Reshard { reply, .. } => {
+            let _ = reply.send(Err(HiveError::Shutdown));
+        }
+        // Single/Stats/Flush: dropping the slot or sender fires Shutdown
+        // on the waiting side.
+        Request::Single { .. }
+        | Request::Stats { .. }
+        | Request::Flush { .. }
+        | Request::Shutdown => {}
+    }
+}
+
+fn fail_held(held: Vec<Held>) {
+    for h in held {
+        match h {
+            // dropping the completion slot fires Shutdown
+            Held::Single { .. } => {}
+            Held::Bulk { positions, reply, .. } => {
+                let _ = reply.send((positions, Err(HiveError::Shutdown)));
+            }
+        }
+    }
+}
+
+/// Run one op against one table through the grouped batch path.
+fn exec_one(t: &HiveTable, op: &Op) -> Result<OpResult> {
+    Ok(t.execute_ops(std::slice::from_ref(op))?.remove(0))
+}
+
+/// Execute `op` for a key whose partition is mid-move from table `s`
+/// (source) to `d` (destination): reads consult the destination first
+/// and fall back to the source; writes land in the destination and
+/// retire the source copy. The pair behaves as one logical table whose
+/// authoritative copy drifts toward the destination — exactly what the
+/// concurrent migration loop needs, since it only ever *removes* keys
+/// from the source.
+fn exec_dual(s: &HiveTable, d: &HiveTable, op: &Op) -> Result<OpResult> {
+    match *op {
+        Op::Lookup { key } => Ok(OpResult::Value(d.lookup(key).or_else(|| s.lookup(key)))),
+        Op::Delete { key } => {
+            let hit_d = d.delete(key);
+            let hit_s = s.delete(key);
+            Ok(OpResult::Deleted(hit_d || hit_s))
+        }
+        Op::Insert { key, value } | Op::Upsert { key, value } => {
+            let s_old = s.lookup(key);
+            let (outcome, d_old) = d.upsert(key, value)?;
+            if s_old.is_some() {
+                s.delete(key);
+            }
+            // a key living only source-side is logically present: the
+            // destination's "Inserted" is a replace of that copy
+            let outcome = if d_old.is_none() && s_old.is_some() {
+                InsertOutcome::Replaced
+            } else {
+                outcome
+            };
+            Ok(OpResult::Upserted { outcome, old: d_old.or(s_old) })
+        }
+        Op::InsertIfAbsent { key, value } => match d.lookup(key).or_else(|| s.lookup(key)) {
+            Some(v) => Ok(OpResult::InsertedIfAbsent { outcome: None, existing: Some(v) }),
+            None => exec_one(d, &Op::InsertIfAbsent { key, value }),
+        },
+        Op::Update { key, value } => {
+            if d.lookup(key).is_some() {
+                return exec_one(d, op);
+            }
+            match s.lookup(key) {
+                Some(old) => {
+                    d.insert(key, value)?;
+                    s.delete(key);
+                    Ok(OpResult::Updated { old: Some(old) })
+                }
+                None => Ok(OpResult::Updated { old: None }),
+            }
+        }
+        Op::Cas { key, expected, new } => {
+            if d.lookup(key).is_some() {
+                return exec_one(d, op);
+            }
+            match s.lookup(key) {
+                Some(actual) if actual == expected => {
+                    d.insert(key, new)?;
+                    s.delete(key);
+                    Ok(OpResult::Cas { ok: true, actual: Some(actual) })
+                }
+                Some(actual) => Ok(OpResult::Cas { ok: false, actual: Some(actual) }),
+                None => exec_one(d, op),
+            }
+        }
+        Op::FetchAdd { key, delta } => {
+            if d.lookup(key).is_some() {
+                return exec_one(d, op);
+            }
+            match s.lookup(key) {
+                Some(old) => {
+                    d.insert(key, old.wrapping_add(delta))?;
+                    s.delete(key);
+                    Ok(OpResult::FetchAdded { outcome: None, old: Some(old) })
+                }
+                None => exec_one(d, op),
+            }
+        }
+    }
 }
 
 fn worker_loop(
@@ -568,6 +1363,8 @@ fn worker_loop(
     rx: RingRx<Request>,
     backend: Box<dyn Backend>,
     cfg: CoordinatorConfig,
+    peers: Arc<Vec<RingTx<Request>>>,
+    plane: Arc<ShardPlane>,
 ) {
     let cache = if cfg.cache_capacity > 0 {
         backend.coherence_stamp().map(|s| HotKeyCache::new(cfg.cache_capacity, s))
@@ -575,14 +1372,24 @@ fn worker_loop(
         None
     };
     let mut w = Worker {
+        index,
         batcher: Batcher::new(cfg.batch),
         waiting: Vec::new(),
         stats: ServiceStats::default(),
         backend,
         cache,
         cfg,
+        peers,
+        plane,
+        forward_backlog: VecDeque::new(),
+        active_move: None,
+        pending_moves: VecDeque::new(),
     };
     loop {
+        // Plane work first: both are no-ops for a worker that never sees
+        // a forward or a move (every pre-shard workload).
+        w.drain_forwards();
+        w.poll_move();
         // Drain the ring straight into the batcher: only sleep on the
         // dispatch deadline when no request is immediately available.
         let req = match rx.try_recv() {
@@ -592,7 +1399,15 @@ fn worker_loop(
                     w.dispatch(rx.backlog());
                     continue;
                 }
-                let timeout = w.batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+                let mut timeout =
+                    w.batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+                if w.has_plane_work() {
+                    // Fence acks arrive on a side channel and migration
+                    // chunks progress on this loop, not on ring
+                    // arrivals — don't sleep long on an idle ring while
+                    // a move is in flight.
+                    timeout = timeout.min(Duration::from_micros(50));
+                }
                 match rx.recv_timeout(timeout) {
                     Ok(r) => r,
                     Err(RecvTimeoutError::Timeout) => {
@@ -607,39 +1422,10 @@ fn worker_loop(
         };
         match req {
             Request::Single { op, enqueued, done } => {
-                w.waiting.push((enqueued, done));
-                // The window's deadline runs from the op's submission,
-                // so ring backlog counts against it. An expired window
-                // is NOT dispatched mid-drain: it ships at the next
-                // instant the ring is momentarily empty (the try_recv
-                // None path above) or at max_batch, whichever is first.
-                // That bounds deadline overshoot to the in-hand backlog
-                // while keeping the batch amortization the plane exists
-                // for — dispatching per-op on an aged backlog would
-                // collapse every window to size 1 exactly under
-                // overload.
-                if w.batcher.push_at(op, enqueued) {
-                    w.dispatch(rx.backlog());
-                }
+                w.handle_single(op, enqueued, done, rx.backlog());
             }
-            Request::Bulk { ops, enqueued, reply } => {
-                // flush pending singles first to preserve window ordering
-                w.dispatch(rx.backlog());
-                let started = Instant::now();
-                w.stats.queue_delay_ns.record_n(
-                    started.saturating_duration_since(enqueued).as_nanos() as u64,
-                    ops.len() as u64,
-                );
-                w.stats.inflight_depth.record((ops.len() + rx.backlog()) as u64);
-                let res = w.execute_window(&ops);
-                if let Ok(res) = &res {
-                    w.stats.record_results(res);
-                    w.stats
-                        .latency_ns
-                        .record_n(enqueued.elapsed().as_nanos() as u64, ops.len() as u64);
-                }
-                let _ = reply.send((index, res));
-                w.check_resize();
+            Request::Bulk { ops, positions, enqueued, reply } => {
+                w.handle_bulk(ops, positions, enqueued, reply, rx.backlog());
             }
             Request::Stats { reply } => {
                 let _ = reply.send(w.stats.clone());
@@ -648,27 +1434,63 @@ fn worker_loop(
                 w.dispatch(rx.backlog());
                 let _ = reply.send(());
             }
+            Request::Reshard { partition, reply } => {
+                w.pending_moves.push_back((partition, reply));
+            }
             Request::Shutdown => {
                 w.dispatch(rx.backlog());
                 break;
             }
         }
     }
+    w.abort_plane_work();
     // `rx` drops here: any request still queued behind the shutdown
     // marker is drained and its completion slot / reply channel fires
     // with `Shutdown` — same for `w.waiting` if the thread unwinds.
 }
 
 /// Shared-state convenience: a coordinator whose workers all use native
-/// backends over table shards sized by `cfg`.
+/// backends over table shards sized by `cfg`. Equivalent to
+/// [`start_native_sharded`] with no thread placement — the historical
+/// default, pinned down by the unmodified service tests.
 pub fn start_native(
     coord_cfg: CoordinatorConfig,
     table_cfg: crate::core::config::HiveConfig,
 ) -> Result<(Coordinator, Handle)> {
-    let table_cfg = Arc::new(Mutex::new(table_cfg));
-    Coordinator::start(coord_cfg, move |_w| {
-        let cfg = table_cfg.lock().unwrap().clone();
-        Ok(Box::new(crate::backend::NativeBackend::new(cfg)?) as Box<dyn Backend>)
+    let plan = ShardPlan { placement: Placement::None, ..ShardPlan::default() };
+    start_native_sharded(coord_cfg, plan, table_cfg)
+}
+
+/// Sharded native coordinator: one independent [`HiveTable`] per worker
+/// (its own epoch domain, stash, coherence stamp and striped counters),
+/// registered on the shard plane so partitions can move between shards
+/// online via [`Handle::reshard`], with worker threads pinned per
+/// `plan.placement`.
+///
+/// Tables are built up front on the calling thread — the plane needs
+/// every shard's table before any worker can run a cross-shard move.
+/// (First-touch locality of the *initial* arrays is therefore the
+/// caller's; the arrays a shard grows into during resize are allocated
+/// on its own pinned thread.)
+pub fn start_native_sharded(
+    coord_cfg: CoordinatorConfig,
+    plan: ShardPlan,
+    table_cfg: crate::core::config::HiveConfig,
+) -> Result<(Coordinator, Handle)> {
+    assert!(coord_cfg.workers >= 1);
+    let mut tables = Vec::with_capacity(coord_cfg.workers);
+    for _ in 0..coord_cfg.workers {
+        tables.push(Arc::new(HiveTable::new(table_cfg.clone())?));
+    }
+    let partitions = plan.partitions_per_shard.max(1) * coord_cfg.workers;
+    let plane = Arc::new(ShardPlane {
+        directory: ShardDirectory::new(partitions, coord_cfg.workers),
+        tables: tables.clone(),
+    });
+    let tables = Arc::new(tables);
+    Coordinator::start_on_plane(coord_cfg, plan, plane, move |w| {
+        Ok(Box::new(crate::backend::NativeBackend::shared(Arc::clone(&tables[w])))
+            as Box<dyn Backend>)
     })
 }
 
@@ -1000,6 +1822,164 @@ mod tests {
         let lookups: Vec<Op> = (1..=1000u32).map(|k| Op::Lookup { key: k }).collect();
         let r = h.submit(&lookups).unwrap();
         assert!(r.iter().all(|v| matches!(v, OpResult::Value(Some(_)))));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_start_roundtrips_across_plans() {
+        let plan = ShardPlan { partitions_per_shard: 8, placement: Placement::None };
+        let (coord, h) =
+            start_native_sharded(quick_cfg(), plan, HiveConfig::default().with_buckets(64))
+                .unwrap();
+        assert_eq!(h.shards(), 2);
+        assert_eq!(h.partitions(), 16);
+        for k in 1..=300u32 {
+            h.insert(k, k + 7).unwrap();
+        }
+        for k in 1..=300u32 {
+            assert_eq!(h.lookup(k).unwrap(), Some(k + 7));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reshard_moves_partitions_online_and_preserves_data() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        for k in 1..=500u32 {
+            h.insert(k, k.wrapping_mul(3)).unwrap();
+        }
+        // sweep every partition onto shard 0, then spread them back
+        for p in 0..h.partitions() as u32 {
+            h.reshard(p, 0).unwrap();
+        }
+        for k in 1..=500u32 {
+            assert_eq!(h.lookup(k).unwrap(), Some(k.wrapping_mul(3)), "key {k} lost moving in");
+        }
+        for p in 0..h.partitions() as u32 {
+            h.reshard(p, p as usize % h.shards()).unwrap();
+        }
+        for k in 1..=500u32 {
+            assert_eq!(h.lookup(k).unwrap(), Some(k.wrapping_mul(3)), "key {k} lost moving out");
+        }
+        h.flush().unwrap();
+        let s = h.stats().unwrap();
+        assert!(s.moves_completed >= 1, "{}", s.summary());
+        assert!(s.keys_migrated > 0, "{}", s.summary());
+        assert_eq!(s.moves_started, s.moves_completed, "{}", s.summary());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reshard_rejects_bad_arguments_and_factory_planes() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        assert!(h.reshard(u32::MAX, 0).is_err(), "out-of-range partition accepted");
+        assert!(h.reshard(0, 99).is_err(), "out-of-range shard accepted");
+        coord.shutdown();
+        // factory-built coordinators have no table plane: cross-shard
+        // moves must refuse rather than silently flip the directory
+        let (coord, h) = Coordinator::start(quick_cfg(), |_w| {
+            Ok(Box::new(crate::backend::NativeBackend::new(
+                HiveConfig::default().with_buckets(64),
+            )?) as Box<dyn Backend>)
+        })
+        .unwrap();
+        let p = (0..h.partitions() as u32)
+            .find(|&p| h.shard_of(p) != 1)
+            .expect("some partition lives off shard 1");
+        let err = h.reshard(p, 1).unwrap_err();
+        assert!(matches!(err, HiveError::Config(_)), "got {err:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn misrouted_requests_are_forwarded_to_their_owner() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        h.insert(42, 1).unwrap();
+        let owner = h.route(42);
+        let wrong = (owner + 1) % h.shards();
+        // inject directly into the wrong worker's ring, as a client
+        // holding a stale routing decision across a directory flip would
+        let (ticket, done) = pipeline::one_shot();
+        h.senders[wrong]
+            .send(Request::Single { op: Op::Lookup { key: 42 }, enqueued: Instant::now(), done })
+            .map_err(|_| HiveError::Shutdown)
+            .unwrap();
+        assert_eq!(ticket.wait().unwrap(), OpResult::Value(Some(1)));
+        h.flush().unwrap();
+        let s = h.stats().unwrap();
+        assert_eq!(s.forwarded, 1, "{}", s.summary());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_shard_stats_sum_to_the_aggregate() {
+        let (coord, h) =
+            start_native(quick_cfg(), HiveConfig::default().with_buckets(64)).unwrap();
+        for k in 1..=200u32 {
+            h.insert(k, k).unwrap();
+        }
+        h.flush().unwrap();
+        let per = h.stats_per_shard().unwrap();
+        assert_eq!(per.len(), h.shards());
+        assert!(per.iter().all(|s| s.ops > 0), "both shards saw traffic");
+        let agg = h.stats().unwrap();
+        assert_eq!(per.iter().map(|s| s.ops).sum::<u64>(), agg.ops);
+        assert_eq!(per.iter().map(|s| s.batches).sum::<u64>(), agg.batches);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn ops_race_a_live_reshard_without_loss() {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 64, deadline: Duration::from_micros(100) },
+            resize_check_every: 2,
+            cache_capacity: 256,
+            ring_capacity: 256,
+        };
+        let (coord, h) =
+            start_native(cfg, HiveConfig::default().with_buckets(128)).unwrap();
+        for k in 1..=2000u32 {
+            h.insert(k, k).unwrap();
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..2u32)
+            .map(|t| {
+                let h = h.clone();
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut i = 0u32;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let k = (i % 2000) + 1;
+                        if t == 0 {
+                            h.upsert(k, k + 1).unwrap();
+                        } else {
+                            assert!(h.lookup(k).unwrap().is_some(), "key {k} vanished mid-move");
+                        }
+                        i = i.wrapping_add(1);
+                    }
+                })
+            })
+            .collect();
+        // cycle every partition across both shards while traffic runs
+        for round in 0..2usize {
+            for p in 0..h.partitions() as u32 {
+                h.reshard(p, (p as usize + round + 1) % h.shards()).unwrap();
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+        for k in 1..=2000u32 {
+            let v = h.lookup(k).unwrap();
+            assert!(v == Some(k) || v == Some(k + 1), "key {k} has foreign value {v:?}");
+        }
+        let s = h.stats().unwrap();
+        assert!(s.moves_completed > 0, "{}", s.summary());
         coord.shutdown();
     }
 }

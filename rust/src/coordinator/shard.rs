@@ -1,0 +1,438 @@
+//! The shard plane: a partition→shard directory consulted on the
+//! routing path, plus the placement policy that pins workers (and the
+//! structures they allocate) to CPUs.
+//!
+//! ## Directory
+//!
+//! Keys hash to one of `partitions_per_shard × shards` fixed routing
+//! partitions; each partition has one directory entry naming its owner
+//! shard. An entry is a single `AtomicU64` packed as
+//! `[seq:32][src:16][dst:16]` and read with **one shared load** on every
+//! route — the same seqlock discipline the table's `drain_epoch` uses:
+//! an even sequence means the partition is settled on `src == dst`; an
+//! odd sequence means it is *moving* from `src` to `dst`. Clients route
+//! to `dst` in both states (new traffic lands on the incoming owner
+//! immediately), and workers re-classify authoritatively at dispatch
+//! time, so a stale client-side read can only cost a forward hop —
+//! never a wrong-table execution.
+//!
+//! The default mapping assigns partition `p` to shard `p % shards`.
+//! Because the partition count is a multiple of the shard count,
+//! `hash % partitions % shards == hash % shards` — an untouched
+//! directory reproduces the pre-shard-plane routing bit for bit, which
+//! is what keeps a `shards = 1` (or never-resharded) coordinator
+//! behaviorally identical to the single-table one.
+//!
+//! ## Placement
+//!
+//! [`Placement`] decides which CPUs each worker thread may run on:
+//! round-robin over the online CPUs, or NUMA-node-aware when
+//! `/sys/devices/system/node` exposes a topology (each worker is
+//! allowed the full CPU set of its node, so the scheduler can still
+//! balance within the node). Pinning happens inside the worker thread
+//! *before* its backend factory runs, so the backend's allocations
+//! first-touch on the pinned node. It is best-effort: an unsupported
+//! platform or a refused syscall costs the placement hint, nothing else.
+
+use crate::hash::HashKind;
+use crate::native::table::HiveTable;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Who owns a partition right now (decoded from one directory load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ownership {
+    /// Settled: every op on the partition executes on this shard.
+    Settled(usize),
+    /// Mid-move: `dst` is the single executor (serving ops dual-table
+    /// against both shards' tables) while the partition's keys migrate
+    /// out of `src`.
+    Moving { src: usize, dst: usize },
+}
+
+/// Partition→shard directory: one packed seqlock word per partition.
+pub struct ShardDirectory {
+    entries: Box<[AtomicU64]>,
+    shards: usize,
+}
+
+#[inline]
+fn pack(seq: u32, src: usize, dst: usize) -> u64 {
+    ((seq as u64) << 32) | ((src as u64 & 0xFFFF) << 16) | (dst as u64 & 0xFFFF)
+}
+
+#[inline]
+fn unpack(word: u64) -> (u32, usize, usize) {
+    ((word >> 32) as u32, ((word >> 16) & 0xFFFF) as usize, (word & 0xFFFF) as usize)
+}
+
+impl ShardDirectory {
+    /// Directory over `partitions` routing partitions and `shards`
+    /// shards, with the identity-preserving default mapping
+    /// `partition p → shard p % shards`.
+    pub fn new(partitions: usize, shards: usize) -> ShardDirectory {
+        assert!(shards >= 1, "a directory needs at least one shard");
+        assert!(shards <= u16::MAX as usize, "shard index packs into 16 bits");
+        assert!(
+            partitions >= shards && partitions % shards == 0,
+            "partition count must be a positive multiple of the shard count \
+             (that multiple is what makes the default directory reproduce \
+             plain modulo routing)"
+        );
+        let entries = (0..partitions).map(|p| AtomicU64::new(pack(0, p % shards, p % shards)));
+        ShardDirectory { entries: entries.collect(), shards }
+    }
+
+    /// Routing partition count.
+    pub fn partitions(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Routing partition of `key` — the same salted murmur the
+    /// pre-shard-plane coordinator routed with, so shards stay balanced
+    /// independently of the table's own bucket hashes.
+    #[inline]
+    pub fn partition_of(&self, key: u32) -> u32 {
+        (HashKind::Murmur3.hash(key ^ 0x9E37_79B9) as usize % self.entries.len()) as u32
+    }
+
+    /// Decode a partition's current ownership (one shared load).
+    #[inline]
+    pub fn ownership(&self, partition: u32) -> Ownership {
+        let (seq, src, dst) = unpack(self.entries[partition as usize].load(Ordering::Acquire));
+        if seq & 1 == 0 {
+            Ownership::Settled(dst)
+        } else {
+            Ownership::Moving { src, dst }
+        }
+    }
+
+    /// Shard new traffic for `key` should be sent to: the settled owner,
+    /// or the move destination while the partition is in flight.
+    #[inline]
+    pub fn route(&self, key: u32) -> usize {
+        match self.ownership(self.partition_of(key)) {
+            Ownership::Settled(s) => s,
+            Ownership::Moving { dst, .. } => dst,
+        }
+    }
+
+    /// Flip `partition` from settled-on-`src` to moving-toward-`dst`
+    /// (seq goes odd). Fails when the entry is not settled on `src`
+    /// anymore — e.g. a racing reshard won the partition first. Called
+    /// only by the destination worker's thread.
+    pub(crate) fn begin_move(&self, partition: u32, src: usize, dst: usize) -> bool {
+        let entry = &self.entries[partition as usize];
+        let cur = entry.load(Ordering::Acquire);
+        let (seq, _, owner) = unpack(cur);
+        if seq & 1 != 0 || owner != src {
+            return false;
+        }
+        entry
+            .compare_exchange(
+                cur,
+                pack(seq.wrapping_add(1), src, dst),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Settle a moving partition on its destination (seq goes even
+    /// again). Called only by the destination worker's thread, after the
+    /// last source-side key has migrated.
+    pub(crate) fn finish_move(&self, partition: u32) -> bool {
+        let entry = &self.entries[partition as usize];
+        let cur = entry.load(Ordering::Acquire);
+        let (seq, _, dst) = unpack(cur);
+        if seq & 1 == 0 {
+            return false;
+        }
+        entry
+            .compare_exchange(
+                cur,
+                pack(seq.wrapping_add(1), dst, dst),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+}
+
+/// What the workers of one coordinator share: the routing directory,
+/// and — for native sharded coordinators — every shard's table, so a
+/// move destination can execute dual-table ops against the source shard
+/// and migrate its keys. Factory-built coordinators (whose backends may
+/// not even be tables) get an empty table vector: their directory is
+/// static and `Handle::reshard` reports an error.
+pub(crate) struct ShardPlane {
+    pub(crate) directory: ShardDirectory,
+    pub(crate) tables: Vec<Arc<HiveTable>>,
+}
+
+/// Shard-plane configuration carried beside [`super::CoordinatorConfig`]
+/// (which keeps its exact pre-shard field set — construction sites and
+/// the service tests build it as a full struct literal).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Routing partitions per shard. More partitions mean finer-grained
+    /// online resharding at the cost of a larger directory; the default
+    /// (64) keeps the directory a few cache lines per shard.
+    pub partitions_per_shard: usize,
+    /// Worker-thread placement policy.
+    pub placement: Placement,
+}
+
+impl Default for ShardPlan {
+    fn default() -> Self {
+        ShardPlan { partitions_per_shard: 64, placement: Placement::RoundRobin }
+    }
+}
+
+/// Where worker threads (and, via first-touch, what they allocate) run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// No pinning: the OS scheduler places workers freely. This is what
+    /// the pre-shard-plane coordinator did, and what the compatibility
+    /// constructors keep doing.
+    None,
+    /// Worker `w` pinned to CPU `w % ncpus`.
+    RoundRobin,
+    /// Workers spread across NUMA nodes, each allowed its node's full
+    /// CPU set; falls back to [`Placement::RoundRobin`] when no
+    /// topology is detectable.
+    NumaAware,
+}
+
+impl Placement {
+    /// CPU set per worker (`None` = leave the thread unpinned).
+    pub(crate) fn assign(self, workers: usize) -> Vec<Option<Vec<usize>>> {
+        match self {
+            Placement::None => vec![None; workers],
+            Placement::RoundRobin => {
+                let ncpu =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                (0..workers).map(|w| Some(vec![w % ncpu])).collect()
+            }
+            Placement::NumaAware => match Topology::detect() {
+                Some(t) => {
+                    (0..workers).map(|w| Some(t.nodes[w % t.nodes.len()].clone())).collect()
+                }
+                None => Placement::RoundRobin.assign(workers),
+            },
+        }
+    }
+}
+
+/// NUMA topology: the CPU list of each online node, in node order.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// `nodes[i]` = CPUs of NUMA node `i` (non-empty).
+    pub nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Detect the NUMA topology from sysfs. `None` when the platform
+    /// has no `/sys/devices/system/node` (non-Linux, restricted
+    /// container) or it parses to nothing.
+    pub fn detect() -> Option<Topology> {
+        let dir = std::fs::read_dir("/sys/devices/system/node").ok()?;
+        let mut ids: Vec<usize> = dir
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter_map(|name| name.strip_prefix("node").and_then(|n| n.parse().ok()))
+            .collect();
+        ids.sort_unstable();
+        let mut nodes = Vec::with_capacity(ids.len());
+        for id in ids {
+            let path = format!("/sys/devices/system/node/node{id}/cpulist");
+            let Ok(list) = std::fs::read_to_string(path) else { continue };
+            let cpus = parse_cpulist(list.trim());
+            if !cpus.is_empty() {
+                nodes.push(cpus);
+            }
+        }
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(Topology { nodes })
+        }
+    }
+}
+
+/// Parse the kernel's cpulist format (`"0-3,8,10-11"`) into CPU ids.
+/// Malformed pieces are skipped rather than failing the whole list.
+fn parse_cpulist(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for piece in list.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        match piece.split_once('-') {
+            Some((lo, hi)) => {
+                if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse()) {
+                    if lo <= hi && hi - lo < 4096 {
+                        cpus.extend(lo..=hi);
+                    }
+                }
+            }
+            None => {
+                if let Ok(c) = piece.parse() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus
+}
+
+/// Pin the calling thread to `cpus`. Best-effort: returns whether the
+/// kernel accepted the mask. CPUs above 1023 are ignored (one fixed
+/// 128-byte mask keeps this allocation-free on the spawn path).
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    let mut mask = [0u64; 16];
+    let mut any = false;
+    for &c in cpus {
+        if c < 1024 {
+            mask[c / 64] |= 1 << (c % 64);
+            any = true;
+        }
+    }
+    any && sched_setaffinity_self(&mask)
+}
+
+// `sched_setaffinity(0, size, mask)` by raw syscall — the crate has no
+// libc dependency, and a failed call only loses a placement hint.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) -> bool {
+    let ret: isize;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,                 // pid 0 = calling thread
+            in("rsi") std::mem::size_of_val(mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) -> bool {
+    let ret: isize;
+    unsafe {
+        std::arch::asm!(
+            "svc #0",
+            in("x8") 122usize, // __NR_sched_setaffinity
+            inlateout("x0") 0isize => ret,
+            in("x1") std::mem::size_of_val(mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn sched_setaffinity_self(_mask: &[u64; 16]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_directory_reproduces_modulo_routing() {
+        // The identity the unmodified service tests rely on: with an
+        // untouched directory, key → shard is exactly the old
+        // murmur(key ^ salt) % workers.
+        for shards in [1usize, 2, 3, 4, 8] {
+            let dir = ShardDirectory::new(64 * shards, shards);
+            for key in (0..20_000u32).step_by(7) {
+                let legacy = HashKind::Murmur3.hash(key ^ 0x9E37_79B9) as usize % shards;
+                assert_eq!(dir.route(key), legacy, "key {key} rerouted at {shards} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn move_lifecycle_flips_ownership() {
+        let dir = ShardDirectory::new(8, 2);
+        assert_eq!(dir.ownership(3), Ownership::Settled(1));
+        assert!(dir.begin_move(3, 1, 0));
+        assert_eq!(dir.ownership(3), Ownership::Moving { src: 1, dst: 0 });
+        // moving partitions route to the destination
+        assert!(!dir.begin_move(3, 1, 0), "double begin must fail");
+        assert!(dir.finish_move(3));
+        assert_eq!(dir.ownership(3), Ownership::Settled(0));
+        assert!(!dir.finish_move(3), "settled partitions cannot finish");
+        // and the partition can move back
+        assert!(dir.begin_move(3, 0, 1));
+        assert!(dir.finish_move(3));
+        assert_eq!(dir.ownership(3), Ownership::Settled(1));
+    }
+
+    #[test]
+    fn begin_move_requires_the_claimed_source() {
+        let dir = ShardDirectory::new(8, 4);
+        assert_eq!(dir.ownership(5), Ownership::Settled(1));
+        assert!(!dir.begin_move(5, 0, 2), "stale source view must not flip the entry");
+        assert_eq!(dir.ownership(5), Ownership::Settled(1));
+    }
+
+    #[test]
+    fn routing_follows_a_live_move() {
+        let dir = ShardDirectory::new(128, 2);
+        // find a key in partition 0 (owner 0 by default)
+        let key = (0..).find(|&k| dir.partition_of(k) == 0).unwrap();
+        assert_eq!(dir.route(key), 0);
+        assert!(dir.begin_move(0, 0, 1));
+        assert_eq!(dir.route(key), 1, "new traffic must land on the destination");
+        assert!(dir.finish_move(0));
+        assert_eq!(dir.route(key), 1);
+    }
+
+    #[test]
+    fn cpulist_parses_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,8-9"), vec![0, 1, 8, 9]);
+        assert_eq!(parse_cpulist(" 5 "), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("junk,3,x-y"), vec![3], "bad pieces are skipped");
+    }
+
+    #[test]
+    fn placement_assigns_one_set_per_worker() {
+        assert_eq!(Placement::None.assign(3), vec![None, None, None]);
+        let rr = Placement::RoundRobin.assign(4);
+        assert_eq!(rr.len(), 4);
+        for set in &rr {
+            assert_eq!(set.as_ref().map(Vec::len), Some(1), "round-robin pins one CPU");
+        }
+        // NumaAware always yields a full assignment (falls back to
+        // round-robin without a detectable topology)
+        let numa = Placement::NumaAware.assign(4);
+        assert_eq!(numa.len(), 4);
+        assert!(numa.iter().all(|s| s.as_ref().is_some_and(|v| !v.is_empty())));
+    }
+
+    #[test]
+    fn pinning_is_best_effort_and_never_panics() {
+        // Whatever the platform says, the call must return cleanly.
+        let _ = pin_current_thread(&[0]);
+        assert!(!pin_current_thread(&[]), "an empty CPU set cannot pin");
+        assert!(!pin_current_thread(&[200_000]), "out-of-range CPUs are ignored");
+    }
+}

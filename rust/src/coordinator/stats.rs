@@ -37,6 +37,16 @@ pub struct ServiceStats {
     pub cache_misses: u64,
     pub cache_invalidations: u64,
     pub cache_flushes: u64,
+    /// Shard-plane traffic: requests this worker forwarded to their
+    /// owning shard (the sender raced a directory flip), partition
+    /// moves this worker started and settled as the destination, keys
+    /// it copied out of source shards, and ops it executed dual-table
+    /// because their partition was mid-move.
+    pub forwarded: u64,
+    pub moves_started: u64,
+    pub moves_completed: u64,
+    pub keys_migrated: u64,
+    pub moving_ops: u64,
     /// Per-op latency in nanoseconds (request → completion: queue delay
     /// plus service time), recorded for the single-op *and* bulk paths.
     pub latency_ns: Histogram,
@@ -106,6 +116,11 @@ impl ServiceStats {
         self.cache_misses += other.cache_misses;
         self.cache_invalidations += other.cache_invalidations;
         self.cache_flushes += other.cache_flushes;
+        self.forwarded += other.forwarded;
+        self.moves_started += other.moves_started;
+        self.moves_completed += other.moves_completed;
+        self.keys_migrated += other.keys_migrated;
+        self.moving_ops += other.moving_ops;
         self.latency_ns.merge(&other.latency_ns);
         self.queue_delay_ns.merge(&other.queue_delay_ns);
         self.inflight_depth.merge(&other.inflight_depth);
@@ -131,7 +146,7 @@ impl ServiceStats {
     /// Human summary line.
     pub fn summary(&self) -> String {
         format!(
-            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} evicted={} stashed={} deleted={} rmw[upd={} cas={}/{} fadd={}] grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
+            "ops={} batches={} mean_batch={:.1} inserted={} replaced={} evicted={} stashed={} deleted={} rmw[upd={} cas={}/{} fadd={}] grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] shard[fwd={} moves={}/{} keys={} moving_ops={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
             self.ops,
             self.batches,
             self.mean_batch(),
@@ -151,6 +166,11 @@ impl ServiceStats {
             self.cache_hit_rate(),
             self.cache_invalidations,
             self.cache_flushes,
+            self.forwarded,
+            self.moves_completed,
+            self.moves_started,
+            self.keys_migrated,
+            self.moving_ops,
             self.latency_ns.summary(),
             self.queue_delay_ns.summary(),
             self.inflight_depth.mean(),
@@ -226,6 +246,30 @@ mod tests {
         assert_eq!(agg.cas_succeeded, 2);
         assert_eq!(agg.fetch_adds, 4);
         assert_eq!(agg.updates, 2);
+    }
+
+    #[test]
+    fn shard_counters_merge_and_surface_in_summary() {
+        let mut a = ServiceStats::default();
+        a.forwarded = 3;
+        a.moves_started = 2;
+        a.moves_completed = 1;
+        a.keys_migrated = 40;
+        a.moving_ops = 9;
+        let mut b = ServiceStats::default();
+        b.forwarded = 1;
+        b.moves_started = 1;
+        b.moves_completed = 2;
+        b.keys_migrated = 10;
+        b.moving_ops = 1;
+        a.merge(&b);
+        assert_eq!(a.forwarded, 4);
+        assert_eq!(a.moves_started, 3);
+        assert_eq!(a.moves_completed, 3);
+        assert_eq!(a.keys_migrated, 50);
+        assert_eq!(a.moving_ops, 10);
+        let line = a.summary();
+        assert!(line.contains("shard[fwd=4 moves=3/3 keys=50 moving_ops=10]"), "{line}");
     }
 
     #[test]

@@ -4,13 +4,22 @@
 //! Resizable Hash Table for GPUs"* (Polak, Troendle, Jang — CS.DC 2025) as a
 //! three-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the coordinator: a batching/routing service
-//!   with a pipelined request plane (bounded per-worker submission rings +
-//!   completion tickets, so one client thread keeps hundreds of ops in
-//!   flight — [`coordinator::pipeline`]), resize controller, overflow-stash
-//!   management, plus three execution substrates (native lock-free CPU,
-//!   SIMT warp simulator, XLA/PJRT bulk backend) and the baseline hash
-//!   tables the paper compares against. Operations ride one typed plane
+//! * **Layer 3 (this crate)** — the coordinator: a **sharded**
+//!   batching/routing service. Keys hash into routing partitions and a
+//!   seqlock-validated directory ([`coordinator::shard`]) maps each
+//!   partition to one of N independent `HiveTable` shards — its own
+//!   epoch domain, overflow stash, coherence stamp and striped counters,
+//!   so cross-shard traffic never shares a cache line, and
+//!   `Handle::reshard` moves partitions between shards *online* (flip →
+//!   fence → dual-table serve → settle, never stop-the-world). Worker
+//!   threads, their bounded submission rings and their hot-key caches
+//!   pin to shards via a placement policy (round-robin or NUMA-aware
+//!   from `/sys` topology). The request plane is pipelined (completion
+//!   tickets, so one client thread keeps hundreds of ops in flight —
+//!   [`coordinator::pipeline`]) and runs a resize controller per shard,
+//!   over three execution substrates (native lock-free CPU, SIMT warp
+//!   simulator, XLA/PJRT bulk backend) plus the baseline hash tables
+//!   the paper compares against. Operations ride one typed plane
 //!   end-to-end: a [`workload::Op`] — including the conditional and
 //!   read-modify-write classes `InsertIfAbsent` / `Update` / `Upsert` /
 //!   `Cas` / `FetchAdd`, each a single CAS on the packed 64-bit word —

@@ -36,18 +36,29 @@
 
 use crate::backend::group_ops;
 use crate::core::error::{HiveError, Result};
+use crate::core::config::Layout;
 use crate::core::packed::EMPTY_KEY;
 use crate::hash::HashFamily;
 use crate::native::table::{HiveTable, InsertOutcome, RmwInsert, State};
 use crate::workload::{Op, OpResult};
 use std::sync::atomic::Ordering;
 
-/// Prefetch-style touch of `bucket`'s metadata + first slot word. A plain
-/// relaxed load is enough to pull both lines toward this core before the
-/// pipelined probe for the next op lands on them.
+/// Prefetch-style touch of `bucket`'s first slot word (and, for the
+/// two-line packed layout, its metadata word). A plain relaxed load is
+/// enough to pull the line toward this core before the pipelined probe
+/// for the next op lands on it.
+///
+/// Under [`Layout::CompactQuotient`] a 16-slot bucket row is one
+/// 128-byte line, so touching the slot word alone covers the probe's
+/// whole footprint — skipping the mask-word load halves the hash-ahead
+/// traffic. (Mask words pack many buckets per line and stay hot in L1
+/// across a batch regardless, so the wide layouts keep the extra touch
+/// only because their slot rows genuinely span a second line.)
 #[inline(always)]
 fn touch_bucket(state: &State, bucket: u32) {
-    let _ = state.masks[bucket as usize].load(Ordering::Relaxed);
+    if state.layout != Layout::CompactQuotient {
+        let _ = state.masks[bucket as usize].load(Ordering::Relaxed);
+    }
     let _ = state.buckets[bucket as usize * state.spb].load(Ordering::Relaxed);
 }
 

@@ -421,6 +421,12 @@ impl HiveTable {
     /// and a stamp sampled mid-phase is odd in that half — it can never
     /// equal a quiescent stamp, so a cache validated against it flushes
     /// again once the phase completes.
+    ///
+    /// The stamp is strictly per table, and therefore per *shard* in the
+    /// sharded coordinator: it says nothing about keys that moved to a
+    /// different table via a partition reshard (the service handles that
+    /// window by clearing the destination's cache at move activation —
+    /// see `coordinator::cache`).
     pub fn coherence_stamp(&self) -> u64 {
         (self.epoch.current() << 32) | (self.drain_epoch.load(Ordering::SeqCst) & 0xFFFF_FFFF)
     }

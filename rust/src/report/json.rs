@@ -106,6 +106,25 @@ pub fn mix_row(mix: &str, system: &str, driver: &str, mops: f64) -> JsonVal {
     ])
 }
 
+/// One per-shard stats row: `{shard, ops, batches, hit_rate, forwarded,
+/// moving_ops, keys_migrated, moves_completed, latency}` — the shard
+/// breakdown the sharded-coordinator figures (fig13) publish next to the
+/// merged aggregate, so per-shard imbalance and move traffic stay
+/// visible instead of washing out in the merge.
+pub fn shard_row(shard: usize, s: &crate::coordinator::ServiceStats) -> JsonVal {
+    obj(vec![
+        ("shard", shard.into()),
+        ("ops", s.ops.into()),
+        ("batches", s.batches.into()),
+        ("hit_rate", s.cache_hit_rate().into()),
+        ("forwarded", s.forwarded.into()),
+        ("moving_ops", s.moving_ops.into()),
+        ("keys_migrated", s.keys_migrated.into()),
+        ("moves_completed", s.moves_completed.into()),
+        ("latency", latency_obj(&s.latency_ns)),
+    ])
+}
+
 /// Latency quantiles of a histogram as a JSON object:
 /// `{p50_ns, p99_ns, p999_ns, mean_ns, max_ns, count}` — the standard
 /// latency fields the service figures (fig11) and the `kv_service`
@@ -255,6 +274,24 @@ mod tests {
             mix_row("rmw_heavy", "HiveHash", "batched", 12.5).render(),
             r#"{"mix":"rmw_heavy","system":"HiveHash","driver":"batched","mops":12.5}"#
         );
+    }
+
+    #[test]
+    fn shard_row_has_the_breakdown_schema() {
+        let mut s = crate::coordinator::ServiceStats::default();
+        s.ops = 100;
+        s.batches = 4;
+        s.forwarded = 2;
+        s.moving_ops = 5;
+        s.keys_migrated = 30;
+        s.moves_completed = 1;
+        let r = shard_row(3, &s).render();
+        assert!(r.starts_with(r#"{"shard":3,"ops":100,"batches":4"#), "{r}");
+        assert!(r.contains(r#""forwarded":2"#), "{r}");
+        assert!(r.contains(r#""moving_ops":5"#), "{r}");
+        assert!(r.contains(r#""keys_migrated":30"#), "{r}");
+        assert!(r.contains(r#""moves_completed":1"#), "{r}");
+        assert!(r.contains(r#""latency":{"#), "{r}");
     }
 
     #[test]

@@ -20,12 +20,14 @@
 //! must be observationally invisible.
 
 use hivehash::baselines::{ConcurrentMap, ShardedStd};
+use hivehash::coordinator::{start_native, BatchPolicy, CoordinatorConfig};
 use hivehash::core::error::Result;
 use hivehash::workload::{self, Mix, Op, OpResult};
 use hivehash::{HiveConfig, HiveTable, Layout};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 fn test_seed() -> u64 {
     std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x0905)
@@ -279,6 +281,55 @@ fn typed_plane_differential_oracle() {
     }
     for (layout, hive_b, grouped_map) in &grouped_hives {
         assert_eq!(hive_b.len(), grouped_map.len(), "grouped ({layout:?}) live count diverged");
+    }
+}
+
+/// The grouped-window oracle also binds the *sharded* coordinator:
+/// `Handle::submit` scatters a window into per-shard sub-batches, each
+/// executed class-grouped by its own worker. Because every op touches
+/// exactly one key and all ops on a key land on the same shard in
+/// submission order, per-shard grouping produces the same per-op
+/// results as grouping the whole window — so `apply_grouped` stays the
+/// reference, at 1 shard (the degenerate plane) and at 4 (real
+/// scatter/gather). Windows stay under `max_batch` so each sub-batch
+/// dispatches as one window, keeping the class-order contract exact.
+#[test]
+fn sharded_submit_windows_match_the_grouped_oracle() {
+    let seed = test_seed().wrapping_add(3);
+    let n = 20_000;
+    let ops = widen(workload::rmw_mixed(n, Mix::RMW_HEAVY, seed));
+    let universe = workload::rmw_universe(n, seed);
+    for shards in [1usize, 4] {
+        let cfg = CoordinatorConfig {
+            workers: shards,
+            batch: BatchPolicy { max_batch: 256, deadline: Duration::from_micros(100) },
+            resize_check_every: 2,
+            cache_capacity: 256,
+            ring_capacity: 1024,
+        };
+        let table_cfg = HiveConfig::for_capacity(universe.len() * 2, 0.8);
+        let (coord, h) = start_native(cfg, table_cfg).unwrap();
+        let mut oracle_map: HashMap<u32, u32> = HashMap::new();
+        for (w, window) in ops.chunks(128).enumerate() {
+            let res = h.submit(window).unwrap();
+            let want = apply_grouped(&mut oracle_map, window);
+            for (i, (r, want_i)) in res.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    &norm(r),
+                    want_i,
+                    "sharded submit ({shards} shards) diverged at window {w} op {i}: {:?}",
+                    window[i]
+                );
+            }
+        }
+        for &k in &universe {
+            assert_eq!(
+                h.lookup(k).unwrap(),
+                oracle_map.get(&k).copied(),
+                "({shards} shards) final state diverged on {k}"
+            );
+        }
+        coord.shutdown();
     }
 }
 

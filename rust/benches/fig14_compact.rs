@@ -23,9 +23,12 @@ use hivehash::workload::bulk_lookup;
 use hivehash::{HiveConfig, HiveTable, Layout};
 use std::sync::Arc;
 
-/// Deterministic xorshift key stream (non-zero, never `u32::MAX`).
+/// Deterministic xorshift key stream (non-zero, never `u32::MAX`). The
+/// per-site `seed` is a stream salt over the `HIVE_TEST_SEED` base
+/// (historical default 0x14), per the repo-wide seeding discipline.
 fn keys_for(n: usize, seed: u64) -> Vec<u32> {
-    let mut x = seed | 1;
+    use hivehash::testutil::seed::{stream, test_seed};
+    let mut x = stream(test_seed(0x14), seed) | 1;
     let mut out = Vec::with_capacity(n);
     let mut seen = std::collections::HashSet::with_capacity(n * 2);
     while out.len() < n {

@@ -34,9 +34,9 @@
 //! first-touch on the pinned node. It is best-effort: an unsupported
 //! platform or a refused syscall costs the placement hint, nothing else.
 
+use crate::core::sync::atomic::{AtomicU64, Ordering};
 use crate::hash::HashKind;
 use crate::native::table::HiveTable;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Who owns a partition right now (decoded from one directory load).
@@ -56,13 +56,18 @@ pub struct ShardDirectory {
     shards: usize,
 }
 
+/// Pack a directory word: `[seq:32][src:16][dst:16]`. Public (hidden)
+/// for the shard-directory test battery and the loom model.
+#[doc(hidden)]
 #[inline]
-fn pack(seq: u32, src: usize, dst: usize) -> u64 {
+pub fn pack(seq: u32, src: usize, dst: usize) -> u64 {
     ((seq as u64) << 32) | ((src as u64 & 0xFFFF) << 16) | (dst as u64 & 0xFFFF)
 }
 
+/// Unpack a directory word into `(seq, src, dst)`.
+#[doc(hidden)]
 #[inline]
-fn unpack(word: u64) -> (u32, usize, usize) {
+pub fn unpack(word: u64) -> (u32, usize, usize) {
     ((word >> 32) as u32, ((word >> 16) & 0xFFFF) as usize, (word & 0xFFFF) as usize)
 }
 
@@ -122,11 +127,22 @@ impl ShardDirectory {
         }
     }
 
+    /// Raw directory word for `partition` (one `Acquire` load). Public
+    /// (hidden) so the shard-directory battery and the loom model can
+    /// assert seq parity / torn-pair invariants directly.
+    #[doc(hidden)]
+    #[inline]
+    pub fn entry_word(&self, partition: u32) -> u64 {
+        self.entries[partition as usize].load(Ordering::Acquire)
+    }
+
     /// Flip `partition` from settled-on-`src` to moving-toward-`dst`
     /// (seq goes odd). Fails when the entry is not settled on `src`
     /// anymore — e.g. a racing reshard won the partition first. Called
-    /// only by the destination worker's thread.
-    pub(crate) fn begin_move(&self, partition: u32, src: usize, dst: usize) -> bool {
+    /// only by the destination worker's thread (public-but-hidden so the
+    /// concurrent settle/flip battery can drive the protocol directly).
+    #[doc(hidden)]
+    pub fn begin_move(&self, partition: u32, src: usize, dst: usize) -> bool {
         let entry = &self.entries[partition as usize];
         let cur = entry.load(Ordering::Acquire);
         let (seq, _, owner) = unpack(cur);
@@ -146,7 +162,8 @@ impl ShardDirectory {
     /// Settle a moving partition on its destination (seq goes even
     /// again). Called only by the destination worker's thread, after the
     /// last source-side key has migrated.
-    pub(crate) fn finish_move(&self, partition: u32) -> bool {
+    #[doc(hidden)]
+    pub fn finish_move(&self, partition: u32) -> bool {
         let entry = &self.entries[partition as usize];
         let cur = entry.load(Ordering::Acquire);
         let (seq, _, dst) = unpack(cur);

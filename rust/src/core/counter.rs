@@ -11,7 +11,7 @@
 //! approximate under concurrent updates (the same contract as the single
 //! atomic it replaces).
 
-use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+use crate::core::sync::atomic::{AtomicI64, Ordering};
 
 /// Stripe count (power of two). 16 stripes × 128 B = 2 KiB per counter —
 /// enough to spread realistic CPU thread counts with rare collisions.
@@ -42,15 +42,12 @@ impl StripedCounter {
     }
 
     /// This thread's home stripe: threads are numbered in first-use order
-    /// and mapped round-robin, so up to [`STRIPES`] concurrent threads
-    /// never share a line.
+    /// and mapped round-robin (via the facade's shared
+    /// [`crate::core::sync::thread_index`]), so up to [`STRIPES`]
+    /// concurrent threads never share a line.
     #[inline]
     fn home() -> usize {
-        static NEXT: AtomicUsize = AtomicUsize::new(0);
-        thread_local! {
-            static HOME: usize = NEXT.fetch_add(1, Ordering::Relaxed);
-        }
-        HOME.with(|h| *h) & (STRIPES - 1)
+        crate::core::sync::thread_index() & (STRIPES - 1)
     }
 
     /// Add `delta` (possibly negative) to this thread's home stripe.

@@ -28,7 +28,7 @@
 //! and waits for the matching decrement. If the load returns the odd
 //! value, the reader backs out and never touches the retired state.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::core::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of pin stripes (power of two). Matches the striped counter: 16
 /// stripes × 128 B keeps realistic thread counts on distinct lines.
@@ -39,15 +39,12 @@ pub const PIN_STRIPES: usize = 16;
 #[repr(align(128))]
 struct PinSlot(AtomicU64);
 
-/// This thread's home stripe (same first-use round-robin scheme as
-/// `StripedCounter`, with an independent numbering).
+/// This thread's home stripe: the facade's shared thread numbering
+/// ([`crate::core::sync::thread_index`] — first-use round-robin normally,
+/// the model's dense replay-deterministic id under `cfg(loom)`).
 #[inline]
 fn home_stripe() -> usize {
-    static NEXT: AtomicUsize = AtomicUsize::new(0);
-    thread_local! {
-        static HOME: usize = NEXT.fetch_add(1, Ordering::Relaxed);
-    }
-    HOME.with(|h| *h) & (PIN_STRIPES - 1)
+    crate::core::sync::thread_index() & (PIN_STRIPES - 1)
 }
 
 /// The epoch domain guarding one swappable state allocation.
@@ -110,7 +107,7 @@ impl EpochDomain {
             // wait on parity (no stripe traffic while waiting).
             cell.fetch_sub(1, Ordering::SeqCst);
             while self.epoch.load(Ordering::Acquire) & 1 == 1 {
-                std::hint::spin_loop();
+                crate::core::sync::hint::spin_loop();
             }
         }
     }
@@ -124,7 +121,7 @@ impl EpochDomain {
         debug_assert_eq!(prev & 1, 0, "exclusive phases must not nest");
         for slot in &self.pins {
             while slot.0.load(Ordering::SeqCst) != 0 {
-                std::hint::spin_loop();
+                crate::core::sync::hint::spin_loop();
             }
         }
     }

@@ -6,9 +6,11 @@ pub mod config;
 pub mod counter;
 pub mod epoch;
 pub mod error;
+pub mod model;
 pub mod quotient;
 pub mod rng;
 pub mod histogram;
+pub mod sync;
 
 pub use counter::StripedCounter;
 pub use epoch::{EpochDomain, EpochGuard};

@@ -1,0 +1,733 @@
+//! Deterministic schedule-exploring model checker — the engine behind the
+//! `--cfg loom` build of [`crate::core::sync`].
+//!
+//! The container this repo builds in has no network registry, so the real
+//! `loom` crate cannot be a dependency. This module implements the subset
+//! we need in-tree, following the CHESS/loom approach:
+//!
+//! * Model threads are real OS threads, but a **token** serializes them:
+//!   exactly one runs at a time, and every access to a
+//!   [`crate::core::sync`] shim atomic is a *scheduling point* where the
+//!   checker may hand the token to a different runnable thread.
+//! * A run is fully described by the sequence of choices taken at those
+//!   points. [`Builder::check`] replays runs under DFS: after each run it
+//!   backtracks to the deepest choice with an unexplored alternative and
+//!   re-executes, until the bounded schedule tree is exhausted.
+//! * **Preemption bounding** (CHESS): switching away from a thread that
+//!   could have continued costs one preemption; runs explore at most
+//!   `LOOM_MAX_PREEMPTIONS` of them (voluntary hand-offs at blocking
+//!   points are free). Most real lock-free bugs manifest within 2–3
+//!   preemptions, which keeps the tree tractable.
+//! * Spin loops must call [`crate::core::sync::hint::spin_loop`], which
+//!   parks the thread until *some other thread performs a write* —
+//!   otherwise a waiting loop would spin forever under the deterministic
+//!   "keep running the current thread" default. A run in which every
+//!   live thread is parked or blocked is reported as a deadlock.
+//!
+//! The explored memory model is **sequential consistency** (shim atomics
+//! ignore the requested `Ordering` and use `SeqCst`). That is weaker
+//! coverage than real loom's C11 exploration, but every protocol in this
+//! crate is already written against `SeqCst`/`AcqRel` fences, and SC
+//! interleaving exhaustion is exactly what the seed-matrix stress tests
+//! cannot provide.
+//!
+//! The checker is plain std code and is compiled (and unit-tested) in
+//! normal builds too: anything may call [`yield_point`] / [`spawn`]
+//! explicitly; outside a [`check`] run they fall back to no-ops /
+//! `std::thread`.
+
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+
+const NO_THREAD: usize = usize::MAX;
+/// Keep at most this many trace entries; the tail is what gets printed.
+const TRACE_CAP: usize = 1 << 16;
+const TRACE_TAIL: usize = 400;
+
+/// Panic payload used to unwind model threads when a run is being torn
+/// down (failure elsewhere, or deadlock). Suppressed by the panic hook.
+struct ModelAbort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    /// May be granted the token.
+    Runnable,
+    /// Waiting for any other thread to perform a write (spin hint).
+    Parked,
+    /// Waiting for thread `.0` to finish.
+    Joining(usize),
+    Finished,
+}
+
+struct State {
+    status: Vec<Status>,
+    /// `write_count` at the moment each thread parked.
+    parked_at: Vec<u64>,
+    /// Thread currently holding the token (`NO_THREAD` when the run is over).
+    cur: usize,
+    /// Unfinished threads.
+    live: usize,
+    /// Total shim writes so far; parked threads wake when it advances.
+    write_count: u64,
+    /// Replay prefix: candidate index to take at each decision.
+    plan: Vec<usize>,
+    /// Candidate index actually taken at each decision this run.
+    chosen: Vec<usize>,
+    /// Candidate-list length at each decision this run.
+    counts: Vec<usize>,
+    preemptions: usize,
+    steps: usize,
+    trace: Vec<(usize, &'static str)>,
+    abort: bool,
+    failure: Option<String>,
+}
+
+struct Sched {
+    m: Mutex<State>,
+    cv: Condvar,
+    max_preemptions: usize,
+    max_steps: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Sched>, usize)>> = RefCell::new(None);
+}
+
+fn ctx() -> Option<(Arc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// True while the calling thread is a model thread inside a [`check`] run.
+pub fn active() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Dense model-assigned index of the calling thread (spawn order within
+/// the current run), if it is a model thread. Replay-deterministic, unlike
+/// OS thread identity — stripe selection uses this under `cfg(loom)`.
+pub fn thread_id() -> Option<usize> {
+    CTX.with(|c| c.borrow().as_ref().map(|(_, t)| *t))
+}
+
+impl Sched {
+    /// Poison-tolerant lock: a model thread may panic (that is the point
+    /// of assertions in models) and we still need the state for the trace.
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn fail(&self, st: &mut State, msg: String) {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// One scheduling decision, taken by the thread holding the token.
+    /// `running == false` means the caller just blocked (parked, joining)
+    /// or finished: it hands the token off without being a candidate and
+    /// returns immediately after the hand-off.
+    fn step(&self, tid: usize, label: &'static str, running: bool) {
+        let mut st = self.lock();
+        if st.abort {
+            drop(st);
+            panic::panic_any(ModelAbort);
+        }
+        st.steps += 1;
+        if st.trace.len() < TRACE_CAP {
+            st.trace.push((tid, label));
+        }
+        if st.steps > self.max_steps {
+            let msg = format!(
+                "step bound {} exceeded (livelock? a spin loop must call sync::hint::spin_loop)",
+                self.max_steps
+            );
+            self.fail(&mut st, msg);
+            drop(st);
+            if running {
+                panic::panic_any(ModelAbort);
+            }
+            return;
+        }
+        // Wake spinners that have seen a write since they parked.
+        let wc = st.write_count;
+        for i in 0..st.status.len() {
+            if st.status[i] == Status::Parked && wc > st.parked_at[i] {
+                st.status[i] = Status::Runnable;
+            }
+        }
+        // Candidate list. The current thread (when runnable) is candidate
+        // 0, so plan index 0 is always the preemption-free continuation;
+        // picking any other candidate while the current thread could have
+        // continued costs one preemption.
+        let mut cands: Vec<usize> = Vec::new();
+        if running {
+            cands.push(tid);
+            if st.preemptions < self.max_preemptions {
+                for i in 0..st.status.len() {
+                    if i != tid && st.status[i] == Status::Runnable {
+                        cands.push(i);
+                    }
+                }
+            }
+        } else {
+            for i in 0..st.status.len() {
+                if st.status[i] == Status::Runnable {
+                    cands.push(i);
+                }
+            }
+        }
+        if cands.is_empty() {
+            if st.live == 0 {
+                st.cur = NO_THREAD;
+                self.cv.notify_all();
+                return;
+            }
+            self.fail(
+                &mut st,
+                format!("deadlock: {} live thread(s), none runnable", st.live),
+            );
+            drop(st);
+            if running {
+                panic::panic_any(ModelAbort);
+            }
+            return;
+        }
+        let d = st.chosen.len();
+        let idx = if d < st.plan.len() { st.plan[d] } else { 0 };
+        if idx >= cands.len() {
+            self.fail(
+                &mut st,
+                format!(
+                    "non-deterministic replay: decision {d} has {} candidates, plan wanted {idx}",
+                    cands.len()
+                ),
+            );
+            drop(st);
+            if running {
+                panic::panic_any(ModelAbort);
+            }
+            return;
+        }
+        st.chosen.push(idx);
+        st.counts.push(cands.len());
+        let next = cands[idx];
+        if running && next != tid {
+            st.preemptions += 1;
+        }
+        st.cur = next;
+        if !running {
+            self.cv.notify_all();
+            return;
+        }
+        if next != tid {
+            self.cv.notify_all();
+            while !st.abort && st.cur != tid {
+                st = self
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            if st.abort {
+                drop(st);
+                panic::panic_any(ModelAbort);
+            }
+        }
+    }
+
+    /// Block until the token comes back (used after a `running == false`
+    /// hand-off from `join`/`park`).
+    fn wait_token(&self, tid: usize) {
+        let mut st = self.lock();
+        while !st.abort && st.cur != tid {
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        if st.abort {
+            drop(st);
+            panic::panic_any(ModelAbort);
+        }
+        st.status[tid] = Status::Runnable;
+    }
+
+    /// Mark a thread finished and hand the token onward.
+    fn finish(&self, tid: usize, failure: Option<String>) {
+        let mut st = self.lock();
+        st.status[tid] = Status::Finished;
+        st.live -= 1;
+        for i in 0..st.status.len() {
+            if st.status[i] == Status::Joining(tid) {
+                st.status[i] = Status::Runnable;
+            }
+        }
+        if let Some(msg) = failure {
+            self.fail(&mut st, msg);
+        }
+        if st.abort || st.live == 0 {
+            st.cur = NO_THREAD;
+            self.cv.notify_all();
+            return;
+        }
+        drop(st);
+        self.step(tid, "exit", false);
+    }
+}
+
+/// A scheduling point. No-op unless called from a model thread inside a
+/// [`check`] run. The shim atomics call this immediately before each
+/// access; between two of its returns only the calling thread runs, so
+/// the access itself is atomic w.r.t. the model.
+#[inline]
+pub fn yield_point(label: &'static str) {
+    if let Some((sched, tid)) = ctx() {
+        sched.step(tid, label, true);
+    }
+}
+
+/// Record that the calling thread just performed a write to shared state
+/// (wakes threads parked in [`park_until_write`] at the next decision).
+/// Called by the shims *after* a store/RMW, and after a successful CAS.
+#[inline]
+pub fn record_write() {
+    if let Some((sched, _)) = ctx() {
+        sched.lock().write_count += 1;
+    }
+}
+
+/// Park the calling thread until some other thread performs a write.
+/// This is what `sync::hint::spin_loop` / `sync::thread::yield_now` do
+/// under the model; a spin loop that never observes a write deadlocks
+/// the run and is reported as such.
+pub fn park_until_write() {
+    let Some((sched, tid)) = ctx() else { return };
+    {
+        let mut st = sched.lock();
+        if st.abort {
+            drop(st);
+            panic::panic_any(ModelAbort);
+        }
+        st.parked_at[tid] = st.write_count;
+        st.status[tid] = Status::Parked;
+    }
+    sched.step(tid, "spin", false);
+    sched.wait_token(tid);
+}
+
+/// Handle to a model thread spawned with [`spawn`].
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: Arc<Mutex<Option<T>>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Block (in model time) until the thread finishes, then return its
+    /// result. Panics in model threads abort the whole run, so there is
+    /// no `Err` arm to surface here.
+    pub fn join(self) -> T {
+        let (sched, me) = ctx().expect("model join outside a check run");
+        loop {
+            {
+                let mut st = sched.lock();
+                if st.abort {
+                    drop(st);
+                    panic::panic_any(ModelAbort);
+                }
+                if st.status[self.tid] == Status::Finished {
+                    break;
+                }
+                st.status[me] = Status::Joining(self.tid);
+            }
+            sched.step(me, "join", false);
+            sched.wait_token(me);
+        }
+        self.slot
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+            .expect("joined model thread left no result")
+    }
+}
+
+/// Spawn a model thread. Must be called from inside a [`check`] run
+/// (the `sync::thread` facade falls back to `std::thread::spawn` when no
+/// run is active). The child becomes runnable immediately but only runs
+/// when the scheduler grants it the token.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (sched, _) = ctx().expect("model spawn outside a check run");
+    let slot: Arc<Mutex<Option<T>>> = Arc::new(Mutex::new(None));
+    let tid = {
+        let mut st = sched.lock();
+        let tid = st.status.len();
+        st.status.push(Status::Runnable);
+        st.parked_at.push(0);
+        st.live += 1;
+        tid
+    };
+    let s2 = Arc::clone(&sched);
+    let slot2 = Arc::clone(&slot);
+    let h = std::thread::Builder::new()
+        .name(format!("model-{tid}"))
+        .spawn(move || {
+            thread_main(s2, tid, move || {
+                let v = f();
+                *slot2.lock().unwrap_or_else(|p| p.into_inner()) = Some(v);
+            })
+        })
+        .expect("spawn model thread");
+    sched
+        .handles
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .push(h);
+    JoinHandle { tid, slot }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Body shared by the root thread and every spawned model thread: wait
+/// for the first token grant, run, and report the outcome to the
+/// scheduler exactly once.
+fn thread_main(sched: Arc<Sched>, tid: usize, f: impl FnOnce()) {
+    CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched), tid)));
+    let aborted_early = {
+        let mut st = sched.lock();
+        while !st.abort && st.cur != tid {
+            st = sched.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.abort
+    };
+    if aborted_early {
+        sched.finish(tid, None);
+    } else {
+        match panic::catch_unwind(AssertUnwindSafe(f)) {
+            Ok(()) => sched.finish(tid, None),
+            Err(p) if p.is::<ModelAbort>() => sched.finish(tid, None),
+            Err(p) => sched.finish(tid, Some(format!("thread {tid} panicked: {}", panic_message(&*p)))),
+        }
+    }
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Install a panic hook that silences the internal [`ModelAbort`] unwind
+/// (real assertion failures still print through the previous hook).
+fn install_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<ModelAbort>().is_some() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Outcome of a [`Builder::check`] exploration that found no failure.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Interleavings executed.
+    pub iterations: u64,
+    /// True when the schedule tree (under the preemption bound) was
+    /// exhausted; false when `max_iterations` stopped exploration early.
+    pub complete: bool,
+}
+
+/// Exploration bounds. `from_env` honours the same knobs the CI
+/// `model-check` job sets: `LOOM_MAX_PREEMPTIONS` (default 2),
+/// `LOOM_MAX_ITERATIONS` (default 250_000), `LOOM_MAX_STEPS`
+/// (default 50_000 scheduling points per run).
+#[derive(Debug, Clone, Copy)]
+pub struct Builder {
+    pub max_preemptions: usize,
+    pub max_iterations: u64,
+    pub max_steps: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self { max_preemptions: 2, max_iterations: 250_000, max_steps: 50_000 }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl Builder {
+    pub fn from_env() -> Self {
+        let d = Self::default();
+        Self {
+            max_preemptions: env_usize("LOOM_MAX_PREEMPTIONS", d.max_preemptions),
+            max_iterations: env_usize("LOOM_MAX_ITERATIONS", d.max_iterations as usize) as u64,
+            max_steps: env_usize("LOOM_MAX_STEPS", d.max_steps),
+        }
+    }
+
+    /// Run `f` under every schedule in the bounded tree (DFS with replay).
+    /// Panics — after printing the failing schedule trace — if any
+    /// interleaving panics, deadlocks, or exceeds the step bound.
+    pub fn check<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        assert!(!active(), "nested model::check is not supported");
+        install_hook();
+        let f = Arc::new(f);
+        let mut plan: Vec<usize> = Vec::new();
+        let mut iterations = 0u64;
+        loop {
+            let sched = Arc::new(Sched {
+                m: Mutex::new(State {
+                    status: vec![Status::Runnable],
+                    parked_at: vec![0],
+                    cur: 0,
+                    live: 1,
+                    write_count: 0,
+                    plan: std::mem::take(&mut plan),
+                    chosen: Vec::new(),
+                    counts: Vec::new(),
+                    preemptions: 0,
+                    steps: 0,
+                    trace: Vec::new(),
+                    abort: false,
+                    failure: None,
+                }),
+                cv: Condvar::new(),
+                max_preemptions: self.max_preemptions,
+                max_steps: self.max_steps,
+                handles: Mutex::new(Vec::new()),
+            });
+            let fc = Arc::clone(&f);
+            let s2 = Arc::clone(&sched);
+            let root = std::thread::Builder::new()
+                .name("model-0".into())
+                .spawn(move || thread_main(s2, 0, move || fc()))
+                .expect("spawn model root");
+            {
+                let mut st = sched.lock();
+                while st.live > 0 {
+                    st = sched.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+            }
+            let _ = root.join();
+            loop {
+                let h = sched.handles.lock().unwrap_or_else(|p| p.into_inner()).pop();
+                match h {
+                    Some(h) => {
+                        let _ = h.join();
+                    }
+                    None => break,
+                }
+            }
+            iterations += 1;
+            let st = sched.lock();
+            if let Some(msg) = &st.failure {
+                let tail_from = st.trace.len().saturating_sub(TRACE_TAIL);
+                eprintln!("=== model failure after {iterations} interleaving(s) ===");
+                eprintln!("{msg}");
+                eprintln!(
+                    "--- schedule tail ({} of {} scheduling points) ---",
+                    st.trace.len() - tail_from,
+                    st.trace.len()
+                );
+                for (i, (t, label)) in st.trace.iter().enumerate().skip(tail_from) {
+                    eprintln!("#{i:<6} t{t}  {label}");
+                }
+                panic!("model checking failed: {msg}");
+            }
+            let chosen = st.chosen.clone();
+            let counts = st.counts.clone();
+            drop(st);
+            // Backtrack to the deepest decision with an unexplored branch.
+            let mut i = chosen.len();
+            let complete = loop {
+                if i == 0 {
+                    break true;
+                }
+                i -= 1;
+                if chosen[i] + 1 < counts[i] {
+                    break false;
+                }
+            };
+            if complete {
+                return Report { iterations, complete: true };
+            }
+            if iterations >= self.max_iterations {
+                return Report { iterations, complete: false };
+            }
+            plan = chosen[..i].to_vec();
+            plan.push(chosen[i] + 1);
+        }
+    }
+}
+
+/// [`Builder::check`] with bounds from the environment.
+pub fn check<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::from_env().check(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn small() -> Builder {
+        Builder { max_preemptions: 3, max_iterations: 100_000, max_steps: 10_000 }
+    }
+
+    /// Two incrementers with a scheduling point between load and store
+    /// race a lost update; with yield points at both accesses the checker
+    /// must reach both the correct (2) and the lost-update (1) outcome.
+    #[test]
+    fn explores_lost_update_interleavings() {
+        let outcomes: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+        let oc = Arc::clone(&outcomes);
+        let report = small().check(move || {
+            let x = Arc::new(AtomicU64::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let x = Arc::clone(&x);
+                    spawn(move || {
+                        yield_point("load x");
+                        let v = x.load(Ordering::SeqCst);
+                        yield_point("store x");
+                        x.store(v + 1, Ordering::SeqCst);
+                        record_write();
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join();
+            }
+            oc.lock().unwrap().insert(x.load(Ordering::SeqCst));
+        });
+        assert!(report.complete, "tiny model must exhaust");
+        assert!(report.iterations > 1, "must explore more than one schedule");
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains(&2), "sequential outcome reachable");
+        assert!(seen.contains(&1), "lost-update interleaving reachable");
+    }
+
+    /// Store-buffering shape under SC: each thread writes its own flag
+    /// then reads the other's. Sequential consistency forbids both
+    /// threads reading 0; exhaustive SC exploration must see exactly the
+    /// other three outcomes.
+    #[test]
+    fn store_buffering_is_sequentially_consistent() {
+        let outcomes: Arc<Mutex<HashSet<(u64, u64)>>> = Arc::new(Mutex::new(HashSet::new()));
+        let oc = Arc::clone(&outcomes);
+        let report = small().check(move || {
+            let x = Arc::new(AtomicU64::new(0));
+            let y = Arc::new(AtomicU64::new(0));
+            let (x1, y1) = (Arc::clone(&x), Arc::clone(&y));
+            let a = spawn(move || {
+                yield_point("store x");
+                x1.store(1, Ordering::SeqCst);
+                record_write();
+                yield_point("load y");
+                y1.load(Ordering::SeqCst)
+            });
+            let (x2, y2) = (Arc::clone(&x), Arc::clone(&y));
+            let b = spawn(move || {
+                yield_point("store y");
+                y2.store(1, Ordering::SeqCst);
+                record_write();
+                yield_point("load x");
+                x2.load(Ordering::SeqCst)
+            });
+            let ra = a.join();
+            let rb = b.join();
+            assert!(ra == 1 || rb == 1, "store buffering outcome is not SC");
+            oc.lock().unwrap().insert((ra, rb));
+        });
+        assert!(report.complete);
+        let seen = outcomes.lock().unwrap();
+        assert_eq!(
+            *seen,
+            HashSet::from([(0, 1), (1, 0), (1, 1)]),
+            "exhaustive SC exploration reaches exactly three outcomes"
+        );
+    }
+
+    /// A spin loop waiting on a write that no thread will ever perform
+    /// must be reported as a deadlock, not spin forever.
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn reports_spin_deadlock() {
+        small().check(|| {
+            let flag = Arc::new(AtomicU64::new(0));
+            let f = Arc::clone(&flag);
+            let h = spawn(move || {
+                loop {
+                    yield_point("load flag");
+                    if f.load(Ordering::SeqCst) == 1 {
+                        break;
+                    }
+                    park_until_write();
+                }
+            });
+            h.join();
+        });
+    }
+
+    /// Assertion failures inside a model thread surface as a check panic
+    /// (with the schedule trace printed to stderr).
+    #[test]
+    #[should_panic(expected = "model checking failed")]
+    fn surfaces_model_thread_panics() {
+        small().check(|| {
+            let h = spawn(|| {
+                yield_point("boom");
+                panic!("intentional model failure");
+            });
+            h.join();
+        });
+    }
+
+    /// The spin-park protocol: a consumer parks until the producer's
+    /// write, then must observe it. Exhausts without deadlock reports.
+    #[test]
+    fn park_wakes_on_write() {
+        let report = small().check(|| {
+            let flag = Arc::new(AtomicU64::new(0));
+            let f = Arc::clone(&flag);
+            let consumer = spawn(move || {
+                loop {
+                    yield_point("load flag");
+                    if f.load(Ordering::SeqCst) == 1 {
+                        break;
+                    }
+                    park_until_write();
+                }
+            });
+            let f2 = Arc::clone(&flag);
+            let producer = spawn(move || {
+                yield_point("store flag");
+                f2.store(1, Ordering::SeqCst);
+                record_write();
+            });
+            producer.join();
+            consumer.join();
+        });
+        assert!(report.complete);
+    }
+}

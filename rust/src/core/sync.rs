@@ -1,0 +1,421 @@
+//! Synchronization facade for the concurrency-bearing modules.
+//!
+//! Normal builds re-export `std::sync::atomic` / `std::thread` /
+//! `std::sync::Mutex` unchanged (zero cost). Under `--cfg loom` the same
+//! paths resolve to shims that route every atomic access, mutex
+//! acquisition and spin hint through the deterministic model checker in
+//! [`crate::core::model`], so the `tests/model_*.rs` suites can exhaust
+//! bounded interleavings of the real protocol code.
+//!
+//! Only the protocol modules go through this facade — `core/epoch.rs`,
+//! `core/counter.rs`, `native/table.rs`, `native/resize.rs`,
+//! `native/stash.rs`, `coordinator/shard.rs`. Everything else (stats,
+//! baselines, the coordinator service plane) keeps plain `std` and stays
+//! invisible to the scheduler, which keeps model state spaces small.
+//!
+//! Shim caveats, accepted deliberately (see `TESTING.md`):
+//! * The explored memory model is sequential consistency: shims ignore
+//!   the caller's `Ordering` and use `SeqCst`.
+//! * Spin loops **must** go through [`hint::spin_loop`] (they all do) —
+//!   under the model it parks the thread until another thread writes.
+//! * [`thread_index`] replaces the per-module `thread_local!` first-use
+//!   counters for stripe selection: dense model-assigned indices during a
+//!   model run (replay-deterministic), a process-global first-use counter
+//!   otherwise.
+
+#[cfg(not(loom))]
+mod imp {
+    /// `std::sync::atomic`, unchanged.
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            fence, AtomicBool, AtomicI64, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize,
+            Ordering,
+        };
+    }
+
+    /// `std::hint::spin_loop`, unchanged.
+    pub mod hint {
+        pub use std::hint::spin_loop;
+    }
+
+    /// `std::thread`, unchanged (the subset the facade guarantees).
+    pub mod thread {
+        pub use std::thread::{sleep, spawn, yield_now, JoinHandle};
+    }
+
+    pub use std::sync::{Mutex, MutexGuard};
+
+    /// Dense-ish index for stripe selection: first-use round-robin over a
+    /// process-global counter (the scheme `EpochDomain` and
+    /// `StripedCounter` previously each kept privately — now shared, so
+    /// both stripe families number threads identically).
+    #[inline]
+    pub fn thread_index() -> usize {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        thread_local! {
+            static HOME: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+        }
+        HOME.with(|h| *h)
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    use crate::core::model;
+
+    /// Shim atomics: every access is a scheduling point; stores and
+    /// successful RMWs additionally wake model threads parked in a spin
+    /// hint. Orderings are accepted and ignored (SeqCst everywhere).
+    pub mod atomic {
+        use crate::core::model;
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! int_shim {
+            ($name:ident, $std:ident, $ty:ty) => {
+                pub struct $name(std::sync::atomic::$std);
+
+                impl $name {
+                    pub const fn new(v: $ty) -> Self {
+                        Self(std::sync::atomic::$std::new(v))
+                    }
+
+                    #[inline]
+                    pub fn load(&self, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::load"));
+                        self.0.load(Ordering::SeqCst)
+                    }
+
+                    #[inline]
+                    pub fn store(&self, v: $ty, _o: Ordering) {
+                        model::yield_point(concat!(stringify!($name), "::store"));
+                        self.0.store(v, Ordering::SeqCst);
+                        model::record_write();
+                    }
+
+                    #[inline]
+                    pub fn swap(&self, v: $ty, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::swap"));
+                        let r = self.0.swap(v, Ordering::SeqCst);
+                        model::record_write();
+                        r
+                    }
+
+                    #[inline]
+                    pub fn compare_exchange(
+                        &self,
+                        current: $ty,
+                        new: $ty,
+                        _s: Ordering,
+                        _f: Ordering,
+                    ) -> Result<$ty, $ty> {
+                        model::yield_point(concat!(stringify!($name), "::cas"));
+                        let r = self
+                            .0
+                            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+                        if r.is_ok() {
+                            model::record_write();
+                        }
+                        r
+                    }
+
+                    #[inline]
+                    pub fn compare_exchange_weak(
+                        &self,
+                        current: $ty,
+                        new: $ty,
+                        s: Ordering,
+                        f: Ordering,
+                    ) -> Result<$ty, $ty> {
+                        self.compare_exchange(current, new, s, f)
+                    }
+
+                    #[inline]
+                    pub fn fetch_add(&self, v: $ty, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::fetch_add"));
+                        let r = self.0.fetch_add(v, Ordering::SeqCst);
+                        model::record_write();
+                        r
+                    }
+
+                    #[inline]
+                    pub fn fetch_sub(&self, v: $ty, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::fetch_sub"));
+                        let r = self.0.fetch_sub(v, Ordering::SeqCst);
+                        model::record_write();
+                        r
+                    }
+
+                    #[inline]
+                    pub fn fetch_and(&self, v: $ty, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::fetch_and"));
+                        let r = self.0.fetch_and(v, Ordering::SeqCst);
+                        model::record_write();
+                        r
+                    }
+
+                    #[inline]
+                    pub fn fetch_or(&self, v: $ty, _o: Ordering) -> $ty {
+                        model::yield_point(concat!(stringify!($name), "::fetch_or"));
+                        let r = self.0.fetch_or(v, Ordering::SeqCst);
+                        model::record_write();
+                        r
+                    }
+                }
+
+                impl std::fmt::Debug for $name {
+                    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                        write!(f, "{:?}", self.0)
+                    }
+                }
+
+                impl Default for $name {
+                    fn default() -> Self {
+                        Self::new(Default::default())
+                    }
+                }
+            };
+        }
+
+        int_shim!(AtomicU64, AtomicU64, u64);
+        int_shim!(AtomicU32, AtomicU32, u32);
+        int_shim!(AtomicUsize, AtomicUsize, usize);
+        int_shim!(AtomicI64, AtomicI64, i64);
+
+        pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+        impl AtomicBool {
+            pub const fn new(v: bool) -> Self {
+                Self(std::sync::atomic::AtomicBool::new(v))
+            }
+
+            #[inline]
+            pub fn load(&self, _o: Ordering) -> bool {
+                model::yield_point("AtomicBool::load");
+                self.0.load(Ordering::SeqCst)
+            }
+
+            #[inline]
+            pub fn store(&self, v: bool, _o: Ordering) {
+                model::yield_point("AtomicBool::store");
+                self.0.store(v, Ordering::SeqCst);
+                model::record_write();
+            }
+
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: bool,
+                new: bool,
+                _s: Ordering,
+                _f: Ordering,
+            ) -> Result<bool, bool> {
+                model::yield_point("AtomicBool::cas");
+                let r = self
+                    .0
+                    .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+                if r.is_ok() {
+                    model::record_write();
+                }
+                r
+            }
+        }
+
+        pub struct AtomicPtr<T>(std::sync::atomic::AtomicPtr<T>);
+
+        impl<T> AtomicPtr<T> {
+            pub const fn new(p: *mut T) -> Self {
+                Self(std::sync::atomic::AtomicPtr::new(p))
+            }
+
+            #[inline]
+            pub fn load(&self, _o: Ordering) -> *mut T {
+                model::yield_point("AtomicPtr::load");
+                self.0.load(Ordering::SeqCst)
+            }
+
+            #[inline]
+            pub fn store(&self, p: *mut T, _o: Ordering) {
+                model::yield_point("AtomicPtr::store");
+                self.0.store(p, Ordering::SeqCst);
+                model::record_write();
+            }
+
+            #[inline]
+            pub fn swap(&self, p: *mut T, _o: Ordering) -> *mut T {
+                model::yield_point("AtomicPtr::swap");
+                let r = self.0.swap(p, Ordering::SeqCst);
+                model::record_write();
+                r
+            }
+
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: *mut T,
+                new: *mut T,
+                _s: Ordering,
+                _f: Ordering,
+            ) -> Result<*mut T, *mut T> {
+                model::yield_point("AtomicPtr::cas");
+                let r = self
+                    .0
+                    .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+                if r.is_ok() {
+                    model::record_write();
+                }
+                r
+            }
+        }
+
+        /// A fence is only a scheduling point under the SC model.
+        #[inline]
+        pub fn fence(_o: Ordering) {
+            model::yield_point("fence");
+        }
+    }
+
+    pub mod hint {
+        use crate::core::model;
+
+        /// Inside a model run: park until another thread performs a
+        /// write (a spin iteration that cannot make progress must not
+        /// consume schedule steps). Outside: the real CPU hint.
+        #[inline]
+        pub fn spin_loop() {
+            if model::active() {
+                model::park_until_write();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    pub mod thread {
+        use crate::core::model;
+
+        pub struct JoinHandle<T>(Inner<T>);
+
+        enum Inner<T> {
+            Os(std::thread::JoinHandle<T>),
+            Model(model::JoinHandle<T>),
+        }
+
+        impl<T> JoinHandle<T> {
+            pub fn join(self) -> std::thread::Result<T> {
+                match self.0 {
+                    Inner::Os(h) => h.join(),
+                    Inner::Model(h) => Ok(h.join()),
+                }
+            }
+        }
+
+        pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            if model::active() {
+                JoinHandle(Inner::Model(model::spawn(f)))
+            } else {
+                JoinHandle(Inner::Os(std::thread::spawn(f)))
+            }
+        }
+
+        pub fn yield_now() {
+            if model::active() {
+                model::park_until_write();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+
+        /// Model time has no clock: sleeping is just a scheduling point.
+        pub fn sleep(d: std::time::Duration) {
+            if model::active() {
+                model::yield_point("sleep");
+            } else {
+                std::thread::sleep(d);
+            }
+        }
+    }
+
+    /// Scheduler-aware mutex: a CAS spin lock over a shim `AtomicBool`,
+    /// so acquisition/release are scheduling points and contended waits
+    /// park like any other spin loop. API-compatible with the
+    /// `lock().unwrap()` idiom used by the table.
+    pub struct Mutex<T> {
+        locked: atomic::AtomicBool,
+        value: std::cell::UnsafeCell<T>,
+    }
+
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    /// Placeholder error type so `lock().unwrap()` typechecks; the shim
+    /// never poisons.
+    #[derive(Debug)]
+    pub struct LockError;
+
+    pub struct MutexGuard<'a, T> {
+        m: &'a Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(v: T) -> Self {
+            Self {
+                locked: atomic::AtomicBool::new(false),
+                value: std::cell::UnsafeCell::new(v),
+            }
+        }
+
+        pub fn lock(&self) -> Result<MutexGuard<'_, T>, LockError> {
+            use atomic::Ordering;
+            while self
+                .locked
+                .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+            {
+                hint::spin_loop();
+            }
+            Ok(MutexGuard { m: self })
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            unsafe { &*self.m.value.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            unsafe { &mut *self.m.value.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            self.m.locked.store(false, atomic::Ordering::SeqCst);
+        }
+    }
+
+    /// Stripe-selection index: the model's dense per-run thread id when a
+    /// check is running (replay-deterministic), else the same first-use
+    /// global counter as the normal build.
+    #[inline]
+    pub fn thread_index() -> usize {
+        if let Some(i) = model::thread_id() {
+            return i;
+        }
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        thread_local! {
+            static HOME: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+        }
+        HOME.with(|h| *h)
+    }
+}
+
+pub use imp::*;

@@ -70,6 +70,15 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the CUDA→TPU hardware
 //! adaptation, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Verification
+//!
+//! `TESTING.md` describes the verification tiers — unit batteries,
+//! differential oracles, the `HIVE_TEST_SEED` stress matrix, bounded
+//! loom-style model checking of the lock-free protocols
+//! (`tests/model_*.rs` over [`core::model`] / [`core::sync`]), and
+//! history-based linearizability checking ([`testutil::linearize`]) —
+//! and how to run and bound each locally.
 
 pub mod core;
 pub mod hash;
@@ -82,6 +91,7 @@ pub mod backend;
 pub mod coordinator;
 pub mod workload;
 pub mod report;
+pub mod testutil;
 
 pub use crate::core::config::{HiveConfig, Layout};
 pub use crate::core::packed::{pack, unpack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};

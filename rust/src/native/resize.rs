@@ -78,7 +78,7 @@ use crate::hash::HashFamily;
 use crate::native::table::{
     pack_round, HiveTable, State, FREE_BITS, MIGRATING, MIGRATION_SEQ_SHIFT,
 };
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// The value half of a packed word (bits 63..32).
 const VALUE_BITS: u64 = 0xFFFF_FFFF_0000_0000;
@@ -96,7 +96,7 @@ pub enum ResizeEvent {
 fn lock_bucket(state: &State, bucket: u32) {
     let lock = &state.locks[bucket as usize];
     while lock.compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
-        std::hint::spin_loop();
+        crate::core::sync::hint::spin_loop();
     }
 }
 
@@ -126,7 +126,7 @@ fn settle_bucket(state: &State, bucket: u32) {
         if !pending {
             return;
         }
-        std::hint::spin_loop();
+        crate::core::sync::hint::spin_loop();
     }
 }
 
@@ -481,7 +481,7 @@ impl HiveTable {
                 if old & dst_bit != 0 {
                     break;
                 }
-                std::hint::spin_loop();
+                crate::core::sync::hint::spin_loop();
             }
             migrate_word(
                 state,
@@ -593,7 +593,7 @@ impl HiveTable {
                 let dst_mask =
                     (state.masks[b_dst as usize].load(Ordering::SeqCst) & FREE_BITS) as u32;
                 if dst_mask == 0 {
-                    std::hint::spin_loop();
+                    crate::core::sync::hint::spin_loop();
                     continue;
                 }
                 let pos = dst_mask.trailing_zeros() as usize;
@@ -603,7 +603,7 @@ impl HiveTable {
                     break pos;
                 }
                 // a backing-out claimer transiently holds it; it restores
-                std::hint::spin_loop();
+                crate::core::sync::hint::spin_loop();
             };
             migrate_word(
                 state,

@@ -14,7 +14,7 @@
 //! window degenerated to permanently-full. The pool has no window at all.)
 
 use crate::core::packed::{unpack_key, unpack_value, EMPTY_WORD};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::core::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Lock-free bounded overflow stash.
 #[derive(Debug)]

@@ -1,0 +1,357 @@
+//! History recording + Wing–Gong linearizability checking over the typed
+//! [`Op`]/[`OpResult`] plane.
+//!
+//! A concurrent run records, per worker thread, each operation's
+//! *invocation* and *response* instants (ticks of one shared atomic
+//! counter — a total order consistent with real time, since the
+//! invocation tick is taken before the call and the response tick after
+//! it returns). [`check`] then searches for a witness: a single
+//! sequential order of all operations that (a) respects real time — an
+//! operation that responded before another was invoked must come first —
+//! and (b) replays correctly against the sequential specification, a
+//! fold over `BTreeMap<u32, u32>` with exactly the semantics the typed
+//! result plane documents.
+//!
+//! The search is the Wing–Gong algorithm with Lowe's memoization: pick
+//! any *minimal* remaining operation (one invoked before every remaining
+//! response) whose recorded result matches the spec state, apply it,
+//! recurse; prune revisited `(linearized-set, state)` pairs. That is
+//! exponential in the worst case, so we exploit the Herlihy–Wing
+//! locality theorem: every `Op` touches exactly one key, a history is
+//! linearizable iff each per-key subhistory is, and per-key subhistories
+//! stay small when tests spread load over a bounded key set. Each
+//! subhistory is capped at 128 operations (the memo mask is a `u128`);
+//! [`check`] reports oversized keys as an error rather than silently
+//! sampling.
+//!
+//! Results are compared under the same normalization the differential
+//! suite (`tests/test_ops.rs`) uses: the placement detail of
+//! [`InsertOutcome`](crate::native::table::InsertOutcome) (direct /
+//! evicted / stashed) is representation, not semantics, so only the
+//! result class, the observed previous value, and the effect flag are
+//! matched.
+
+use crate::workload::{Op, OpResult};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One completed operation in a recorded history.
+#[derive(Debug, Clone, Copy)]
+pub struct Entry {
+    /// Recording thread (diagnostic only — the checker uses ticks).
+    pub thread: usize,
+    pub op: Op,
+    pub result: OpResult,
+    /// Tick taken immediately before the call was issued.
+    pub inv: u64,
+    /// Tick taken immediately after the call returned.
+    pub res: u64,
+}
+
+/// Shared tick source for one recorded run.
+#[derive(Default)]
+pub struct Recorder {
+    clock: AtomicU64,
+}
+
+impl Recorder {
+    pub fn new() -> Arc<Recorder> {
+        Arc::new(Recorder::default())
+    }
+}
+
+/// Per-thread event log. Owned by exactly one worker thread, merged into
+/// a [`History`] after joining, so recording itself never contends on
+/// anything but the tick counter.
+pub struct ThreadLog {
+    recorder: Arc<Recorder>,
+    thread: usize,
+    entries: Vec<Entry>,
+}
+
+impl ThreadLog {
+    pub fn new(recorder: &Arc<Recorder>, thread: usize) -> ThreadLog {
+        ThreadLog { recorder: Arc::clone(recorder), thread, entries: Vec::new() }
+    }
+
+    /// Run `f` (which must perform `op` against the system under test)
+    /// between two ticks and log the completed operation.
+    pub fn record(&mut self, op: Op, f: impl FnOnce() -> OpResult) -> OpResult {
+        let inv = self.recorder.clock.fetch_add(1, Ordering::SeqCst);
+        let result = f();
+        let res = self.recorder.clock.fetch_add(1, Ordering::SeqCst);
+        self.entries.push(Entry { thread: self.thread, op, result, inv, res });
+        result
+    }
+}
+
+/// A complete multi-threaded history.
+pub struct History {
+    pub entries: Vec<Entry>,
+}
+
+impl History {
+    pub fn from_logs(logs: Vec<ThreadLog>) -> History {
+        let mut entries: Vec<Entry> = logs.into_iter().flat_map(|l| l.entries).collect();
+        entries.sort_by_key(|e| e.inv);
+        History { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Why a history failed the check.
+pub enum Violation {
+    /// No legal sequential witness exists for this key's subhistory.
+    NotLinearizable { key: u32, subhistory: Vec<Entry> },
+    /// A per-key subhistory exceeded the checker's 128-op bound; the
+    /// recording test must spread its ops over more keys.
+    TooLarge { key: u32, len: usize },
+}
+
+impl std::fmt::Debug for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::TooLarge { key, len } => {
+                write!(f, "subhistory for key {key} has {len} ops (checker bound is 128)")
+            }
+            Violation::NotLinearizable { key, subhistory } => {
+                writeln!(f, "no linearization exists for key {key}; subhistory:")?;
+                for e in subhistory {
+                    writeln!(
+                        f,
+                        "  t{:<2} [{:>6},{:>6}] {:?} -> {:?}",
+                        e.thread, e.inv, e.res, e.op, e.result
+                    )?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Result-class + observable-effect normalization (mirrors the
+/// differential suite): `(class, observed old/actual value, effect)`.
+type Norm = (u8, Option<u32>, bool);
+
+fn norm(r: &OpResult) -> Norm {
+    match *r {
+        OpResult::Value(v) => (0, v, false),
+        OpResult::Deleted(hit) => (1, None, hit),
+        OpResult::Upserted { old, .. } => (2, old, true),
+        OpResult::InsertedIfAbsent { existing, .. } => (3, existing, existing.is_none()),
+        OpResult::Updated { old } => (4, old, old.is_some()),
+        OpResult::Cas { ok, actual } => (5, actual, ok),
+        OpResult::FetchAdded { old, .. } => (6, old, old.is_none()),
+    }
+}
+
+/// The sequential specification: fold one op into the model map and
+/// return its normalized result.
+pub fn spec_apply(map: &mut BTreeMap<u32, u32>, op: &Op) -> Norm {
+    match *op {
+        Op::Insert { key, value } | Op::Upsert { key, value } => (2, map.insert(key, value), true),
+        Op::Lookup { key } => (0, map.get(&key).copied(), false),
+        Op::Delete { key } => (1, None, map.remove(&key).is_some()),
+        Op::InsertIfAbsent { key, value } => {
+            let existing = map.get(&key).copied();
+            if existing.is_none() {
+                map.insert(key, value);
+            }
+            (3, existing, existing.is_none())
+        }
+        Op::Update { key, value } => {
+            let old = map.get(&key).copied();
+            if old.is_some() {
+                map.insert(key, value);
+            }
+            (4, old, old.is_some())
+        }
+        Op::Cas { key, expected, new } => {
+            let actual = map.get(&key).copied();
+            let ok = actual == Some(expected);
+            if ok {
+                map.insert(key, new);
+            }
+            (5, actual, ok)
+        }
+        Op::FetchAdd { key, delta } => {
+            let old = map.get(&key).copied();
+            map.insert(key, old.unwrap_or(0).wrapping_add(delta));
+            (6, old, old.is_none())
+        }
+    }
+}
+
+/// Wing–Gong search over one key's subhistory (≤ 128 ops). `start` is
+/// the key's initial value (always `None` in our tests — tables start
+/// empty and pre-population is recorded too when it matters).
+fn linearizable_key(key: u32, ops: &[Entry], start: Option<u32>) -> bool {
+    let n = ops.len();
+    debug_assert!(n <= 128);
+    let norms: Vec<Norm> = ops.iter().map(|e| norm(&e.result)).collect();
+    let full: u128 = if n == 128 { u128::MAX } else { (1u128 << n) - 1 };
+    let mut seen: HashSet<(u128, Option<u32>)> = HashSet::new();
+    // Explicit DFS stack: (done-mask, key state). Recomputing candidate
+    // sets per pop keeps the frame small; histories here are short.
+    let mut stack: Vec<(u128, Option<u32>)> = vec![(0, start)];
+    while let Some((done, state)) = stack.pop() {
+        if done == full {
+            return true;
+        }
+        if !seen.insert((done, state)) {
+            continue;
+        }
+        // Earliest response among remaining ops: a remaining op may be
+        // linearized next only if it was invoked before that response
+        // (otherwise some remaining op wholly precedes it in real time).
+        let mut min_res = u64::MAX;
+        for (i, e) in ops.iter().enumerate() {
+            if done & (1u128 << i) == 0 {
+                min_res = min_res.min(e.res);
+            }
+        }
+        for (i, e) in ops.iter().enumerate() {
+            if done & (1u128 << i) != 0 || e.inv > min_res {
+                continue;
+            }
+            let mut map = BTreeMap::new();
+            if let Some(v) = state {
+                map.insert(key, v);
+            }
+            if spec_apply(&mut map, &e.op) == norms[i] {
+                stack.push((done | (1u128 << i), map.get(&key).copied()));
+            }
+        }
+    }
+    false
+}
+
+/// Check a recorded history for linearizability against the sequential
+/// `BTreeMap` spec. Decomposes per key (Herlihy–Wing locality — every
+/// `Op` touches exactly one key).
+pub fn check(history: &History) -> Result<(), Violation> {
+    let mut by_key: HashMap<u32, Vec<Entry>> = HashMap::new();
+    for e in &history.entries {
+        by_key.entry(e.op.key()).or_default().push(*e);
+    }
+    let mut keys: Vec<u32> = by_key.keys().copied().collect();
+    keys.sort_unstable();
+    for key in keys {
+        let sub = &by_key[&key];
+        if sub.len() > 128 {
+            return Err(Violation::TooLarge { key, len: sub.len() });
+        }
+        if !linearizable_key(key, sub, None) {
+            return Err(Violation::NotLinearizable { key, subhistory: sub.clone() });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(thread: usize, op: Op, result: OpResult, inv: u64, res: u64) -> Entry {
+        Entry { thread, op, result, inv, res }
+    }
+
+    fn upserted(old: Option<u32>) -> OpResult {
+        OpResult::Upserted { outcome: crate::native::table::InsertOutcome::Inserted, old }
+    }
+
+    #[test]
+    fn accepts_sequential_history() {
+        let h = History {
+            entries: vec![
+                entry(0, Op::Insert { key: 1, value: 10 }, upserted(None), 0, 1),
+                entry(0, Op::Lookup { key: 1 }, OpResult::Value(Some(10)), 2, 3),
+                entry(0, Op::Delete { key: 1 }, OpResult::Deleted(true), 4, 5),
+                entry(0, Op::Lookup { key: 1 }, OpResult::Value(None), 6, 7),
+            ],
+        };
+        check(&h).unwrap();
+    }
+
+    #[test]
+    fn accepts_overlap_that_requires_reordering() {
+        // The lookup overlaps the insert and already observes its value:
+        // legal only because the insert may linearize first despite
+        // responding later.
+        let h = History {
+            entries: vec![
+                entry(0, Op::Insert { key: 1, value: 10 }, upserted(None), 0, 5),
+                entry(1, Op::Lookup { key: 1 }, OpResult::Value(Some(10)), 1, 2),
+            ],
+        };
+        check(&h).unwrap();
+    }
+
+    #[test]
+    fn rejects_lost_update() {
+        // Two non-overlapping fetch-adds both claiming old == None: the
+        // second must have observed the first.
+        let h = History {
+            entries: vec![
+                entry(
+                    0,
+                    Op::FetchAdd { key: 1, delta: 1 },
+                    OpResult::FetchAdded { outcome: None, old: None },
+                    0,
+                    1,
+                ),
+                entry(
+                    1,
+                    Op::FetchAdd { key: 1, delta: 1 },
+                    OpResult::FetchAdded { outcome: None, old: None },
+                    2,
+                    3,
+                ),
+            ],
+        };
+        assert!(matches!(check(&h), Err(Violation::NotLinearizable { key: 1, .. })));
+    }
+
+    #[test]
+    fn rejects_stale_read_after_response() {
+        // Insert fully responded before the lookup was invoked, yet the
+        // lookup missed: no witness order can explain it.
+        let h = History {
+            entries: vec![
+                entry(0, Op::Insert { key: 7, value: 70 }, upserted(None), 0, 1),
+                entry(1, Op::Lookup { key: 7 }, OpResult::Value(None), 2, 3),
+            ],
+        };
+        assert!(matches!(check(&h), Err(Violation::NotLinearizable { key: 7, .. })));
+    }
+
+    #[test]
+    fn cross_key_histories_decompose() {
+        // A bad key must be reported even when other keys are clean.
+        let h = History {
+            entries: vec![
+                entry(0, Op::Insert { key: 1, value: 10 }, upserted(None), 0, 1),
+                entry(0, Op::Lookup { key: 2 }, OpResult::Value(Some(9)), 2, 3),
+            ],
+        };
+        assert!(matches!(check(&h), Err(Violation::NotLinearizable { key: 2, .. })));
+    }
+
+    #[test]
+    fn rejects_oversized_subhistory() {
+        let entries: Vec<Entry> = (0..129)
+            .map(|i| {
+                entry(0, Op::Lookup { key: 1 }, OpResult::Value(None), 2 * i as u64, 2 * i as u64 + 1)
+            })
+            .collect();
+        assert!(matches!(check(&History { entries }), Err(Violation::TooLarge { key: 1, len: 129 })));
+    }
+}

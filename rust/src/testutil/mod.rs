@@ -1,0 +1,11 @@
+//! Test-harness utilities shared by the integration suites (see
+//! `TESTING.md` for the full verification-tier inventory).
+//!
+//! * [`linearize`] — history recorder + Wing–Gong linearizability checker
+//!   over the typed [`crate::workload::Op`]/[`crate::workload::OpResult`]
+//!   plane.
+//! * [`seed`] — `HIVE_TEST_SEED` plumbing, so every randomized suite
+//!   reproduces from the CI seed-matrix line alone.
+
+pub mod linearize;
+pub mod seed;

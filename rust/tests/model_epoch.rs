@@ -1,0 +1,105 @@
+//! Bounded model check: epoch pin vs. pointer-swap reallocation.
+//!
+//! The protocol under test is `core::epoch::EpochDomain` — the
+//! quiescent-state guard that lets `native::resize` free a retired state
+//! allocation immediately after the grace period. The model replaces the
+//! state pointer with a generation index plus a `freed` flag per
+//! generation, which is exactly the claim the table relies on: *a pinned
+//! reader can never observe a generation whose allocation the writer has
+//! already freed*.
+//!
+//! Run with `RUSTFLAGS="--cfg loom" cargo test --release --test
+//! model_epoch`. Bounds come from `LOOM_MAX_PREEMPTIONS` /
+//! `LOOM_MAX_ITERATIONS` / `LOOM_MAX_STEPS` (see `TESTING.md`).
+#![cfg(loom)]
+
+use hivehash::core::epoch::EpochDomain;
+use hivehash::core::model::Builder;
+use hivehash::core::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use hivehash::core::sync::thread;
+use std::sync::Arc;
+
+/// One reader pins and dereferences the current generation; one writer
+/// publishes generation 1, runs the grace period, and frees generation 0.
+/// In every interleaving the reader's dereference must land on a
+/// not-yet-freed generation: either it pinned before the flip (the drain
+/// waits for its unpin), or it pinned after (and sees generation 1).
+#[test]
+fn pinned_reader_never_sees_freed_generation() {
+    let report = Builder::from_env().check(|| {
+        let domain = Arc::new(EpochDomain::new());
+        let current = Arc::new(AtomicUsize::new(0));
+        let freed = Arc::new([AtomicBool::new(false), AtomicBool::new(false)]);
+
+        let reader = {
+            let domain = Arc::clone(&domain);
+            let current = Arc::clone(&current);
+            let freed = Arc::clone(&freed);
+            thread::spawn(move || {
+                let guard = domain.pin();
+                let gen = current.load(Ordering::SeqCst);
+                let dangling = freed[gen].load(Ordering::SeqCst);
+                drop(guard);
+                assert!(!dangling, "pinned reader dereferenced freed generation {gen}");
+            })
+        };
+        let writer = {
+            let domain = Arc::clone(&domain);
+            let current = Arc::clone(&current);
+            let freed = Arc::clone(&freed);
+            thread::spawn(move || {
+                // Publish the new generation, then retire the old one
+                // behind the grace period — resize.rs's realloc order.
+                current.store(1, Ordering::SeqCst);
+                domain.enter_exclusive();
+                freed[0].store(true, Ordering::SeqCst);
+                domain.exit_exclusive();
+            })
+        };
+        reader.join().unwrap();
+        writer.join().unwrap();
+        assert_eq!(domain.current(), 2, "exclusive phase must leave the epoch even");
+    });
+    assert!(report.complete, "epoch model did not exhaust its bounded state space");
+    assert!(report.iterations > 1, "model explored only one interleaving");
+}
+
+/// A pin that lands *after* the exclusive phase completed (epoch == 2)
+/// must observe the writer's pre-flip publication: the epoch flip is a
+/// SeqCst RMW sequenced after the generation store, so epoch 2 implies
+/// generation 1 is visible. This is the ordering half of the protocol —
+/// the reason readers can use the pinned epoch as a version witness.
+#[test]
+fn late_pin_observes_publication() {
+    let report = Builder::from_env().check(|| {
+        let domain = Arc::new(EpochDomain::new());
+        let current = Arc::new(AtomicUsize::new(0));
+
+        let writer = {
+            let domain = Arc::clone(&domain);
+            let current = Arc::clone(&current);
+            thread::spawn(move || {
+                current.store(1, Ordering::SeqCst);
+                domain.enter_exclusive();
+                domain.exit_exclusive();
+            })
+        };
+        let reader = {
+            let domain = Arc::clone(&domain);
+            let current = Arc::clone(&current);
+            thread::spawn(move || {
+                let guard = domain.pin();
+                let gen = current.load(Ordering::SeqCst);
+                let epoch = guard.epoch();
+                drop(guard);
+                assert!(epoch % 2 == 0, "pin returned during an exclusive phase");
+                if epoch == 2 {
+                    assert_eq!(gen, 1, "epoch 2 pinned but the generation store is invisible");
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+    });
+    assert!(report.complete, "epoch model did not exhaust its bounded state space");
+}

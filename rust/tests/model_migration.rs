@@ -1,0 +1,115 @@
+//! Bounded model check: bucket migration markers vs. concurrent probes.
+//!
+//! The heaviest model: a real `HiveTable` in the `CompactQuotient`
+//! layout (one cache line per bucket, remainders instead of keys, values
+//! in a separate word) runs a full linear-hashing doubling —
+//! `grow_buckets` splits every bucket, re-quotienting remainders in
+//! place under the `MIGRATING` marker — while a second thread probes the
+//! table. The probe path's correctness hinges on `hit_valid`: after a
+//! remainder match it must re-load the bucket's mask word and reject the
+//! hit if the migration marker or migration sequence moved, because the
+//! remainder and value words are read separately and a split can rewrite
+//! both between the two loads.
+//!
+//! This is also the mutation-smoke anchor (`TESTING.md`): building with
+//! `RUSTFLAGS="--cfg loom --cfg hive_mutant"` removes exactly that
+//! recheck, and this model must then *fail* — CI asserts the failure.
+//!
+//! Run with `RUSTFLAGS="--cfg loom" cargo test --release --test
+//! model_migration`.
+#![cfg(loom)]
+
+use hivehash::core::model::Builder;
+use hivehash::core::sync::thread;
+use hivehash::{HiveConfig, HiveTable, Layout};
+use std::sync::Arc;
+
+/// The model's scheduler bound. The split of four compact buckets plus
+/// three probes is a few hundred scheduling points, so this model clamps
+/// to two preemptions regardless of `LOOM_MAX_PREEMPTIONS` — enough to
+/// land a probe inside any single migration window (one switch in, one
+/// switch out) while keeping the bounded space exhaustible. The stale
+/// `hit_valid` accept needs exactly that shape.
+fn builder() -> Builder {
+    let mut b = Builder::from_env();
+    b.max_preemptions = b.max_preemptions.min(2);
+    b
+}
+
+#[test]
+fn probes_stay_exact_across_a_full_split() {
+    let report = builder().check(|| {
+        let cfg = HiveConfig {
+            initial_buckets: 4,
+            layout: Layout::CompactQuotient,
+            ..HiveConfig::default()
+        };
+        let table = Arc::new(HiveTable::new(cfg).expect("compact table"));
+        // Single-threaded prefix: costs the scheduler nothing.
+        table.insert(1, 101).unwrap();
+        table.insert(2, 202).unwrap();
+
+        let migrator = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                // Double 4 → 8: every bucket splits, so both keys' home
+                // buckets are re-quotiented under a concurrent probe no
+                // matter where the hash family placed them.
+                assert_eq!(table.grow_buckets(4), 8);
+            })
+        };
+        let prober = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                assert_eq!(table.lookup(1), Some(101), "live key 1 lost or torn mid-split");
+                assert_eq!(table.lookup(2), Some(202), "live key 2 lost or torn mid-split");
+                assert_eq!(table.lookup(9), None, "phantom hit for a never-inserted key");
+            })
+        };
+        migrator.join().unwrap();
+        prober.join().unwrap();
+
+        assert_eq!(table.logical_buckets(), 8);
+        assert_eq!(table.len(), 2);
+        assert_eq!(table.lookup(1), Some(101));
+        assert_eq!(table.lookup(2), Some(202));
+    });
+    assert!(report.complete, "migration model did not exhaust its bounded state space");
+    assert!(report.iterations > 1, "model explored only one interleaving");
+}
+
+/// Same shape with a writer instead of a reader: an upsert racing the
+/// split must neither resurrect the old value nor strand the new one in
+/// a retired slot.
+#[test]
+fn upsert_lands_exactly_once_across_a_split() {
+    let report = builder().check(|| {
+        let cfg = HiveConfig {
+            initial_buckets: 4,
+            layout: Layout::CompactQuotient,
+            ..HiveConfig::default()
+        };
+        let table = Arc::new(HiveTable::new(cfg).expect("compact table"));
+        table.insert(1, 101).unwrap();
+
+        let migrator = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                assert_eq!(table.grow_buckets(4), 8);
+            })
+        };
+        let writer = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                let (_, old) = table.upsert(1, 111).unwrap();
+                assert_eq!(old, Some(101), "upsert of a live key lost its predecessor");
+            })
+        };
+        migrator.join().unwrap();
+        writer.join().unwrap();
+
+        assert_eq!(table.lookup(1), Some(111), "post-split lookup must see the upsert");
+        assert_eq!(table.len(), 1);
+    });
+    assert!(report.complete, "migration model did not exhaust its bounded state space");
+}

@@ -1,0 +1,105 @@
+//! Bounded model check: `ShardDirectory` routing vs. a move in flight.
+//!
+//! The directory word is a seqlock: `[seq:32][src:16][dst:16]`, even seq
+//! = settled (`src == dst`), odd = moving. The model drives
+//! `begin_move`/`finish_move` against concurrent readers and asserts the
+//! two invariants every router depends on: the word is never *torn*
+//! (even seq always carries `src == dst`), and the sequence a single
+//! observer reads is monotone — a reader can see the move early or late
+//! but never watch it run backwards.
+//!
+//! Run with `RUSTFLAGS="--cfg loom" cargo test --release --test
+//! model_shard` (bounds in `TESTING.md`).
+#![cfg(loom)]
+
+use hivehash::core::model::Builder;
+use hivehash::core::sync::thread;
+use hivehash::coordinator::shard::{unpack, Ownership, ShardDirectory};
+use std::sync::Arc;
+
+fn assert_entry_sane(word: u64) -> u32 {
+    let (seq, src, dst) = unpack(word);
+    assert!(src < 2 && dst < 2, "directory word names an unknown shard: {word:#x}");
+    if seq % 2 == 0 {
+        assert_eq!(src, dst, "settled entry with torn src/dst: {word:#x}");
+    } else {
+        assert_eq!((src, dst), (0, 1), "moving entry names the wrong endpoints: {word:#x}");
+    }
+    seq
+}
+
+/// One mover flips partition 0 from shard 0 to shard 1 (flip → settle);
+/// one observer reads the raw word twice. Every read must decode to a
+/// legal protocol state and the observer's two seqs must be monotone.
+#[test]
+fn observer_sees_only_legal_monotone_states() {
+    let report = Builder::from_env().check(|| {
+        let dir = Arc::new(ShardDirectory::new(2, 2));
+
+        let mover = {
+            let dir = Arc::clone(&dir);
+            thread::spawn(move || {
+                assert!(dir.begin_move(0, 0, 1), "flip of a settled entry must succeed");
+                assert!(dir.finish_move(0), "settle of a moving entry must succeed");
+            })
+        };
+        let observer = {
+            let dir = Arc::clone(&dir);
+            thread::spawn(move || {
+                let s1 = assert_entry_sane(dir.entry_word(0));
+                let s2 = assert_entry_sane(dir.entry_word(0));
+                assert!(s2 >= s1, "directory sequence ran backwards: {s1} then {s2}");
+                match dir.ownership(0) {
+                    Ownership::Settled(s) => assert!(s < 2),
+                    Ownership::Moving { src, dst } => assert_eq!((src, dst), (0, 1)),
+                }
+            })
+        };
+        mover.join().unwrap();
+        observer.join().unwrap();
+
+        // Post-state: settled on the destination, seq advanced by exactly 2.
+        let (seq, src, dst) = unpack(dir.entry_word(0));
+        assert_eq!((seq, src, dst), (2, 1, 1));
+        assert_eq!(dir.ownership(0), Ownership::Settled(1));
+        // Partition 1 (untouched) still routes to its default owner.
+        assert_eq!(dir.ownership(1), Ownership::Settled(1));
+    });
+    assert!(report.complete, "shard model did not exhaust its bounded state space");
+    assert!(report.iterations > 1, "model explored only one interleaving");
+}
+
+/// Two movers race `begin_move` on the same settled partition. The CAS
+/// protocol must elect exactly one winner — the loser backs off and the
+/// entry ends in a single coherent moving state, which the surviving
+/// mover then settles.
+#[test]
+fn racing_begin_moves_elect_exactly_one_winner() {
+    let report = Builder::from_env().check(|| {
+        let dir = Arc::new(ShardDirectory::new(2, 2));
+
+        let a = {
+            let dir = Arc::clone(&dir);
+            thread::spawn(move || dir.begin_move(0, 0, 1))
+        };
+        let b = {
+            let dir = Arc::clone(&dir);
+            thread::spawn(move || dir.begin_move(0, 0, 1))
+        };
+        let a_won = a.join().unwrap();
+        let b_won = b.join().unwrap();
+        assert!(
+            a_won ^ b_won,
+            "begin_move race must elect exactly one winner (a={a_won}, b={b_won})"
+        );
+        let (seq, src, dst) = unpack(dir.entry_word(0));
+        assert_eq!((seq, src, dst), (1, 0, 1), "winner left the entry in a non-moving state");
+        // A third flip attempt against the now-moving entry must refuse.
+        assert!(!dir.begin_move(0, 0, 1));
+        assert!(dir.finish_move(0));
+        assert_eq!(dir.ownership(0), Ownership::Settled(1));
+        // Settling twice is also refused: seq parity gates both directions.
+        assert!(!dir.finish_move(0));
+    });
+    assert!(report.complete, "shard model did not exhaust its bounded state space");
+}

@@ -1,0 +1,148 @@
+//! Bounded model check: the stash drain-epoch seqlock.
+//!
+//! When migration drains a stashed entry back into a bucket, the word
+//! lives in two places for a moment: it is published to the bucket cell
+//! *first*, then retracted from the stash. A reader that probes the
+//! bucket before the publish and the stash after the retract would
+//! conclude the key is absent — the table closes that window with a
+//! seqlock (`drain_epoch` in `native::table`): the drainer holds the
+//! epoch odd for the duration, and readers retry on odd parity or on a
+//! parity change across their probe.
+//!
+//! The model drives that exact protocol over a real `OverflowStash` plus
+//! one bucket cell. The first test proves the seqlock reader can never
+//! miss the key; the second removes the parity validation and asserts
+//! the checker *finds* the miss — evidence the model is sharp enough to
+//! see the window the seqlock closes.
+//!
+//! Run with `RUSTFLAGS="--cfg loom" cargo test --release --test
+//! model_stash` (bounds in `TESTING.md`).
+#![cfg(loom)]
+
+use hivehash::core::model::Builder;
+use hivehash::core::sync::atomic::{AtomicU64, Ordering};
+use hivehash::core::sync::{hint, thread};
+use hivehash::native::stash::OverflowStash;
+use hivehash::{pack, unpack_key, unpack_value, EMPTY_WORD};
+use std::sync::Arc;
+
+const KEY: u32 = 7;
+const VAL: u32 = 42;
+
+struct Drain {
+    epoch: AtomicU64,
+    cell: AtomicU64,
+    stash: OverflowStash,
+}
+
+fn fixture() -> Arc<Drain> {
+    let d = Arc::new(Drain {
+        epoch: AtomicU64::new(0),
+        cell: AtomicU64::new(EMPTY_WORD),
+        stash: OverflowStash::new(8),
+    });
+    assert!(d.stash.push(pack(KEY, VAL)));
+    d
+}
+
+/// Publish-then-retract under an odd epoch, exactly as the table's
+/// migration drain does it.
+fn run_drainer(d: &Drain) {
+    d.epoch.fetch_add(1, Ordering::SeqCst);
+    d.cell.store(pack(KEY, VAL), Ordering::SeqCst);
+    assert!(d.stash.remove_word(pack(KEY, VAL)), "drained word vanished from the stash");
+    d.epoch.fetch_add(1, Ordering::SeqCst);
+}
+
+/// One probe in the racy order: bucket cell first, stash second.
+fn probe_once(d: &Drain) -> Option<u32> {
+    let w = d.cell.load(Ordering::SeqCst);
+    if unpack_key(w) == KEY {
+        Some(unpack_value(w))
+    } else {
+        d.stash.lookup(KEY)
+    }
+}
+
+/// The seqlock reader: wait out odd parity, probe, revalidate. Must see
+/// the key in *every* interleaving of the drain.
+#[test]
+fn seqlock_reader_never_misses_the_key() {
+    let report = Builder::from_env().check(|| {
+        let d = fixture();
+
+        let drainer = {
+            let d = Arc::clone(&d);
+            thread::spawn(move || run_drainer(&d))
+        };
+        let reader = {
+            let d = Arc::clone(&d);
+            thread::spawn(move || {
+                let found = loop {
+                    let e0 = d.epoch.load(Ordering::SeqCst);
+                    if e0 & 1 == 1 {
+                        hint::spin_loop();
+                        continue;
+                    }
+                    let r = probe_once(&d);
+                    if d.epoch.load(Ordering::SeqCst) == e0 {
+                        break r;
+                    }
+                };
+                assert_eq!(found, Some(VAL), "seqlock-validated probe missed a live key");
+            })
+        };
+        drainer.join().unwrap();
+        reader.join().unwrap();
+
+        // Drain completed: the word lives in the cell only.
+        assert_eq!(d.epoch.load(Ordering::SeqCst), 2);
+        assert_eq!(d.cell.load(Ordering::SeqCst), pack(KEY, VAL));
+        assert_eq!(d.stash.lookup(KEY), None);
+        assert_eq!(d.stash.window_len(), 0);
+    });
+    assert!(report.complete, "stash model did not exhaust its bounded state space");
+    assert!(report.iterations > 1, "model explored only one interleaving");
+}
+
+/// Sensitivity check: the same probe *without* the parity validation has
+/// a real miss window, and the bounded search must find it. (No
+/// assertion inside the model — the run records outcomes and the test
+/// asserts both verdicts were reached.)
+#[test]
+fn unvalidated_reader_provably_misses() {
+    use std::sync::atomic::AtomicBool;
+    let missed = Arc::new(AtomicBool::new(false));
+    let found = Arc::new(AtomicBool::new(false));
+
+    let report = {
+        let missed = Arc::clone(&missed);
+        let found = Arc::clone(&found);
+        Builder::from_env().check(move || {
+            let d = fixture();
+
+            let drainer = {
+                let d = Arc::clone(&d);
+                thread::spawn(move || run_drainer(&d))
+            };
+            let reader = {
+                let d = Arc::clone(&d);
+                thread::spawn(move || probe_once(&d))
+            };
+            drainer.join().unwrap();
+            match reader.join().unwrap() {
+                Some(_) => found.store(true, std::sync::atomic::Ordering::SeqCst),
+                None => missed.store(true, std::sync::atomic::Ordering::SeqCst),
+            }
+        })
+    };
+    assert!(report.complete, "stash model did not exhaust its bounded state space");
+    assert!(
+        found.load(std::sync::atomic::Ordering::SeqCst),
+        "no interleaving found the key — the fixture is wrong"
+    );
+    assert!(
+        missed.load(std::sync::atomic::Ordering::SeqCst),
+        "the checker failed to reach the publish/retract miss window the seqlock exists to close"
+    );
+}

@@ -1,0 +1,121 @@
+//! Bounded model check: the WABC claim/replace/delete CAS protocol.
+//!
+//! These models run the *real* `HiveTable` (PackedAos layout, tiny
+//! geometry) under the deterministic scheduler and enumerate every
+//! bounded interleaving of the single-word CAS protocol the paper's
+//! warp-cooperative insert reduces to on the CPU: claim an empty slot,
+//! replace in place on a key hit, unpublish on delete. The assertions
+//! are exactly the linearizability corollaries for two racing ops —
+//! outcomes must correlate with the final state as if the two ops ran in
+//! *some* order.
+//!
+//! Run with `RUSTFLAGS="--cfg loom" cargo test --release --test
+//! model_wabc` (bounds in `TESTING.md`).
+#![cfg(loom)]
+
+use hivehash::core::model::Builder;
+use hivehash::core::sync::thread;
+use hivehash::{HiveConfig, HiveTable, InsertOutcome};
+use std::sync::Arc;
+
+fn tiny_table() -> Arc<HiveTable> {
+    let cfg = HiveConfig { initial_buckets: 4, ..HiveConfig::default() };
+    Arc::new(HiveTable::new(cfg).expect("tiny table"))
+}
+
+/// Pre-state `{1: 5}`; thread A upserts `1 → 10`, thread B deletes `1`.
+/// The key exists at every instant before the delete commits, so the
+/// delete always observes it; the upsert's returned old value must then
+/// agree with the final state — `Some(10)` remaining means the delete
+/// serialized first (upsert re-inserted, old `None`), an empty table
+/// means the upsert serialized first (old `Some(5)`).
+#[test]
+fn upsert_vs_delete_correlates_with_final_state() {
+    let report = Builder::from_env().check(|| {
+        let table = tiny_table();
+        assert_eq!(table.insert(1, 5).unwrap(), InsertOutcome::Inserted);
+
+        let a = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.upsert(1, 10).unwrap())
+        };
+        let b = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.delete(1))
+        };
+        let (_, old_a) = a.join().unwrap();
+        let deleted = b.join().unwrap();
+        assert!(deleted, "key 1 was live for the delete's whole window");
+
+        match table.lookup(1) {
+            Some(10) => {
+                assert_eq!(old_a, None, "delete-then-upsert must re-insert fresh");
+                assert_eq!(table.len(), 1);
+            }
+            None => {
+                assert_eq!(old_a, Some(5), "upsert-then-delete must have replaced 5");
+                assert_eq!(table.len(), 0);
+            }
+            other => panic!("impossible final state for key 1: {other:?}"),
+        }
+    });
+    assert!(report.complete, "wabc model did not exhaust its bounded state space");
+    assert!(report.iterations > 1, "model explored only one interleaving");
+}
+
+/// Two upserts race on the same absent key. The claim CAS must elect one
+/// first writer: exactly one op observes `None`, the other observes the
+/// winner's value, and the final value belongs to whichever op
+/// serialized second. Two `None`s would mean a duplicate claim — the
+/// failure mode the WABC recheck-after-failed-CAS exists to prevent.
+#[test]
+fn racing_upserts_on_one_key_serialize() {
+    let report = Builder::from_env().check(|| {
+        let table = tiny_table();
+
+        let a = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.upsert(1, 7).unwrap())
+        };
+        let b = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.upsert(1, 8).unwrap())
+        };
+        let (_, old_a) = a.join().unwrap();
+        let (_, old_b) = b.join().unwrap();
+        let fin = table.lookup(1);
+        assert_eq!(table.len(), 1, "racing upserts left a duplicate");
+        match (old_a, old_b) {
+            (None, Some(7)) => assert_eq!(fin, Some(8), "B saw A's 7, so B is second"),
+            (Some(8), None) => assert_eq!(fin, Some(7), "A saw B's 8, so A is second"),
+            other => panic!("upsert race produced non-serializable old values: {other:?}"),
+        }
+    });
+    assert!(report.complete, "wabc model did not exhaust its bounded state space");
+}
+
+/// Two inserts race on *distinct* keys (which may share a bucket). Slot
+/// claims must never clobber each other: both keys land and stay.
+#[test]
+fn racing_claims_on_distinct_keys_both_land() {
+    let report = Builder::from_env().check(|| {
+        let table = tiny_table();
+
+        let a = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.insert(1, 10).unwrap())
+        };
+        let b = {
+            let table = Arc::clone(&table);
+            thread::spawn(move || table.insert(2, 20).unwrap())
+        };
+        let oa = a.join().unwrap();
+        let ob = b.join().unwrap();
+        assert_ne!(oa, InsertOutcome::Evicted, "4×32 slots cannot be full");
+        assert_ne!(ob, InsertOutcome::Evicted, "4×32 slots cannot be full");
+        assert_eq!(table.lookup(1), Some(10));
+        assert_eq!(table.lookup(2), Some(20));
+        assert_eq!(table.len(), 2);
+    });
+    assert!(report.complete, "wabc model did not exhaust its bounded state space");
+}

@@ -26,7 +26,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn test_seed() -> u64 {
-    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+    hivehash::testutil::seed::test_seed(0xC0FFEE)
 }
 
 fn cached_cfg(workers: usize, max_batch: usize) -> CoordinatorConfig {

@@ -1,0 +1,293 @@
+//! History-based linearizability checking of the real concurrent table
+//! (`testutil::linearize` — Wing–Gong search against the sequential
+//! `BTreeMap` spec, decomposed per key).
+//!
+//! Each test records a genuine multi-threaded history over the typed
+//! `Op`/`OpResult` plane — invocation/response ticks around every call —
+//! and asserts a legal sequential witness exists. Histories are kept at
+//! *low load factor* on purpose: the overflow stash stays empty, which
+//! keeps the runs clear of the three documented approximate corners
+//! (`native::resize` module docs — all require a racing op on a stashed
+//! key inside a drain window) and makes strict linearizability the
+//! correct expectation.
+//!
+//! `compact_update_heavy_churn_stays_linearizable` doubles as the
+//! mutation-smoke anchor: under `--cfg hive_mutant` (which removes the
+//! `hit_valid` migration-sequence recheck) its torn probes and lost
+//! updates must surface as `NotLinearizable` violations — CI builds the
+//! mutant and asserts this test *fails*. `HIVE_LINEARIZE_ROUNDS` scales
+//! the race-hunting round count (default 25; the smoke job runs 400).
+//!
+//! Seeds derive from `HIVE_TEST_SEED` (see `TESTING.md`).
+
+use hivehash::coordinator::{
+    start_native_sharded, BatchPolicy, CoordinatorConfig, Placement, ShardPlan,
+};
+use hivehash::core::rng::Xoshiro256;
+use hivehash::testutil::linearize::{check, History, Recorder, ThreadLog};
+use hivehash::testutil::seed::{stream, test_seed};
+use hivehash::{HiveConfig, HiveTable, Layout, Op, OpResult};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Execute one typed op through the table's *single-op* entry points
+/// (the paths that pin an epoch and validate hits via `hit_valid` —
+/// exactly what the mutation smoke needs exercised).
+fn run_op(t: &HiveTable, op: Op) -> OpResult {
+    match op {
+        Op::Lookup { key } => OpResult::Value(t.lookup(key)),
+        Op::Insert { key, value } | Op::Upsert { key, value } => {
+            let (outcome, old) = t.upsert(key, value).unwrap();
+            OpResult::Upserted { outcome, old }
+        }
+        Op::Delete { key } => OpResult::Deleted(t.delete(key)),
+        Op::InsertIfAbsent { key, value } => {
+            let (outcome, existing) = t.insert_if_absent(key, value).unwrap();
+            OpResult::InsertedIfAbsent { outcome, existing }
+        }
+        Op::Update { key, value } => OpResult::Updated { old: t.update(key, value) },
+        Op::Cas { key, expected, new } => {
+            let (ok, actual) = t.cas(key, expected, new);
+            OpResult::Cas { ok, actual }
+        }
+        Op::FetchAdd { key, delta } => {
+            let (outcome, old) = t.fetch_add(key, delta).unwrap();
+            OpResult::FetchAdded { outcome, old }
+        }
+    }
+}
+
+/// A mixed op over `key_span` keys. Written values are unique per call
+/// (`uniq`), so a stale read can never masquerade as a legal result.
+fn random_op(rng: &mut Xoshiro256, key_span: u32, uniq: u32) -> Op {
+    let key = rng.below(key_span as u64) as u32;
+    let value = uniq;
+    match rng.below(10) {
+        0..=2 => Op::Lookup { key },
+        3..=4 => Op::Upsert { key, value },
+        5 => Op::Delete { key },
+        6 => Op::InsertIfAbsent { key, value },
+        7 => Op::Update { key, value },
+        8 => Op::Cas { key, expected: rng.next_u32() >> 20, new: value },
+        _ => Op::FetchAdd { key, delta: 1 + rng.below(3) as u32 },
+    }
+}
+
+fn assert_linearizable(history: History) {
+    let len = history.len();
+    if let Err(v) = check(&history) {
+        panic!("history of {len} ops is not linearizable:\n{v:?}");
+    }
+}
+
+/// Plain concurrent history on the paper layout, no resize in flight:
+/// four threads, full op mix, one shared key range.
+#[test]
+fn packed_history_linearizes() {
+    let base = test_seed(0x11EA51);
+    let table = Arc::new(
+        HiveTable::new(HiveConfig { initial_buckets: 8, ..HiveConfig::default() }).unwrap(),
+    );
+    let recorder = Recorder::new();
+    let workers: Vec<_> = (0..4usize)
+        .map(|tid| {
+            let table = Arc::clone(&table);
+            let mut log = ThreadLog::new(&recorder, tid);
+            let mut rng = Xoshiro256::seeded(stream(base, tid as u64));
+            std::thread::spawn(move || {
+                for i in 0..60u32 {
+                    let op = random_op(&mut rng, 16, ((tid as u32) << 16) | i);
+                    log.record(op, || run_op(&table, op));
+                }
+                log
+            })
+        })
+        .collect();
+    let logs = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    assert_linearizable(History::from_logs(logs));
+}
+
+/// The same mix on the compact layout while a churn thread runs full
+/// linear-hashing doublings and halvings under the workers — every
+/// recorded op races bucket splits, marker walks and re-quotienting.
+#[test]
+fn compact_history_linearizes_across_live_migration() {
+    let base = test_seed(0xC0FFEE);
+    let table = Arc::new(
+        HiveTable::new(HiveConfig {
+            initial_buckets: 4,
+            layout: Layout::CompactQuotient,
+            ..HiveConfig::default()
+        })
+        .unwrap(),
+    );
+    let recorder = Recorder::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let table = Arc::clone(&table);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut cycles = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                table.grow_buckets(4);
+                table.shrink_buckets(4);
+                cycles += 1;
+            }
+            cycles
+        })
+    };
+    let workers: Vec<_> = (0..3usize)
+        .map(|tid| {
+            let table = Arc::clone(&table);
+            let mut log = ThreadLog::new(&recorder, tid);
+            let mut rng = Xoshiro256::seeded(stream(base, tid as u64));
+            std::thread::spawn(move || {
+                for i in 0..60u32 {
+                    let op = random_op(&mut rng, 12, ((tid as u32) << 16) | i);
+                    log.record(op, || run_op(&table, op));
+                }
+                log
+            })
+        })
+        .collect();
+    let logs = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    let cycles = churn.join().unwrap();
+    assert!(cycles >= 1, "the churn thread never completed a grow/shrink cycle");
+    assert_linearizable(History::from_logs(logs));
+}
+
+/// Histories recorded through the sharded coordinator while partitions
+/// migrate between shards (`Handle::reshard` — flip → fence →
+/// dual-table serve → settle). The cache is disabled so every lookup
+/// reaches a table; cache coherence has its own battery (`test_cache`).
+#[test]
+fn sharded_history_linearizes_across_reshard() {
+    let base = test_seed(0x5AD0);
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        batch: BatchPolicy { max_batch: 64, deadline: Duration::from_micros(50) },
+        resize_check_every: 4,
+        cache_capacity: 0,
+        ring_capacity: 256,
+    };
+    let plan = ShardPlan { partitions_per_shard: 4, placement: Placement::RoundRobin };
+    let (coord, h) =
+        start_native_sharded(cfg, plan, HiveConfig::default().with_buckets(64)).unwrap();
+    let recorder = Recorder::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let h = h.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let shards = h.shards();
+            let parts = h.partitions() as u32;
+            let mut moved = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for p in 0..parts {
+                    let away = (h.shard_of(p) + 1) % shards;
+                    if h.reshard(p, away).is_ok() {
+                        moved += 1;
+                    }
+                }
+            }
+            moved
+        })
+    };
+    let workers: Vec<_> = (0..3usize)
+        .map(|tid| {
+            let h = h.clone();
+            let mut log = ThreadLog::new(&recorder, tid);
+            let mut rng = Xoshiro256::seeded(stream(base, tid as u64));
+            std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    let op = random_op(&mut rng, 12, ((tid as u32) << 16) | i);
+                    log.record(op, || h.submit(std::slice::from_ref(&op)).unwrap().remove(0));
+                }
+                log
+            })
+        })
+        .collect();
+    let logs: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    let moved = churn.join().unwrap();
+    assert!(moved >= 1, "the churn thread never landed a partition move");
+    assert_linearizable(History::from_logs(logs));
+    coord.shutdown();
+}
+
+/// The mutation-smoke anchor: update-heavy rounds on the compact layout
+/// under continuous split/merge churn. Keys are pre-populated (recorded)
+/// and never deleted, and every written value is unique — so under the
+/// `hive_mutant` build a torn `hit_valid` accept shows up as a phantom
+/// miss, a stale unique value, or a lost update, all of which the
+/// checker rejects. Round count scales with `HIVE_LINEARIZE_ROUNDS`.
+#[test]
+fn compact_update_heavy_churn_stays_linearizable() {
+    let rounds: usize = std::env::var("HIVE_LINEARIZE_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25);
+    let base = test_seed(0x70A5);
+    const KEYS: u32 = 8;
+
+    for round in 0..rounds {
+        let table = Arc::new(
+            HiveTable::new(HiveConfig {
+                initial_buckets: 4,
+                layout: Layout::CompactQuotient,
+                ..HiveConfig::default()
+            })
+            .unwrap(),
+        );
+        let recorder = Recorder::new();
+        // Recorded single-threaded pre-population: the checker folds it
+        // into each key's history, so lookups must never see `None`.
+        let mut pre = ThreadLog::new(&recorder, 0);
+        for k in 0..KEYS {
+            let op = Op::Upsert { key: k, value: 0xF000_0000 | k };
+            pre.record(op, || run_op(&table, op));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let table = Arc::clone(&table);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    table.grow_buckets(4);
+                    table.shrink_buckets(4);
+                }
+            })
+        };
+        let probers: Vec<_> = (0..3usize)
+            .map(|tid| {
+                let table = Arc::clone(&table);
+                let mut log = ThreadLog::new(&recorder, tid + 1);
+                let mut rng = Xoshiro256::seeded(stream(base, (round * 8 + tid) as u64));
+                std::thread::spawn(move || {
+                    for i in 0..80u32 {
+                        let key = rng.below(KEYS as u64) as u32;
+                        let op = if rng.below(5) < 3 {
+                            Op::Lookup { key }
+                        } else {
+                            // unique value: round/thread/op all encoded
+                            let value = ((round as u32) << 12) | ((tid as u32) << 8) | i;
+                            Op::Upsert { key, value }
+                        };
+                        log.record(op, || run_op(&table, op));
+                    }
+                    log
+                })
+            })
+            .collect();
+        let mut logs = vec![pre];
+        logs.extend(probers.into_iter().map(|p| p.join().unwrap()));
+        stop.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        let history = History::from_logs(logs);
+        if let Err(v) = check(&history) {
+            panic!("round {round}: history of {} ops not linearizable:\n{v:?}", history.len());
+        }
+    }
+}

@@ -29,7 +29,7 @@ fn layouts() -> [Layout; 2] {
 /// small `HIVE_TEST_SEED` matrix so these races don't fossilize on the
 /// one interleaving a fixed schedule happens to produce.
 fn test_seed() -> u64 {
-    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+    hivehash::testutil::seed::test_seed(1)
 }
 
 /// Readers must never miss a present key while splits and merges migrate

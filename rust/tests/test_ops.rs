@@ -20,7 +20,9 @@
 //! must be observationally invisible.
 
 use hivehash::baselines::{ConcurrentMap, ShardedStd};
-use hivehash::coordinator::{start_native, BatchPolicy, CoordinatorConfig};
+use hivehash::coordinator::{
+    start_native, start_native_sharded, BatchPolicy, CoordinatorConfig, Placement, ShardPlan,
+};
 use hivehash::core::error::Result;
 use hivehash::workload::{self, Mix, Op, OpResult};
 use hivehash::{HiveConfig, HiveTable, Layout};
@@ -30,7 +32,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 fn test_seed() -> u64 {
-    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x0905)
+    hivehash::testutil::seed::test_seed(0x0905)
 }
 
 /// Layout matrix: every native-table battery runs under both the packed
@@ -538,4 +540,144 @@ fn concurrent_mixed_rmw_settles(layout: Layout) {
             assert_eq!(table.lookup(k), Some(v), "settled key {k} (base {base}) diverged");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// RMW exactness across *partition* migration (`Handle::reshard`).
+//
+// The two witnesses above pin down Cas/FetchAdd exactness while buckets
+// migrate inside one table; these repeat the same accounting through the
+// sharded coordinator while a churn thread keeps every routing partition
+// wandering between shards — so every op races the flip → fence →
+// dual-table → settle protocol (`coordinator::service::exec_dual`), not
+// just the in-table marker walk.
+// ---------------------------------------------------------------------------
+
+fn sharded_handle() -> (hivehash::coordinator::Coordinator, hivehash::coordinator::Handle) {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        batch: BatchPolicy { max_batch: 128, deadline: Duration::from_micros(100) },
+        resize_check_every: 2,
+        cache_capacity: 256,
+        ring_capacity: 1024,
+    };
+    let plan = ShardPlan { partitions_per_shard: 4, placement: Placement::RoundRobin };
+    start_native_sharded(cfg, plan, HiveConfig::default().with_buckets(64)).unwrap()
+}
+
+fn spawn_resharder(
+    h: hivehash::coordinator::Handle,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+) -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(move || {
+        let shards = h.shards();
+        let parts = h.partitions() as u32;
+        let start = (seed % parts as u64) as u32;
+        let mut moved = 0u64;
+        while !stop.load(Ordering::Relaxed) {
+            for p in (0..parts).map(|i| (start + i) % parts) {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let away = (h.shard_of(p) + 1) % shards;
+                if h.reshard(p, away).is_ok() {
+                    moved += 1;
+                }
+            }
+        }
+        moved
+    })
+}
+
+#[test]
+fn concurrent_fetch_add_exact_across_reshard() {
+    let seed = test_seed().wrapping_add(7);
+    let (coord, h) = sharded_handle();
+    const COUNTERS: u32 = 8;
+    const THREADS: u32 = 4;
+    const PER_THREAD: u32 = 2_000;
+    for c in 0..COUNTERS {
+        h.insert(1000 + c, 0).unwrap();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let resharder = spawn_resharder(h.clone(), Arc::clone(&stop), seed);
+    let adders: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut olds: Vec<Vec<u32>> = vec![Vec::new(); COUNTERS as usize];
+                for i in 0..PER_THREAD {
+                    let c = (t + i) % COUNTERS;
+                    let old = h.fetch_add(1000 + c, 1).unwrap();
+                    olds[c as usize].push(old.expect("seeded counter re-created mid-move"));
+                }
+                olds
+            })
+        })
+        .collect();
+    let mut witnessed: Vec<Vec<u32>> = vec![Vec::new(); COUNTERS as usize];
+    for a in adders {
+        for (c, olds) in a.join().unwrap().into_iter().enumerate() {
+            witnessed[c].extend(olds);
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let moved = resharder.join().unwrap();
+    assert!(moved >= 1, "the resharder never landed a partition move");
+    let per_counter = (THREADS * PER_THREAD / COUNTERS) as usize;
+    for c in 0..COUNTERS as usize {
+        assert_eq!(
+            h.lookup(1000 + c as u32).unwrap(),
+            Some(per_counter as u32),
+            "counter {c} lost updates across reshard"
+        );
+        let mut olds = std::mem::take(&mut witnessed[c]);
+        olds.sort_unstable();
+        assert_eq!(olds.len(), per_counter, "counter {c} op count");
+        for (want, got) in olds.into_iter().enumerate() {
+            assert_eq!(got, want as u32, "counter {c}: old values must be a permutation of 0..T");
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_cas_increment_exact_across_reshard() {
+    let seed = test_seed().wrapping_add(11);
+    let (coord, h) = sharded_handle();
+    const THREADS: u32 = 4;
+    const SUCCESSES: u32 = 1_000;
+    h.insert(77, 0).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let resharder = spawn_resharder(h.clone(), Arc::clone(&stop), seed);
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut landed = 0u32;
+                while landed < SUCCESSES {
+                    let v = h.lookup(77).unwrap().expect("counter must stay present");
+                    let (ok, actual) = h.cas(77, v, v.wrapping_add(1)).unwrap();
+                    if ok {
+                        landed += 1;
+                    } else {
+                        assert!(actual.is_some(), "counter vanished under CAS mid-move");
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let moved = resharder.join().unwrap();
+    assert!(moved >= 1, "the resharder never landed a partition move");
+    assert_eq!(
+        h.lookup(77).unwrap(),
+        Some(THREADS * SUCCESSES),
+        "optimistic CAS increments lost updates across reshard"
+    );
+    coord.shutdown();
 }

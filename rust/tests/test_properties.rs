@@ -2,22 +2,31 @@
 //!
 //! The registry has no `proptest`, so this file carries a small seeded
 //! random-input harness (`for_random_inputs`) that reruns each property
-//! across many generated cases and reports the failing seed — the same
-//! workflow, zero dependencies.
+//! across many generated cases and reports the failing case — the same
+//! workflow, zero dependencies. Case seeds derive from `HIVE_TEST_SEED`
+//! (`testutil::seed`), so the CI seed matrix explores fresh inputs while
+//! `HIVE_TEST_SEED=<base>` plus the printed case index reproduces any
+//! failure exactly.
 
 use hivehash::core::rng::Xoshiro256;
 use hivehash::hash::HashFamily;
 use hivehash::native::table::InsertOutcome;
+use hivehash::testutil::seed::{stream, test_seed};
 use hivehash::workload::{self, Mix};
 use hivehash::{HiveConfig, HiveTable};
 use std::collections::HashMap;
 
-/// Run `prop(seed)` for `cases` seeds; panic with the seed on failure.
+/// Run `prop(seed)` for `cases` seeds derived from the `HIVE_TEST_SEED`
+/// base; panic with the reproduction recipe on failure.
 fn for_random_inputs(cases: u64, prop: impl Fn(u64)) {
-    for seed in 0..cases {
+    let base = test_seed(0);
+    for case in 0..cases {
+        let seed = stream(base, case);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
         if let Err(e) = result {
-            eprintln!("--- property failed for seed {seed} ---");
+            eprintln!(
+                "--- property failed for case {case} (HIVE_TEST_SEED={base}, derived seed {seed}) ---"
+            );
             std::panic::resume_unwind(e);
         }
     }
@@ -146,7 +155,7 @@ fn prop_concurrent_disjoint_no_lost_updates() {
             .map(|tid| {
                 let t = Arc::clone(&table);
                 std::thread::spawn(move || {
-                    let mut rng = Xoshiro256::seeded(seed * 100 + tid as u64);
+                    let mut rng = Xoshiro256::seeded(stream(seed, tid as u64));
                     let base = tid * 1_000_000 + 1;
                     let mut live = Vec::new();
                     for i in 0..800 {

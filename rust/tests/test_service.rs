@@ -25,7 +25,7 @@ use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 fn test_seed() -> u64 {
-    std::env::var("HIVE_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+    hivehash::testutil::seed::test_seed(0x5EED)
 }
 
 /// Tight configuration: small batches, small submission rings — the

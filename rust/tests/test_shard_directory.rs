@@ -1,0 +1,178 @@
+//! `ShardDirectory` battery: the packed seqlock word under concurrent
+//! settle/flip cycles.
+//!
+//! The loom model (`tests/model_shard.rs`) proves the protocol invariants
+//! exhaustively at 2–3 threads and a handful of steps; this battery
+//! drives the same invariants at real-thread scale and frequency —
+//! thousands of flip→settle cycles under racing readers — and pins down
+//! the sequential semantics (defaults, refusal cases, packing) the model
+//! doesn't enumerate. Invariants checked on every observed word:
+//!
+//! * even sequence ⇒ `src == dst` (a settled entry is never torn);
+//! * odd sequence ⇒ `(src, dst)` is exactly the announced move;
+//! * the sequence a single observer reads is monotone non-decreasing;
+//! * `route` always names a live shard and agrees with `ownership`.
+
+use hivehash::coordinator::shard::{pack, unpack, Ownership, ShardDirectory};
+use hivehash::testutil::seed::{stream, test_seed};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+#[test]
+fn default_mapping_reproduces_modulo_routing() {
+    let dir = ShardDirectory::new(8, 2);
+    assert_eq!(dir.partitions(), 8);
+    assert_eq!(dir.shards(), 2);
+    for p in 0..8u32 {
+        let (seq, src, dst) = unpack(dir.entry_word(p));
+        assert_eq!((seq, src, dst), (0, p as usize % 2, p as usize % 2));
+        assert_eq!(dir.ownership(p), Ownership::Settled(p as usize % 2));
+    }
+    for key in 0..256u32 {
+        let p = dir.partition_of(key);
+        assert!(p < 8);
+        // settled directory: route is exactly the partition's owner
+        assert_eq!(dir.route(key), p as usize % 2);
+    }
+}
+
+#[test]
+fn pack_unpack_roundtrip_and_refusals() {
+    assert_eq!(unpack(pack(7, 3, 5)), (7, 3, 5));
+    assert_eq!(unpack(pack(u32::MAX, 0xFFFF, 0xFFFF)), (u32::MAX, 0xFFFF, 0xFFFF));
+
+    let dir = ShardDirectory::new(4, 2);
+    // wrong src: partition 0 is settled on shard 0
+    assert!(!dir.begin_move(0, 1, 0));
+    // settling a settled entry is refused
+    assert!(!dir.finish_move(0));
+    assert!(dir.begin_move(0, 0, 1));
+    // flipping an already-moving entry is refused, from any src
+    assert!(!dir.begin_move(0, 0, 1));
+    assert!(!dir.begin_move(0, 1, 0));
+    assert!(dir.finish_move(0));
+    assert_eq!(dir.ownership(0), Ownership::Settled(1));
+}
+
+/// One mover cycles partition 0 between two shards for thousands of
+/// settle/flip rounds while reader threads hammer `entry_word`/`route`.
+/// Readers assert every decoded state is legal and their observed
+/// sequence never runs backwards.
+#[test]
+fn flip_settle_cycles_never_expose_torn_state() {
+    const CYCLES: u32 = 4_000;
+    let dir = Arc::new(ShardDirectory::new(2, 2));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let dir = Arc::clone(&dir);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last_seq = 0u32;
+                let mut observed = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let (seq, src, dst) = unpack(dir.entry_word(0));
+                    assert!(src < 2 && dst < 2, "unknown shard in directory word");
+                    if seq % 2 == 0 {
+                        assert_eq!(src, dst, "settled entry torn at seq {seq}");
+                    } else {
+                        assert_ne!(src, dst, "moving entry with src == dst at seq {seq}");
+                    }
+                    assert!(seq >= last_seq, "sequence ran backwards: {last_seq} -> {seq}");
+                    last_seq = seq;
+                    match dir.ownership(0) {
+                        Ownership::Settled(s) => assert!(s < 2),
+                        Ownership::Moving { src, dst } => {
+                            assert!(src < 2 && dst < 2 && src != dst)
+                        }
+                    }
+                    observed += 1;
+                }
+                observed
+            })
+        })
+        .collect();
+
+    let mut owner = 0usize;
+    for _ in 0..CYCLES {
+        let next = 1 - owner;
+        assert!(dir.begin_move(0, owner, next), "flip refused on a settled entry");
+        assert!(dir.finish_move(0), "settle refused on a moving entry");
+        owner = next;
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader made no observations");
+    }
+    let (seq, src, dst) = unpack(dir.entry_word(0));
+    assert_eq!(seq, 2 * CYCLES, "every cycle bumps the sequence exactly twice");
+    assert_eq!((src, dst), (owner, owner));
+}
+
+/// Many rounds of N threads racing `begin_move` on one settled
+/// partition: the CAS must elect exactly one winner per round, and the
+/// post-round word must be the winner's move. Seeded start shard varies
+/// the race phase across the CI seed matrix.
+#[test]
+fn begin_move_races_elect_exactly_one_winner() {
+    const ROUNDS: usize = 800;
+    const RACERS: usize = 4;
+    let seed = test_seed(0xD1CE);
+    let dir = Arc::new(ShardDirectory::new(4, 4));
+    let mut owner = 0usize;
+    // move partition 0 somewhere it isn't: racers all propose distinct dsts
+    for round in 0..ROUNDS {
+        let barrier = Arc::new(Barrier::new(RACERS));
+        let racers: Vec<_> = (0..RACERS)
+            .map(|r| {
+                let dir = Arc::clone(&dir);
+                let barrier = Arc::clone(&barrier);
+                let dst = (owner + 1 + (r + stream(seed, round as u64) as usize) % 3) % 4;
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    dir.begin_move(0, owner, dst).then_some(dst)
+                })
+            })
+            .collect();
+        let winners: Vec<usize> =
+            racers.into_iter().filter_map(|r| r.join().unwrap()).collect();
+        assert_eq!(winners.len(), 1, "round {round}: {} winners", winners.len());
+        let (seq, src, dst) = unpack(dir.entry_word(0));
+        assert_eq!(seq, 2 * round as u32 + 1, "round {round}: seq parity");
+        assert_eq!(src, owner, "round {round}: src must be the old owner");
+        assert_eq!(dst, winners[0], "round {round}: dst must be the winner's proposal");
+        assert!(dir.finish_move(0));
+        owner = dst;
+        assert_eq!(dir.ownership(0), Ownership::Settled(owner));
+    }
+}
+
+/// Movers on distinct partitions never interfere: each partition's word
+/// only ever names its own endpoints.
+#[test]
+fn independent_partitions_do_not_cross_talk() {
+    const CYCLES: u32 = 2_000;
+    let dir = Arc::new(ShardDirectory::new(2, 2));
+    let movers: Vec<_> = (0..2u32)
+        .map(|p| {
+            let dir = Arc::clone(&dir);
+            std::thread::spawn(move || {
+                let mut owner = p as usize;
+                for _ in 0..CYCLES {
+                    let next = 1 - owner;
+                    assert!(dir.begin_move(p, owner, next));
+                    assert!(dir.finish_move(p));
+                    owner = next;
+                }
+                owner
+            })
+        })
+        .collect();
+    let finals: Vec<usize> = movers.into_iter().map(|m| m.join().unwrap()).collect();
+    for p in 0..2u32 {
+        let (seq, src, dst) = unpack(dir.entry_word(p));
+        assert_eq!(seq, 2 * CYCLES);
+        assert_eq!((src, dst), (finals[p as usize], finals[p as usize]));
+    }
+}

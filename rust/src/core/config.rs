@@ -7,8 +7,8 @@
 
 use crate::core::error::{HiveError, Result};
 use crate::core::{
-    DEFAULT_GROW_THRESHOLD, DEFAULT_MAX_EVICTIONS, DEFAULT_SHRINK_THRESHOLD,
-    DEFAULT_STASH_FRACTION, SLOTS_PER_BUCKET,
+    DEFAULT_BATCH_INTERLEAVE, DEFAULT_GROW_THRESHOLD, DEFAULT_MAX_EVICTIONS,
+    DEFAULT_SHRINK_THRESHOLD, DEFAULT_STASH_FRACTION, SLOTS_PER_BUCKET,
 };
 use crate::hash::HashKind;
 use std::collections::BTreeMap;
@@ -67,6 +67,12 @@ pub struct HiveConfig {
     pub resize_batch: usize,
     /// Bucket layout (packed AoS vs split SoA ablation).
     pub layout: Layout,
+    /// In-flight probe state machines per thread in the bulk batch paths
+    /// (AMAC-style interleave depth G): op *i*'s execution overlaps the
+    /// prefetch of op *i+G*'s first bucket line. 1 disables the
+    /// overlap (prefetch immediately precedes each probe); tunable via
+    /// `HIVE_BATCH_INTERLEAVE`.
+    pub batch_interleave: usize,
 }
 
 impl Default for HiveConfig {
@@ -80,6 +86,7 @@ impl Default for HiveConfig {
             stash_fraction: DEFAULT_STASH_FRACTION,
             resize_batch: 256,
             layout: Layout::PackedAos,
+            batch_interleave: DEFAULT_BATCH_INTERLEAVE,
         }
     }
 }
@@ -123,6 +130,12 @@ impl HiveConfig {
         self
     }
 
+    /// Builder-style setter for the bulk interleave depth G.
+    pub fn with_interleave(mut self, depth: usize) -> Self {
+        self.batch_interleave = depth;
+        self
+    }
+
     /// Validate invariants (hash family size, thresholds ordered, ...).
     pub fn validate(&self) -> Result<()> {
         if self.hash_kinds.len() < 2 || self.hash_kinds.len() > 4 {
@@ -145,6 +158,12 @@ impl HiveConfig {
         }
         if !(0.0..=0.5).contains(&self.stash_fraction) {
             return Err(HiveError::Config("stash_fraction must be in [0, 0.5]".into()));
+        }
+        if !(1..=64).contains(&self.batch_interleave) {
+            return Err(HiveError::Config(format!(
+                "batch_interleave must be in 1..=64, got {}",
+                self.batch_interleave
+            )));
         }
         if self.layout == Layout::CompactQuotient {
             if self.hash_kinds.len() > 3 {
@@ -217,6 +236,7 @@ impl HiveConfig {
                 "shrink_threshold" => self.shrink_threshold = parse(k, v)?,
                 "stash_fraction" => self.stash_fraction = parse(k, v)?,
                 "resize_batch" => self.resize_batch = parse(k, v)?,
+                "batch_interleave" => self.batch_interleave = parse(k, v)?,
                 "layout" => {
                     self.layout = match v.as_str() {
                         "packed_aos" | "aos" => Layout::PackedAos,
@@ -267,6 +287,16 @@ mod tests {
         assert_eq!(cfg.max_evictions, 8);
         assert_eq!(cfg.hash_kinds, vec![HashKind::Murmur3, HashKind::Crc32]);
         assert_eq!(cfg.layout, Layout::SplitSoa);
+    }
+
+    #[test]
+    fn interleave_knob() {
+        assert_eq!(HiveConfig::default().batch_interleave, 8);
+        let cfg = HiveConfig::from_kv_text("batch_interleave = 4").unwrap();
+        assert_eq!(cfg.batch_interleave, 4);
+        assert_eq!(HiveConfig::default().with_interleave(1).batch_interleave, 1);
+        assert!(HiveConfig::from_kv_text("batch_interleave = 0").is_err());
+        assert!(HiveConfig::default().with_interleave(65).validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Vectorized match-and-elect bucket scans — the CPU ballot.
+//!
+//! The paper's WCME protocol owes its throughput to scanning a whole
+//! packed bucket at once: 32 lanes each load one slot, a warp-wide
+//! ballot turns the per-lane compares into one bitmask, and `ffs`
+//! elects the winning lane. This module is that primitive for CPU rows:
+//! [`match_mask`] scans a full 16/32-slot bucket row per step and
+//! returns a candidate bitmask (bit *i* set ⇔ slot *i*'s stored key
+//! half equals the probe half), [`empty_mask`] is the same ballot
+//! against the EMPTY sentinel (claimable-slot discovery on the slot
+//! image — the authoritative claim path stays the free-mask word), and
+//! [`elect_match`] / [`elect_match_in`] do ballot + ffs + re-validate.
+//!
+//! Three engines produce the identical mask, selected at compile time:
+//!
+//! * **scalar** — one relaxed atomic load + compare-branch per slot;
+//!   the reference semantics and the shape PR-6 shipped.
+//! * **SWAR** (default) — two slot words per step: the low (key) halves
+//!   are packed into one `u64` and a carry-free zero-detect tests both
+//!   against the probe pattern branchlessly. Loads stay atomic, so this
+//!   engine is also the one model-checked builds (`--cfg loom`) use.
+//! * **SIMD** (`--features simd`, `x86_64` SSE2 / `aarch64` NEON) —
+//!   four slot words per step through `core::arch`: gather the four low
+//!   halves into one vector, one vector compare, one movemask. No new
+//!   crates; other targets fall back to SWAR.
+//!
+//! ### Concurrent-memory caveat (why elect re-validates)
+//!
+//! Bucket rows mutate under the scan — that is the whole protocol. The
+//! scalar/SWAR engines read each word with a relaxed *atomic* load, so
+//! every tested half is some value the slot actually held. The SIMD
+//! engine reads the row through vector loads that bypass the atomic
+//! API; a concurrently-CASed word may tear across the vector read.
+//! Every mask is therefore treated as a **heuristic filter**, never a
+//! verdict: [`elect_match`] re-loads each elected lane with a real
+//! atomic load and re-checks the half before reporting it, so a torn
+//! false positive is dropped (and re-election continues with the next
+//! candidate bit). A false *negative* — a slot published after its
+//! word was scanned — is exactly the pre-existing race of the per-slot
+//! loop, and the callers' `hit_valid` / `validate_miss` / CAS-commit
+//! machinery already owns that window. Under `--cfg loom` the shim
+//! `AtomicU64` is not layout-transparent, so the SIMD paths compile out
+//! and the model checker exercises the SWAR engine.
+
+use crate::core::packed::EMPTY_KEY;
+use crate::core::sync::atomic::{AtomicU64, Ordering};
+
+/// Low (key) half of a slot word.
+#[inline(always)]
+fn key_half(w: u64) -> u32 {
+    w as u32
+}
+
+// ---------------------------------------------------------------------
+// Scalar engine — reference semantics
+// ---------------------------------------------------------------------
+
+/// Per-slot reference scan: one relaxed load + compare per lane. Kept
+/// unconditionally (all engines are differentially tested against it).
+#[inline]
+pub fn match_mask_scalar(row: &[AtomicU64], half: u32) -> u32 {
+    let mut m = 0u32;
+    for (lane, w) in row.iter().enumerate() {
+        if key_half(w.load(Ordering::Relaxed)) == half {
+            m |= 1 << lane;
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------
+// SWAR engine — two slots per step on one u64
+// ---------------------------------------------------------------------
+
+/// Per-half MSB and low-31 masks for the packed `[half | half]` word.
+const SWAR_LOW31: u64 = 0x7FFF_FFFF_7FFF_FFFF;
+const SWAR_HI: u64 = 0x8000_0000_8000_0000;
+
+/// SWAR scan: the low halves of two consecutive slot words are packed
+/// into one `u64` and both tested against the probe pattern with a
+/// carry-free zero-in-half detect. The textbook `(v - 1s) & !v & hi`
+/// trick is wrong here — its subtraction borrows *across* the 32-bit
+/// half boundary — so the detect is formulated additively: a half is
+/// zero iff neither its low 31 bits carry into the MSB position nor any
+/// of its bits (MSB included) are set, and the add of `SWAR_LOW31`
+/// cannot carry out of a half (0x7FFFFFFF + 0x7FFFFFFF < 2^32).
+#[inline]
+pub fn match_mask_swar(row: &[AtomicU64], half: u32) -> u32 {
+    let pat = (half as u64) | ((half as u64) << 32);
+    let mut m = 0u32;
+    let mut lane = 0usize;
+    while lane + 2 <= row.len() {
+        let a = row[lane].load(Ordering::Relaxed);
+        let b = row[lane + 1].load(Ordering::Relaxed);
+        let packed = (a & 0xFFFF_FFFF) | (b << 32);
+        let z = packed ^ pat; // a half is all-zero iff it matched
+        let nz = ((z & SWAR_LOW31).wrapping_add(SWAR_LOW31)) | z;
+        let zero = !nz & SWAR_HI; // bit 31 ⇔ lane, bit 63 ⇔ lane+1
+        m |= (((zero >> 31) & 1) as u32) << lane;
+        m |= (((zero >> 63) & 1) as u32) << (lane + 1);
+        lane += 2;
+    }
+    if lane < row.len() && key_half(row[lane].load(Ordering::Relaxed)) == half {
+        m |= 1 << lane;
+    }
+    m
+}
+
+// ---------------------------------------------------------------------
+// SIMD engines — four slots per step through core::arch
+// ---------------------------------------------------------------------
+
+/// `x86_64` SSE2 scan (baseline on every x86_64 target — no runtime
+/// dispatch needed). Two 128-bit loads cover four slot words;
+/// `shuffle_ps` imm `0b10_00_10_00` gathers their four low dwords into
+/// one vector for a single `pcmpeqd` + `movmskps`.
+#[cfg(all(feature = "simd", not(loom), target_arch = "x86_64"))]
+pub mod simd {
+    use super::*;
+    use core::arch::x86_64::{
+        __m128i, _mm_castps_si128, _mm_castsi128_ps, _mm_cmpeq_epi32, _mm_loadu_si128,
+        _mm_movemask_ps, _mm_set1_epi32, _mm_shuffle_ps,
+    };
+
+    /// Active engine label for bench/CI provenance.
+    pub const ENGINE: &str = "simd-sse2";
+
+    /// Vector scan of `row` for `half`. The loads bypass the atomic API
+    /// (see module docs): the result is a heuristic filter the electors
+    /// re-validate per lane.
+    #[inline]
+    pub fn match_mask_simd(row: &[AtomicU64], half: u32) -> u32 {
+        let n = row.len();
+        let ptr = row.as_ptr() as *const __m128i; // two u64 slots per vector
+        let mut m = 0u32;
+        let mut lane = 0usize;
+        // SAFETY: `lane + 4 <= n` bounds both 16-byte loads inside the
+        // row; `loadu` tolerates any alignment; `AtomicU64` has the same
+        // in-memory representation as `u64` (std guarantee). Concurrent
+        // writers make the values racy, not the access unsound at the
+        // machine level — and every set bit is re-checked atomically.
+        unsafe {
+            let pat = _mm_set1_epi32(half as i32);
+            while lane + 4 <= n {
+                let a = _mm_loadu_si128(ptr.add(lane / 2)); // slots lane, lane+1
+                let b = _mm_loadu_si128(ptr.add(lane / 2 + 1)); // slots lane+2, lane+3
+                let lows = _mm_castps_si128(_mm_shuffle_ps(
+                    _mm_castsi128_ps(a),
+                    _mm_castsi128_ps(b),
+                    0b10_00_10_00, // [a.dw0, a.dw2, b.dw0, b.dw2] = 4 key halves
+                ));
+                let eq = _mm_cmpeq_epi32(lows, pat);
+                m |= (_mm_movemask_ps(_mm_castsi128_ps(eq)) as u32) << lane;
+                lane += 4;
+            }
+        }
+        while lane < n {
+            if key_half(row[lane].load(Ordering::Relaxed)) == half {
+                m |= 1 << lane;
+            }
+            lane += 1;
+        }
+        m
+    }
+}
+
+/// `aarch64` NEON scan (NEON is baseline on aarch64). `vld2q_u32`
+/// de-interleaves four slot words into a low-halves vector and a
+/// high-halves vector in one structured load; one `vceqq` + a weighted
+/// horizontal add extracts the four match bits.
+#[cfg(all(feature = "simd", not(loom), target_arch = "aarch64"))]
+pub mod simd {
+    use super::*;
+    use core::arch::aarch64::{vaddvq_u32, vandq_u32, vceqq_u32, vdupq_n_u32, vld1q_u32, vld2q_u32};
+
+    /// Active engine label for bench/CI provenance.
+    pub const ENGINE: &str = "simd-neon";
+
+    /// Vector scan of `row` for `half`. Same heuristic-filter contract
+    /// as the SSE2 engine (module docs).
+    #[inline]
+    pub fn match_mask_simd(row: &[AtomicU64], half: u32) -> u32 {
+        let n = row.len();
+        let ptr = row.as_ptr() as *const u32;
+        let mut m = 0u32;
+        let mut lane = 0usize;
+        const WEIGHTS: [u32; 4] = [1, 2, 4, 8];
+        // SAFETY: `lane + 4 <= n` bounds the 32-byte structured load
+        // inside the row; `AtomicU64` is layout-identical to `u64`;
+        // racy values are re-validated per elected lane (module docs).
+        unsafe {
+            let pat = vdupq_n_u32(half);
+            let weights = vld1q_u32(WEIGHTS.as_ptr());
+            while lane + 4 <= n {
+                // [lo0,hi0,lo1,hi1,lo2,hi2,lo3,hi3] → .0 = the key halves
+                let pairs = vld2q_u32(ptr.add(lane * 2));
+                let eq = vceqq_u32(pairs.0, pat); // all-ones per matching half
+                m |= vaddvq_u32(vandq_u32(eq, weights)) << lane;
+                lane += 4;
+            }
+        }
+        while lane < n {
+            if key_half(row[lane].load(Ordering::Relaxed)) == half {
+                m |= 1 << lane;
+            }
+            lane += 1;
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compile-time dispatch
+// ---------------------------------------------------------------------
+
+/// Whether the vector engine is compiled in (feature + target + not a
+/// model-checked build).
+#[cfg(all(feature = "simd", not(loom), any(target_arch = "x86_64", target_arch = "aarch64")))]
+const HAVE_SIMD: bool = true;
+#[cfg(not(all(feature = "simd", not(loom), any(target_arch = "x86_64", target_arch = "aarch64"))))]
+const HAVE_SIMD: bool = false;
+
+/// Name of the engine [`match_mask`] dispatches to — stamped into bench
+/// JSON and CI logs so a run's numbers carry their provenance.
+pub fn engine_name() -> &'static str {
+    #[cfg(all(feature = "simd", not(loom), any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        simd::ENGINE
+    }
+    #[cfg(not(all(
+        feature = "simd",
+        not(loom),
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    {
+        "swar"
+    }
+}
+
+/// Ballot: scan the whole bucket `row` and return the candidate bitmask
+/// of lanes whose stored key half equals `half`. Engine selected at
+/// compile time ([`engine_name`]); all engines agree on quiescent rows
+/// (differentially tested), and electors re-validate under concurrency.
+#[inline(always)]
+pub fn match_mask(row: &[AtomicU64], half: u32) -> u32 {
+    #[cfg(all(feature = "simd", not(loom), any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        simd::match_mask_simd(row, half)
+    }
+    #[cfg(not(all(
+        feature = "simd",
+        not(loom),
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    {
+        match_mask_swar(row, half)
+    }
+}
+
+/// Ballot against the EMPTY sentinel: bit *i* set ⇔ slot *i*'s word
+/// reads as vacant in the slot image. Discovery only — claiming goes
+/// through the bucket's free-mask word, whose RMWs totally order
+/// claimers and migrators; a mid-publish claimed slot still reads EMPTY
+/// here, exactly as it does for the free-mask-guided scans.
+#[inline(always)]
+pub fn empty_mask(row: &[AtomicU64]) -> u32 {
+    match_mask(row, EMPTY_KEY)
+}
+
+/// Ballot + ffs + re-validate: elect the lowest candidate lane whose
+/// *atomically re-loaded* word still matches `half`, returning the lane
+/// and that word. Torn or stale mask bits are simply skipped; `None`
+/// means no lane currently holds `half` (up to the scan race the
+/// callers' miss validation owns). Memory-ordering note: loads here are
+/// relaxed — callers needing publish ordering on a hit issue their own
+/// `Acquire` fence, as the probe cores do.
+#[inline]
+pub fn elect_match(row: &[AtomicU64], half: u32) -> Option<(usize, u64)> {
+    elect_match_in(row, half, u32::MAX)
+}
+
+/// [`elect_match`] restricted to the lanes of `allowed` — the
+/// mask-guided WCME variant (insert's replace check feeds the occupied
+/// lanes from the free-mask word). The vector scan reads the whole row
+/// regardless (the row *is* the cache-line unit); `allowed` prunes the
+/// election, preserving the guided scan's semantics: lanes claimed but
+/// mid-publish are excluded even if their slot image momentarily
+/// matches.
+#[inline]
+pub fn elect_match_in(row: &[AtomicU64], half: u32, allowed: u32) -> Option<(usize, u64)> {
+    let mut m = match_mask(row, half) & allowed;
+    while m != 0 {
+        let lane = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let w = row[lane].load(Ordering::Relaxed);
+        if key_half(w) == half {
+            return Some((lane, w));
+        }
+    }
+    None
+}
+
+/// `true` when [`match_mask`] dispatches to a `core::arch` vector
+/// engine (bench/CI provenance; also lets the differential battery know
+/// whether a third engine exists to compare).
+pub fn simd_active() -> bool {
+    HAVE_SIMD
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::core::packed::{pack, EMPTY_WORD};
+
+    fn row_of(halves: &[u32]) -> Vec<AtomicU64> {
+        halves
+            .iter()
+            .map(|&h| {
+                AtomicU64::new(if h == EMPTY_KEY { EMPTY_WORD } else { pack(h, h ^ 0xBEEF) })
+            })
+            .collect()
+    }
+
+    /// A named engine, uniformly callable.
+    type Engine = (&'static str, fn(&[AtomicU64], u32) -> u32);
+
+    /// Every engine the build carries.
+    fn engines() -> Vec<Engine> {
+        let mut v: Vec<Engine> = vec![
+            ("scalar", match_mask_scalar),
+            ("swar", match_mask_swar),
+            ("dispatch", match_mask),
+        ];
+        #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        v.push((simd::ENGINE, simd::match_mask_simd));
+        v
+    }
+
+    #[test]
+    fn planted_matches_exact_mask() {
+        for width in [16usize, 32] {
+            let mut halves = vec![EMPTY_KEY; width];
+            halves[0] = 7;
+            halves[3] = 9;
+            halves[width - 1] = 7;
+            let row = row_of(&halves);
+            let expect7: u32 = 1 | (1u32 << (width - 1));
+            for (name, f) in engines() {
+                assert_eq!(f(&row, 7), expect7, "{name} width {width} probe 7");
+                assert_eq!(f(&row, 9), 1u32 << 3, "{name} width {width} probe 9");
+                assert_eq!(f(&row, 1234), 0, "{name} width {width} absent probe");
+            }
+            let full: u32 = ((1u64 << width) - 1) as u32;
+            assert_eq!(empty_mask(&row), !(expect7 | 1u32 << 3) & full);
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_random_rows() {
+        use crate::testutil::seed::{stream, test_seed};
+        let mut x = stream(test_seed(0x1a), 0xe5) | 1;
+        let mut rng = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for width in [16usize, 32] {
+            for _ in 0..2000 {
+                let halves: Vec<u32> = (0..width)
+                    .map(|_| {
+                        let r = rng();
+                        if r & 3 == 0 {
+                            EMPTY_KEY
+                        } else {
+                            // small alphabet ⇒ frequent multi-lane matches
+                            (r >> 8) as u32 % 5
+                        }
+                    })
+                    .collect();
+                let row = row_of(&halves);
+                let probe = (rng() % 6) as u32; // sometimes absent
+                let reference = match_mask_scalar(&row, probe);
+                for (name, f) in engines() {
+                    assert_eq!(f(&row, probe), reference, "{name} diverged, width {width}");
+                }
+                // Elected lane: lowest set bit, word re-validated.
+                let elected = elect_match(&row, probe);
+                match reference {
+                    0 => assert!(elected.is_none()),
+                    m => {
+                        let lane = m.trailing_zeros() as usize;
+                        let (el, ew) = elected.expect("mask nonzero on quiescent row");
+                        assert_eq!(el, lane);
+                        assert_eq!(ew, row[lane].load(Ordering::Relaxed));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_and_simd_handle_odd_tails() {
+        // Off-width rows exercise the scalar tail of each stepped engine.
+        for width in [1usize, 3, 5, 7, 15, 17] {
+            let mut halves: Vec<u32> = (0..width as u32).collect();
+            halves[width - 1] = 42;
+            let row = row_of(&halves);
+            for (name, f) in engines() {
+                assert_eq!(f(&row, 42), 1 << (width - 1), "{name} tail, width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn elect_respects_allowed_mask() {
+        let row = row_of(&[5, 5, 5, EMPTY_KEY]);
+        assert_eq!(elect_match(&row, 5).map(|(l, _)| l), Some(0));
+        assert_eq!(elect_match_in(&row, 5, 0b0110).map(|(l, _)| l), Some(1));
+        assert_eq!(elect_match_in(&row, 5, 0b1000), None, "allowed lane holds EMPTY");
+        assert_eq!(elect_match_in(&row, 5, 0), None);
+    }
+
+    #[test]
+    fn engine_name_is_coherent() {
+        let name = engine_name();
+        assert!(!name.is_empty());
+        assert_eq!(simd_active(), name.starts_with("simd-"));
+    }
+}

@@ -6,6 +6,7 @@ pub mod config;
 pub mod counter;
 pub mod epoch;
 pub mod error;
+pub mod lanes;
 pub mod model;
 pub mod quotient;
 pub mod rng;
@@ -43,3 +44,12 @@ pub const DEFAULT_SHRINK_THRESHOLD: f64 = 0.25;
 /// Stash capacity as a fraction of main-table slot capacity (§IV-A step 4:
 /// "typically 1-2% of the main table capacity").
 pub const DEFAULT_STASH_FRACTION: f64 = 0.02;
+
+/// Default number of in-flight probe state machines per thread in the
+/// bulk batch paths ([`crate::native::batch`]): each in-flight op's next
+/// bucket line is prefetched G ops ahead, so a batch overlaps G cache
+/// misses where the per-op path overlaps one — the CPU analogue of the
+/// GPU's warp-level latency hiding (AMAC-style group prefetching). G = 8
+/// covers typical DRAM latency at per-op costs of a few dozen ns without
+/// overrunning L1 with speculative lines.
+pub const DEFAULT_BATCH_INTERLEAVE: usize = 8;

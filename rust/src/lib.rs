@@ -68,6 +68,25 @@
 //!   key/value-array ablation ([`native::soa`]) the paper argues against:
 //!   two memory transactions per update and a consistency window.
 //!
+//! ## Probe engine
+//!
+//! All native probe cores (lookup, placement's replace check, delete,
+//! and the conditional/RMW find phase) scan a bucket through one
+//! primitive: the [`core::lanes`] ballot. One call scans the whole
+//! 16/32-slot row and returns a candidate bitmask — the CPU image of
+//! the paper's warp ballot — and `elect_match` picks the lowest lane
+//! with an atomically re-validated ffs. Three interchangeable engines
+//! produce the mask (per-slot scalar reference, portable SWAR on `u64`,
+//! and `core::arch` SSE2/NEON behind the `simd` cargo feature), all
+//! differentially tested to ballot identically. The bulk entry points
+//! in [`native::batch`] add AMAC-style interleaving on top: G probe
+//! state machines in flight per thread (default 8, see
+//! [`HiveConfig::batch_interleave`](core::config::HiveConfig::batch_interleave)),
+//! each issuing a real prefetch hint (`native::prefetch`) for the
+//! bucket line it will touch G ops from now, so a batch overlaps G
+//! cache misses where a per-op loop overlaps none. The `fig15_probe`
+//! bench quantifies both halves.
+//!
 //! See `DESIGN.md` for the full system inventory and the CUDA→TPU hardware
 //! adaptation, and `EXPERIMENTS.md` for paper-vs-measured results.
 //!

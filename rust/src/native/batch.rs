@@ -16,62 +16,104 @@
 //!    front into a dense table, separating the arithmetic (hashing) phase
 //!    from the memory (probing) phase. Only the cheap round reduction
 //!    stays per-op, because the round word can advance mid-batch.
-//! 3. **Software-pipelined probes.** While op *i* probes, op *i+1*'s
-//!    first bucket row is touched (mask word + first slot word), a
-//!    prefetch-style hint that overlaps the next op's cache miss with the
-//!    current op's compare loop — the CPU analogue of warp-level latency
-//!    hiding.
+//! 3. **AMAC-style interleaved probes.** G probe "state machines" are
+//!    kept in flight per thread (G = [`HiveConfig::batch_interleave`],
+//!    default 8, env-tunable via `HIVE_BATCH_INTERLEAVE`): before op *i*
+//!    executes, op *i+G*'s first bucket line is prefetched through the
+//!    shared [`crate::native::prefetch`] helper (a real
+//!    `_mm_prefetch`/`prfm` where the target has one, a read touch
+//!    otherwise). By the time the probe for op *i+G* runs, its miss has
+//!    had G ops' worth of execution to resolve — the batch overlaps G
+//!    cache misses where the old 1-deep pipeline overlapped one. This is
+//!    the CPU analogue of warp-level latency hiding (group/AMAC
+//!    prefetching from the in-memory-join literature); the GPU hides the
+//!    same latency with warp oversubscription.
 //!
 //! Batched and single-op execution share the same `*_core` bodies in
 //! [`crate::native::table`], so their observable behaviour is identical;
 //! a batch interleaved with concurrent single ops is a legal
-//! linearization of both.
+//! linearization of both. The interleave depth changes *when* a probe's
+//! lines arrive, never what the probe does — the depth-{1,4,8} oracle in
+//! `tests/test_probe_engine.rs` pins that.
 //!
-//! Every class of the typed operation plane has a hash-ahead bulk entry
-//! point here (`upsert_batch`, `insert_if_absent_batch`, `update_batch`,
-//! `cas_batch`, `fetch_add_batch`), and [`HiveTable::execute_ops`] runs
-//! a heterogeneous [`Op`] window through them, returning typed
-//! [`OpResult`]s in submission order — the engine behind
-//! `NativeBackend::execute` and the `ConcurrentMap` batch plane.
+//! Every class of the typed operation plane has an interleaved bulk
+//! entry point here (`upsert_batch`, `insert_if_absent_batch`,
+//! `update_batch`, `cas_batch`, `fetch_add_batch`, `lookup_batch`,
+//! `delete_batch`), and [`HiveTable::execute_ops`] runs a heterogeneous
+//! [`Op`] window through them, returning typed [`OpResult`]s in
+//! submission order — the engine behind `NativeBackend::execute` and the
+//! `ConcurrentMap` batch plane.
+//!
+//! [`HiveConfig::batch_interleave`]: crate::core::config::HiveConfig::batch_interleave
 
 use crate::backend::group_ops;
 use crate::core::error::{HiveError, Result};
-use crate::core::config::Layout;
 use crate::core::packed::EMPTY_KEY;
-use crate::hash::HashFamily;
+use crate::native::prefetch;
 use crate::native::table::{HiveTable, InsertOutcome, RmwInsert, State};
 use crate::workload::{Op, OpResult};
-use std::sync::atomic::Ordering;
-
-/// Prefetch-style touch of `bucket`'s first slot word (and, for the
-/// two-line packed layout, its metadata word). A plain relaxed load is
-/// enough to pull the line toward this core before the pipelined probe
-/// for the next op lands on it.
-///
-/// Under [`Layout::CompactQuotient`] a 16-slot bucket row is one
-/// 128-byte line, so touching the slot word alone covers the probe's
-/// whole footprint — skipping the mask-word load halves the hash-ahead
-/// traffic. (Mask words pack many buckets per line and stay hot in L1
-/// across a batch regardless, so the wide layouts keep the extra touch
-/// only because their slot rows genuinely span a second line.)
-#[inline(always)]
-fn touch_bucket(state: &State, bucket: u32) {
-    if state.layout != Layout::CompactQuotient {
-        let _ = state.masks[bucket as usize].load(Ordering::Relaxed);
-    }
-    let _ = state.buckets[bucket as usize * state.spb].load(Ordering::Relaxed);
-}
-
-/// Touch the next op's first candidate bucket under the current round.
-#[inline(always)]
-fn touch_next(state: &State, raw0: u32) {
-    let (mask, sp) = state.round();
-    touch_bucket(state, HashFamily::address(raw0, mask, sp));
-}
 
 impl HiveTable {
-    /// Bulk Insert/Replace: one epoch pin, hash-ahead, and pipelined
-    /// probes for the whole batch (module docs). Returns one
+    /// AMAC-style interleaved executor shared by every bulk class: prime
+    /// the first `min(G, len)` ops' bucket lines, then keep the prefetch
+    /// horizon G ops ahead of execution. `exec(i)` runs op *i* against
+    /// the already-pinned `state`; `raws` is the hash-ahead table (one
+    /// entry per op — its length is the batch length).
+    ///
+    /// Exactly one line hint is issued per op (prime fills the first G,
+    /// the loop covers the rest), recorded once per batch on the
+    /// `prefetches` counter.
+    fn run_interleaved<R>(
+        &self,
+        state: &State,
+        raws: &[[u32; 4]],
+        mut exec: impl FnMut(usize) -> R,
+    ) -> Vec<R> {
+        let len = raws.len();
+        let g = self.config().batch_interleave.max(1);
+        for r in raws.iter().take(g.min(len)) {
+            prefetch::prefetch_candidate(state, r[0]);
+        }
+        self.stats.record_prefetches(len as u64);
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            if i + g < len {
+                prefetch::prefetch_candidate(state, raws[i + g][0]);
+            }
+            out.push(exec(i));
+        }
+        out
+    }
+
+    /// [`HiveTable::run_interleaved`] for fallible classes: stops at the
+    /// first error like the per-op loop it replaced (ops before the
+    /// error have executed; the error propagates). In practice the
+    /// inserting cores only error on sentinel keys, which every caller
+    /// rejects before starting the batch.
+    fn try_run_interleaved<R>(
+        &self,
+        state: &State,
+        raws: &[[u32; 4]],
+        mut exec: impl FnMut(usize) -> Result<R>,
+    ) -> Result<Vec<R>> {
+        let len = raws.len();
+        let g = self.config().batch_interleave.max(1);
+        for r in raws.iter().take(g.min(len)) {
+            prefetch::prefetch_candidate(state, r[0]);
+        }
+        self.stats.record_prefetches(len as u64);
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            if i + g < len {
+                prefetch::prefetch_candidate(state, raws[i + g][0]);
+            }
+            out.push(exec(i)?);
+        }
+        Ok(out)
+    }
+
+    /// Bulk Insert/Replace: one epoch pin, hash-ahead, and G-deep
+    /// interleaved probes for the whole batch (module docs). Returns one
     /// [`InsertOutcome`] per pair, in submission order. Alias of
     /// [`HiveTable::upsert_batch`] that discards the previous values.
     ///
@@ -91,21 +133,17 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(pairs.len());
-        for (i, &(key, value)) in pairs.iter().enumerate() {
-            if i + 1 < pairs.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
+        self.try_run_interleaved(state, &raws, |i| {
+            let (key, value) = pairs[i];
             let (outcome, old) = self.upsert_core(state, key, value, &raws[i])?;
             self.record_insert_outcome(outcome);
-            out.push((outcome, old));
-        }
-        Ok(out)
+            Ok((outcome, old))
+        })
     }
 
-    /// Bulk insert-if-absent (hash-ahead, one pin). One [`RmwInsert`]
-    /// per pair, in submission order. Sentinel keys error pre-mutation
-    /// like `insert_batch`.
+    /// Bulk insert-if-absent (hash-ahead, one pin, G-deep interleave).
+    /// One [`RmwInsert`] per pair, in submission order. Sentinel keys
+    /// error pre-mutation like `insert_batch`.
     pub fn insert_if_absent_batch(&self, pairs: &[(u32, u32)]) -> Result<Vec<RmwInsert>> {
         if let Some(&(bad, _)) = pairs.iter().find(|&&(k, _)| k == EMPTY_KEY) {
             return Err(HiveError::InvalidKey(bad));
@@ -113,14 +151,10 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(pairs.len());
-        for (i, &(key, value)) in pairs.iter().enumerate() {
-            if i + 1 < pairs.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(self.insert_if_absent_core(state, key, value, &raws[i])?);
-        }
-        Ok(out)
+        self.try_run_interleaved(state, &raws, |i| {
+            let (key, value) = pairs[i];
+            self.insert_if_absent_core(state, key, value, &raws[i])
+        })
     }
 
     /// Bulk update (write-if-present): one previous value per pair, in
@@ -130,18 +164,14 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(pairs.len());
-        for (i, &(key, value)) in pairs.iter().enumerate() {
-            if i + 1 < pairs.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(if key == EMPTY_KEY {
+        self.run_interleaved(state, &raws, |i| {
+            let (key, value) = pairs[i];
+            if key == EMPTY_KEY {
                 None
             } else {
                 self.update_core(state, key, value, &raws[i])
-            });
-        }
-        out
+            }
+        })
     }
 
     /// Bulk compare-and-swap over `(key, expected, new)` triples: one
@@ -151,18 +181,14 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = items.iter().map(|&(k, _, _)| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(items.len());
-        for (i, &(key, expected, new)) in items.iter().enumerate() {
-            if i + 1 < items.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(if key == EMPTY_KEY {
+        self.run_interleaved(state, &raws, |i| {
+            let (key, expected, new) = items[i];
+            if key == EMPTY_KEY {
                 (false, None)
             } else {
                 self.cas_core(state, key, expected, new, &raws[i])
-            });
-        }
-        out
+            }
+        })
     }
 
     /// Bulk fetch-add over `(key, delta)` pairs: one [`RmwInsert`] per
@@ -174,14 +200,10 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = pairs.iter().map(|&(k, _)| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(pairs.len());
-        for (i, &(key, delta)) in pairs.iter().enumerate() {
-            if i + 1 < pairs.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(self.fetch_add_core(state, key, delta, &raws[i])?);
-        }
-        Ok(out)
+        self.try_run_interleaved(state, &raws, |i| {
+            let (key, delta) = pairs[i];
+            self.fetch_add_core(state, key, delta, &raws[i])
+        })
     }
 
     /// Execute a heterogeneous window of [`Op`]s through the per-class
@@ -192,7 +214,8 @@ impl HiveTable {
     /// concurrent, so the grouping is a legal linearization. Inserting
     /// classes (`Insert`/`Upsert`/`InsertIfAbsent`/`FetchAdd`) validate
     /// their keys up front — a sentinel key errors the whole window
-    /// before any mutation.
+    /// before any mutation. Every class batch runs the G-deep
+    /// interleaved scheduler.
     pub fn execute_ops(&self, ops: &[Op]) -> Result<Vec<OpResult>> {
         crate::backend::validate_insert_keys(ops)?;
         let g = group_ops(ops);
@@ -251,18 +274,14 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = keys.iter().map(|&k| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(keys.len());
-        for (i, &key) in keys.iter().enumerate() {
-            if i + 1 < keys.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(if key == EMPTY_KEY {
+        self.run_interleaved(state, &raws, |i| {
+            let key = keys[i];
+            if key == EMPTY_KEY {
                 None
             } else {
                 self.lookup_core(state, key, &raws[i])
-            });
-        }
-        out
+            }
+        })
     }
 
     /// Bulk Delete: one hit flag per key, in submission order. Keys equal
@@ -271,14 +290,10 @@ impl HiveTable {
         let guard = self.epoch.pin();
         let state = self.state_ref(&guard);
         let raws: Vec<[u32; 4]> = keys.iter().map(|&k| self.raw_hashes(k)).collect();
-        let mut out = Vec::with_capacity(keys.len());
-        for (i, &key) in keys.iter().enumerate() {
-            if i + 1 < keys.len() {
-                touch_next(state, raws[i + 1][0]);
-            }
-            out.push(key != EMPTY_KEY && self.delete_core(state, key, &raws[i]));
-        }
-        out
+        self.run_interleaved(state, &raws, |i| {
+            let key = keys[i];
+            key != EMPTY_KEY && self.delete_core(state, key, &raws[i])
+        })
     }
 }
 
@@ -370,6 +385,49 @@ mod tests {
         assert_eq!(t.lookup(2), Some(30));
         assert_eq!(t.lookup(6), Some(60));
         assert_eq!(t.len(), 5); // keys 1,2,3,4,6
+    }
+
+    fn table_with_depth(buckets: usize, g: usize) -> HiveTable {
+        HiveTable::new(HiveConfig::default().with_buckets(buckets).with_interleave(g)).unwrap()
+    }
+
+    #[test]
+    fn interleave_depth_is_observationally_invisible() {
+        // Same stream, depths 1 / 3 / 8: identical results and final
+        // state — the scheduler only changes when lines are prefetched.
+        let streams: Vec<Vec<(u32, u32)>> = vec![
+            (1..=300u32).map(|k| (k * 7, k)).collect(),
+            (1..=300u32).map(|k| (k * 7, k + 1)).collect(),
+        ];
+        let reference = table(32);
+        let tables: Vec<HiveTable> =
+            [1usize, 3, 8].iter().map(|&g| table_with_depth(32, g)).collect();
+        for s in &streams {
+            let want = reference.upsert_batch(s).unwrap();
+            for t in &tables {
+                assert_eq!(t.upsert_batch(s).unwrap(), want);
+            }
+        }
+        let keys: Vec<u32> = streams[0].iter().map(|&(k, _)| k).collect();
+        let want = reference.lookup_batch(&keys);
+        for t in &tables {
+            assert_eq!(t.lookup_batch(&keys), want);
+        }
+    }
+
+    #[test]
+    fn prefetch_counter_counts_one_hint_per_op() {
+        let t = table(16);
+        let pairs: Vec<(u32, u32)> = (1..=100u32).map(|k| (k, k)).collect();
+        t.insert_batch(&pairs).unwrap();
+        let before = t.stats().prefetches;
+        let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+        t.lookup_batch(&keys);
+        assert_eq!(t.stats().prefetches - before, 100, "one line hint per batched op");
+        // per-op paths issue none
+        let before = t.stats().prefetches;
+        t.lookup(7);
+        assert_eq!(t.stats().prefetches, before);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! compiler vectorizes. The lane-accurate version lives in [`crate::simgpu`].
 
 pub mod batch;
+pub(crate) mod prefetch;
 pub mod stash;
 pub mod stats;
 pub mod table;

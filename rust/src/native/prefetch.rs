@@ -1,0 +1,93 @@
+//! Shared bucket-line prefetch hint for the bulk batch paths.
+//!
+//! The AMAC-style interleaved scheduler in [`crate::native::batch`]
+//! wants op *i+G*'s first bucket row moving toward this core while op
+//! *i* executes. One helper owns how that hint is issued:
+//!
+//! * `x86_64` — `_mm_prefetch` with the T0 locality hint (SSE is
+//!   baseline on the target, no feature gate needed);
+//! * `aarch64` — `prfm pldl1keep` via inline asm;
+//! * anywhere else, and under `--cfg loom` — a relaxed atomic read
+//!   "touch", the PR-4 behaviour (under the model checker a real
+//!   prefetch would be an untracked memory access; a shim load is a
+//!   legal no-op the scheduler can see).
+//!
+//! A real prefetch beats the touch in exactly the case the batch paths
+//! care about: it is *non-blocking* (the core does not stall for the
+//! miss, the line streams in behind the in-flight ops) and *non-faulting*.
+//! The touch, by contrast, is an architecturally required load — the
+//! compiler must order it, and a cold line stalls retirement once the
+//! load buffer fills.
+//!
+//! Layout gating lives here too (satellite of PR-6's one-line compact
+//! bucket): under [`Layout::CompactQuotient`] a 16-slot row is a single
+//! 128-byte line and mask words stay hot in L1 across a batch, so one
+//! hint covers the probe's whole footprint; the 32-slot AoS row spans
+//! two lines and gets its mask word plus both row lines.
+
+use crate::core::config::Layout;
+use crate::core::sync::atomic::AtomicU64;
+#[cfg(not(all(
+    not(loom),
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+use crate::core::sync::atomic::Ordering;
+use crate::hash::HashFamily;
+use crate::native::table::State;
+
+/// Hint that the cache line holding `word` will be read soon. Real
+/// prefetch intrinsic where the target has one, volatile-read-style
+/// touch otherwise (module docs).
+#[inline(always)]
+pub(crate) fn line_hint(word: &AtomicU64) {
+    #[cfg(all(not(loom), target_arch = "x86_64"))]
+    // SAFETY: prefetch is non-faulting and has no architectural effect;
+    // any address, even a dangling one, is allowed. `word` is a live
+    // reference anyway.
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<{ _MM_HINT_T0 }>(word as *const AtomicU64 as *const i8);
+    }
+    #[cfg(all(not(loom), target_arch = "aarch64"))]
+    // SAFETY: `prfm pldl1keep` is the architectural no-fault prefetch;
+    // it reads no registers besides the address and writes none.
+    unsafe {
+        core::arch::asm!(
+            "prfm pldl1keep, [{0}]",
+            in(reg) (word as *const AtomicU64),
+            options(nostack, preserves_flags, readonly)
+        );
+    }
+    #[cfg(not(all(
+        not(loom),
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    {
+        let _ = word.load(Ordering::Relaxed);
+    }
+}
+
+/// Prefetch the line(s) a probe of `bucket` will touch first: the slot
+/// row (one line compact, two lines for the 32-slot AoS row) plus the
+/// mask word for the wide layouts (compact skips it — module docs).
+#[inline(always)]
+pub(crate) fn prefetch_bucket(state: &State, bucket: u32) {
+    let base = bucket as usize * state.spb;
+    if state.layout != Layout::CompactQuotient {
+        line_hint(&state.masks[bucket as usize]);
+    }
+    line_hint(&state.buckets[base]);
+    if state.spb > 16 {
+        // Second 128-byte line of the 32-slot row (16 × 8 B per line).
+        line_hint(&state.buckets[base + 16]);
+    }
+}
+
+/// Prefetch the first candidate bucket of the op whose primary raw hash
+/// is `raw0`, routed under the current round word — the per-op entry
+/// the interleaved scheduler calls G ops ahead.
+#[inline(always)]
+pub(crate) fn prefetch_candidate(state: &State, raw0: u32) {
+    let (mask, sp) = state.round();
+    prefetch_bucket(state, HashFamily::address(raw0, mask, sp));
+}

@@ -45,6 +45,7 @@ pub struct OpStats {
     probes: Padded,
     probe_buckets: Padded,
     probe_lines: Padded,
+    prefetches: Padded,
 }
 
 impl OpStats {
@@ -115,6 +116,14 @@ impl OpStats {
         self.probe_lines.0.fetch_add(lines, Ordering::Relaxed);
     }
 
+    /// Record `n` bucket-line prefetch hints issued by a bulk batch path
+    /// (one per op under the AMAC interleave — [`crate::native::batch`]).
+    /// One add per batch, not per op, so the hot loop stays untaxed.
+    #[inline]
+    pub fn record_prefetches(&self, n: u64) {
+        self.prefetches.0.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Coherent-enough snapshot of all counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
@@ -134,6 +143,7 @@ impl OpStats {
             probes: self.probes.0.load(Ordering::Relaxed),
             probe_buckets: self.probe_buckets.0.load(Ordering::Relaxed),
             probe_lines: self.probe_lines.0.load(Ordering::Relaxed),
+            prefetches: self.prefetches.0.load(Ordering::Relaxed),
         }
     }
 }
@@ -157,6 +167,7 @@ pub struct StatsSnapshot {
     pub probes: u64,
     pub probe_buckets: u64,
     pub probe_lines: u64,
+    pub prefetches: u64,
 }
 
 impl StatsSnapshot {
@@ -222,6 +233,7 @@ mod tests {
         s.record_delete(true);
         s.record_probe(2, 5);
         s.record_probe(1, 2);
+        s.record_prefetches(3);
         let snap = s.snapshot();
         assert_eq!(snap.inserts, 4);
         assert_eq!(snap.claims, 2);
@@ -235,6 +247,7 @@ mod tests {
         assert_eq!(snap.probes, 2);
         assert_eq!(snap.probe_buckets, 3);
         assert_eq!(snap.probe_lines, 7);
+        assert_eq!(snap.prefetches, 3);
         assert!((snap.lines_per_probe() - 3.5).abs() < 1e-9);
         assert!((snap.buckets_per_probe() - 1.5).abs() < 1e-9);
     }

@@ -4,9 +4,12 @@
 //! fast paths are lock-free and match the paper's protocols instruction for
 //! instruction at the atomic level:
 //!
-//! * **WCME** (lookup / replace / delete): probe all 32 slots of each
-//!   candidate bucket, elect the first match, winner performs exactly one
-//!   64-bit CAS (replace/delete) or returns the value (lookup).
+//! * **WCME** (lookup / replace / delete): scan the whole bucket row with
+//!   one [`crate::core::lanes`] ballot (SWAR or `core::arch` SIMD — the
+//!   CPU analogue of the warp's coalesced loads + ballot), elect the
+//!   lowest matching lane with an atomically re-validated ffs, winner
+//!   performs exactly one 64-bit CAS (replace/delete) or returns the
+//!   value (lookup).
 //! * **WABC** (claim-then-commit): read the free mask, elect the lowest
 //!   free bit, claim it with one `fetch_and`, publish the packed KV with a
 //!   release store.
@@ -120,6 +123,7 @@ use crate::core::config::{HiveConfig, Layout};
 use crate::core::counter::StripedCounter;
 use crate::core::epoch::{EpochDomain, EpochGuard};
 use crate::core::error::{HiveError, Result};
+use crate::core::lanes;
 use crate::core::packed::{is_empty, pack, unpack_key, unpack_value, EMPTY_KEY, EMPTY_WORD};
 use crate::core::{quotient, FULL_FREE_MASK};
 use crate::hash::HashFamily;
@@ -704,54 +708,53 @@ impl HiveTable {
     // WCME probe helpers
     // ------------------------------------------------------------------
 
-    /// WCME match: scan the slots of `bucket` for the stored key half
-    /// `half` (the key itself for AoS, a [`quotient`] encoding for
-    /// compact); return the matching lane and its cached word. The scan is
-    /// the CPU analogue of the warp's coalesced per-lane load + ballot +
-    /// ffs.
-    ///
-    /// Perf (§Perf log): slots are scanned with `Relaxed` loads — one
-    /// `Acquire` fence on a hit establishes the publish ordering — which
-    /// removes 32 acquire barriers per probe on weakly-ordered targets and
-    /// lets the compiler keep the loop tight on x86. Used by lookup/delete,
-    /// whose operating point is a well-filled table where a mask pre-load
-    /// is pure overhead.
-    #[inline]
-    pub(crate) fn wcme_match(state: &State, bucket: u32, half: u32) -> Option<(usize, u64)> {
+    /// The slot-word row of `bucket` — the unit the [`lanes`] ballot
+    /// scans (one 128-byte line compact, two lines AoS).
+    #[inline(always)]
+    fn row_of(state: &State, bucket: u32) -> &[AtomicU64] {
         let base = bucket as usize * state.spb;
-        let half64 = half as u64;
-        for lane in 0..state.spb {
-            let w = state.buckets[base + lane].load(Ordering::Relaxed);
-            if w & 0xFFFF_FFFF == half64 {
-                crate::core::sync::atomic::fence(Ordering::Acquire);
-                return Some((lane, w));
-            }
-        }
-        None
+        &state.buckets[base..base + state.spb]
     }
 
-    /// Mask-guided WCME variant for the insert replace-check (§Perf log):
-    /// one mask-word load selects the occupied lanes so only those are
-    /// compared — during a fill most buckets are part-empty, cutting the
-    /// replace probe sharply (insert +25 % measured). A lane whose claim
-    /// is mid-publish reads EMPTY and is skipped; a completed insert's
+    /// WCME match: ballot-scan the whole row of `bucket` for the stored
+    /// key half `half` (the key itself for AoS, a [`quotient`] encoding
+    /// for compact) via [`lanes::elect_match`] — the CPU analogue of the
+    /// warp's coalesced per-lane load + ballot + ffs, vectorized (SWAR
+    /// by default, `core::arch` SIMD under `--features simd`). Returns
+    /// the elected lane and its atomically re-validated word.
+    ///
+    /// Perf (§Perf log): the scan uses `Relaxed` loads — one `Acquire`
+    /// fence on a hit establishes the publish ordering — so the row scan
+    /// stays barrier-free and vectorizable. Used by lookup/delete, whose
+    /// operating point is a well-filled table where a mask pre-load is
+    /// pure overhead.
+    #[inline]
+    pub(crate) fn wcme_match(state: &State, bucket: u32, half: u32) -> Option<(usize, u64)> {
+        let hit = lanes::elect_match(Self::row_of(state, bucket), half);
+        if hit.is_some() {
+            crate::core::sync::atomic::fence(Ordering::Acquire);
+        }
+        hit
+    }
+
+    /// Mask-guided WCME variant for the insert replace-check (§Perf
+    /// log): one mask-word load selects the occupied lanes and the
+    /// ballot's election is restricted to them — during a fill most
+    /// buckets are part-empty, cutting the replace probe sharply (insert
+    /// +25 % measured; the vector scan reads the full row regardless
+    /// since the row *is* the cache-line unit, so the pruning now saves
+    /// election work rather than loads). A lane whose claim is
+    /// mid-publish reads EMPTY and is excluded; a completed insert's
     /// `fetch_and` happens-before any later mask load, so committed
     /// entries are always scanned.
     #[inline]
     fn wcme_match_masked(state: &State, bucket: u32, half: u32) -> Option<(usize, u64)> {
-        let base = bucket as usize * state.spb;
-        let half64 = half as u64;
-        let mut occupied = !state.free_mask_of(bucket, Ordering::Acquire) & state.full_free as u32;
-        while occupied != 0 {
-            let lane = occupied.trailing_zeros() as usize;
-            occupied &= occupied - 1;
-            let w = state.buckets[base + lane].load(Ordering::Relaxed);
-            if w & 0xFFFF_FFFF == half64 {
-                crate::core::sync::atomic::fence(Ordering::Acquire);
-                return Some((lane, w));
-            }
+        let occupied = !state.free_mask_of(bucket, Ordering::Acquire) & state.full_free as u32;
+        let hit = lanes::elect_match_in(Self::row_of(state, bucket), half, occupied);
+        if hit.is_some() {
+            crate::core::sync::atomic::fence(Ordering::Acquire);
         }
-        None
+        hit
     }
 
     // ------------------------------------------------------------------
@@ -770,7 +773,10 @@ impl HiveTable {
     }
 
     /// Cache lines one bucket probe touched: the mask-word line plus the
-    /// 64-bit-word row lines covering the `lanes` slots actually scanned.
+    /// 64-bit-word row lines covering the `lanes` slots scanned. The
+    /// ballot engine scans the whole row per step, so callers pass
+    /// `state.spb` — hit or miss, the row's full line footprint moved
+    /// through the cache (compact: 1 row line, AoS: 2).
     #[inline(always)]
     fn probe_lines(lanes: usize) -> u64 {
         1 + (lanes as u64 * 8).div_ceil(128)
@@ -803,8 +809,8 @@ impl HiveTable {
                     continue 'retry;
                 };
                 pbuckets += 1;
-                if let Some((lane, w)) = Self::wcme_match(state, b, half) {
-                    plines += Self::probe_lines(lane + 1);
+                plines += Self::probe_lines(state.spb);
+                if let Some((_lane, w)) = Self::wcme_match(state, b, half) {
                     if !self.hit_valid(state, b, mw) {
                         continue 'retry;
                     }
@@ -812,7 +818,6 @@ impl HiveTable {
                     self.stats.record_lookup(true);
                     return Some(unpack_value(w));
                 }
-                plines += Self::probe_lines(state.spb);
             }
             // Miss: confirm no candidate migrated under the probe.
             if !self.validate_miss(state, raws, &cands, &pre) {
@@ -858,6 +863,13 @@ impl HiveTable {
     /// already computed (shared with the batch layer).
     pub(crate) fn delete_core(&self, state: &State, key: u32, raws: &[u32; 4]) -> bool {
         let d = self.family.d();
+        // Line-efficiency accounting (fig14/fig15): deletes report probe
+        // footprints like lookups do, so `lines_per_probe` covers every
+        // probing class, batched or per-op. Counted once per candidate
+        // bucket visit — the bounded CAS-retry rescans hit lines already
+        // resident in L1.
+        let mut pbuckets = 0u64;
+        let mut plines = 0u64;
         'retry: loop {
             // drain-overlap guard: see lookup_core
             let de = self.drain_epoch.load(Ordering::SeqCst);
@@ -874,6 +886,8 @@ impl HiveTable {
                 let Some(half) = self.probe_half(state, raws, i, b, key) else {
                     continue 'retry;
                 };
+                pbuckets += 1;
+                plines += Self::probe_lines(state.spb);
                 // Retry the CAS a bounded number of times: a failed CAS
                 // means a concurrent replace updated the value — rescan.
                 for _attempt in 0..4 {
@@ -903,6 +917,7 @@ impl HiveTable {
                                     .fetch_or(1u64 << lane, Ordering::AcqRel);
                                 self.count.decr();
                                 self.purge_shadow(key);
+                                self.stats.record_probe(pbuckets, plines);
                                 self.stats.record_delete(true);
                                 return true;
                             }
@@ -917,15 +932,18 @@ impl HiveTable {
             }
             if !self.stash.is_quiescent() && self.stash.delete(key) {
                 self.count.decr();
+                self.stats.record_probe(pbuckets, plines);
                 self.stats.record_delete(true);
                 return true;
             }
             if self.pending_delete(key) {
                 self.count.decr();
+                self.stats.record_probe(pbuckets, plines);
                 self.stats.record_delete(true);
                 return true;
             }
             if self.stash_stable(de) {
+                self.stats.record_probe(pbuckets, plines);
                 self.stats.record_delete(false);
                 return false;
             }
@@ -980,6 +998,11 @@ impl HiveTable {
         raws: &[u32; 4],
     ) -> Result<(InsertOutcome, Option<u32>)> {
         let d = self.family.d();
+        // Probe accounting for the replace scan (fig14/fig15): one
+        // record per logical upsert, covering the match phase only (the
+        // placement fallback is a write path, not a probe).
+        let mut pbuckets = 0u64;
+        let mut plines = 0u64;
 
         // ---- Step 1: Replace (Algorithm 1) ----
         'probe: loop {
@@ -998,6 +1021,8 @@ impl HiveTable {
                 let Some(half) = self.probe_half(state, raws, i, b, key) else {
                     continue 'probe;
                 };
+                pbuckets += 1;
+                plines += Self::probe_lines(state.spb);
                 // The replacement word reuses the matched half: same key,
                 // same bucket, same width (hit_valid pins the width).
                 let new_word = pack(half, value);
@@ -1022,6 +1047,7 @@ impl HiveTable {
                                 // clear-CAS failure, so the fresh value
                                 // always reaches the partner bucket.
                                 self.purge_shadow(key);
+                                self.stats.record_probe(pbuckets, plines);
                                 return Ok((InsertOutcome::Replaced, Some(unpack_value(old))));
                             }
                             self.stats.record_cas_retry();
@@ -1037,10 +1063,12 @@ impl HiveTable {
             // there so the eventual drain does not resurrect a stale value.
             if !self.stash.is_quiescent() {
                 if let Some((old, true)) = self.stash.rmw(key, &|_| Some(value)) {
+                    self.stats.record_probe(pbuckets, plines);
                     return Ok((InsertOutcome::Replaced, Some(old)));
                 }
             }
             if let Some((old, true)) = self.pending_rmw(key, &|_| Some(value)) {
+                self.stats.record_probe(pbuckets, plines);
                 return Ok((InsertOutcome::Replaced, Some(old)));
             }
             if self.stash_stable(de) {
@@ -1053,6 +1081,7 @@ impl HiveTable {
             self.wait_drain_quiesced();
         }
 
+        self.stats.record_probe(pbuckets, plines);
         self.place_core(state, key, value, raws).map(|outcome| (outcome, None))
     }
 
@@ -1157,6 +1186,11 @@ impl HiveTable {
         f: &dyn Fn(u32) -> Option<u32>,
     ) -> Option<(u32, bool)> {
         let d = self.family.d();
+        // Probe accounting (fig14/fig15): the RMW classes (update / cas /
+        // fetch-add / if-absent's find phase) report probe footprints
+        // like lookups, so batched RMW drivers get `lines_per_probe`.
+        let mut pbuckets = 0u64;
+        let mut plines = 0u64;
         'retry: loop {
             // drain-overlap guard: see lookup_core
             let de = self.drain_epoch.load(Ordering::SeqCst);
@@ -1173,6 +1207,8 @@ impl HiveTable {
                 let Some(half) = self.probe_half(state, raws, i, b, key) else {
                     continue 'retry;
                 };
+                pbuckets += 1;
+                plines += Self::probe_lines(state.spb);
                 if let Some((lane, mut w)) = Self::wcme_match(state, b, half) {
                     if !self.hit_valid(state, b, mw) {
                         continue 'retry;
@@ -1181,6 +1217,7 @@ impl HiveTable {
                     loop {
                         let old = unpack_value(w);
                         let Some(new) = f(old) else {
+                            self.stats.record_probe(pbuckets, plines);
                             return Some((old, false));
                         };
                         match state.buckets[slot].compare_exchange(
@@ -1194,6 +1231,7 @@ impl HiveTable {
                                 // against the fresh word and re-copies,
                                 // same as the replace path.
                                 self.purge_shadow(key);
+                                self.stats.record_probe(pbuckets, plines);
                                 return Some((old, true));
                             }
                             Err(cur) => {
@@ -1224,13 +1262,16 @@ impl HiveTable {
             // mutex).
             if !self.stash.is_quiescent() {
                 if let Some(hit) = self.stash.rmw(key, f) {
+                    self.stats.record_probe(pbuckets, plines);
                     return Some(hit);
                 }
             }
             if let Some(hit) = self.pending_rmw(key, f) {
+                self.stats.record_probe(pbuckets, plines);
                 return Some(hit);
             }
             if self.stash_stable(de) {
+                self.stats.record_probe(pbuckets, plines);
                 return None;
             }
             // a drain overlapped the scan — wait it out, then re-probe

@@ -1,0 +1,326 @@
+//! SIMD/SWAR/scalar probe-engine equivalence and AMAC-scheduler oracle
+//! (ISSUE 9 differential battery).
+//!
+//! Three batteries:
+//!
+//! * **Engine equivalence** — random bucket rows (seeded from
+//!   `HIVE_TEST_SEED`, both 16- and 32-slot widths) scanned by every
+//!   match engine the build carries: the scalar reference, the SWAR
+//!   ballot, the compile-time dispatch, and — under `--features simd`
+//!   on x86_64/aarch64 — the `core::arch` vector engine. All must
+//!   return the identical candidate bitmask, elect the identical
+//!   (lowest) lane, and agree on the EMPTY mask.
+//! * **Bulk-vs-per-op oracle** — one seeded mixed stream replayed
+//!   phase-by-phase through the batched entry points at interleave
+//!   depths {1, 4, 8} and through the single-op methods on a reference
+//!   table, under both bucket layouts. Single-class batches execute in
+//!   submission order through the same `*_core` bodies, so every
+//!   semantic payload (old values, hit flags) and the final table
+//!   contents must match exactly — the interleave depth may change when
+//!   cache lines arrive, never what any op observes.
+//! * **Batched-driver accounting** — the bulk paths must feed the
+//!   `probes`/`probe_lines` counters (so `lines_per_probe` reports for
+//!   batched drivers, fig15) and issue exactly one prefetch hint per op.
+
+use hivehash::core::lanes;
+use hivehash::core::sync::atomic::AtomicU64;
+use hivehash::testutil::seed::{stream, test_seed};
+use hivehash::{pack, HiveConfig, HiveTable, Layout, EMPTY_KEY, EMPTY_WORD};
+
+fn base_seed() -> u64 {
+    test_seed(0x0915)
+}
+
+fn xorshift(s: &mut u64) -> u64 {
+    let mut x = *s;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *s = x;
+    x
+}
+
+fn layouts() -> [Layout; 2] {
+    [Layout::PackedAos, Layout::CompactQuotient]
+}
+
+/// Build a slot row from key halves (EMPTY_KEY ⇒ an EMPTY word).
+fn row_of(halves: &[u32]) -> Vec<AtomicU64> {
+    halves
+        .iter()
+        .map(|&h| AtomicU64::new(if h == EMPTY_KEY { EMPTY_WORD } else { pack(h, !h) }))
+        .collect()
+}
+
+/// A named match engine, uniformly callable.
+type Engine = (&'static str, fn(&[AtomicU64], u32) -> u32);
+
+/// Every match engine this build carries.
+fn engines() -> Vec<Engine> {
+    let mut v: Vec<Engine> = vec![
+        ("scalar", lanes::match_mask_scalar),
+        ("swar", lanes::match_mask_swar),
+        ("dispatch", lanes::match_mask),
+    ];
+    #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    v.push((lanes::simd::ENGINE, lanes::simd::match_mask_simd));
+    v
+}
+
+/// Random rows over a small alphabet (forced collisions and EMPTY runs):
+/// every engine must produce the scalar reference's bitmask, and the
+/// elected lane must be the mask's lowest set bit with a matching word.
+#[test]
+fn engines_agree_on_random_rows_across_seeds() {
+    let mut rng = stream(base_seed(), 0x01);
+    for width in [16usize, 32] {
+        for _case in 0..1500 {
+            let halves: Vec<u32> = (0..width)
+                .map(|_| {
+                    let r = xorshift(&mut rng);
+                    if r % 3 == 0 {
+                        EMPTY_KEY
+                    } else {
+                        (r >> 8) as u32 % 5
+                    }
+                })
+                .collect();
+            let row = row_of(&halves);
+            let probe = (xorshift(&mut rng) % 6) as u32;
+            let want = lanes::match_mask_scalar(&row, probe);
+            for (name, f) in engines() {
+                assert_eq!(f(&row, probe), want, "{name} width {width} probe {probe}");
+            }
+            match lanes::elect_match(&row, probe) {
+                Some((lane, w)) => {
+                    assert_eq!(lane, want.trailing_zeros() as usize, "elect = lowest set lane");
+                    assert_eq!(w as u32, probe, "elected word carries the probed half");
+                }
+                None => assert_eq!(want, 0, "probe {probe} had matches but elected none"),
+            }
+        }
+    }
+}
+
+/// The EMPTY scan (claimable-slot discovery) is the same ballot with the
+/// sentinel pattern; pin it against a hand-built row and the engines.
+#[test]
+fn empty_mask_matches_scalar_on_random_rows() {
+    let mut rng = stream(base_seed(), 0x02);
+    for width in [16usize, 32] {
+        for _case in 0..500 {
+            let halves: Vec<u32> = (0..width)
+                .map(|_| {
+                    let r = xorshift(&mut rng);
+                    if r % 2 == 0 {
+                        EMPTY_KEY
+                    } else {
+                        (r >> 8) as u32 % 7
+                    }
+                })
+                .collect();
+            let row = row_of(&halves);
+            let want = lanes::match_mask_scalar(&row, EMPTY_KEY);
+            assert_eq!(lanes::empty_mask(&row), want);
+            let planted = halves.iter().filter(|&&h| h == EMPTY_KEY).count() as u32;
+            assert_eq!(want.count_ones(), planted, "one mask bit per EMPTY slot");
+        }
+    }
+}
+
+/// `elect_match_in` must honour the caller's candidate pruning — the
+/// occupied-mask fast path in the table depends on it.
+#[test]
+fn elect_respects_allowed_mask() {
+    let row = row_of(&[7, EMPTY_KEY, 7, 7]);
+    assert_eq!(lanes::elect_match_in(&row, 7, !0).map(|(l, _)| l), Some(0));
+    assert_eq!(lanes::elect_match_in(&row, 7, 0b1100).map(|(l, _)| l), Some(2));
+    assert_eq!(lanes::elect_match_in(&row, 7, 0b0010), None);
+}
+
+#[test]
+fn engine_name_is_coherent() {
+    let name = lanes::engine_name();
+    if lanes::simd_active() {
+        assert!(name.starts_with("simd-"), "active vector engine must self-report: {name}");
+    } else {
+        assert_eq!(name, "swar");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bulk-vs-per-op oracle.
+// ---------------------------------------------------------------------------
+
+fn table_with(layout: Layout, depth: usize) -> HiveTable {
+    HiveTable::new(
+        HiveConfig::default().with_buckets(64).with_layout(layout).with_interleave(depth),
+    )
+    .unwrap()
+}
+
+const KEY_SPACE: u32 = 512;
+
+fn chunk(rng: &mut u64, n: usize) -> Vec<(u32, u32)> {
+    (0..n)
+        .map(|_| {
+            let r = xorshift(rng);
+            (1 + (r as u32 % KEY_SPACE), (r >> 40) as u32 % 1000)
+        })
+        .collect()
+}
+
+/// Replay one class-phase through the batch API on `t` and through the
+/// single-op API on `reference`, asserting the *semantic payload* of
+/// every result matches (placement outcomes are substrate detail and
+/// excluded, as in `test_ops`).
+fn run_phase(t: &HiveTable, reference: &HiveTable, class: usize, pairs: &[(u32, u32)]) {
+    match class {
+        0 => {
+            let got = t.upsert_batch(pairs).unwrap();
+            for (&(k, v), (_, old)) in pairs.iter().zip(got) {
+                assert_eq!(old, reference.upsert(k, v).unwrap().1, "upsert old for key {k}");
+            }
+        }
+        1 => {
+            let got = t.insert_if_absent_batch(pairs).unwrap();
+            for (&(k, v), (_, existing)) in pairs.iter().zip(got) {
+                let want = reference.insert_if_absent(k, v).unwrap().1;
+                assert_eq!(existing, want, "if_absent existing for key {k}");
+            }
+        }
+        2 => {
+            let got = t.update_batch(pairs);
+            for (&(k, v), old) in pairs.iter().zip(got) {
+                assert_eq!(old, reference.update(k, v), "update old for key {k}");
+            }
+        }
+        3 => {
+            let items: Vec<(u32, u32, u32)> =
+                pairs.iter().map(|&(k, v)| (k, v % 7, v)).collect();
+            let got = t.cas_batch(&items);
+            for (&(k, e, n), res) in items.iter().zip(got) {
+                assert_eq!(res, reference.cas(k, e, n), "cas result for key {k}");
+            }
+        }
+        4 => {
+            let got = t.fetch_add_batch(pairs).unwrap();
+            for (&(k, d), (_, old)) in pairs.iter().zip(got) {
+                assert_eq!(old, reference.fetch_add(k, d).unwrap().1, "fetch_add old, key {k}");
+            }
+        }
+        5 => {
+            let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+            let got = t.delete_batch(&keys);
+            for (&k, hit) in keys.iter().zip(got) {
+                assert_eq!(hit, reference.delete(k), "delete hit for key {k}");
+            }
+        }
+        _ => {
+            let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+            let got = t.lookup_batch(&keys);
+            for (&k, v) in keys.iter().zip(got) {
+                assert_eq!(v, reference.lookup(k), "lookup value for key {k}");
+            }
+        }
+    }
+}
+
+/// The tentpole oracle: batched execution at depths {1, 4, 8} is
+/// op-for-op equivalent to the per-op path, under both layouts.
+#[test]
+fn bulk_matches_per_op_at_all_interleave_depths() {
+    for layout in layouts() {
+        for depth in [1usize, 4, 8] {
+            let mut rng = stream(base_seed(), 0x30 + depth as u64) ^ layout as u64;
+            let t = table_with(layout, depth);
+            let reference = table_with(layout, 1);
+            for phase in 0..28 {
+                let pairs = chunk(&mut rng, 96);
+                run_phase(&t, &reference, phase % 7, &pairs);
+            }
+            // Final contents must agree over the whole key universe.
+            let universe: Vec<u32> = (1..=KEY_SPACE).collect();
+            let got = t.lookup_batch(&universe);
+            for (&k, v) in universe.iter().zip(got) {
+                assert_eq!(v, reference.lookup(k), "final state diverged at key {k}");
+            }
+            assert_eq!(t.len(), reference.len(), "{layout:?} depth {depth}");
+        }
+    }
+}
+
+/// Heterogeneous windows: `execute_ops` groups classes identically at
+/// every depth, so depth-8 and depth-1 must return byte-identical typed
+/// results and states.
+#[test]
+fn execute_ops_is_depth_invariant() {
+    use hivehash::Op;
+    for layout in layouts() {
+        let mut rng = stream(base_seed(), 0x40) ^ layout as u64;
+        let deep = table_with(layout, 8);
+        let shallow = table_with(layout, 1);
+        for _window in 0..6 {
+            let ops: Vec<Op> = (0..200)
+                .map(|_| {
+                    let r = xorshift(&mut rng);
+                    let key = 1 + (r as u32 % KEY_SPACE);
+                    let value = (r >> 40) as u32 % 1000;
+                    match (r >> 32) % 5 {
+                        0 => Op::Upsert { key, value },
+                        1 => Op::Lookup { key },
+                        2 => Op::Delete { key },
+                        3 => Op::FetchAdd { key, delta: 1 + value % 9 },
+                        _ => Op::InsertIfAbsent { key, value },
+                    }
+                })
+                .collect();
+            let want = shallow.execute_ops(&ops).unwrap();
+            assert_eq!(deep.execute_ops(&ops).unwrap(), want);
+        }
+        assert_eq!(deep.len(), shallow.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched-driver accounting (satellite 1 + 2).
+// ---------------------------------------------------------------------------
+
+/// Bulk paths must report probe statistics (fig15's `lines_per_probe`
+/// for batched drivers) and one prefetch hint per op.
+#[test]
+fn batched_drivers_report_probe_and_prefetch_counters() {
+    for layout in layouts() {
+        let t = table_with(layout, 8);
+        let pairs: Vec<(u32, u32)> = (1..=200u32).map(|k| (k, k)).collect();
+        t.insert_batch(&pairs).unwrap();
+        let keys: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+        let before = t.stats();
+        t.lookup_batch(&keys);
+        let after = t.stats();
+        assert_eq!(after.prefetches - before.prefetches, 200, "one hint per batched op");
+        assert_eq!(after.probes - before.probes, 200, "every batched lookup records a probe");
+        let lines = (after.probe_lines - before.probe_lines) as f64
+            / (after.probes - before.probes) as f64;
+        assert!(lines >= 1.0, "{layout:?}: lines_per_probe must be reported, got {lines}");
+        // Deletes and RMWs feed the same counters now (satellite 1).
+        let before = t.stats();
+        t.delete_batch(&keys[..50]);
+        let adds: Vec<(u32, u32)> = keys[..50].iter().map(|&k| (k, 1)).collect();
+        t.fetch_add_batch(&adds).unwrap();
+        let after = t.stats();
+        assert!(after.probes - before.probes >= 100, "delete/rmw probes recorded");
+    }
+}
+
+/// Depth-1 vs depth-8 prefetch accounting is identical (exactly one
+/// hint per op regardless of horizon) — the scheduler never double-hints.
+#[test]
+fn prefetch_count_is_depth_invariant() {
+    for depth in [1usize, 4, 8] {
+        let t = table_with(Layout::PackedAos, depth);
+        let pairs: Vec<(u32, u32)> = (1..=64u32).map(|k| (k, k)).collect();
+        t.insert_batch(&pairs).unwrap();
+        assert_eq!(t.stats().prefetches, 64, "depth {depth}");
+    }
+}

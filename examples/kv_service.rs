@@ -13,14 +13,22 @@
 //!
 //! A native-backend pass runs afterwards as the throughput reference on
 //! the same workload (the substrate the paper's absolute numbers map to).
+//!
+//! `--net` runs the RESP wire demo instead: a real `net::NetServer` on
+//! loopback, a fleet of pipelined RESP clients hammering GET/SET/INCRBY
+//! over actual TCP sockets, and the per-connection serving counters the
+//! coordinator grew for it (see SERVING.md).
 
 use hivehash::backend::{Backend, NativeBackend, XlaBackend};
-use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hivehash::coordinator::{start_native, BatchPolicy, Coordinator, CoordinatorConfig};
+use hivehash::net::resp::{Frame, Parser};
+use hivehash::net::{NetConfig, NetServer};
 use hivehash::report::json::latency_obj;
 use hivehash::report::{drive_service_pipelined, mops};
 use hivehash::runtime::Runtime;
 use hivehash::workload::{self, Mix, Op};
 use hivehash::HiveConfig;
+use std::io::{Read, Write};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -198,7 +206,127 @@ fn run_counter_demo(workers: usize) {
     println!();
 }
 
+/// `--net`: the serving stack end to end — RESP over real loopback TCP.
+///
+/// Starts a native coordinator behind `net::NetServer`, then runs a
+/// small fleet of pipelined wire clients (window of 64 commands in
+/// flight each) speaking a 70/20/10 GET/SET/INCRBY mix. Every INCRBY
+/// lands on one shared counter key, so the final GET doubles as an
+/// exactness check across connections. Closes with the server's INFO
+/// text and the coordinator's per-connection serving counters.
+fn run_net_demo() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 50_000;
+    const WIRE_WINDOW: usize = 64;
+    const COUNTER_KEY: u32 = 0xC0FF_EE;
+    const KEYS: u32 = 1 << 14;
+
+    println!("=== Hive KV service: RESP wire demo (--net) ===\n");
+    let cfg = CoordinatorConfig { workers: 4, ..CoordinatorConfig::default() };
+    let (coord, h) = start_native(cfg, HiveConfig::for_capacity(1 << 16, 0.8)).unwrap();
+    let pairs: Vec<(u32, u32)> = (0..KEYS).map(|k| (k, k.wrapping_mul(3))).collect();
+    for chunk in pairs.chunks(4096) {
+        h.insert_batch(chunk).unwrap();
+    }
+    h.insert(COUNTER_KEY, 0).unwrap();
+    let server = NetServer::start(
+        NetConfig { pipeline_depth: WIRE_WINDOW, ..NetConfig::default() },
+        h.clone(),
+    )
+    .expect("bind loopback RESP server");
+    let addr = server.local_addr();
+    println!("serving RESP on {addr} ({CLIENTS} clients x {PER_CLIENT} commands, window {WIRE_WINDOW})\n");
+
+    let t0 = Instant::now();
+    let incrs: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut sock = std::net::TcpStream::connect(addr).expect("connect");
+                    sock.set_nodelay(true).unwrap();
+                    let mut parser = Parser::new();
+                    let mut rng = 0x5EED_u64.wrapping_add(c as u64);
+                    let mut wbuf = Vec::with_capacity(64 * WIRE_WINDOW);
+                    let mut rbuf = [0u8; 16 * 1024];
+                    let (mut sent, mut recvd, mut incrs) = (0usize, 0usize, 0usize);
+                    while recvd < PER_CLIENT {
+                        wbuf.clear();
+                        while sent < PER_CLIENT && sent - recvd < WIRE_WINDOW {
+                            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+                            let r = rng >> 16;
+                            let key = (r as u32 % KEYS).to_string();
+                            let frame = match r % 10 {
+                                0..=6 => Frame::command(&["GET", &key]),
+                                7..=8 => Frame::command(&[
+                                    "SET",
+                                    &key,
+                                    &((r >> 24) as u32 % 1000).to_string(),
+                                ]),
+                                _ => {
+                                    incrs += 1;
+                                    Frame::command(&["INCRBY", &COUNTER_KEY.to_string(), "1"])
+                                }
+                            };
+                            frame.encode_into(&mut wbuf);
+                            sent += 1;
+                        }
+                        if !wbuf.is_empty() {
+                            sock.write_all(&wbuf).expect("write commands");
+                        }
+                        loop {
+                            match parser.try_next().expect("well-formed reply") {
+                                Some(Frame::Error(e)) => panic!("server error: {e}"),
+                                Some(_) => {
+                                    recvd += 1;
+                                    if recvd == sent || sent - recvd < WIRE_WINDOW {
+                                        break;
+                                    }
+                                }
+                                None => {
+                                    let n = sock.read(&mut rbuf).expect("read replies");
+                                    assert!(n > 0, "server closed mid-demo");
+                                    parser.feed(&rbuf[..n]);
+                                }
+                            }
+                        }
+                    }
+                    incrs
+                })
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().expect("wire client")).sum()
+    });
+    let elapsed = t0.elapsed();
+
+    // exactness across connections: the shared counter saw every INCRBY
+    let counter = h.lookup(COUNTER_KEY).unwrap();
+    assert_eq!(
+        counter,
+        Some(incrs as u32),
+        "shared wire counter lost updates"
+    );
+
+    let total = CLIENTS * PER_CLIENT;
+    let stats = server.stats();
+    println!("--- wire fleet ---");
+    println!("  commands     : {total} over {CLIENTS} connections");
+    println!("  wall time    : {:.2} s", elapsed.as_secs_f64());
+    println!("  throughput   : {:.0} req/s", total as f64 / elapsed.as_secs_f64());
+    println!("  shared ctr   : {} INCRBYs, exact across connections", incrs);
+    println!(
+        "  cmd latency  : {}",
+        latency_obj(&stats.net_cmd_latency_ns).render()
+    );
+    println!("  serving stats: {}", stats.summary());
+    server.shutdown();
+    coord.shutdown();
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--net") {
+        run_net_demo();
+        return;
+    }
     println!("=== Hive KV service: end-to-end driver ===\n");
     let ops = workload::mixed(TOTAL_OPS, Mix::PAPER_IMBALANCED, 4242);
     println!(

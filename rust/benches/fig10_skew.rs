@@ -6,7 +6,9 @@
 //! coordinator with the per-worker hot-key cache on and off, plus the
 //! `ShardedStd` baseline through the batched driver, emitting
 //! `bench_out/fig10_skew.json` rows
-//! `{theta, system, cached, mops, hit_rate}`. A final hot-set-shift run
+//! `{theta, system, cached, mops, hit_rate}` plus one
+//! `kind=shard_breakdown` row per θ quantifying how unevenly the bulk
+//! sub-batch scatter lands across shards. A final hot-set-shift run
 //! at θ = 0.99 shows the CLOCK cache re-converging after the popular
 //! head moves.
 //!
@@ -18,7 +20,7 @@
 use hivehash::backend::{Backend, NativeBackend};
 use hivehash::baselines::{ConcurrentMap, ShardedStd};
 use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
-use hivehash::report::json::{obj, save_figure, JsonVal};
+use hivehash::report::json::{obj, save_figure, shard_breakdown, JsonVal};
 use hivehash::report::{
     bench_batch, bench_max_pow, bench_threads, drive_parallel_batched, mops, Table,
 };
@@ -40,14 +42,15 @@ fn skew_row(theta: f64, system: &str, cached: bool, mops: f64, hit_rate: f64) ->
 }
 
 /// Drive `ops` through a coordinator (pre-populated with the stream's
-/// churn universe), returning (MOPS, cache hit rate).
+/// churn universe), returning (MOPS, cache hit rate, per-shard stats —
+/// the bulk sub-batch scatter's actual load split).
 fn run_coordinator(
     ops: &[Op],
     universe: &[u32],
     workers: usize,
     window: usize,
     cache_capacity: usize,
-) -> (f64, f64) {
+) -> (f64, f64, Vec<hivehash::coordinator::ServiceStats>) {
     let shard_cap = (universe.len() / workers).max(1024) * 2;
     let cfg = CoordinatorConfig {
         workers,
@@ -72,8 +75,9 @@ fn run_coordinator(
     }
     let dur = t0.elapsed();
     let stats = h.stats().unwrap();
+    let per_shard = h.stats_per_shard().unwrap();
     coord.shutdown();
-    (mops(ops.len(), dur), stats.cache_hit_rate())
+    (mops(ops.len(), dur), stats.cache_hit_rate(), per_shard)
 }
 
 fn main() {
@@ -95,8 +99,8 @@ fn main() {
         let ops = workload::zipf_mixed(n, Mix::READ_HEAVY, theta, SEED);
         let universe = workload::zipf_mixed_universe(n, SEED);
 
-        let (mops_on, hit_rate) = run_coordinator(&ops, &universe, workers, window, 8192);
-        let (mops_off, _) = run_coordinator(&ops, &universe, workers, window, 0);
+        let (mops_on, hit_rate, per_shard) = run_coordinator(&ops, &universe, workers, window, 8192);
+        let (mops_off, _, _) = run_coordinator(&ops, &universe, workers, window, 0);
         if theta >= 0.8 {
             assert!(
                 hit_rate > 0.0,
@@ -116,6 +120,14 @@ fn main() {
         rows.push(skew_row(theta, "hive-coord", true, mops_on, hit_rate));
         rows.push(skew_row(theta, "hive-coord", false, mops_off, 0.0));
         rows.push(skew_row(theta, "ShardedStd", false, std_mops, 0.0));
+        // the scatter's per-shard load split: how unevenly this θ's
+        // Zipf head lands across the sub-batch scatter
+        rows.push(obj(vec![
+            ("theta", theta.into()),
+            ("system", "hive-coord".into()),
+            ("kind", "shard_breakdown".into()),
+            ("breakdown", shard_breakdown(&per_shard)),
+        ]));
         table.row(vec![
             format!("{theta}"),
             format!("{mops_on:.2}"),
@@ -130,7 +142,7 @@ fn main() {
     // after the popular head rotates
     let ops = workload::zipf_mixed_shift(n, Mix::READ_HEAVY, 0.99, 4, SEED);
     let universe = workload::zipf_mixed_universe(n, SEED);
-    let (mops_shift, hit_shift) = run_coordinator(&ops, &universe, workers, window, 8192);
+    let (mops_shift, hit_shift, _) = run_coordinator(&ops, &universe, workers, window, 8192);
     assert!(hit_shift > 0.0, "hot-set shift starved the cache entirely");
     rows.push(skew_row(0.99, "hive-coord-shift", true, mops_shift, hit_shift));
     table.row(vec![

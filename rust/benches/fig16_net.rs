@@ -1,0 +1,252 @@
+//! Figure 16 (beyond the paper) — the RESP network front door.
+//!
+//! Drives a loopback client fleet against `net::NetServer` across
+//! connection counts {1, 8, 64, 256} ({1, 8, 64} at smoke scale), each
+//! count in two modes:
+//!
+//! * **closed** — one command in flight per connection (the classic
+//!   request/response client);
+//! * **pipelined** — a sliding window of 128 commands in flight per
+//!   connection, the wire image of the PR-4 fig11 pipelined clients.
+//!
+//! Each client speaks real RESP over a real TCP socket: a 70/20/10
+//! GET/SET/INCRBY mix over a 64K keyspace, per-command latency
+//! measured client-side (encode → reply frame parsed). Emits
+//! `bench_out/fig16_net.json` rows
+//! `{connections, mode, system, reqs_per_s, p50_ns, p99_ns, p999_ns}`,
+//! plus `mode=direct` in-process reference rows (the same ops through
+//! `drive_service_pipelined`, no sockets) so the wire tax is visible.
+//!
+//! The run self-asserts the pipelining win the serving layer exists
+//! for: at 1 and 8 connections, pipelined throughput must be at least
+//! the closed-loop throughput — if pipelining ever loses to one op in
+//! flight at low concurrency, the reply path is serializing.
+//!
+//! Run: `cargo bench --bench fig16_net`
+
+use hivehash::coordinator::{start_native, CoordinatorConfig};
+use hivehash::core::histogram::Histogram;
+use hivehash::net::resp::{Frame, Parser};
+use hivehash::net::{NetConfig, NetServer};
+use hivehash::report::json::{latency_obj, obj, save_figure, JsonVal};
+use hivehash::report::{bench_batch, bench_threads, drive_service_pipelined, mops, Table};
+use hivehash::workload::Op;
+use hivehash::HiveConfig;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 0x16_2026;
+const KEY_SPACE: u32 = 1 << 16;
+const PIPE_WINDOW: usize = 128;
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One wire command from the 70/20/10 GET/SET/INCRBY mix.
+fn gen_cmd(rng: &mut u64, out: &mut Vec<u8>) {
+    let r = splitmix(rng);
+    let key = (r as u32 % KEY_SPACE).to_string();
+    let frame = match r % 10 {
+        0..=6 => Frame::command(&["GET", &key]),
+        7..=8 => Frame::command(&["SET", &key, &((r >> 32) as u32 % 1_000_000).to_string()]),
+        _ => Frame::command(&["INCRBY", &key, "1"]),
+    };
+    frame.encode_into(out);
+}
+
+/// One client connection driving `total` commands with a sliding
+/// window of `window` in flight. Returns its latency histogram.
+fn client(addr: SocketAddr, total: usize, window: usize, seed: u64) -> Histogram {
+    let mut sock = TcpStream::connect(addr).expect("connect to loopback server");
+    sock.set_nodelay(true).unwrap();
+    let mut parser = Parser::new();
+    let mut hist = Histogram::new();
+    let mut outstanding: VecDeque<Instant> = VecDeque::with_capacity(window);
+    let mut rng = seed;
+    let mut wbuf: Vec<u8> = Vec::with_capacity(64 * window);
+    let mut rbuf = [0u8; 16 * 1024];
+    let (mut sent, mut recvd) = (0usize, 0usize);
+    while recvd < total {
+        // top the window up, then flush in one write
+        wbuf.clear();
+        while sent < total && outstanding.len() < window {
+            gen_cmd(&mut rng, &mut wbuf);
+            outstanding.push_back(Instant::now());
+            sent += 1;
+        }
+        if !wbuf.is_empty() {
+            sock.write_all(&wbuf).expect("write commands");
+        }
+        // drain replies until the window has room (or we are done)
+        loop {
+            match parser.try_next().expect("well-formed server reply") {
+                Some(Frame::Error(e)) => panic!("server error reply: {e}"),
+                Some(_) => {
+                    let t0 = outstanding.pop_front().expect("reply without a command");
+                    hist.record(t0.elapsed().as_nanos() as u64);
+                    recvd += 1;
+                    if recvd == total || (sent < total && outstanding.len() < window) {
+                        break;
+                    }
+                }
+                None => {
+                    let n = sock.read(&mut rbuf).expect("read replies");
+                    assert!(n > 0, "server closed mid-run with {recvd}/{total} replies");
+                    parser.feed(&rbuf[..n]);
+                }
+            }
+        }
+    }
+    hist
+}
+
+/// Drive `conns` connections × `per_conn` commands; returns (reqs/s,
+/// merged latency histogram).
+fn run_fleet(addr: SocketAddr, conns: usize, per_conn: usize, window: usize) -> (f64, Histogram) {
+    let t0 = Instant::now();
+    let hists: Vec<Histogram> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| s.spawn(move || client(addr, per_conn, window, SEED ^ ((c as u64) << 17))))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let dur = t0.elapsed();
+    let mut merged = Histogram::new();
+    for h in &hists {
+        merged.merge(h);
+    }
+    ((conns * per_conn) as f64 / dur.as_secs_f64(), merged)
+}
+
+fn net_row(conns: usize, mode: &str, reqs: f64, hist: &Histogram) -> JsonVal {
+    obj(vec![
+        ("connections", conns.into()),
+        ("mode", mode.into()),
+        ("system", "hive-net".into()),
+        ("reqs_per_s", reqs.into()),
+        ("p50_ns", hist.quantile(0.50).into()),
+        ("p99_ns", hist.quantile(0.99).into()),
+        ("p999_ns", hist.quantile(0.999).into()),
+        ("latency", latency_obj(hist)),
+    ])
+}
+
+fn main() {
+    let threads = bench_threads();
+    let batch = bench_batch();
+    // scale tiers mirror bench_max_pow: smoke < small (default) < paper
+    let (conn_counts, closed_total, piped_total): (&[usize], usize, usize) =
+        match std::env::var("HIVE_BENCH_SCALE").as_deref() {
+            Ok("smoke") => (&[1, 8, 64], 8_000, 40_000),
+            Ok("paper") => (&[1, 8, 64, 256], 40_000, 400_000),
+            _ => (&[1, 8, 64, 256], 20_000, 100_000),
+        };
+
+    let workers = threads.clamp(2, 8);
+    let cfg = CoordinatorConfig { workers, ..CoordinatorConfig::default() };
+    let (coord, h) = start_native(cfg, HiveConfig::for_capacity(1 << 18, 0.8)).unwrap();
+    // pre-populate the keyspace so GETs hit
+    let pairs: Vec<(u32, u32)> = (0..KEY_SPACE).map(|k| (k, k ^ 0x5A5A)).collect();
+    for chunk in pairs.chunks(4096) {
+        h.insert_batch(chunk).unwrap();
+    }
+    let server = NetServer::start(
+        NetConfig { pipeline_depth: PIPE_WINDOW, ..NetConfig::default() },
+        h.clone(),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut table = Table::new(
+        &format!(
+            "Fig. 16 — RESP wire plane on loopback, {workers} workers, \
+             pipeline window {PIPE_WINDOW}, GET/SET/INCRBY 70/20/10"
+        ),
+        &["conns", "closed req/s", "piped req/s", "pipelining-x", "piped p99 µs"],
+    );
+    let mut rows: Vec<JsonVal> = Vec::new();
+
+    for &conns in conn_counts {
+        let (closed_rps, closed_hist) =
+            run_fleet(addr, conns, (closed_total / conns).max(100), 1);
+        let (piped_rps, piped_hist) =
+            run_fleet(addr, conns, (piped_total / conns).max(500), PIPE_WINDOW);
+        rows.push(net_row(conns, "closed", closed_rps, &closed_hist));
+        rows.push(net_row(conns, "pipelined", piped_rps, &piped_hist));
+        table.row(vec![
+            format!("{conns}"),
+            format!("{closed_rps:.0}"),
+            format!("{piped_rps:.0}"),
+            format!("{:.1}x", piped_rps / closed_rps),
+            format!("{:.1}", piped_hist.quantile(0.99) as f64 / 1_000.0),
+        ]);
+        if conns <= 8 {
+            assert!(
+                piped_rps >= closed_rps,
+                "pipelined ({piped_rps:.0} req/s) lost to closed-loop \
+                 ({closed_rps:.0} req/s) at {conns} connections — the reply \
+                 path is serializing the in-flight window"
+            );
+        }
+    }
+
+    // in-process reference: the same pipelined shape minus the wire
+    let mut rng = SEED;
+    let direct_ops: Vec<Op> = (0..piped_total)
+        .map(|_| {
+            let r = splitmix(&mut rng);
+            let key = r as u32 % KEY_SPACE;
+            match r % 10 {
+                0..=6 => Op::Lookup { key },
+                7..=8 => Op::Upsert { key, value: (r >> 32) as u32 % 1_000_000 },
+                _ => Op::FetchAdd { key, delta: 1 },
+            }
+        })
+        .collect();
+    let direct_dur = drive_service_pipelined(&h, &direct_ops, 8.min(threads), PIPE_WINDOW);
+    let direct_rps = direct_ops.len() as f64 / direct_dur.as_secs_f64();
+    let direct_stats = h.stats().unwrap();
+    rows.push(obj(vec![
+        ("connections", 8usize.into()),
+        ("mode", "direct".into()),
+        ("system", "hive-coord".into()),
+        ("reqs_per_s", direct_rps.into()),
+        ("p50_ns", direct_stats.latency_ns.quantile(0.50).into()),
+        ("p99_ns", direct_stats.latency_ns.quantile(0.99).into()),
+        ("p999_ns", direct_stats.latency_ns.quantile(0.999).into()),
+    ]));
+    table.row(vec![
+        "8 (direct)".into(),
+        "-".into(),
+        format!("{direct_rps:.0}"),
+        format!("{:.2} MOPS", mops(direct_ops.len(), direct_dur)),
+        format!(
+            "{:.1}",
+            direct_stats.latency_ns.quantile(0.99) as f64 / 1_000.0
+        ),
+    ]);
+
+    let net = server.stats();
+    println!("wire plane: {}", net.summary());
+    assert_eq!(
+        net.net_protocol_errors, 0,
+        "the bench speaks clean RESP; any protocol error is a parser bug"
+    );
+    server.shutdown();
+    coord.shutdown();
+
+    table.emit(Some("bench_out/fig16_net.csv"));
+    save_figure("fig16_net", threads, batch, rows);
+    println!(
+        "expected shape: pipelining-x grows as connections shrink (closed loop \
+         pays the batch deadline per command); the direct row is the no-socket \
+         ceiling for the same op mix"
+    );
+}

@@ -4,6 +4,11 @@
 //! Architecture (sharded pipelined request plane, thread-based):
 //!
 //! ```text
+//!   RESP clients (TCP)        ┌ net::NetServer — the network front door
+//!   ──────────────            │ acceptor + per-connection reader/writer
+//!   GET/SET/INCRBY/CAS/... ──►│ threads; each connection multiplexes its
+//!   pipelined on one socket   │ pipelined commands onto one Pipeline
+//!                             └──────────────┐ (see SERVING.md)
 //!   client threads            Handle (clone-able, thread-safe)
 //!   ──────────────            route(key): partition_of(key) ──┐
 //!   Pipeline: window of N     │                               │
@@ -75,7 +80,10 @@
 //! requests are drained with [`crate::core::error::HiveError::Shutdown`],
 //! in-flight tickets complete with the same error, and so do pending
 //! reshards and forwarded requests whose target ring died (see
-//! `tests/test_service.rs` and `tests/test_migration.rs`).
+//! `tests/test_service.rs` and `tests/test_migration.rs`). The network
+//! front door ([`crate::net`]) inherits the same contract over the
+//! wire: every connected RESP client gets a reply, a `-SHUTDOWN`
+//! error, or a clean close in bounded time (`tests/test_net.rs`).
 
 pub mod batcher;
 pub mod cache;

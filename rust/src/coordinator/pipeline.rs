@@ -184,6 +184,44 @@ impl Ticket {
             st = self.window.completed.wait(st).unwrap();
         }
     }
+
+    /// Like [`Ticket::wait`], but give up at `deadline`: the ticket is
+    /// handed back unclaimed (the op stays in flight; wait again or
+    /// drop it). This is the bounded wait the network front door's
+    /// drain path runs under — every shutdown-era wait must carry a
+    /// deadline so no server thread can hang on a slow completion.
+    pub fn wait_deadline(
+        mut self,
+        deadline: Instant,
+    ) -> std::result::Result<Result<OpResult>, Ticket> {
+        let mut st = self.window.state.lock().unwrap();
+        loop {
+            if st.slots[self.idx].seq != self.seq {
+                self.claimed = true;
+                return Ok(Err(HiveError::Shutdown));
+            }
+            let taken = std::mem::replace(&mut st.slots[self.idx].state, SlotState::Free);
+            match taken {
+                SlotState::Done(res) => {
+                    st.free.push(self.idx);
+                    st.inflight -= 1;
+                    self.claimed = true;
+                    drop(st);
+                    self.window.vacated.notify_one();
+                    return Ok(res);
+                }
+                other => st.slots[self.idx].state = other,
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                return Err(self);
+            }
+            let (guard, _timed_out) =
+                self.window.completed.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
 }
 
 impl Drop for Ticket {
@@ -596,6 +634,21 @@ mod tests {
             Ok(res) => assert_eq!(res.unwrap(), OpResult::Deleted(true)),
             Err(_) => panic!("done ticket not claimable"),
         }
+    }
+
+    #[test]
+    fn wait_deadline_hands_the_ticket_back_then_claims() {
+        let (ticket, done) = one_shot();
+        let ticket = match ticket.wait_deadline(Instant::now() + Duration::from_millis(10)) {
+            Err(t) => t,
+            Ok(_) => panic!("deadline wait claimed an unpublished result"),
+        };
+        let t = std::thread::spawn(move || done.complete(Ok(OpResult::Value(Some(3)))));
+        let res = ticket
+            .wait_deadline(Instant::now() + Duration::from_secs(5))
+            .expect("published result must be claimable before the deadline");
+        assert_eq!(res.unwrap(), OpResult::Value(Some(3)));
+        t.join().unwrap();
     }
 
     #[test]

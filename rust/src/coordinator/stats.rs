@@ -47,6 +47,23 @@ pub struct ServiceStats {
     pub moves_completed: u64,
     pub keys_migrated: u64,
     pub moving_ops: u64,
+    /// Wire-plane (network front door) accounting, populated by
+    /// `net::NetServer` and zero for in-process use: connections
+    /// accepted over the server's lifetime, connections turned away at
+    /// the `max_connections` cap, connections live right now (a gauge,
+    /// not a counter), bytes read from / written to sockets, RESP
+    /// commands decoded, and malformed frames that closed a connection.
+    pub net_connections_opened: u64,
+    pub net_connections_rejected: u64,
+    pub net_connections_active: u64,
+    pub net_bytes_in: u64,
+    pub net_bytes_out: u64,
+    pub net_commands: u64,
+    pub net_protocol_errors: u64,
+    /// Per-command wire latency in nanoseconds (command submitted →
+    /// reply rendered: ticket waits plus reply folding, excluding
+    /// socket transmission).
+    pub net_cmd_latency_ns: Histogram,
     /// Per-op latency in nanoseconds (request → completion: queue delay
     /// plus service time), recorded for the single-op *and* bulk paths.
     pub latency_ns: Histogram,
@@ -121,6 +138,14 @@ impl ServiceStats {
         self.moves_completed += other.moves_completed;
         self.keys_migrated += other.keys_migrated;
         self.moving_ops += other.moving_ops;
+        self.net_connections_opened += other.net_connections_opened;
+        self.net_connections_rejected += other.net_connections_rejected;
+        self.net_connections_active += other.net_connections_active;
+        self.net_bytes_in += other.net_bytes_in;
+        self.net_bytes_out += other.net_bytes_out;
+        self.net_commands += other.net_commands;
+        self.net_protocol_errors += other.net_protocol_errors;
+        self.net_cmd_latency_ns.merge(&other.net_cmd_latency_ns);
         self.latency_ns.merge(&other.latency_ns);
         self.queue_delay_ns.merge(&other.queue_delay_ns);
         self.inflight_depth.merge(&other.inflight_depth);
@@ -145,7 +170,7 @@ impl ServiceStats {
 
     /// Human summary line.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "ops={} batches={} mean_batch={:.1} inserted={} replaced={} evicted={} stashed={} deleted={} rmw[upd={} cas={}/{} fadd={}] grows={} shrinks={} cache[hit={} miss={} rate={:.2} inv={} flush={}] shard[fwd={} moves={}/{} keys={} moving_ops={}] latency[{}] queue[{}] depth[mean={:.1} max={}]",
             self.ops,
             self.batches,
@@ -175,7 +200,22 @@ impl ServiceStats {
             self.queue_delay_ns.summary(),
             self.inflight_depth.mean(),
             self.inflight_depth.max(),
-        )
+        );
+        // the wire plane only appears once a NetServer populated it
+        if self.net_connections_opened > 0 || self.net_commands > 0 {
+            line.push_str(&format!(
+                " net[conns={}/{} rejected={} cmds={} in={}B out={}B proto_err={} cmd_lat[{}]]",
+                self.net_connections_active,
+                self.net_connections_opened,
+                self.net_connections_rejected,
+                self.net_commands,
+                self.net_bytes_in,
+                self.net_bytes_out,
+                self.net_protocol_errors,
+                self.net_cmd_latency_ns.summary(),
+            ));
+        }
+        line
     }
 }
 
@@ -270,6 +310,40 @@ mod tests {
         assert_eq!(a.moving_ops, 10);
         let line = a.summary();
         assert!(line.contains("shard[fwd=4 moves=3/3 keys=50 moving_ops=10]"), "{line}");
+    }
+
+    #[test]
+    fn net_counters_merge_and_surface_only_when_populated() {
+        let quiet = ServiceStats::default();
+        assert!(
+            !quiet.summary().contains("net["),
+            "in-process stats must not render an empty wire section"
+        );
+        let mut a = ServiceStats::default();
+        a.net_connections_opened = 4;
+        a.net_connections_active = 2;
+        a.net_bytes_in = 100;
+        a.net_bytes_out = 300;
+        a.net_commands = 50;
+        a.net_cmd_latency_ns.record(1_000);
+        let mut b = ServiceStats::default();
+        b.net_connections_opened = 1;
+        b.net_connections_rejected = 3;
+        b.net_bytes_in = 10;
+        b.net_commands = 5;
+        b.net_protocol_errors = 2;
+        b.net_cmd_latency_ns.record(9_000);
+        a.merge(&b);
+        assert_eq!(a.net_connections_opened, 5);
+        assert_eq!(a.net_connections_rejected, 3);
+        assert_eq!(a.net_connections_active, 2);
+        assert_eq!(a.net_bytes_in, 110);
+        assert_eq!(a.net_bytes_out, 300);
+        assert_eq!(a.net_commands, 55);
+        assert_eq!(a.net_protocol_errors, 2);
+        assert_eq!(a.net_cmd_latency_ns.count(), 2);
+        let line = a.summary();
+        assert!(line.contains("net[conns=2/5 rejected=3 cmds=55"), "{line}");
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //!   yields exactly one [`workload::OpResult`] in submission order
 //!   through direct table calls, `ConcurrentMap` batches,
 //!   `Backend::execute`, and the coordinator's `Handle`/`Pipeline`.
+//!   In front of the plane sits a **network front door** ([`net`]): a
+//!   RESP2-compatible TCP server (std-only — bounded acceptor,
+//!   per-connection reader/writer threads) that maps `GET`/`SET`/
+//!   `SETNX`/`DEL`/`INCRBY`/`CAS`/`MGET`/`MSET` onto the same typed
+//!   ops, multiplexing each connection's pipelined commands onto a
+//!   bounded-depth `Pipeline` window, so any RESP client (redis-cli,
+//!   memtier) drives the table over a real socket (see `SERVING.md`).
 //! * **Layer 2 (python/compile/model.py)** — JAX bulk formulations of the
 //!   table operations, AOT-lowered to HLO artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the probe /
@@ -108,6 +115,7 @@ pub mod baselines;
 pub mod runtime;
 pub mod backend;
 pub mod coordinator;
+pub mod net;
 pub mod workload;
 pub mod report;
 pub mod testutil;

@@ -1,0 +1,439 @@
+//! Command decode and reply rendering: RESP frames ⇄ the typed
+//! `Op`/`OpResult` plane.
+//!
+//! Keys and values travel the wire as decimal `u32` strings (the table
+//! stores 32-bit pairs; anything non-numeric or ≥ [`EMPTY_KEY`] is an
+//! immediate `-ERR` without touching the table). Each command maps to
+//! zero or more [`Op`]s:
+//!
+//! | command                | ops                      | reply |
+//! |------------------------|--------------------------|-------|
+//! | `GET k`                | `Lookup`                 | bulk value or nil |
+//! | `SET k v`              | `Upsert`                 | `+OK` |
+//! | `SETNX k v`            | `InsertIfAbsent`         | `:1` inserted / `:0` exists |
+//! | `DEL k [k ...]`        | one `Delete` per key     | `:removed` |
+//! | `INCRBY k n` / `INCR k`| `FetchAdd` (wrapping u32)| `:new_value` |
+//! | `CAS k expected new`   | `Cas`                    | `:1` swapped / `:0` actual differs |
+//! | `MGET k [k ...]`       | one `Lookup` per key     | array of bulk/nil |
+//! | `MSET k v [k v ...]`   | one `Upsert` per pair    | `+OK` |
+//! | `PING [msg]`           | —                        | `+PONG` / bulk echo |
+//! | `INFO`                 | — (control-plane stats)  | bulk info text |
+//!
+//! Multi-key commands submit all their ops into the connection's
+//! pipeline window and fold the completed results into one reply, so a
+//! 100-key `MGET` enjoys the same in-flight overlap as 100 pipelined
+//! `GET`s.
+
+use crate::core::error::HiveError;
+use crate::core::packed::EMPTY_KEY;
+use crate::net::resp::Frame;
+use crate::workload::{Op, OpResult};
+
+/// One decoded client command.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    Get { key: u32 },
+    Set { key: u32, value: u32 },
+    SetNx { key: u32, value: u32 },
+    Del { keys: Vec<u32> },
+    IncrBy { key: u32, delta: u32 },
+    Cas { key: u32, expected: u32, new: u32 },
+    MGet { keys: Vec<u32> },
+    MSet { pairs: Vec<(u32, u32)> },
+    Ping { msg: Option<Vec<u8>> },
+    Info,
+    /// `COMMAND` handshake probe (redis-cli sends it on connect);
+    /// answered with an empty array.
+    CommandProbe,
+    Quit,
+}
+
+/// How a command's completed op results fold into one RESP reply.
+/// Carried beside the submitted tickets; consumed by the writer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplyShape {
+    Get,
+    Set,
+    SetNx,
+    Del,
+    /// Reply is the post-add value, reconstructed from the returned
+    /// previous value plus this delta.
+    IncrBy { delta: u32 },
+    Cas,
+    MGet,
+    MSet,
+}
+
+fn ascii_upper(name: &[u8]) -> String {
+    name.iter().map(|b| (*b as char).to_ascii_uppercase()).collect()
+}
+
+fn wrong_arity(cmd: &str) -> String {
+    format!("ERR wrong number of arguments for '{}' command", cmd.to_ascii_lowercase())
+}
+
+/// Parse one decimal u32 wire argument (key or value). `EMPTY_KEY`
+/// (`u32::MAX`) is reserved by the table and rejected here so one bad
+/// key cannot poison a shared dispatch window.
+fn parse_u32(arg: &[u8], what: &str) -> Result<u32, String> {
+    std::str::from_utf8(arg)
+        .ok()
+        .and_then(|s| s.parse::<u32>().ok())
+        .filter(|&v| !(what == "key" && v == EMPTY_KEY))
+        .ok_or_else(|| format!("ERR {what} is not a valid integer ({what}s are decimal u32)"))
+}
+
+fn parse_key(arg: &[u8]) -> Result<u32, String> {
+    parse_u32(arg, "key")
+}
+
+fn parse_value(arg: &[u8]) -> Result<u32, String> {
+    parse_u32(arg, "value")
+}
+
+/// `INCRBY` deltas are signed on the wire (redis semantics); the table
+/// adds mod 2³² so a negative delta is its two's-complement image.
+fn parse_delta(arg: &[u8]) -> Result<u32, String> {
+    std::str::from_utf8(arg)
+        .ok()
+        .and_then(|s| s.parse::<i64>().ok())
+        .filter(|d| (-(u32::MAX as i64)..=u32::MAX as i64).contains(d))
+        .map(|d| d as u32)
+        .ok_or_else(|| "ERR value is not an integer or out of range".to_string())
+}
+
+impl Command {
+    /// Decode a parsed RESP frame into a command, or an error-reply
+    /// text (without the leading `-`).
+    pub fn parse(frame: &Frame) -> Result<Command, String> {
+        let Frame::Array(items) = frame else {
+            return Err("ERR Protocol error: expected command array".into());
+        };
+        let mut args: Vec<&[u8]> = Vec::with_capacity(items.len());
+        for item in items {
+            match item {
+                Frame::Bulk(b) => args.push(b),
+                _ => return Err("ERR Protocol error: expected bulk string argument".into()),
+            }
+        }
+        let Some((name, rest)) = args.split_first() else {
+            return Err("ERR Protocol error: empty command".into());
+        };
+        let name = ascii_upper(name);
+        match (name.as_str(), rest.len()) {
+            ("GET", 1) => Ok(Command::Get { key: parse_key(rest[0])? }),
+            ("SET", 2) => {
+                Ok(Command::Set { key: parse_key(rest[0])?, value: parse_value(rest[1])? })
+            }
+            ("SETNX", 2) => {
+                Ok(Command::SetNx { key: parse_key(rest[0])?, value: parse_value(rest[1])? })
+            }
+            ("DEL", n) if n >= 1 => Ok(Command::Del {
+                keys: rest.iter().map(|a| parse_key(a)).collect::<Result<_, _>>()?,
+            }),
+            ("INCRBY", 2) => {
+                Ok(Command::IncrBy { key: parse_key(rest[0])?, delta: parse_delta(rest[1])? })
+            }
+            ("INCR", 1) => Ok(Command::IncrBy { key: parse_key(rest[0])?, delta: 1 }),
+            ("DECR", 1) => Ok(Command::IncrBy { key: parse_key(rest[0])?, delta: 1u32.wrapping_neg() }),
+            ("CAS", 3) => Ok(Command::Cas {
+                key: parse_key(rest[0])?,
+                expected: parse_value(rest[1])?,
+                new: parse_value(rest[2])?,
+            }),
+            ("MGET", n) if n >= 1 => Ok(Command::MGet {
+                keys: rest.iter().map(|a| parse_key(a)).collect::<Result<_, _>>()?,
+            }),
+            ("MSET", n) if n >= 2 && n % 2 == 0 => Ok(Command::MSet {
+                pairs: rest
+                    .chunks(2)
+                    .map(|p| Ok((parse_key(p[0])?, parse_value(p[1])?)))
+                    .collect::<Result<_, String>>()?,
+            }),
+            ("PING", 0) => Ok(Command::Ping { msg: None }),
+            ("PING", 1) => Ok(Command::Ping { msg: Some(rest[0].to_vec()) }),
+            ("INFO", _) => Ok(Command::Info),
+            ("COMMAND", _) => Ok(Command::CommandProbe),
+            ("QUIT", 0) => Ok(Command::Quit),
+            ("GET" | "SET" | "SETNX" | "DEL" | "INCRBY" | "INCR" | "DECR" | "CAS" | "MGET"
+            | "MSET" | "PING" | "QUIT", _) => Err(wrong_arity(&name)),
+            _ => Err(format!("ERR unknown command '{name}'")),
+        }
+    }
+
+    /// The typed ops this command submits, plus the reply fold. `None`
+    /// for control commands (`PING`/`INFO`/`COMMAND`/`QUIT`) answered
+    /// without touching the data plane.
+    pub fn to_ops(&self) -> Option<(Vec<Op>, ReplyShape)> {
+        match self {
+            Command::Get { key } => Some((vec![Op::Lookup { key: *key }], ReplyShape::Get)),
+            Command::Set { key, value } => {
+                Some((vec![Op::Upsert { key: *key, value: *value }], ReplyShape::Set))
+            }
+            Command::SetNx { key, value } => Some((
+                vec![Op::InsertIfAbsent { key: *key, value: *value }],
+                ReplyShape::SetNx,
+            )),
+            Command::Del { keys } => Some((
+                keys.iter().map(|&key| Op::Delete { key }).collect(),
+                ReplyShape::Del,
+            )),
+            Command::IncrBy { key, delta } => Some((
+                vec![Op::FetchAdd { key: *key, delta: *delta }],
+                ReplyShape::IncrBy { delta: *delta },
+            )),
+            Command::Cas { key, expected, new } => Some((
+                vec![Op::Cas { key: *key, expected: *expected, new: *new }],
+                ReplyShape::Cas,
+            )),
+            Command::MGet { keys } => Some((
+                keys.iter().map(|&key| Op::Lookup { key }).collect(),
+                ReplyShape::MGet,
+            )),
+            Command::MSet { pairs } => Some((
+                pairs.iter().map(|&(key, value)| Op::Upsert { key, value }).collect(),
+                ReplyShape::MSet,
+            )),
+            Command::Ping { .. } | Command::Info | Command::CommandProbe | Command::Quit => None,
+        }
+    }
+
+    /// Keys this command touches — the reader serializes same-key
+    /// pipelined commands on these (read-your-write per connection).
+    pub fn keys(&self) -> Vec<u32> {
+        match self {
+            Command::Get { key }
+            | Command::Set { key, .. }
+            | Command::SetNx { key, .. }
+            | Command::IncrBy { key, .. }
+            | Command::Cas { key, .. } => vec![*key],
+            Command::Del { keys } | Command::MGet { keys } => keys.clone(),
+            Command::MSet { pairs } => pairs.iter().map(|&(k, _)| k).collect(),
+            Command::Ping { .. } | Command::Info | Command::CommandProbe | Command::Quit => {
+                Vec::new()
+            }
+        }
+    }
+}
+
+/// Map an op error to the RESP error text (sans leading `-`).
+fn error_reply(e: &HiveError) -> Frame {
+    match e {
+        HiveError::Shutdown => Frame::Error("SHUTDOWN server is shutting down".into()),
+        other => Frame::Error(format!("ERR {other}")),
+    }
+}
+
+fn bulk_u32(v: u32) -> Frame {
+    Frame::Bulk(v.to_string().into_bytes())
+}
+
+/// Fold a command's completed op results into its RESP reply.
+///
+/// Every result corresponds positionally to the ops from
+/// [`Command::to_ops`]. Any op error yields an error reply for the
+/// whole command (first error wins), matching the all-or-nothing shape
+/// of the typed plane's batch errors.
+pub fn render_reply(shape: &ReplyShape, results: &[crate::core::error::Result<OpResult>]) -> Frame {
+    if let Some(Err(e)) = results.iter().find(|r| r.is_err()) {
+        return error_reply(e);
+    }
+    let ok = |i: usize| results[i].as_ref().unwrap();
+    match shape {
+        ReplyShape::Get => match ok(0) {
+            OpResult::Value(Some(v)) => bulk_u32(*v),
+            OpResult::Value(None) => Frame::NullBulk,
+            other => unexpected(other),
+        },
+        ReplyShape::Set | ReplyShape::MSet => {
+            for r in results {
+                if !matches!(r.as_ref().unwrap(), OpResult::Upserted { .. }) {
+                    return unexpected(r.as_ref().unwrap());
+                }
+            }
+            Frame::Simple("OK".into())
+        }
+        ReplyShape::SetNx => match ok(0) {
+            OpResult::InsertedIfAbsent { existing: None, .. } => Frame::Int(1),
+            OpResult::InsertedIfAbsent { existing: Some(_), .. } => Frame::Int(0),
+            other => unexpected(other),
+        },
+        ReplyShape::Del => {
+            let mut removed = 0i64;
+            for r in results {
+                match r.as_ref().unwrap() {
+                    OpResult::Deleted(true) => removed += 1,
+                    OpResult::Deleted(false) => {}
+                    other => return unexpected(other),
+                }
+            }
+            Frame::Int(removed)
+        }
+        ReplyShape::IncrBy { delta } => match ok(0) {
+            // absent key: fetch_add creates it holding `delta`
+            OpResult::FetchAdded { old, .. } => {
+                Frame::Int(old.map_or(*delta, |o| o.wrapping_add(*delta)) as i64)
+            }
+            other => unexpected(other),
+        },
+        ReplyShape::Cas => match ok(0) {
+            OpResult::Cas { ok: true, .. } => Frame::Int(1),
+            OpResult::Cas { ok: false, .. } => Frame::Int(0),
+            other => unexpected(other),
+        },
+        ReplyShape::MGet => Frame::Array(
+            results
+                .iter()
+                .map(|r| match r.as_ref().unwrap() {
+                    OpResult::Value(Some(v)) => bulk_u32(*v),
+                    OpResult::Value(None) => Frame::NullBulk,
+                    other => unexpected(other),
+                })
+                .collect(),
+        ),
+    }
+}
+
+fn unexpected(r: &OpResult) -> Frame {
+    // Reaching this means the coordinator returned a result class that
+    // does not match the submitted op — surface it instead of lying.
+    Frame::Error(format!("ERR internal: unexpected result {r:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::table::InsertOutcome;
+
+    fn cmd(args: &[&str]) -> Result<Command, String> {
+        Command::parse(&Frame::command(args))
+    }
+
+    #[test]
+    fn parses_the_full_command_set() {
+        assert_eq!(cmd(&["get", "7"]).unwrap(), Command::Get { key: 7 });
+        assert_eq!(cmd(&["SET", "7", "9"]).unwrap(), Command::Set { key: 7, value: 9 });
+        assert_eq!(cmd(&["SeTnX", "1", "2"]).unwrap(), Command::SetNx { key: 1, value: 2 });
+        assert_eq!(cmd(&["DEL", "1", "2", "3"]).unwrap(), Command::Del { keys: vec![1, 2, 3] });
+        assert_eq!(cmd(&["INCRBY", "5", "10"]).unwrap(), Command::IncrBy { key: 5, delta: 10 });
+        assert_eq!(cmd(&["INCR", "5"]).unwrap(), Command::IncrBy { key: 5, delta: 1 });
+        assert_eq!(
+            cmd(&["DECR", "5"]).unwrap(),
+            Command::IncrBy { key: 5, delta: 1u32.wrapping_neg() }
+        );
+        assert_eq!(
+            cmd(&["INCRBY", "5", "-3"]).unwrap(),
+            Command::IncrBy { key: 5, delta: 3u32.wrapping_neg() }
+        );
+        assert_eq!(
+            cmd(&["CAS", "5", "1", "2"]).unwrap(),
+            Command::Cas { key: 5, expected: 1, new: 2 }
+        );
+        assert_eq!(cmd(&["MGET", "1", "2"]).unwrap(), Command::MGet { keys: vec![1, 2] });
+        assert_eq!(
+            cmd(&["MSET", "1", "10", "2", "20"]).unwrap(),
+            Command::MSet { pairs: vec![(1, 10), (2, 20)] }
+        );
+        assert_eq!(cmd(&["PING"]).unwrap(), Command::Ping { msg: None });
+        assert_eq!(
+            cmd(&["PING", "hi"]).unwrap(),
+            Command::Ping { msg: Some(b"hi".to_vec()) }
+        );
+        assert_eq!(cmd(&["INFO"]).unwrap(), Command::Info);
+        assert_eq!(cmd(&["QUIT"]).unwrap(), Command::Quit);
+    }
+
+    #[test]
+    fn rejects_bad_arity_unknown_names_and_bad_integers() {
+        assert!(cmd(&["GET"]).unwrap_err().contains("wrong number of arguments"));
+        assert!(cmd(&["SET", "1"]).unwrap_err().contains("wrong number of arguments"));
+        assert!(cmd(&["MSET", "1", "2", "3"]).unwrap_err().contains("wrong number"));
+        assert!(cmd(&["FLUSHALL"]).unwrap_err().contains("unknown command 'FLUSHALL'"));
+        assert!(cmd(&["GET", "abc"]).unwrap_err().contains("not a valid integer"));
+        assert!(cmd(&["SET", "1", "-2"]).unwrap_err().contains("not a valid integer"));
+        assert!(cmd(&["INCRBY", "1", "zzz"]).unwrap_err().contains("not an integer"));
+        // EMPTY_KEY is reserved by the table
+        assert!(cmd(&["GET", &EMPTY_KEY.to_string()]).is_err());
+        // non-array and non-bulk-arg frames are protocol errors
+        assert!(Command::parse(&Frame::Int(1)).unwrap_err().contains("Protocol error"));
+        assert!(Command::parse(&Frame::Array(vec![Frame::Int(1)]))
+            .unwrap_err()
+            .contains("Protocol error"));
+    }
+
+    #[test]
+    fn ops_mapping_matches_the_table() {
+        let (ops, shape) = cmd(&["DEL", "1", "2"]).unwrap().to_ops().unwrap();
+        assert_eq!(ops, vec![Op::Delete { key: 1 }, Op::Delete { key: 2 }]);
+        assert_eq!(shape, ReplyShape::Del);
+        let (ops, _) = cmd(&["MSET", "1", "10", "2", "20"]).unwrap().to_ops().unwrap();
+        assert_eq!(
+            ops,
+            vec![Op::Upsert { key: 1, value: 10 }, Op::Upsert { key: 2, value: 20 }]
+        );
+        assert!(cmd(&["PING"]).unwrap().to_ops().is_none());
+        assert_eq!(cmd(&["MSET", "1", "10", "2", "20"]).unwrap().keys(), vec![1, 2]);
+    }
+
+    #[test]
+    fn renders_replies_per_shape() {
+        let get = |r| render_reply(&ReplyShape::Get, &[Ok(r)]);
+        assert_eq!(get(OpResult::Value(Some(9))), Frame::Bulk(b"9".to_vec()));
+        assert_eq!(get(OpResult::Value(None)), Frame::NullBulk);
+        assert_eq!(
+            render_reply(
+                &ReplyShape::Set,
+                &[Ok(OpResult::Upserted { outcome: InsertOutcome::Inserted, old: None })]
+            ),
+            Frame::Simple("OK".into())
+        );
+        assert_eq!(
+            render_reply(
+                &ReplyShape::Del,
+                &[Ok(OpResult::Deleted(true)), Ok(OpResult::Deleted(false)), Ok(OpResult::Deleted(true))]
+            ),
+            Frame::Int(2)
+        );
+        assert_eq!(
+            render_reply(
+                &ReplyShape::IncrBy { delta: 5 },
+                &[Ok(OpResult::FetchAdded { outcome: None, old: Some(7) })]
+            ),
+            Frame::Int(12)
+        );
+        assert_eq!(
+            render_reply(
+                &ReplyShape::IncrBy { delta: 5 },
+                &[Ok(OpResult::FetchAdded { outcome: Some(InsertOutcome::Inserted), old: None })]
+            ),
+            Frame::Int(5)
+        );
+        // wrapping subtraction: 3 + (-5 as u32) ≡ 2³² - 2
+        assert_eq!(
+            render_reply(
+                &ReplyShape::IncrBy { delta: 5u32.wrapping_neg() },
+                &[Ok(OpResult::FetchAdded { outcome: None, old: Some(3) })]
+            ),
+            Frame::Int((3u32.wrapping_sub(5)) as i64)
+        );
+        assert_eq!(
+            render_reply(&ReplyShape::Cas, &[Ok(OpResult::Cas { ok: true, actual: Some(1) })]),
+            Frame::Int(1)
+        );
+        assert_eq!(
+            render_reply(
+                &ReplyShape::MGet,
+                &[Ok(OpResult::Value(Some(1))), Ok(OpResult::Value(None))]
+            ),
+            Frame::Array(vec![Frame::Bulk(b"1".to_vec()), Frame::NullBulk])
+        );
+        // any error fails the whole command; Shutdown gets its own code
+        assert_eq!(
+            render_reply(
+                &ReplyShape::Del,
+                &[Ok(OpResult::Deleted(true)), Err(HiveError::Shutdown)]
+            ),
+            Frame::Error("SHUTDOWN server is shutting down".into())
+        );
+    }
+}

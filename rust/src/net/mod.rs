@@ -1,0 +1,41 @@
+//! The network front door: a RESP2-compatible TCP server over the
+//! pipelined coordinator plane.
+//!
+//! ```text
+//!   redis-cli / memtier / any RESP2 client
+//!        │ TCP (pipelined commands)
+//!        ▼
+//!   ┌────────────────────────────────────────────────┐
+//!   │ net::NetServer                                 │
+//!   │  acceptor ──► per-connection reader / writer   │
+//!   │   reader: resp::Parser ─► command::Command     │
+//!   │           ─► Op(s) ─► Pipeline::submit         │
+//!   │   writer: Ticket::wait ─► OpResult(s)          │
+//!   │           ─► command::render_reply ─► socket   │
+//!   └────────────────────────────────────────────────┘
+//!        │ completion tickets (bounded window)
+//!        ▼
+//!   coordinator::Handle → sharded workers → HiveTable
+//! ```
+//!
+//! The three submodules split along the wire/meaning/mechanics axes:
+//!
+//! * [`resp`] — the RESP2 frame grammar: an incremental parser
+//!   tolerant of torn reads and pipelined bursts, and the encoder.
+//! * [`command`] — the command set (`GET`/`SET`/`SETNX`/`DEL`/
+//!   `INCRBY`/`CAS`/`MGET`/`MSET`/`PING`/`INFO`) and its two-way
+//!   mapping onto the typed `Op`/`OpResult` plane.
+//! * [`server`] — threads, sockets, backpressure, same-key ordering,
+//!   stats, and deadline-bounded graceful shutdown.
+//!
+//! `SERVING.md` at the repo root documents the externally visible
+//! contract: command semantics, pipelining and ordering guarantees,
+//! backpressure behavior, and what shutdown promises a live client.
+
+pub mod command;
+pub mod resp;
+pub mod server;
+
+pub use command::Command;
+pub use resp::{Frame, Parser, ProtoError};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,439 @@
+//! Incremental RESP2 frame parser and encoder.
+//!
+//! RESP2 is the Redis serialization protocol: five frame types keyed by
+//! the first byte (`+` simple string, `-` error, `:` integer, `$` bulk
+//! string, `*` array), each line terminated by CRLF. Clients send
+//! commands as arrays of bulk strings (or legacy space-separated
+//! *inline* commands); servers reply with any frame type.
+//!
+//! The parser here is *incremental*: bytes arrive from a TCP stream in
+//! arbitrary torn chunks ([`Parser::feed`]), and [`Parser::try_next`]
+//! either yields one complete frame, reports that the buffered prefix
+//! is still incomplete (`Ok(None)` — feed more bytes), or rejects a
+//! malformed prefix with a [`ProtoError`] the connection turns into an
+//! `-ERR Protocol error` reply before closing. A frame is consumed from
+//! the buffer only when it parses completely, so a torn read never
+//! loses or duplicates bytes, and many pipelined frames in one read
+//! drain with repeated `try_next` calls.
+//!
+//! Hostile input is bounded: bulk payloads over [`MAX_BULK`], arrays
+//! over [`MAX_ARRAY`] elements, nesting over [`MAX_DEPTH`], and inline
+//! lines over [`MAX_INLINE`] are protocol errors, so a client cannot
+//! make the server buffer unboundedly by promising a huge frame.
+
+use std::fmt;
+
+/// Upper bound on one bulk-string payload (16 MiB).
+pub const MAX_BULK: usize = 16 << 20;
+/// Upper bound on one array's element count.
+pub const MAX_ARRAY: usize = 1 << 20;
+/// Upper bound on array nesting depth (commands are flat arrays;
+/// replies nest at most arrays-of-bulks).
+pub const MAX_DEPTH: usize = 4;
+/// Upper bound on one inline-command line.
+pub const MAX_INLINE: usize = 64 << 10;
+
+/// One RESP2 frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// `+OK\r\n`
+    Simple(String),
+    /// `-ERR message\r\n`
+    Error(String),
+    /// `:42\r\n`
+    Int(i64),
+    /// `$3\r\nfoo\r\n`
+    Bulk(Vec<u8>),
+    /// `$-1\r\n` — the nil bulk (missing value).
+    NullBulk,
+    /// `*2\r\n<frame><frame>`
+    Array(Vec<Frame>),
+    /// `*-1\r\n` — the nil array.
+    NullArray,
+}
+
+impl Frame {
+    /// Encode this frame onto `out` in RESP2 wire form.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Frame::Simple(s) => {
+                out.push(b'+');
+                out.extend_from_slice(s.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Frame::Error(s) => {
+                out.push(b'-');
+                out.extend_from_slice(s.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Frame::Int(i) => {
+                out.push(b':');
+                out.extend_from_slice(i.to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Frame::Bulk(b) => {
+                out.push(b'$');
+                out.extend_from_slice(b.len().to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+                out.extend_from_slice(b);
+                out.extend_from_slice(b"\r\n");
+            }
+            Frame::NullBulk => out.extend_from_slice(b"$-1\r\n"),
+            Frame::Array(items) => {
+                out.push(b'*');
+                out.extend_from_slice(items.len().to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+                for item in items {
+                    item.encode_into(out);
+                }
+            }
+            Frame::NullArray => out.extend_from_slice(b"*-1\r\n"),
+        }
+    }
+
+    /// Encode to a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// A command frame (`*N` of bulks) from string arguments — the
+    /// client-side convenience the bench and tests use.
+    pub fn command<S: AsRef<[u8]>>(args: &[S]) -> Frame {
+        Frame::Array(args.iter().map(|a| Frame::Bulk(a.as_ref().to_vec())).collect())
+    }
+}
+
+/// A malformed frame. The message is suitable for an
+/// `-ERR Protocol error: ...` reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Protocol error: {}", self.0)
+    }
+}
+
+fn proto<T>(msg: impl Into<String>) -> ParseStep<T> {
+    Err(ProtoError(msg.into()))
+}
+
+/// Internal parse outcome: `Ok(Some(v))` parsed, `Ok(None)` needs more
+/// bytes, `Err` malformed.
+type ParseStep<T> = std::result::Result<Option<T>, ProtoError>;
+
+/// Incremental RESP2 parser over a growable byte buffer.
+#[derive(Default)]
+pub struct Parser {
+    buf: Vec<u8>,
+    /// Consumed prefix length; compacted lazily so repeated torn reads
+    /// do not shift the buffer on every frame.
+    pos: usize,
+}
+
+impl Parser {
+    pub fn new() -> Parser {
+        Parser::default()
+    }
+
+    /// Append freshly read bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn compact(&mut self) {
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 4096) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Try to parse one complete frame from the buffered bytes.
+    ///
+    /// `Ok(None)` means the prefix is a valid but incomplete frame —
+    /// nothing is consumed; feed more bytes and retry. `Ok(Some(f))`
+    /// consumes exactly that frame. `Err` means the prefix can never
+    /// become a valid frame; the connection should report and close.
+    pub fn try_next(&mut self) -> ParseStep<Frame> {
+        let mut cur = self.pos;
+        match parse_frame(&self.buf, &mut cur, 0)? {
+            Some(frame) => {
+                self.pos = cur;
+                self.compact();
+                Ok(Some(frame))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// Find the next CRLF at or after `*cur`; return the line body and
+/// advance past the terminator.
+fn take_line<'a>(buf: &'a [u8], cur: &mut usize, limit: usize) -> ParseStep<&'a [u8]> {
+    let start = *cur;
+    let mut i = start;
+    while i + 1 < buf.len() {
+        if buf[i] == b'\r' && buf[i + 1] == b'\n' {
+            *cur = i + 2;
+            return Ok(Some(&buf[start..i]));
+        }
+        if buf[i] == b'\n' {
+            return proto("expected \\r\\n line terminator");
+        }
+        i += 1;
+        if i - start > limit {
+            return proto("line too long");
+        }
+    }
+    if buf.len() - start > limit {
+        return proto("line too long");
+    }
+    Ok(None)
+}
+
+/// Parse a decimal i64 with optional leading `-` (RESP length/integer
+/// lines). Rejects empty bodies and non-digit bytes.
+fn parse_int(body: &[u8]) -> std::result::Result<i64, ProtoError> {
+    let (neg, digits) = match body.split_first() {
+        Some((b'-', rest)) => (true, rest),
+        _ => (false, body),
+    };
+    if digits.is_empty() {
+        return Err(ProtoError("empty integer".into()));
+    }
+    let mut v: i64 = 0;
+    for &b in digits {
+        if !b.is_ascii_digit() {
+            return Err(ProtoError("invalid integer byte".into()));
+        }
+        v = v
+            .checked_mul(10)
+            .and_then(|v| v.checked_add((b - b'0') as i64))
+            .ok_or_else(|| ProtoError("integer out of range".into()))?;
+    }
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_frame(buf: &[u8], cur: &mut usize, depth: usize) -> ParseStep<Frame> {
+    if depth > MAX_DEPTH {
+        return proto("nesting too deep");
+    }
+    let Some(&first) = buf.get(*cur) else {
+        return Ok(None);
+    };
+    match first {
+        b'+' | b'-' | b':' => {
+            *cur += 1;
+            let Some(body) = take_line(buf, cur, MAX_INLINE)? else {
+                return Ok(None);
+            };
+            match first {
+                b'+' => Ok(Some(Frame::Simple(String::from_utf8_lossy(body).into_owned()))),
+                b'-' => Ok(Some(Frame::Error(String::from_utf8_lossy(body).into_owned()))),
+                _ => Ok(Some(Frame::Int(parse_int(body)?))),
+            }
+        }
+        b'$' => {
+            *cur += 1;
+            let Some(body) = take_line(buf, cur, 32)? else {
+                return Ok(None);
+            };
+            let len = parse_int(body)?;
+            if len == -1 {
+                return Ok(Some(Frame::NullBulk));
+            }
+            if len < 0 || len as usize > MAX_BULK {
+                return proto("invalid bulk length");
+            }
+            let len = len as usize;
+            if buf.len() < *cur + len + 2 {
+                return Ok(None);
+            }
+            let payload = buf[*cur..*cur + len].to_vec();
+            if &buf[*cur + len..*cur + len + 2] != b"\r\n" {
+                return proto("bulk payload not CRLF-terminated");
+            }
+            *cur += len + 2;
+            Ok(Some(Frame::Bulk(payload)))
+        }
+        b'*' => {
+            *cur += 1;
+            let Some(body) = take_line(buf, cur, 32)? else {
+                return Ok(None);
+            };
+            let n = parse_int(body)?;
+            if n == -1 {
+                return Ok(Some(Frame::NullArray));
+            }
+            if n < 0 || n as usize > MAX_ARRAY {
+                return proto("invalid array length");
+            }
+            let mut items = Vec::with_capacity((n as usize).min(64));
+            for _ in 0..n {
+                match parse_frame(buf, cur, depth + 1)? {
+                    Some(f) => items.push(f),
+                    None => return Ok(None),
+                }
+            }
+            Ok(Some(Frame::Array(items)))
+        }
+        _ => parse_inline(buf, cur),
+    }
+}
+
+/// Legacy inline command: a bare line of whitespace-separated words,
+/// e.g. `PING\r\n` typed into netcat. Parsed into the same
+/// array-of-bulks shape as a regular command frame.
+fn parse_inline(buf: &[u8], cur: &mut usize) -> ParseStep<Frame> {
+    let Some(body) = take_line(buf, cur, MAX_INLINE)? else {
+        return Ok(None);
+    };
+    let words: Vec<Frame> = body
+        .split(|&b| b == b' ' || b == b'\t')
+        .filter(|w| !w.is_empty())
+        .map(|w| Frame::Bulk(w.to_vec()))
+        .collect();
+    if words.is_empty() {
+        // Empty line between inline commands: tolerated, parse on.
+        return parse_frame(buf, cur, 0);
+    }
+    Ok(Some(Frame::Array(words)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(input: &[u8]) -> Vec<Frame> {
+        let mut p = Parser::new();
+        p.feed(input);
+        let mut frames = Vec::new();
+        while let Some(f) = p.try_next().unwrap() {
+            frames.push(f);
+        }
+        frames
+    }
+
+    #[test]
+    fn round_trips_every_frame_type() {
+        let frames = vec![
+            Frame::Simple("OK".into()),
+            Frame::Error("ERR boom".into()),
+            Frame::Int(-42),
+            Frame::Bulk(b"hello".to_vec()),
+            Frame::Bulk(Vec::new()),
+            Frame::NullBulk,
+            Frame::Array(vec![Frame::Bulk(b"GET".to_vec()), Frame::Int(7)]),
+            Frame::NullArray,
+            Frame::Array(Vec::new()),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode_into(&mut wire);
+        }
+        assert_eq!(parse_all(&wire), frames);
+    }
+
+    #[test]
+    fn byte_at_a_time_feed_yields_identical_frames() {
+        let wire = {
+            let mut w = Vec::new();
+            Frame::command(&["SET", "17", "34"]).encode_into(&mut w);
+            Frame::command(&["GET", "17"]).encode_into(&mut w);
+            Frame::Simple("OK".into()).encode_into(&mut w);
+            w
+        };
+        let whole = parse_all(&wire);
+        let mut p = Parser::new();
+        let mut torn = Vec::new();
+        for &b in &wire {
+            p.feed(&[b]);
+            while let Some(f) = p.try_next().unwrap() {
+                torn.push(f);
+            }
+        }
+        assert_eq!(torn, whole);
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn incomplete_prefixes_consume_nothing() {
+        let mut p = Parser::new();
+        for prefix in ["*", "*2\r", "*2\r\n$3\r\nGE", "*2\r\n$3\r\nGET\r\n$2\r\n17\r"] {
+            let mut q = Parser::new();
+            q.feed(prefix.as_bytes());
+            assert_eq!(q.try_next().unwrap(), None, "prefix {prefix:?} must be incomplete");
+            assert_eq!(q.buffered(), prefix.len(), "incomplete parse must not consume");
+        }
+        p.feed(b"*1\r\n$4\r\nPING\r\n");
+        assert_eq!(
+            p.try_next().unwrap().unwrap(),
+            Frame::Array(vec![Frame::Bulk(b"PING".to_vec())])
+        );
+    }
+
+    #[test]
+    fn inline_commands_parse_like_arrays() {
+        let frames = parse_all(b"PING\r\n  SET   5 6\r\n\r\nGET 5\r\n");
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], Frame::command(&["PING"]));
+        assert_eq!(frames[1], Frame::command(&["SET", "5", "6"]));
+        assert_eq!(frames[2], Frame::command(&["GET", "5"]));
+    }
+
+    #[test]
+    fn malformed_frames_are_protocol_errors() {
+        for bad in [
+            b"$abc\r\n".as_slice(),
+            b"$-2\r\n",
+            b"*-3\r\n",
+            b":\r\n",
+            b":12a\r\n",
+            b"$3\r\nfooXY",          // payload not CRLF-terminated
+            b"*1\r\n*1\r\n*1\r\n*1\r\n*1\r\n*1\r\n:1\r\n", // too deep
+            b"PING\nX",              // bare \n terminator
+        ] {
+            let mut p = Parser::new();
+            p.feed(bad);
+            let mut res = p.try_next();
+            // walk frames until the malformed one surfaces
+            while let Ok(Some(_)) = res {
+                res = p.try_next();
+            }
+            assert!(res.is_err(), "input {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn oversized_promises_are_rejected_not_buffered() {
+        let mut p = Parser::new();
+        p.feed(format!("${}\r\n", MAX_BULK + 1).as_bytes());
+        assert!(p.try_next().is_err(), "oversized bulk promise must fail fast");
+        let mut p = Parser::new();
+        p.feed(format!("*{}\r\n", MAX_ARRAY + 1).as_bytes());
+        assert!(p.try_next().is_err(), "oversized array promise must fail fast");
+    }
+
+    #[test]
+    fn pipelined_burst_drains_in_order() {
+        let mut wire = Vec::new();
+        for k in 0..100u32 {
+            Frame::command(&["SET".to_string(), k.to_string(), (k * 2).to_string()])
+                .encode_into(&mut wire);
+        }
+        let frames = parse_all(&wire);
+        assert_eq!(frames.len(), 100);
+        for (k, f) in frames.iter().enumerate() {
+            let Frame::Array(items) = f else { panic!("not an array") };
+            assert_eq!(items[1], Frame::Bulk(k.to_string().into_bytes()));
+        }
+    }
+}

@@ -1,0 +1,597 @@
+//! The RESP TCP server: bounded acceptor, per-connection reader/writer
+//! thread pair, pipelined command multiplexing onto the coordinator's
+//! ticket plane, and deadline-bounded graceful shutdown.
+//!
+//! ## Threading model (std-only — no async runtime)
+//!
+//! * **Acceptor** — one thread polling a nonblocking listener (std has
+//!   no accept timeout; a 1 ms poll keeps shutdown responsive). It
+//!   enforces [`NetConfig::max_connections`]: over-cap clients get
+//!   `-ERR max number of clients reached` and an immediate close.
+//! * **Reader** (one per connection) — reads with a short
+//!   `set_read_timeout` so it can observe shutdown, feeds the
+//!   incremental RESP parser, decodes commands, submits their ops onto
+//!   the connection's [`Pipeline`] (depth = [`NetConfig::pipeline_depth`];
+//!   `Pipeline::submit` blocks at full depth, which is the per-connection
+//!   in-flight bound), and enqueues the pending reply into a bounded
+//!   FIFO ring toward the writer.
+//! * **Writer** (one per connection) — pops replies in submission
+//!   order, waits each command's tickets, renders the RESP reply, and
+//!   writes it with `set_write_timeout` (per-fd nonblocking would break
+//!   the blocking reader sharing the socket, so bounded-blocking writes
+//!   are the backpressure primitive: a slow client stalls its writer,
+//!   the reply ring fills, the reader stops reading, and the kernel
+//!   closes the TCP window).
+//!
+//! ## Ordering
+//!
+//! Replies are written strictly in submission order (FIFO ring). Ops
+//! in flight together on the coordinator are concurrent, so the reader
+//! additionally serializes *same-key* commands: before submitting a
+//! command touching key `k` it waits the connection's completion
+//! watermark past the last command that touched `k`. Disjoint-key
+//! commands pipeline freely; a same-key burst degrades toward closed
+//! loop — this is what gives each connection read-your-write ordering
+//! (`SET k v` then `GET k` pipelined returns `v`).
+//!
+//! ## Shutdown
+//!
+//! [`NetServer::shutdown`] stops the acceptor, then every connection
+//! drains: readers stop consuming input, writers keep resolving
+//! tickets until [`NetConfig::drain_deadline`], after which remaining
+//! replies become `-SHUTDOWN` errors and the socket closes. The
+//! exactly-once completion machinery guarantees every ticket fires
+//! (worker death publishes `Shutdown`), so no client and no server
+//! thread can hang: every wait in this module is deadline-bounded.
+
+use crate::coordinator::pipeline::{ring, RingRx, RingTx};
+use crate::coordinator::{Handle, Pipeline, ServiceStats, Ticket};
+use crate::core::error::{HiveError, Result};
+use crate::core::histogram::Histogram;
+use crate::net::command::{render_reply, Command, ReplyShape};
+use crate::net::resp::{Frame, Parser};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// How often blocked loops re-check the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Network server configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address; use port 0 to let the OS pick (see
+    /// [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Accepted-connection cap; clients beyond it are turned away with
+    /// an error reply.
+    pub max_connections: usize,
+    /// Per-connection in-flight op window (the `Pipeline` depth): how
+    /// many ops one connection keeps outstanding before its reader
+    /// blocks.
+    pub pipeline_depth: usize,
+    /// Graceful-shutdown budget: how long writers keep draining
+    /// in-flight tickets before remaining replies become `-SHUTDOWN`.
+    pub drain_deadline: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 1024,
+            pipeline_depth: 256,
+            drain_deadline: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One queued reply, in submission order.
+enum ReplyItem {
+    /// Answered without touching the data plane (PING, errors, INFO).
+    Ready(Frame),
+    /// Waiting on submitted ops; the writer waits the tickets and
+    /// folds results via the shape.
+    Pending { shape: ReplyShape, tickets: Vec<Ticket>, submitted: Instant },
+    /// Flush everything before this marker, then close (QUIT,
+    /// protocol errors).
+    CloseAfterFlush,
+}
+
+/// Per-connection reader↔writer shared state: the completion watermark
+/// (count of ticket-bearing replies fully resolved) the reader uses to
+/// serialize same-key commands.
+struct ConnShared {
+    done: Mutex<u64>,
+    advanced: Condvar,
+    writer_dead: AtomicBool,
+}
+
+/// Server-wide shared state and counters.
+struct ServerShared {
+    cfg: NetConfig,
+    handle: Handle,
+    port: u16,
+    started: Instant,
+    stop: AtomicBool,
+    /// Set (before `stop`) by shutdown: when writers may stop waiting
+    /// tickets and start answering `-SHUTDOWN`.
+    drain_until: Mutex<Option<Instant>>,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    opened: AtomicU64,
+    rejected: AtomicU64,
+    active: AtomicUsize,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    commands: AtomicU64,
+    protocol_errors: AtomicU64,
+    /// Per-command wire latency (submit → reply rendered), merged from
+    /// each connection's local histogram on connection close.
+    latency: Mutex<Histogram>,
+}
+
+impl ServerShared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// `true` once the graceful-drain budget is spent: stop waiting
+    /// tickets, answer `-SHUTDOWN`.
+    fn past_drain_deadline(&self) -> bool {
+        if !self.stopping() {
+            return false;
+        }
+        match *self.drain_until.lock().unwrap() {
+            Some(t) => Instant::now() >= t,
+            None => false,
+        }
+    }
+
+    /// Snapshot the wire-plane counters into the `net_*` fields of a
+    /// [`ServiceStats`].
+    fn net_stats(&self) -> ServiceStats {
+        let mut s = ServiceStats::default();
+        s.net_connections_opened = self.opened.load(Ordering::Relaxed);
+        s.net_connections_rejected = self.rejected.load(Ordering::Relaxed);
+        s.net_connections_active = self.active.load(Ordering::Relaxed) as u64;
+        s.net_bytes_in = self.bytes_in.load(Ordering::Relaxed);
+        s.net_bytes_out = self.bytes_out.load(Ordering::Relaxed);
+        s.net_commands = self.commands.load(Ordering::Relaxed);
+        s.net_protocol_errors = self.protocol_errors.load(Ordering::Relaxed);
+        s.net_cmd_latency_ns = self.latency.lock().unwrap().clone();
+        s
+    }
+
+    /// Render the INFO reply: redis-shaped sections over the merged
+    /// coordinator + wire stats.
+    fn render_info(&self) -> String {
+        let net = self.net_stats();
+        let uptime = self.started.elapsed();
+        let cps = if uptime.as_secs_f64() > 0.0 {
+            net.net_commands as f64 / uptime.as_secs_f64()
+        } else {
+            0.0
+        };
+        let coord = match self.handle.stats() {
+            Ok(s) => s.summary(),
+            Err(e) => format!("unavailable: {e}"),
+        };
+        let lat = &net.net_cmd_latency_ns;
+        format!(
+            "# Server\r\nhive_version:0.1.0\r\ntcp_port:{}\r\nuptime_in_seconds:{}\r\n\
+             # Clients\r\nconnected_clients:{}\r\nrejected_connections:{}\r\n\
+             # Stats\r\ntotal_connections_received:{}\r\ntotal_commands_processed:{}\r\n\
+             instantaneous_ops_per_sec:{:.0}\r\ntotal_net_input_bytes:{}\r\n\
+             total_net_output_bytes:{}\r\nprotocol_errors:{}\r\n\
+             # Latency\r\ncmd_p50_ns:{}\r\ncmd_p99_ns:{}\r\ncmd_p999_ns:{}\r\n\
+             # Hive\r\ncoordinator:{}\r\n",
+            self.port,
+            uptime.as_secs(),
+            net.net_connections_active,
+            net.net_connections_rejected,
+            net.net_connections_opened,
+            net.net_commands,
+            cps,
+            net.net_bytes_in,
+            net.net_bytes_out,
+            net.net_protocol_errors,
+            lat.quantile(0.50),
+            lat.quantile(0.99),
+            lat.quantile(0.999),
+            coord,
+        )
+    }
+}
+
+/// A running RESP server bound to a coordinator [`Handle`].
+///
+/// The server does not own the coordinator: start one with
+/// [`start_native_sharded`](crate::coordinator::start_native_sharded)
+/// (or any factory), pass its handle here, and shut the server down
+/// *before* the coordinator for clean `-SHUTDOWN`-free drains — though
+/// either order is safe (a dead coordinator fails submits with
+/// `Shutdown`, which connections answer and close on).
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    local: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind and start accepting. Returns once the listener is live, so
+    /// `local_addr` is immediately connectable.
+    pub fn start(cfg: NetConfig, handle: Handle) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| HiveError::Config(format!("bind {}: {e}", cfg.addr)))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| HiveError::Config(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| HiveError::Config(format!("set_nonblocking: {e}")))?;
+        let shared = Arc::new(ServerShared {
+            cfg,
+            handle,
+            port: local.port(),
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+            drain_until: Mutex::new(None),
+            conns: Mutex::new(Vec::new()),
+            opened: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            commands: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::new()),
+        });
+        let shared2 = Arc::clone(&shared);
+        let acceptor = thread::Builder::new()
+            .name("hive-net-accept".into())
+            .spawn(move || acceptor_loop(listener, shared2))
+            .map_err(|e| HiveError::Runtime(format!("spawn acceptor: {e}")))?;
+        Ok(NetServer { shared, local, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Wire-plane stats snapshot (`net_*` fields of [`ServiceStats`];
+    /// merge with `Handle::stats()` for the full service view).
+    pub fn stats(&self) -> ServiceStats {
+        self.shared.net_stats()
+    }
+
+    /// Graceful shutdown: stop accepting, drain every connection's
+    /// in-flight tickets up to the drain deadline, answer `-SHUTDOWN`
+    /// past it, close all sockets, join all threads. Bounded time;
+    /// idempotent via `Drop`.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        // deadline first, then the flag: a writer that sees `stop` must
+        // also see a concrete drain deadline.
+        {
+            let mut d = self.shared.drain_until.lock().unwrap();
+            if d.is_none() {
+                *d = Some(Instant::now() + self.shared.cfg.drain_deadline);
+            }
+        }
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, shared: Arc<ServerShared>) {
+    loop {
+        if shared.stopping() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // prune finished connections so churn doesn't grow the
+                // join list unboundedly
+                shared.conns.lock().unwrap().retain(|h| !h.is_finished());
+                if shared.active.load(Ordering::Relaxed) >= shared.cfg.max_connections {
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    reject(stream);
+                    continue;
+                }
+                shared.opened.fetch_add(1, Ordering::Relaxed);
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                let shared2 = Arc::clone(&shared);
+                match thread::Builder::new()
+                    .name("hive-net-conn".into())
+                    .spawn(move || {
+                        connection(stream, &shared2);
+                        shared2.active.fetch_sub(1, Ordering::Relaxed);
+                    }) {
+                    Ok(h) => shared.conns.lock().unwrap().push(h),
+                    Err(_) => {
+                        shared.active.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            // nonblocking accept: nothing pending — poll the stop flag
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(Duration::from_millis(1)),
+            Err(_) => thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+/// Turn away an over-cap client with a best-effort error reply.
+fn reject(stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(POLL));
+    let mut s = stream;
+    let _ = s.write_all(b"-ERR max number of clients reached\r\n");
+    let _ = s.shutdown(SockShutdown::Both);
+}
+
+/// One connection: runs the reader loop on this thread, the writer on
+/// a sibling, and joins the writer before returning.
+fn connection(stream: TcpStream, shared: &Arc<ServerShared>) {
+    // BSD-family accept() inherits the listener's nonblocking flag
+    // (Linux does not); the reader/writer loops want blocking sockets
+    // with read/write timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let Ok(wstream) = stream.try_clone() else { return };
+    let (tx, rx) = ring::<ReplyItem>(shared.cfg.pipeline_depth.max(16) + 16);
+    let conn = Arc::new(ConnShared {
+        done: Mutex::new(0),
+        advanced: Condvar::new(),
+        writer_dead: AtomicBool::new(false),
+    });
+    let pipe = shared.handle.pipeline(shared.cfg.pipeline_depth);
+    let writer = {
+        let conn = Arc::clone(&conn);
+        let shared = Arc::clone(shared);
+        thread::Builder::new()
+            .name("hive-net-write".into())
+            .spawn(move || writer_loop(rx, wstream, &conn, &shared))
+    };
+    let Ok(writer) = writer else { return };
+    reader_loop(stream, tx, &pipe, &conn, shared);
+    // tx dropped above → the writer drains the queued replies, then
+    // observes disconnection and exits.
+    let _ = writer.join();
+}
+
+/// Wait the connection's completion watermark up to `need` — the
+/// same-key serialization barrier. Returns `false` when the connection
+/// is dying and the reader should stop.
+fn wait_watermark(conn: &ConnShared, need: u64, shared: &ServerShared) -> bool {
+    let mut done = conn.done.lock().unwrap();
+    while *done < need {
+        if shared.stopping() || conn.writer_dead.load(Ordering::Acquire) {
+            return false;
+        }
+        let (g, _) = conn.advanced.wait_timeout(done, POLL).unwrap();
+        done = g;
+    }
+    true
+}
+
+fn reader_loop(
+    mut sock: TcpStream,
+    tx: RingTx<ReplyItem>,
+    pipe: &Pipeline,
+    conn: &ConnShared,
+    shared: &ServerShared,
+) {
+    let _ = sock.set_read_timeout(Some(POLL));
+    let mut parser = Parser::new();
+    let mut buf = [0u8; 16 * 1024];
+    // ticket-bearing replies submitted so far; the watermark counts the
+    // same replies resolved, and `last_touch` maps key → the last reply
+    // index that touched it.
+    let mut submitted: u64 = 0;
+    let mut last_touch: HashMap<u32, u64> = HashMap::new();
+    'conn: loop {
+        if shared.stopping() {
+            break;
+        }
+        // drain every complete frame currently buffered (pipelining)
+        loop {
+            let frame = match parser.try_next() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(pe) => {
+                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(ReplyItem::Ready(Frame::Error(format!("ERR {pe}"))));
+                    let _ = tx.send(ReplyItem::CloseAfterFlush);
+                    break 'conn;
+                }
+            };
+            shared.commands.fetch_add(1, Ordering::Relaxed);
+            let cmd = match Command::parse(&frame) {
+                Ok(c) => c,
+                Err(msg) => {
+                    if tx.send(ReplyItem::Ready(Frame::Error(msg))).is_err() {
+                        break 'conn;
+                    }
+                    continue;
+                }
+            };
+            let ready = match &cmd {
+                Command::Ping { msg: None } => Some(Frame::Simple("PONG".into())),
+                Command::Ping { msg: Some(m) } => Some(Frame::Bulk(m.clone())),
+                Command::CommandProbe => Some(Frame::Array(Vec::new())),
+                Command::Info => Some(Frame::Bulk(shared.render_info().into_bytes())),
+                Command::Quit => {
+                    let _ = tx.send(ReplyItem::Ready(Frame::Simple("OK".into())));
+                    let _ = tx.send(ReplyItem::CloseAfterFlush);
+                    break 'conn;
+                }
+                _ => None,
+            };
+            if let Some(frame) = ready {
+                if tx.send(ReplyItem::Ready(frame)).is_err() {
+                    break 'conn;
+                }
+                continue;
+            }
+            let Some((ops, shape)) = cmd.to_ops() else { continue };
+            // same-key barrier: dependent commands wait their
+            // predecessor's completion (read-your-write per connection)
+            let keys = cmd.keys();
+            if let Some(need) = keys.iter().filter_map(|k| last_touch.get(k).copied()).max() {
+                if !wait_watermark(conn, need, shared) {
+                    break 'conn;
+                }
+            }
+            let t0 = Instant::now();
+            let mut tickets = Vec::with_capacity(ops.len());
+            for op in ops {
+                match pipe.submit(op) {
+                    Ok(t) => tickets.push(t),
+                    Err(e) => {
+                        // coordinator gone mid-command: answer and close
+                        drop(tickets);
+                        let _ = tx.send(ReplyItem::Ready(crate::net::command::render_reply(
+                            &shape,
+                            &[Err(e)],
+                        )));
+                        let _ = tx.send(ReplyItem::CloseAfterFlush);
+                        break 'conn;
+                    }
+                }
+            }
+            submitted += 1;
+            for k in keys {
+                last_touch.insert(k, submitted);
+            }
+            if last_touch.len() > 4096 {
+                let wm = *conn.done.lock().unwrap();
+                last_touch.retain(|_, &mut idx| idx > wm);
+            }
+            if tx.send(ReplyItem::Pending { shape, tickets, submitted: t0 }).is_err() {
+                break 'conn;
+            }
+        }
+        match sock.read(&mut buf) {
+            Ok(0) => break, // clean EOF
+            Ok(n) => {
+                shared.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                parser.feed(&buf[..n]);
+            }
+            Err(ref e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+}
+
+/// Wait one ticket with the drain deadline in force. Exactly-once
+/// completion bounds the normal path; the drain deadline bounds the
+/// shutdown path.
+fn resolve_ticket(mut ticket: Ticket, shared: &ServerShared) -> Result<crate::workload::OpResult> {
+    loop {
+        if shared.past_drain_deadline() {
+            return Err(HiveError::Shutdown);
+        }
+        match ticket.wait_deadline(Instant::now() + POLL) {
+            Ok(res) => return res,
+            Err(back) => ticket = back,
+        }
+    }
+}
+
+fn writer_loop(
+    rx: RingRx<ReplyItem>,
+    mut sock: TcpStream,
+    conn: &ConnShared,
+    shared: &ServerShared,
+) {
+    let _ = sock.set_write_timeout(Some(POLL));
+    let mut out: Vec<u8> = Vec::with_capacity(4096);
+    let mut latency = Histogram::new();
+    loop {
+        match rx.recv_timeout(POLL) {
+            Ok(ReplyItem::Ready(frame)) => {
+                out.clear();
+                frame.encode_into(&mut out);
+                if !write_all_bounded(&mut sock, &out, shared) {
+                    break;
+                }
+            }
+            Ok(ReplyItem::Pending { shape, tickets, submitted }) => {
+                let results: Vec<Result<crate::workload::OpResult>> =
+                    tickets.into_iter().map(|t| resolve_ticket(t, shared)).collect();
+                let frame = render_reply(&shape, &results);
+                latency.record(submitted.elapsed().as_nanos() as u64);
+                // advance the watermark before writing: the results are
+                // resolved, so a same-key successor may submit while
+                // this reply travels the socket
+                {
+                    let mut d = conn.done.lock().unwrap();
+                    *d += 1;
+                }
+                conn.advanced.notify_all();
+                out.clear();
+                frame.encode_into(&mut out);
+                if !write_all_bounded(&mut sock, &out, shared) {
+                    break;
+                }
+            }
+            Ok(ReplyItem::CloseAfterFlush) | Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+    }
+    conn.writer_dead.store(true, Ordering::Release);
+    conn.advanced.notify_all();
+    let _ = sock.shutdown(SockShutdown::Both);
+    shared.latency.lock().unwrap().merge(&latency);
+}
+
+/// Write the whole buffer with bounded blocking. Retries timeouts
+/// (that is the backpressure stall) until the drain deadline passes
+/// during shutdown; any real error fails the connection.
+fn write_all_bounded(sock: &mut TcpStream, buf: &[u8], shared: &ServerShared) -> bool {
+    let mut off = 0;
+    while off < buf.len() {
+        match sock.write(&buf[off..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                off += n;
+                shared.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Err(ref e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                if shared.past_drain_deadline() {
+                    return false;
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}

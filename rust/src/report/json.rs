@@ -125,6 +125,34 @@ pub fn shard_row(shard: usize, s: &crate::coordinator::ServiceStats) -> JsonVal 
     ])
 }
 
+/// The full per-shard breakdown of one run as a JSON array of
+/// [`shard_row`]s plus an imbalance summary object:
+/// `{imbalance, max_ops, mean_ops, shards: [...]}`. Wired into the
+/// skew figures so Zipf-driven load imbalance across the bulk
+/// sub-batch scatter is quantified next to the merged aggregate
+/// instead of washing out in the merge. `imbalance` is
+/// `max(ops) / mean(ops)` over shards — 1.0 is a perfectly even
+/// scatter.
+pub fn shard_breakdown(per_shard: &[crate::coordinator::ServiceStats]) -> JsonVal {
+    let ops: Vec<u64> = per_shard.iter().map(|s| s.ops).collect();
+    let max = ops.iter().copied().max().unwrap_or(0);
+    let mean = if ops.is_empty() {
+        0.0
+    } else {
+        ops.iter().sum::<u64>() as f64 / ops.len() as f64
+    };
+    let imbalance = if mean > 0.0 { max as f64 / mean } else { 0.0 };
+    obj(vec![
+        ("imbalance", imbalance.into()),
+        ("max_ops", max.into()),
+        ("mean_ops", mean.into()),
+        (
+            "shards",
+            arr(per_shard.iter().enumerate().map(|(i, s)| shard_row(i, s)).collect()),
+        ),
+    ])
+}
+
 /// Latency quantiles of a histogram as a JSON object:
 /// `{p50_ns, p99_ns, p999_ns, mean_ns, max_ns, count}` — the standard
 /// latency fields the service figures (fig11) and the `kv_service`
@@ -292,6 +320,21 @@ mod tests {
         assert!(r.contains(r#""keys_migrated":30"#), "{r}");
         assert!(r.contains(r#""moves_completed":1"#), "{r}");
         assert!(r.contains(r#""latency":{"#), "{r}");
+    }
+
+    #[test]
+    fn shard_breakdown_quantifies_imbalance() {
+        let mut hot = crate::coordinator::ServiceStats::default();
+        hot.ops = 300;
+        let mut cold = crate::coordinator::ServiceStats::default();
+        cold.ops = 100;
+        let r = shard_breakdown(&[hot, cold]).render();
+        assert!(r.contains(r#""imbalance":1.5"#), "{r}");
+        assert!(r.contains(r#""max_ops":300"#), "{r}");
+        assert!(r.contains(r#""mean_ops":200"#), "{r}");
+        assert!(r.contains(r#""shards":[{"shard":0"#), "{r}");
+        // empty shard lists degrade to zeros, not NaN/panic
+        assert!(shard_breakdown(&[]).render().contains(r#""imbalance":0"#));
     }
 
     #[test]

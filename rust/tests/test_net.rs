@@ -1,0 +1,566 @@
+//! Wire-layer battery (ISSUE 10): the RESP front door against real
+//! sockets.
+//!
+//! Three layers of coverage:
+//!
+//! * **Parser** — torn-frame feeds (byte-at-a-time and seeded random
+//!   splits) must yield exactly the frames of a whole-buffer feed;
+//!   malformed frames must surface protocol errors, not hangs.
+//! * **Semantics** — every command round-trips over TCP with the same
+//!   results the typed plane gives a direct `Handle` caller
+//!   (differential test), and pipelined commands complete in
+//!   submission order — including same-key chains, which the reader
+//!   serializes for per-connection read-your-write.
+//! * **Liveness** — connection churn racing `NetServer::shutdown`, an
+//!   injected worker panic, and the connection cap: every client gets
+//!   a bounded-time reply, error, or clean close. Never a hang.
+//!
+//! Interleaving-sensitive schedules derive from `HIVE_TEST_SEED` (CI
+//! runs a seed matrix).
+
+use hivehash::backend::{Backend, NativeBackend};
+use hivehash::coordinator::resize_ctl::ResizeEvent;
+use hivehash::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Handle};
+use hivehash::core::error::Result;
+use hivehash::core::rng::splitmix64;
+use hivehash::net::command::{render_reply, Command};
+use hivehash::net::resp::{Frame, Parser};
+use hivehash::net::{NetConfig, NetServer};
+use hivehash::workload::{Op, OpResult};
+use hivehash::HiveConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn test_seed() -> u64 {
+    hivehash::testutil::seed::test_seed(0xD00D)
+}
+
+/// Tight batching so wire tests exercise real dispatch windows fast.
+fn tight_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch: 32, deadline: Duration::from_micros(100) },
+        resize_check_every: 4,
+        cache_capacity: 256,
+        ring_capacity: 64,
+    }
+}
+
+fn start_stack(workers: usize) -> (Coordinator, Handle, NetServer) {
+    let (coord, h) = Coordinator::start(tight_cfg(workers), |_w| {
+        Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(1024))?) as _)
+    })
+    .unwrap();
+    let server = NetServer::start(
+        NetConfig {
+            pipeline_depth: 32,
+            drain_deadline: Duration::from_millis(500),
+            ..NetConfig::default()
+        },
+        h.clone(),
+    )
+    .unwrap();
+    (coord, h, server)
+}
+
+/// Watchdog: a hung wire path fails fast instead of eating the CI job.
+fn with_deadline<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded {secs}s deadline — a wire client or server thread hung")
+        }
+    }
+}
+
+/// Blocking-read one reply frame off the socket.
+fn read_frame(sock: &mut TcpStream, parser: &mut Parser) -> Option<Frame> {
+    let mut buf = [0u8; 4096];
+    loop {
+        match parser.try_next().expect("server sent a malformed frame") {
+            Some(f) => return Some(f),
+            None => match sock.read(&mut buf) {
+                Ok(0) => return None, // EOF
+                Ok(n) => parser.feed(&buf[..n]),
+                Err(_) => return None, // reset counts as close
+            },
+        }
+    }
+}
+
+fn send_cmd(sock: &mut TcpStream, args: &[&str]) {
+    sock.write_all(&Frame::command(args).encode()).unwrap();
+}
+
+/// Closed-loop round trip.
+fn round_trip(sock: &mut TcpStream, parser: &mut Parser, args: &[&str]) -> Frame {
+    send_cmd(sock, args);
+    read_frame(sock, parser).expect("connection closed mid round-trip")
+}
+
+// ---------------------------------------------------------------------------
+// Parser battery (no sockets)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parser_random_split_feeds_match_whole_feed() {
+    let mut rng = test_seed();
+    // a long pipelined stream mixing commands and reply-type frames
+    let mut wire = Vec::new();
+    let mut expect = Vec::new();
+    for i in 0..200u32 {
+        let f = match i % 6 {
+            0 => Frame::command(&["SET".to_string(), i.to_string(), (i * 3).to_string()]),
+            1 => Frame::command(&["MGET".to_string(), i.to_string(), (i + 1).to_string()]),
+            2 => Frame::Simple("OK".into()),
+            3 => Frame::Int(i as i64 - 100),
+            4 => Frame::Bulk(vec![b'x'; (i % 40) as usize]),
+            _ => Frame::Array(vec![Frame::NullBulk, Frame::Bulk(i.to_string().into_bytes())]),
+        };
+        f.encode_into(&mut wire);
+        expect.push(f);
+    }
+    for round in 0..20 {
+        let mut parser = Parser::new();
+        let mut got = Vec::new();
+        let mut pos = 0usize;
+        while pos < wire.len() {
+            // split sizes 1..=17, seeded
+            let chunk = 1 + (splitmix64(&mut rng) as usize) % 17;
+            let end = (pos + chunk).min(wire.len());
+            parser.feed(&wire[pos..end]);
+            pos = end;
+            while let Some(f) = parser.try_next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, expect, "round {round}: torn feed diverged from whole feed");
+        assert_eq!(parser.buffered(), 0, "round {round}: bytes left unparsed");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Semantics over real TCP
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_round_trips_every_command() {
+    with_deadline(60, || {
+        let (coord, _h, server) = start_stack(2);
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        let mut rt = |args: &[&str]| round_trip(&mut sock, &mut p, args);
+
+        assert_eq!(rt(&["PING"]), Frame::Simple("PONG".into()));
+        assert_eq!(rt(&["PING", "hello"]), Frame::Bulk(b"hello".to_vec()));
+        assert_eq!(rt(&["SET", "1", "100"]), Frame::Simple("OK".into()));
+        assert_eq!(rt(&["GET", "1"]), Frame::Bulk(b"100".to_vec()));
+        assert_eq!(rt(&["GET", "2"]), Frame::NullBulk);
+        assert_eq!(rt(&["SETNX", "1", "5"]), Frame::Int(0), "SETNX must not clobber");
+        assert_eq!(rt(&["GET", "1"]), Frame::Bulk(b"100".to_vec()));
+        assert_eq!(rt(&["SETNX", "2", "7"]), Frame::Int(1));
+        assert_eq!(rt(&["GET", "2"]), Frame::Bulk(b"7".to_vec()));
+        assert_eq!(rt(&["DEL", "1", "2", "99"]), Frame::Int(2), "99 was never present");
+        assert_eq!(rt(&["GET", "1"]), Frame::NullBulk);
+        assert_eq!(rt(&["INCRBY", "3", "10"]), Frame::Int(10), "fetch-add creates");
+        assert_eq!(rt(&["INCRBY", "3", "-4"]), Frame::Int(6));
+        assert_eq!(rt(&["INCR", "3"]), Frame::Int(7));
+        assert_eq!(rt(&["DECR", "3"]), Frame::Int(6));
+        assert_eq!(rt(&["CAS", "3", "6", "9"]), Frame::Int(1));
+        assert_eq!(rt(&["CAS", "3", "6", "11"]), Frame::Int(0), "stale expected");
+        assert_eq!(rt(&["GET", "3"]), Frame::Bulk(b"9".to_vec()));
+        assert_eq!(rt(&["MSET", "10", "1", "11", "2"]), Frame::Simple("OK".into()));
+        assert_eq!(
+            rt(&["MGET", "10", "11", "12"]),
+            Frame::Array(vec![
+                Frame::Bulk(b"1".to_vec()),
+                Frame::Bulk(b"2".to_vec()),
+                Frame::NullBulk
+            ])
+        );
+        assert_eq!(rt(&["COMMAND"]), Frame::Array(Vec::new()));
+        match rt(&["INFO"]) {
+            Frame::Bulk(text) => {
+                let text = String::from_utf8(text).unwrap();
+                assert!(text.contains("tcp_port:"), "{text}");
+                assert!(text.contains("total_commands_processed:"), "{text}");
+                assert!(text.contains("coordinator:ops="), "{text}");
+            }
+            other => panic!("INFO returned {other:?}"),
+        }
+        // command-level errors keep the connection alive
+        match rt(&["FLUSHALL"]) {
+            Frame::Error(e) => assert!(e.contains("unknown command"), "{e}"),
+            other => panic!("unknown command returned {other:?}"),
+        }
+        match rt(&["GET"]) {
+            Frame::Error(e) => assert!(e.contains("wrong number of arguments"), "{e}"),
+            other => panic!("bad arity returned {other:?}"),
+        }
+        match rt(&["GET", "notanumber"]) {
+            Frame::Error(e) => assert!(e.contains("not a valid integer"), "{e}"),
+            other => panic!("bad key returned {other:?}"),
+        }
+        assert_eq!(rt(&["PING"]), Frame::Simple("PONG".into()), "still serving after errors");
+        // QUIT: +OK then clean close
+        assert_eq!(rt(&["QUIT"]), Frame::Simple("OK".into()));
+        assert!(read_frame(&mut sock, &mut p).is_none(), "QUIT must close the connection");
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn wire_results_match_direct_handle_calls_differentially() {
+    with_deadline(120, || {
+        let mut rng = test_seed().wrapping_add(1);
+        // stack A serves the wire; coordinator B takes direct calls
+        let (coord_a, _ha, server) = start_stack(2);
+        let (coord_b, hb) = Coordinator::start(tight_cfg(2), |_w| {
+            Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(1024))?) as _)
+        })
+        .unwrap();
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        // small key space forces collisions, deletes, CAS races
+        let key = |r: u64| (r % 64).to_string();
+        let val = |r: u64| ((r >> 8) % 1000).to_string();
+        for step in 0..2_000u32 {
+            let r = splitmix64(&mut rng);
+            let args: Vec<String> = match r % 8 {
+                0 => vec!["GET".into(), key(r >> 16)],
+                1 => vec!["SET".into(), key(r >> 16), val(r)],
+                2 => vec!["SETNX".into(), key(r >> 16), val(r)],
+                3 => vec!["DEL".into(), key(r >> 16), key(r >> 24)],
+                4 => vec!["INCRBY".into(), key(r >> 16), ((r >> 8) % 100).to_string()],
+                5 => vec!["CAS".into(), key(r >> 16), val(r >> 4), val(r)],
+                6 => vec!["MGET".into(), key(r >> 16), key(r >> 24), key(r >> 32)],
+                _ => vec!["MSET".into(), key(r >> 16), val(r), key(r >> 24), val(r >> 4)],
+            };
+            let argrefs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+            let wire_reply = round_trip(&mut sock, &mut p, &argrefs);
+            // the oracle: the same command through the typed plane
+            let cmd = Command::parse(&Frame::command(&argrefs)).unwrap();
+            let (ops, shape) = cmd.to_ops().unwrap();
+            let results: Vec<Result<OpResult>> =
+                hb.submit(&ops).unwrap().into_iter().map(Ok).collect();
+            let direct_reply = render_reply(&shape, &results);
+            assert_eq!(
+                wire_reply, direct_reply,
+                "step {step}: wire diverged from direct Handle on {args:?}"
+            );
+        }
+        server.shutdown();
+        coord_a.shutdown();
+        coord_b.shutdown();
+    });
+}
+
+#[test]
+fn pipelined_commands_complete_in_submission_order() {
+    with_deadline(60, || {
+        let (coord, _h, server) = start_stack(2);
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+
+        // disjoint keys: one burst of SETs then GETs, all in one write
+        let mut burst = Vec::new();
+        for k in 0..40u32 {
+            Frame::command(&["SET".to_string(), k.to_string(), (k * 7).to_string()])
+                .encode_into(&mut burst);
+        }
+        for k in 0..40u32 {
+            Frame::command(&["GET".to_string(), k.to_string()]).encode_into(&mut burst);
+        }
+        sock.write_all(&burst).unwrap();
+        for _ in 0..40 {
+            assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::Simple("OK".into()));
+        }
+        for k in 0..40u32 {
+            assert_eq!(
+                read_frame(&mut sock, &mut p).unwrap(),
+                Frame::Bulk((k * 7).to_string().into_bytes()),
+                "GET replies must arrive in submission order"
+            );
+        }
+
+        // same-key chain: SET, 50 pipelined INCRBYs, GET — one write.
+        // Replies must be strictly sequential (read-your-write per
+        // connection), not a permutation.
+        let mut burst = Vec::new();
+        Frame::command(&["SET", "500", "1"]).encode_into(&mut burst);
+        for _ in 0..50 {
+            Frame::command(&["INCRBY", "500", "1"]).encode_into(&mut burst);
+        }
+        Frame::command(&["GET", "500"]).encode_into(&mut burst);
+        sock.write_all(&burst).unwrap();
+        assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::Simple("OK".into()));
+        for i in 0..50i64 {
+            assert_eq!(
+                read_frame(&mut sock, &mut p).unwrap(),
+                Frame::Int(2 + i),
+                "same-key pipelined INCRBY replies must be sequential"
+            );
+        }
+        assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::Bulk(b"51".to_vec()));
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn torn_frames_over_the_wire_still_round_trip() {
+    with_deadline(60, || {
+        let (coord, _h, server) = start_stack(1);
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        // one byte at a time, with pauses straddling the bulk payload
+        let wire = Frame::command(&["SET", "77", "123"]).encode();
+        for &b in &wire {
+            sock.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::Simple("OK".into()));
+        // split a pipelined pair at an awkward boundary
+        let mut wire = Frame::command(&["GET", "77"]).encode();
+        wire.extend_from_slice(&Frame::command(&["GET", "78"]).encode());
+        let cut = wire.len() / 2 + 3;
+        sock.write_all(&wire[..cut]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        sock.write_all(&wire[cut..]).unwrap();
+        assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::Bulk(b"123".to_vec()));
+        assert_eq!(read_frame(&mut sock, &mut p).unwrap(), Frame::NullBulk);
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn malformed_frames_get_an_error_reply_then_close() {
+    with_deadline(60, || {
+        let (coord, _h, server) = start_stack(1);
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        assert_eq!(round_trip(&mut sock, &mut p, &["PING"]), Frame::Simple("PONG".into()));
+        sock.write_all(b"$boom\r\n").unwrap();
+        match read_frame(&mut sock, &mut p) {
+            Some(Frame::Error(e)) => assert!(e.contains("Protocol error"), "{e}"),
+            other => panic!("malformed frame produced {other:?}"),
+        }
+        assert!(
+            read_frame(&mut sock, &mut p).is_none(),
+            "a protocol error must close the connection"
+        );
+        // non-bulk argument: command-level protocol error, connection lives
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        sock.write_all(b"*2\r\n$3\r\nGET\r\n:5\r\n").unwrap();
+        match read_frame(&mut sock, &mut p) {
+            Some(Frame::Error(e)) => assert!(e.contains("Protocol error"), "{e}"),
+            other => panic!("int arg produced {other:?}"),
+        }
+        assert_eq!(round_trip(&mut sock, &mut p, &["PING"]), Frame::Simple("PONG".into()));
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn over_cap_connections_are_rejected_with_an_error() {
+    with_deadline(60, || {
+        let (coord, h) = Coordinator::start(tight_cfg(1), |_w| {
+            Ok(Box::new(NativeBackend::new(HiveConfig::default().with_buckets(256))?) as _)
+        })
+        .unwrap();
+        let server = NetServer::start(
+            NetConfig { max_connections: 2, ..NetConfig::default() },
+            h.clone(),
+        )
+        .unwrap();
+        // round-trip on both keeps them counted before the third arrives
+        let mut s1 = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p1 = Parser::new();
+        assert_eq!(round_trip(&mut s1, &mut p1, &["PING"]), Frame::Simple("PONG".into()));
+        let mut s2 = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p2 = Parser::new();
+        assert_eq!(round_trip(&mut s2, &mut p2, &["PING"]), Frame::Simple("PONG".into()));
+        let mut s3 = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p3 = Parser::new();
+        match read_frame(&mut s3, &mut p3) {
+            Some(Frame::Error(e)) => assert!(e.contains("max number of clients"), "{e}"),
+            None => {} // reset before the reply landed: still a bounded rejection
+            other => panic!("over-cap connect produced {other:?}"),
+        }
+        let stats = server.stats();
+        assert_eq!(stats.net_connections_rejected, 1, "{}", stats.summary());
+        assert_eq!(stats.net_connections_opened, 2);
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Liveness: shutdown and fault races under the seed matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn connection_churn_races_shutdown_without_hanging_anyone() {
+    with_deadline(90, || {
+        let mut rng = test_seed().wrapping_add(2);
+        let (coord, _h, server) = start_stack(2);
+        let addr = server.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicUsize::new(0));
+        let clients: Vec<_> = (0..6u64)
+            .map(|c| {
+                let stop = Arc::clone(&stop);
+                let served = Arc::clone(&served);
+                let mut rng = test_seed().wrapping_add(100 + c);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        // churn: connect, run a few commands, close
+                        let Ok(mut sock) = TcpStream::connect(addr) else { break };
+                        let mut p = Parser::new();
+                        let burst = 1 + (splitmix64(&mut rng) % 8) as u32;
+                        for i in 0..burst {
+                            let k = ((splitmix64(&mut rng) % 512) as u32).to_string();
+                            send_cmd(&mut sock, &["INCRBY", &k, "1"]);
+                            match read_frame(&mut sock, &mut p) {
+                                Some(Frame::Int(_)) => {
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // -SHUTDOWN or close: bounded, acceptable
+                                Some(Frame::Error(e)) => {
+                                    assert!(
+                                        e.starts_with("SHUTDOWN") || e.starts_with("ERR max"),
+                                        "churn client {c} burst {i}: unexpected error {e}"
+                                    );
+                                    return;
+                                }
+                                Some(other) => {
+                                    panic!("churn client {c}: unexpected reply {other:?}")
+                                }
+                                None => return,
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        // let churn build up, then pull the rug mid-traffic
+        std::thread::sleep(Duration::from_millis(20 + (splitmix64(&mut rng) % 200)));
+        server.shutdown(); // must return: acceptor + every connection joined
+        stop.store(true, Ordering::Relaxed);
+        for t in clients {
+            t.join().unwrap(); // the watchdog catches any hang
+        }
+        assert!(served.load(Ordering::Relaxed) > 0, "churn never got a single reply");
+        coord.shutdown();
+    });
+}
+
+/// Native backend that panics when a window touches the trigger key —
+/// the injected "worker died mid-dispatch" fault, behind the wire.
+struct PanicBackend {
+    inner: NativeBackend,
+}
+
+const TRIGGER_KEY: u32 = 0x0DEA_DBEE;
+
+impl Backend for PanicBackend {
+    fn execute(&mut self, ops: &[Op]) -> Result<Vec<OpResult>> {
+        if ops.iter().any(|op| op.key() == TRIGGER_KEY) {
+            panic!("injected worker fault (test_net)");
+        }
+        self.inner.execute(ops)
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn load_factor(&self) -> f64 {
+        self.inner.load_factor()
+    }
+    fn maybe_resize(&mut self) -> Result<Option<ResizeEvent>> {
+        self.inner.maybe_resize()
+    }
+    fn name(&self) -> &'static str {
+        "panic-native"
+    }
+}
+
+#[test]
+fn worker_panic_behind_the_wire_yields_bounded_shutdown_replies() {
+    with_deadline(90, || {
+        let mut rng = test_seed().wrapping_add(3);
+        let (coord, h) = Coordinator::start(tight_cfg(1), |_w| {
+            Ok(Box::new(PanicBackend {
+                inner: NativeBackend::new(HiveConfig::default().with_buckets(256))?,
+            }) as _)
+        })
+        .unwrap();
+        let server = NetServer::start(
+            NetConfig { drain_deadline: Duration::from_millis(500), ..NetConfig::default() },
+            h.clone(),
+        )
+        .unwrap();
+        let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+        let mut p = Parser::new();
+        // healthy traffic first, a seeded amount
+        for _ in 0..(10 + splitmix64(&mut rng) % 50) {
+            let k = ((splitmix64(&mut rng) % 128) as u32).to_string();
+            match round_trip(&mut sock, &mut p, &["SET", &k, "1"]) {
+                Frame::Simple(_) => {}
+                other => panic!("healthy SET returned {other:?}"),
+            }
+        }
+        // the poison pill: its dispatch window panics the only worker
+        match round_trip(&mut sock, &mut p, &["GET", &TRIGGER_KEY.to_string()]) {
+            Frame::Error(e) => assert!(e.starts_with("SHUTDOWN"), "{e}"),
+            other => panic!("trigger GET returned {other:?} from a panicked worker"),
+        }
+        // the connection answers (SHUTDOWN) or closes — bounded either way
+        send_cmd(&mut sock, &["GET", "1"]);
+        match read_frame(&mut sock, &mut p) {
+            Some(Frame::Error(e)) => assert!(e.starts_with("SHUTDOWN"), "{e}"),
+            Some(other) => panic!("post-fault GET returned {other:?}"),
+            None => {}
+        }
+        // server shutdown over a dead coordinator still returns
+        server.shutdown();
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn shutdown_with_idle_connection_closes_it_cleanly() {
+    with_deadline(60, || {
+        let (coord, _h, server) = start_stack(1);
+        let addr = server.local_addr();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        let mut p = Parser::new();
+        assert_eq!(round_trip(&mut sock, &mut p, &["PING"]), Frame::Simple("PONG".into()));
+        server.shutdown();
+        // the idle connection must observe EOF, not hang
+        assert!(read_frame(&mut sock, &mut p).is_none(), "idle connection must close");
+        // and the listener is gone: a fresh connect either fails outright
+        // or gets reset before any reply
+        if let Ok(mut late) = TcpStream::connect(addr) {
+            let mut lp = Parser::new();
+            send_cmd(&mut late, &["PING"]);
+            assert!(
+                read_frame(&mut late, &mut lp).is_none(),
+                "connect after shutdown must not be served"
+            );
+        }
+        coord.shutdown();
+    });
+}
